@@ -1,0 +1,9 @@
+//! Appendix C (Figs. 5-6): compression-operator study — p-norm comparison
+//! and q∞ vs top-k vs random-k under equal bit budgets.
+//!
+//!     cargo run --release --example compression_analysis
+fn main() {
+    let out = Some(std::path::Path::new("results"));
+    lead::experiments::fig5(out);
+    lead::experiments::fig6(out);
+}

@@ -1,0 +1,13 @@
+//! Fig. 1 end-to-end: all six paper algorithms on the linear-regression
+//! ring, printing the four panels' final numbers and writing CSVs.
+//!
+//!     cargo run --release --example linreg_ring [-- --rounds 1500]
+fn main() {
+    let rounds = std::env::args()
+        .skip_while(|a| a != "--rounds")
+        .nth(1)
+        .and_then(|r| r.parse().ok())
+        .unwrap_or(1500);
+    lead::experiments::fig1(Some(std::path::Path::new("results")), rounds);
+    println!("\nCSV series written to results/fig1_linreg_*.csv");
+}

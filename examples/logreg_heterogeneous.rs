@@ -1,0 +1,13 @@
+//! Figs. 2-3: logistic regression on the heterogeneous (sort-by-label)
+//! split — the regime where DGD-type compressed baselines struggle and
+//! LEAD's gradient correction matters (paper §5).
+//!
+//!     cargo run --release --example logreg_heterogeneous
+use lead::problems::DataSplit;
+fn main() {
+    let out = Some(std::path::Path::new("results"));
+    println!("=== full-batch (Fig. 2) ===");
+    lead::experiments::fig_logreg(DataSplit::Heterogeneous, false, out, 400, 4000);
+    println!("\n=== mini-batch 512 (Fig. 3) ===");
+    lead::experiments::fig_logreg(DataSplit::Heterogeneous, true, out, 400, 4000);
+}

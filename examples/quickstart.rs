@@ -1,0 +1,46 @@
+//! Quickstart: LEAD with 2-bit ∞-norm quantization on an 8-agent ring.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Reproduces the paper's headline in ~1 second: linear convergence to the
+//! exact optimum under 2-bit communication, >10× fewer bits than the
+//! uncompressed baseline.
+use lead::algorithms::lead::Lead;
+use lead::algorithms::nids::Nids;
+use lead::compress::quantize::QuantizeP;
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::problems::linreg::LinReg;
+use lead::topology::{MixingRule, Topology};
+
+fn main() {
+    // 8 machines in a ring, uniform mixing weight 1/3 (paper §5).
+    let topo = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+    println!("topology: ring, β={:.3}, κ_g={:.2}", topo.beta(), topo.kappa_g());
+
+    // The paper's linear-regression workload: A_i ∈ R^{200×200}, λ=0.1.
+    let make_problem = || Box::new(LinReg::synthetic(8, 200, 0.1, 42));
+
+    // LEAD, paper defaults (η=0.1, γ=1.0, α=0.5), 2-bit q∞ / block 512.
+    let mut engine = Engine::new(EngineConfig::default(), topo.clone(), make_problem());
+    let rec = engine.run(
+        Box::new(Lead::paper_default()),
+        Some(Box::new(QuantizeP::paper_default())),
+        800,
+    );
+
+    // Uncompressed NIDS for comparison.
+    let mut engine2 = Engine::new(EngineConfig::default(), topo, make_problem());
+    let nids = engine2.run(Box::new(Nids::new()), None, 800);
+
+    println!("\nround    LEAD+2bit dist(x*)    NIDS dist(x*)");
+    for (a, b) in rec.series.iter().zip(&nids.series).step_by(10) {
+        println!("{:>5}    {:>18.3e}    {:>13.3e}", a.round, a.dist_opt, b.dist_opt);
+    }
+    let tol = 1e-6;
+    println!(
+        "\nbits/agent to reach {tol:.0e}:  LEAD {:.2e}   NIDS {:.2e}  ({:.1}x saving)",
+        rec.bits_to_tol(tol).unwrap(),
+        nids.bits_to_tol(tol).unwrap(),
+        nids.bits_to_tol(tol).unwrap() / rec.bits_to_tol(tol).unwrap()
+    );
+}

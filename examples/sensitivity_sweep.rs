@@ -1,0 +1,9 @@
+//! Fig. 7 / Appendix D.1: LEAD's robustness to (α, γ) — the paper's
+//! "minor tuning effort" claim, measured as rounds-to-1e-6 on each cell.
+//!
+//!     cargo run --release --example sensitivity_sweep
+fn main() {
+    let rows = lead::experiments::fig7(Some(std::path::Path::new("results")), 1500);
+    let ok = rows.iter().filter(|r| r.2.is_some()).count();
+    println!("\n{ok}/{} (α, γ) cells converged to 1e-6", rows.len());
+}

@@ -1,0 +1,144 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO *text* + a manifest.
+
+HLO text — not serialized HloModuleProto — is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version the rust `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, transformer
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_entry(name, s):
+    return {"name": name, "shape": list(s.shape),
+            "dtype": str(s.dtype.name if hasattr(s.dtype, "name") else s.dtype)}
+
+
+def lower(out_dir, manifest, name, fn, inputs, outputs_doc, extra=None):
+    """Lower fn at the given example inputs and record a manifest entry."""
+    lowered = jax.jit(fn).lower(*[s for _, s in inputs])
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "file": fname,
+        "inputs": [input_entry(n, s) for n, s in inputs],
+        "outputs": outputs_doc,
+    }
+    if extra:
+        entry.update(extra)
+    manifest["artifacts"].append(entry)
+    print(f"  {name}: {len(text)} chars, {len(inputs)} inputs")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+
+    # ---- linear regression (paper shapes: A ∈ R^{200×200}) --------------
+    lower(args.out, manifest, "linreg_grad",
+          model.linreg_grad,
+          [("a", spec((200, 200))), ("b", spec((200,))),
+           ("x", spec((200,))), ("lam", spec(()))],
+          [{"name": "grad", "shape": [200]}])
+    lower(args.out, manifest, "linreg_loss",
+          model.linreg_loss,
+          [("a", spec((200, 200))), ("b", spec((200,))),
+           ("x", spec((200,))), ("lam", spec(()))],
+          [{"name": "loss", "shape": []}])
+
+    # ---- logistic regression (MNIST-like: 1000 samples/agent, 784×10) ---
+    lower(args.out, manifest, "logreg_grad",
+          model.logreg_grad,
+          [("x", spec((1000, 784))), ("y", spec((1000, 10))),
+           ("w", spec((784, 10))), ("lam", spec(()))],
+          [{"name": "grad", "shape": [784, 10]}])
+    lower(args.out, manifest, "logreg_loss",
+          model.logreg_loss,
+          [("x", spec((1000, 784))), ("y", spec((1000, 10))),
+           ("w", spec((784, 10))), ("lam", spec(()))],
+          [{"name": "loss", "shape": []}])
+
+    # ---- MLP (Fig. 4 deep-net substitute; CIFAR-shaped 3072→256→10) -----
+    lower(args.out, manifest, "mlp_grad",
+          model.mlp_grad,
+          [("w1", spec((3072, 256))), ("b1", spec((256,))),
+           ("w2", spec((256, 10))), ("b2", spec((10,))),
+           ("x", spec((64, 3072))), ("y", spec((64, 10)))],
+          [{"name": "loss", "shape": []},
+           {"name": "gw1", "shape": [3072, 256]}, {"name": "gb1", "shape": [256]},
+           {"name": "gw2", "shape": [256, 10]}, {"name": "gb2", "shape": [10]}],
+          extra={"param_inputs": [0, 1, 2, 3], "data_inputs": [4, 5]})
+    lower(args.out, manifest, "mlp_loss",
+          model.mlp_loss_t,
+          [("w1", spec((3072, 256))), ("b1", spec((256,))),
+           ("w2", spec((256, 10))), ("b2", spec((10,))),
+           ("x", spec((64, 3072))), ("y", spec((64, 10)))],
+          [{"name": "loss", "shape": []}],
+          extra={"param_inputs": [0, 1, 2, 3], "data_inputs": [4, 5]})
+
+    # ---- Layer-1 Pallas kernels wrapped as standalone artifacts ---------
+    lower(args.out, manifest, "quantize_2bit_4096",
+          model.quantize_fn,
+          [("x", spec((4096,))), ("u", spec((4096,)))],
+          [{"name": "values", "shape": [4096]}])
+    lower(args.out, manifest, "lead_step_4096",
+          model.lead_step_fn,
+          [("x", spec((4096,))), ("g", spec((4096,))), ("d", spec((4096,))),
+           ("h", spec((4096,))), ("u", spec((4096,))),
+           ("eta", spec(())), ("alpha", spec(()))],
+          [{"name": "y", "shape": [4096]}, {"name": "q", "shape": [4096]},
+           {"name": "h_new", "shape": [4096]}])
+
+    # ---- transformer train step (tiny config) ----------------------------
+    cfg = transformer.Config.tiny()
+    specs = transformer.param_specs(cfg)
+    t_inputs = [(n, spec(s)) for n, s in specs]
+    t_inputs.append(("tokens", spec((8, cfg.seq_len), jnp.int32)))
+    t_outputs = [{"name": "loss", "shape": []}] + [
+        {"name": f"g:{n}", "shape": list(s)} for n, s in specs
+    ]
+    lower(args.out, manifest, "transformer_tiny_step",
+          transformer.train_step(cfg), t_inputs, t_outputs,
+          extra={
+              "param_inputs": list(range(len(specs))),
+              "data_inputs": [len(specs)],
+              "config": {"vocab": cfg.vocab, "d_model": cfg.d_model,
+                         "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+                         "d_ff": cfg.d_ff, "seq_len": cfg.seq_len},
+          })
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: the fused LEAD local step (Alg. 2 lines 8-10+14).
+
+Per agent and round, the purely-local part of LEAD is a chain of
+element-wise passes over four d-vectors:
+
+    y  = x − η·g − η·d          (auxiliary variable)
+    q  = Q(y − h)               (difference compression, blockwise q∞)
+    h⁺ = (1−α)·h + α·(h + q)    (momentum state = h + α·q)
+
+Unfused this is 3 kernel launches and ~9 HBM round-trips per element;
+fused it is 4 reads (x, g, d, h) + 1 read (u) + 3 writes (y, q, h⁺) in a
+single VMEM-resident pass — the arithmetic intensity is tiny, so the fusion
+is worth ~2.6× on memory-bound hardware (see EXPERIMENTS.md §Perf for the
+estimate method). The dual/primal updates (lines 16-17) need the *mixed*
+neighbor payloads and stay in the Layer-3 coordinator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lead_step_kernel(x_ref, g_ref, d_ref, h_ref, u_ref, eta_ref, alpha_ref,
+                      y_ref, q_ref, hn_ref, *, bits: int):
+    x = x_ref[...]
+    g = g_ref[...]
+    dv = d_ref[...]
+    h = h_ref[...]
+    u = u_ref[...]
+    eta = eta_ref[0]
+    alpha = alpha_ref[0]
+
+    y = x - eta * g - eta * dv
+    diff = y - h
+
+    # Inline blockwise q∞ quantization of the difference (one block per
+    # grid cell, same layout as kernels/quantize.py).
+    norm = jnp.max(jnp.abs(diff))
+    scale = jnp.float32(2 ** (bits - 1))
+    safe = jnp.maximum(norm, jnp.float32(1e-30))
+    level = jnp.minimum(jnp.floor(scale * jnp.abs(diff) / safe + u), scale)
+    q = jnp.where(norm > 0, jnp.sign(diff) * (norm / scale) * level,
+                  jnp.zeros_like(diff))
+
+    y_ref[...] = y
+    q_ref[...] = q
+    hn_ref[...] = h + alpha * q
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def lead_local_step(x, g, d, h, u, eta, alpha, *, bits: int = 2,
+                    block: int = 512):
+    """Fused LEAD local step over 1-D state vectors (dim % block == 0).
+
+    Returns (y, q, h_new); `q` is the dequantized broadcast payload.
+    """
+    (dim,) = x.shape
+    assert dim % block == 0, f"pad to a multiple of {block} (got {dim})"
+    grid = (dim // block,)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    out = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    eta = jnp.reshape(eta.astype(jnp.float32), (1,))
+    alpha = jnp.reshape(alpha.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        functools.partial(_lead_step_kernel, bits=bits),
+        out_shape=(out, out, out),
+        grid=grid,
+        in_specs=[vec, vec, vec, vec, vec, scalar, scalar],
+        out_specs=(vec, vec, vec),
+        interpret=True,
+    )(x, g, d, h, u, eta, alpha)

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: blockwise p-norm b-bit stochastic quantization.
+
+The paper's compression operator (Eq. 14 / Theorem 3):
+
+    Q_p(x) = (‖x‖_p · sign(x) · 2^{-(b-1)}) ⊙ ⌊ 2^{b-1}|x| / ‖x‖_p + u ⌋
+
+applied independently to blocks of `block` elements (paper §5 uses 512).
+The stochastic dither `u ~ U[0,1)^d` is passed in as an input so the
+kernel is a pure function (determinism + AOT-compatible; the rust
+coordinator owns randomness).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid cell per block; the
+(block,)-tile lives in VMEM, the ‖·‖∞ reduction and the dither/floor are
+VPU element-wise ops — the kernel is memory-bound at 2 reads + 1 write per
+element, so BlockSpec pipelining (double-buffered HBM↔VMEM) is the whole
+performance story. `interpret=True` everywhere because the CPU PJRT plugin
+cannot execute Mosaic custom-calls; on real TPUs drop the flag.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_block_kernel(x_ref, u_ref, o_ref, *, bits: int, p):
+    """One grid cell = one quantization block resident in VMEM."""
+    x = x_ref[...]
+    u = u_ref[...]
+    if p is None:  # ∞-norm (the paper's choice)
+        norm = jnp.max(jnp.abs(x))
+    else:
+        norm = jnp.sum(jnp.abs(x) ** p) ** (1.0 / p)
+    scale = jnp.float32(2 ** (bits - 1))
+    # Guard the all-zero block: norm 0 ⇒ levels 0 ⇒ output 0.
+    safe = jnp.maximum(norm, jnp.float32(1e-30))
+    level = jnp.floor(scale * jnp.abs(x) / safe + u)
+    level = jnp.minimum(level, scale)  # fp edge: |x| == norm, u → 1
+    mag = (norm / scale) * level
+    o_ref[...] = jnp.where(norm > 0, jnp.sign(x) * mag, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "p"))
+def quantize(x, u, *, bits: int = 2, block: int = 512, p=None):
+    """Quantize a 1-D vector blockwise. `d` must be a multiple of `block`
+    (callers pad with zeros — zero padding does not change block norms of
+    the padded tail and dequantizes to exactly zero).
+    """
+    (d,) = x.shape
+    assert d % block == 0, f"pad to a multiple of {block} (got {d})"
+    grid = (d // block,)
+    return pl.pallas_call(
+        functools.partial(_quantize_block_kernel, bits=bits, p=p),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x, u)

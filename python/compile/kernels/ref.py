@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal. Every kernel in this package must match its reference here
+(pytest: python/tests/)."""
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, u, *, bits: int = 2, block: int = 512, p=None):
+    """Blockwise p-norm b-bit stochastic quantization, vectorized jnp."""
+    (d,) = x.shape
+    assert d % block == 0
+    xb = x.reshape(-1, block)
+    ub = u.reshape(-1, block)
+    if p is None:
+        norm = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    else:
+        norm = jnp.sum(jnp.abs(xb) ** p, axis=1, keepdims=True) ** (1.0 / p)
+    scale = jnp.float32(2 ** (bits - 1))
+    safe = jnp.maximum(norm, 1e-30)
+    level = jnp.minimum(jnp.floor(scale * jnp.abs(xb) / safe + ub), scale)
+    out = jnp.where(norm > 0, jnp.sign(xb) * (norm / scale) * level,
+                    jnp.zeros_like(xb))
+    return out.reshape(d)
+
+
+def lead_local_step_ref(x, g, d, h, u, eta, alpha, *, bits: int = 2,
+                        block: int = 512):
+    """Composition of the unfused ops (the thing the fused kernel saves)."""
+    y = x - eta * g - eta * d
+    q = quantize_ref(y - h, u, bits=bits, block=block)
+    h_new = h + alpha * q
+    return y, q, h_new

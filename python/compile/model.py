@@ -1,0 +1,91 @@
+"""Layer-2: JAX compute graphs for the paper's workloads.
+
+Each function here is lowered ONCE by aot.py into an HLO-text artifact the
+rust coordinator executes through PJRT. Convex problems (linreg / logreg)
+have native rust oracles too; the PJRT path is cross-checked against them
+in rust/tests/runtime_pjrt.rs to 1e-4.
+
+Conventions:
+- all tensors f32; labels are pre-one-hotted (B, K) so artifacts take only
+  float inputs (no int handling across the FFI);
+- parameters are separate tensor inputs, never flattened here — the rust
+  runtime's ParamSpec does flat-vector ↔ tensor mapping;
+- every *_grad function returns gradients in the same order as its
+  parameter inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lead_step import lead_local_step
+from .kernels.quantize import quantize
+
+
+# --------------------------------------------------------------------------
+# Linear regression (paper §5, Fig. 1):  f_i(x) = ‖Ax − b‖² + λ‖x‖²
+# --------------------------------------------------------------------------
+
+def linreg_loss(a, b, x, lam):
+    r = a @ x - b
+    return (jnp.sum(r * r) + lam * jnp.sum(x * x),)
+
+
+def linreg_grad(a, b, x, lam):
+    """∇f(x) = 2Aᵀ(Ax − b) + 2λx."""
+    r = a @ x - b
+    return (2.0 * (a.T @ r) + 2.0 * lam * x,)
+
+
+# --------------------------------------------------------------------------
+# Multinomial logistic regression (Figs. 2-3, 8-9):
+#   f(w) = mean CE(softmax(xᵀw), y) + (λ/2)‖w‖²
+# --------------------------------------------------------------------------
+
+def logreg_loss(x, y_onehot, w, lam):
+    logits = x @ w
+    lse = jax.nn.logsumexp(logits, axis=1)
+    ce = jnp.mean(lse - jnp.sum(logits * y_onehot, axis=1))
+    return (ce + 0.5 * lam * jnp.sum(w * w),)
+
+
+def logreg_grad(x, y_onehot, w, lam):
+    """Closed-form softmax-CE gradient: (1/B)Xᵀ(softmax − Y) + λw."""
+    p = jax.nn.softmax(x @ w, axis=1)
+    return ((x.T @ (p - y_onehot)) / x.shape[0] + lam * w,)
+
+
+# --------------------------------------------------------------------------
+# MLP classifier — the Fig. 4 "deep net" substitute (CIFAR-shaped inputs).
+# --------------------------------------------------------------------------
+
+def mlp_loss(w1, b1, w2, b2, x, y_onehot):
+    h = jax.nn.relu(x @ w1 + b1)
+    logits = h @ w2 + b2
+    lse = jax.nn.logsumexp(logits, axis=1)
+    return jnp.mean(lse - jnp.sum(logits * y_onehot, axis=1))
+
+
+def mlp_loss_t(w1, b1, w2, b2, x, y_onehot):
+    return (mlp_loss(w1, b1, w2, b2, x, y_onehot),)
+
+
+def mlp_grad(w1, b1, w2, b2, x, y_onehot):
+    """Loss + parameter gradients, one artifact (fwd+bwd fused by XLA)."""
+    loss, grads = jax.value_and_grad(mlp_loss, argnums=(0, 1, 2, 3))(
+        w1, b1, w2, b2, x, y_onehot)
+    return (loss, *grads)
+
+
+# --------------------------------------------------------------------------
+# LEAD local step and standalone quantization (Layer-1 kernels in an HLO
+# wrapper so the rust hot path can invoke them through PJRT).
+# --------------------------------------------------------------------------
+
+def lead_step_fn(x, g, d, h, u, eta, alpha):
+    """Fused LEAD local step, bits=2 / block=512 (the paper's setting)."""
+    return lead_local_step(x, g, d, h, u, eta, alpha, bits=2, block=512)
+
+
+def quantize_fn(x, u):
+    """Standalone 2-bit q∞ quantization, block 512."""
+    return (quantize(x, u, bits=2, block=512),)

@@ -1,0 +1,136 @@
+"""Layer-2: byte-level GPT-style transformer LM for the end-to-end
+decentralized-training example (the Fig. 4 "deep net" scaled up).
+
+Pre-LN transformer with tied input/output embeddings. The whole train step
+(fwd + bwd) lowers into ONE HLO artifact; parameters are separate inputs in
+the canonical order given by `param_specs`, and the artifact returns
+(loss, *grads) in the same order, so the rust ParamSpec mapping is purely
+positional.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+class Config:
+    def __init__(self, vocab=256, d_model=128, n_layer=2, n_head=4,
+                 d_ff=512, seq_len=64):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layer = n_layer
+        self.n_head = n_head
+        self.d_ff = d_ff
+        self.seq_len = seq_len
+
+    @classmethod
+    def tiny(cls):
+        """~0.45M params — the CPU-interpret CI budget."""
+        return cls()
+
+    @classmethod
+    def small(cls):
+        """~6M params — still CPU-feasible for a short demo run."""
+        return cls(d_model=256, n_layer=4, n_head=8, d_ff=1024, seq_len=128)
+
+
+def param_specs(cfg: Config):
+    """Canonical (name, shape) list — the contract with rust's ParamSpec."""
+    specs = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layer):
+        specs += [
+            (f"l{l}.ln1_scale", (cfg.d_model,)),
+            (f"l{l}.ln1_bias", (cfg.d_model,)),
+            (f"l{l}.attn_qkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{l}.attn_out", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.ln2_scale", (cfg.d_model,)),
+            (f"l{l}.ln2_bias", (cfg.d_model,)),
+            (f"l{l}.ff_in", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}.ff_out", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs += [("lnf_scale", (cfg.d_model,)), ("lnf_bias", (cfg.d_model,))]
+    return specs
+
+
+def init_params(cfg: Config, key):
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith("_bias"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in))
+    return params
+
+
+def _layernorm(x, scale, bias):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) / jnp.sqrt(v + 1e-5) * scale + bias
+
+
+def forward(cfg: Config, params, tokens):
+    """tokens: (B, T) int32 → logits (B, T, vocab)."""
+    it = iter(params)
+    embed = next(it)
+    pos = next(it)
+    b, t = tokens.shape
+    h = embed[tokens] + pos[None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for _ in range(cfg.n_layer):
+        ln1_s, ln1_b = next(it), next(it)
+        qkv_w, out_w = next(it), next(it)
+        ln2_s, ln2_b = next(it), next(it)
+        ff_in, ff_out = next(it), next(it)
+
+        x = _layernorm(h, ln1_s, ln1_b)
+        qkv = x @ qkv_w  # (B, T, 3D)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        hd = cfg.d_model // cfg.n_head
+
+        def heads(z):
+            return z.reshape(b, t, cfg.n_head, hd).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        z = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        h = h + z @ out_w
+
+        x = _layernorm(h, ln2_s, ln2_b)
+        h = h + jax.nn.gelu(x @ ff_in) @ ff_out
+
+    lnf_s, lnf_b = next(it), next(it)
+    h = _layernorm(h, lnf_s, lnf_b)
+    return h @ embed.T  # tied output head
+
+
+def loss_fn(cfg: Config, params, tokens):
+    """Next-token cross-entropy over (B, T)."""
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def train_step(cfg: Config):
+    """Returns f(*params, tokens) -> (loss, *grads) for AOT lowering."""
+    n = len(param_specs(cfg))
+
+    def f(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, tokens))(params)
+        return (loss, *grads)
+
+    return f

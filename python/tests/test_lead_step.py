@@ -1,0 +1,59 @@
+"""L1 correctness: fused LEAD local-step kernel vs the unfused oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lead_step import lead_local_step
+from compile.kernels.ref import lead_local_step_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _state(d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (d,), jnp.float32)
+    g = jax.random.normal(ks[1], (d,), jnp.float32)
+    dv = jax.random.normal(ks[2], (d,), jnp.float32) * 0.1
+    h = x + 0.05 * jax.random.normal(ks[3], (d,), jnp.float32)
+    u = jax.random.uniform(ks[4], (d,), jnp.float32)
+    return x, g, dv, h, u
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([64, 512]),
+    bits=st.integers(min_value=1, max_value=4),
+    seed=st.integers(0, 2**31 - 1),
+    eta=st.sampled_from([0.01, 0.1, 0.5]),
+    alpha=st.sampled_from([0.1, 0.5, 1.0]),
+)
+def test_fused_matches_unfused(blocks, block, bits, seed, eta, alpha):
+    d = blocks * block
+    x, g, dv, h, u = _state(d, seed)
+    eta_a = jnp.float32(eta)
+    alpha_a = jnp.float32(alpha)
+    y1, q1, h1 = lead_local_step(x, g, dv, h, u, eta_a, alpha_a,
+                                 bits=bits, block=block)
+    y2, q2, h2 = lead_local_step_ref(x, g, dv, h, u, eta, alpha,
+                                     bits=bits, block=block)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_exact_state_tracking_limit():
+    """As h → y the difference vanishes, q → 0, and h⁺ = h."""
+    d = 512
+    x, g, dv, _, u = _state(d, 7)
+    y = x - 0.1 * g - 0.1 * dv
+    y2, q, h2 = lead_local_step(x, g, dv, y, u, jnp.float32(0.1),
+                                jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y), atol=1e-7)
+    assert np.allclose(np.asarray(q), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(y), atol=1e-7)

@@ -1,0 +1,101 @@
+"""L1 correctness: the Pallas quantization kernel vs the pure-jnp oracle,
+swept over shapes/bits/norms with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quantize import quantize
+from compile.kernels.ref import quantize_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    block=st.sampled_from([16, 64, 512]),
+    bits=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_matches_ref(blocks, block, bits, seed):
+    d = blocks * block
+    key = jax.random.PRNGKey(seed)
+    kx, ku = jax.random.split(key)
+    x = jax.random.normal(kx, (d,), jnp.float32) * 3.0
+    u = jax.random.uniform(ku, (d,), jnp.float32)
+    got = quantize(x, u, bits=bits, block=block)
+    want = quantize_ref(x, u, bits=bits, block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.sampled_from([1.0, 2.0, 6.0]), seed=st.integers(0, 10_000))
+def test_pallas_matches_ref_finite_p(p, seed):
+    d = 256
+    key = jax.random.PRNGKey(seed)
+    kx, ku = jax.random.split(key)
+    x = jax.random.normal(kx, (d,), jnp.float32)
+    u = jax.random.uniform(ku, (d,), jnp.float32)
+    got = quantize(x, u, bits=3, block=128, p=p)
+    want = quantize_ref(x, u, bits=3, block=128, p=p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_zero_vector():
+    d = 512
+    z = jnp.zeros((d,), jnp.float32)
+    u = jnp.full((d,), 0.9, jnp.float32)
+    out = quantize(z, u, bits=2, block=512)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_unbiased_statistically():
+    """E[Q(x)] = x (Theorem 3) via Monte-Carlo over the dither."""
+    d, trials = 128, 3000
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (d,), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(1), trials)
+    us = jax.vmap(lambda k: jax.random.uniform(k, (d,), jnp.float32))(keys)
+    outs = jax.vmap(lambda u: quantize_ref(x, u, bits=2, block=128))(us)
+    mean = np.asarray(jnp.mean(outs, axis=0))
+    unit = float(jnp.max(jnp.abs(x))) / 2.0
+    tol = 6.0 * unit / np.sqrt(12.0 * trials)
+    np.testing.assert_allclose(mean, np.asarray(x), atol=tol)
+
+
+def test_variance_bound():
+    """E‖x − Q(x)‖² ≤ C‖x‖² with C = block/4^bits (Remark 7, p = ∞)."""
+    d, block, bits, trials = 256, 64, 2, 500
+    x = jax.random.normal(jax.random.PRNGKey(3), (d,), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(4), trials)
+    us = jax.vmap(lambda k: jax.random.uniform(k, (d,), jnp.float32))(keys)
+    outs = jax.vmap(lambda u: quantize_ref(x, u, bits=bits, block=block))(us)
+    err = float(jnp.mean(jnp.sum((outs - x[None]) ** 2, axis=1)))
+    c = block / 4.0 ** bits
+    bound = c * float(jnp.sum(x * x))
+    assert err <= bound * 1.1, (err, bound)
+
+
+def test_inf_norm_dominates_fig5():
+    """Appendix C / Fig. 5: relative error decreases as p grows."""
+    d = 4096
+    x = jax.random.normal(jax.random.PRNGKey(5), (d,), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(6), (d,), jnp.float32)
+    errs = []
+    for p in [1.0, 2.0, 6.0, None]:
+        q = quantize_ref(x, u, bits=2, block=4096, p=p)
+        errs.append(float(jnp.linalg.norm(q - x) / jnp.linalg.norm(x)))
+    assert errs[0] > errs[1] > errs[2] > errs[3], errs
+
+
+@pytest.mark.parametrize("bad_d", [100, 513])
+def test_rejects_unpadded(bad_d):
+    x = jnp.zeros((bad_d,), jnp.float32)
+    u = jnp.zeros((bad_d,), jnp.float32)
+    with pytest.raises(AssertionError):
+        quantize(x, u, bits=2, block=512)

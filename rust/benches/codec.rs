@@ -1,0 +1,44 @@
+//! Microbench: compression codec throughput (§Perf, L3 hot path).
+//! Reports median MB/s for compress (quantize+pack) and wire decode.
+use lead::compress::quantize::{decode, PNorm, QuantizeP};
+use lead::compress::{CompressedMsg, Compressor};
+use lead::rng::Rng;
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn main() {
+    let d = 1 << 20; // 1M elements = 8 MB of f64 state
+    let mut rng = Rng::new(1);
+    let mut x = vec![0.0f64; d];
+    rng.fill_normal(&mut x, 1.0);
+    for bits in [2u32, 4, 8] {
+        let q = QuantizeP::new(bits, PNorm::Inf, 512);
+        let mut msg = CompressedMsg::with_dim(d);
+        // warmup
+        q.compress(&x, &mut rng, &mut msg);
+        let reps = 20;
+        let mut enc_times = Vec::new();
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            q.compress(&x, &mut rng, &mut msg);
+            enc_times.push(t.elapsed().as_secs_f64());
+        }
+        let mut dec = Vec::new();
+        let mut dec_times = Vec::new();
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            decode(&q, &msg.payload, d, &mut dec);
+            dec_times.push(t.elapsed().as_secs_f64());
+        }
+        let mb = (d * 4) as f64 / 1e6; // payload-side MB (f32 equivalent)
+        println!(
+            "q∞-{bits}bit/512 d=1M: compress {:8.1} MB/s   decode {:8.1} MB/s   ({} wire bits)",
+            mb / median(enc_times.clone()),
+            mb / median(dec_times.clone()),
+            msg.wire_bits
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 1 (a-d) — linear regression on the 8-ring.
+//! `cargo bench --bench fig1_linreg`
+fn main() {
+    let t = std::time::Instant::now();
+    let recs = lead::experiments::fig1(Some(std::path::Path::new("results")), 1500);
+    // Paper-shape assertions: LEAD exact, ~10x bit saving vs NIDS.
+    let lead_rec = recs.iter().find(|r| r.algo.starts_with("LEAD")).unwrap();
+    let nids = recs.iter().find(|r| r.algo == "NIDS").unwrap();
+    assert!(lead_rec.last().dist_opt < 1e-6);
+    if let (Some(lb), Some(nb)) = (lead_rec.bits_to_tol(1e-6), nids.bits_to_tol(1e-6)) {
+        println!("\nLEAD bit saving vs NIDS at 1e-6: {:.1}x", nb / lb);
+    }
+    println!("fig1 total: {:.1}s", t.elapsed().as_secs_f64());
+}

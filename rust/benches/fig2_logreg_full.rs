@@ -1,0 +1,9 @@
+//! Bench: regenerate Fig. 2 — logistic regression, heterogeneous split,
+//! full-batch gradients.
+use lead::problems::DataSplit;
+fn main() {
+    let t = std::time::Instant::now();
+    lead::experiments::fig_logreg(DataSplit::Heterogeneous, false,
+        Some(std::path::Path::new("results")), 400, 4000);
+    println!("fig2 total: {:.1}s", t.elapsed().as_secs_f64());
+}

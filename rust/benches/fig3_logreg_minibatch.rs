@@ -1,0 +1,9 @@
+//! Bench: regenerate Fig. 3 — logistic regression, heterogeneous split,
+//! mini-batch 512 gradients.
+use lead::problems::DataSplit;
+fn main() {
+    let t = std::time::Instant::now();
+    lead::experiments::fig_logreg(DataSplit::Heterogeneous, true,
+        Some(std::path::Path::new("results")), 400, 4000);
+    println!("fig3 total: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig. 4 — "deep net" (MLP via PJRT), homo + hetero.
+use lead::problems::DataSplit;
+fn main() {
+    let t = std::time::Instant::now();
+    for split in [DataSplit::Homogeneous, DataSplit::Heterogeneous] {
+        if let Err(e) = lead::experiments::fig4(split, Some(std::path::Path::new("results")), 40) {
+            eprintln!("fig4 requires `make artifacts`: {e}");
+            return;
+        }
+    }
+    println!("fig4 total: {:.1}s", t.elapsed().as_secs_f64());
+}

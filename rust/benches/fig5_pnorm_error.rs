@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig. 5 — p-norm b-bit quantization error.
+fn main() {
+    let t = std::time::Instant::now();
+    let rows = lead::experiments::fig5(Some(std::path::Path::new("results")));
+    // Shape assertion: inf-norm strictly dominates p=1 at every bit width.
+    for bits in [2u32, 4, 6, 8] {
+        let p1 = rows.iter().find(|(l, b, _)| l == "p=1" && *b == bits).unwrap().2;
+        let pinf = rows.iter().find(|(l, b, _)| l == "inf" && *b == bits).unwrap().2;
+        assert!(pinf < p1, "∞-norm must beat p=1 at {bits} bits");
+    }
+    println!("fig5 total: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 6 — q∞ vs top-k vs random-k error per bit.
+fn main() {
+    let t = std::time::Instant::now();
+    let rows = lead::experiments::fig6(Some(std::path::Path::new("results")));
+    // Shape assertion: at ~3 bits/elem, q∞ beats both sparsifiers at
+    // comparable budgets (the paper's Fig. 6 conclusion).
+    let q2 = rows.iter().find(|(n, _, _)| n.contains("2bit")).unwrap();
+    for (name, bits, err) in &rows {
+        if !name.starts_with('q') && *bits <= q2.1 * 1.5 {
+            assert!(*err > q2.2, "{name} ({bits} b/e) beat q∞-2bit — unexpected");
+        }
+    }
+    println!("fig6 total: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,48 @@
+//! Microbench: end-to-end coordinator rounds/sec (§Perf, L3).
+//! LEAD + 2-bit q∞ on the paper's logreg shape (d = 7850), native oracle,
+//! 1 vs 4 worker threads; plus the linreg Fig. 1 shape.
+use lead::algorithms::lead::Lead;
+use lead::compress::quantize::QuantizeP;
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::problems::{linreg::LinReg, logreg::LogReg, DataSplit};
+use lead::topology::{MixingRule, Topology};
+
+fn bench(name: &str, problem: Box<dyn lead::problems::Problem>, threads: usize, rounds: usize) {
+    let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+    let mut e = Engine::new(
+        EngineConfig { threads, record_every: usize::MAX / 2, ..Default::default() },
+        mix,
+        problem,
+    );
+    let t = std::time::Instant::now();
+    let rec = e.run(
+        Box::new(Lead::paper_default()),
+        Some(Box::new(QuantizeP::paper_default())),
+        rounds,
+    );
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "{name:<40} threads={threads}  {:8.1} rounds/s  ({rounds} rounds in {secs:.2}s, dist {:.1e})",
+        rounds as f64 / secs,
+        rec.last().dist_opt
+    );
+}
+
+fn main() {
+    for threads in [1usize, 4, 8] {
+        bench(
+            "linreg d=200 (fig1 shape)",
+            Box::new(LinReg::synthetic(8, 200, 0.1, 1)),
+            threads,
+            400,
+        );
+    }
+    for threads in [1usize, 4, 8] {
+        bench(
+            "logreg d=7850 full-batch (fig2 shape)",
+            Box::new(LogReg::synthetic(8, 4000, 784, 10, 1e-4, DataSplit::Heterogeneous, 1, false)),
+            threads,
+            60,
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! D² (Tang et al. 2018b) in the closed form of the paper's Proposition 1,
+//! Eq. (15):
+//!
+//! ```text
+//! x^{k+1} = (I+W)/2 · (2x^k − x^{k−1} − η∇F(x^k;ξ) + η∇F(x^{k−1};ξ'))
+//! ```
+//!
+//! Equivalent to LEAD without compression at γ = 1 and to NIDS with full
+//! gradients — implemented independently in its history form so the
+//! Prop. 1 equivalence can be *tested* rather than assumed.
+
+use super::{AlgoSpec, Algorithm, Ctx};
+
+pub struct D2 {
+    x: Vec<Vec<f64>>,
+    x_prev: Vec<Vec<f64>>,
+    g_prev: Vec<Vec<f64>>,
+}
+
+impl D2 {
+    pub fn new() -> Self {
+        D2 { x: vec![], x_prev: vec![], g_prev: vec![] }
+    }
+}
+
+impl Default for D2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Algorithm for D2 {
+    fn name(&self) -> String {
+        "D2".into()
+    }
+
+    fn spec(&self) -> AlgoSpec {
+        AlgoSpec { channels: 1, compressed: false }
+    }
+
+    fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
+        // Matches LEAD's init (Prop. 1 derivation assumes D¹ = 0):
+        // x⁰ stored as history, x¹ = x⁰ − ηg⁰.
+        self.x_prev = x0.to_vec();
+        self.g_prev = g0.to_vec();
+        self.x = x0.to_vec();
+        for (x, g) in self.x.iter_mut().zip(g0) {
+            crate::linalg::axpy(-ctx.eta, g, x);
+        }
+    }
+
+    fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
+        // z = 2x − x_prev − ηg + ηg_prev
+        let z = &mut out[0];
+        let x = &self.x[agent];
+        let xp = &self.x_prev[agent];
+        let gp = &self.g_prev[agent];
+        for t in 0..x.len() {
+            z[t] = 2.0 * x[t] - xp[t] - ctx.eta * (g[t] - gp[t]);
+        }
+    }
+
+    fn recv(&mut self, _ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
+        // x⁺ = (z + Wz)/2 per agent; history shifts.
+        let x = &mut self.x[agent];
+        let xp = &mut self.x_prev[agent];
+        for t in 0..x.len() {
+            let xnew = 0.5 * (self_dec[0][t] + mixed[0][t]);
+            xp[t] = x[t];
+            x[t] = xnew;
+        }
+        self.g_prev[agent].copy_from_slice(g);
+    }
+
+    fn x(&self, agent: usize) -> &[f64] {
+        &self.x[agent]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::{max_dist_to_opt, run_plain};
+    use crate::problems::linreg::LinReg;
+    use crate::topology::{MixingRule, Topology};
+
+    #[test]
+    fn exact_convergence() {
+        let p = LinReg::synthetic(8, 30, 0.1, 3);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut algo = D2::new();
+        let xs = run_plain(&mut algo, &p, &mix, 0.1, 400);
+        assert!(max_dist_to_opt(&xs, &p) < 1e-4);
+    }
+
+    #[test]
+    fn matches_nids_trajectory() {
+        // Proposition 1: D² ≡ NIDS (full gradient). Same inputs, same
+        // trajectory up to f64 roundoff.
+        let p = LinReg::synthetic(5, 24, 0.1, 9);
+        let mix = Topology::Ring.build(5, MixingRule::UniformNeighbors);
+        let mut d2 = D2::new();
+        let mut nids = crate::algorithms::nids::Nids::new();
+        let xs_d2 = run_plain(&mut d2, &p, &mix, 0.1, 60);
+        let xs_nids = run_plain(&mut nids, &p, &mix, 0.1, 60);
+        for (a, b) in xs_d2.iter().zip(&xs_nids) {
+            let diff = crate::linalg::dist_sq(a, b).sqrt();
+            assert!(diff < 1e-3, "D² vs NIDS drift: {diff}");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! DIGing (Nedić, Olshevsky & Shi 2017) — gradient tracking over two
+//! broadcast channels:
+//!
+//! ```text
+//! x^{k+1} = W x^k − η y^k
+//! y^{k+1} = W y^k + ∇F(x^{k+1}) − ∇F(x^k)
+//! ```
+//!
+//! Included as the gradient-tracking representative in the related-work
+//! family (§2). It transmits 2 d-vectors per round, which the engine bills
+//! accordingly — the communication-efficiency benches show this costs 2×
+//! the bits of NIDS per iteration.
+//!
+//! The y-update needs ∇F(x^{k+1}), which only becomes available at the
+//! start of the next round; we therefore *complete* y lazily in `send`
+//! using the fresh gradient before broadcasting.
+
+use super::{AlgoSpec, Algorithm, Ctx};
+
+pub struct DiGing {
+    x: Vec<Vec<f64>>,
+    /// Tracker; between rounds holds the mixed part (Wy)_i awaiting the
+    /// `+ g^{k+1} − g^k` completion.
+    y: Vec<Vec<f64>>,
+    g_prev: Vec<Vec<f64>>,
+}
+
+impl DiGing {
+    pub fn new() -> Self {
+        DiGing { x: vec![], y: vec![], g_prev: vec![] }
+    }
+
+    /// Gradient tracker (diagnostics: mean over agents equals the mean
+    /// gradient — conservation property tested below).
+    pub fn tracker(&self, agent: usize) -> &[f64] {
+        &self.y[agent]
+    }
+}
+
+impl Default for DiGing {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Algorithm for DiGing {
+    fn name(&self) -> String {
+        "DIGing".into()
+    }
+
+    fn spec(&self) -> AlgoSpec {
+        AlgoSpec { channels: 2, compressed: false }
+    }
+
+    fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
+        self.x = x0.to_vec();
+        self.y = g0.to_vec(); // y¹ = ∇F(x¹)
+        self.g_prev = g0.to_vec();
+    }
+
+    fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
+        // Complete y^k = (Wy^{k−1})_i + g^k − g^{k−1} with the fresh g.
+        if ctx.round > 1 {
+            let y = &mut self.y[agent];
+            let gp = &self.g_prev[agent];
+            for t in 0..y.len() {
+                y[t] += g[t] - gp[t];
+            }
+        }
+        self.g_prev[agent].copy_from_slice(g);
+        out[0].copy_from_slice(&self.x[agent]);
+        out[1].copy_from_slice(&self.y[agent]);
+    }
+
+    fn recv(&mut self, ctx: &Ctx, agent: usize, _g: &[f64], _self_dec: &[&[f64]], mixed: &[&[f64]]) {
+        // x⁺ = (Wx)_i − η y_i (own completed tracker), y ← (Wy)_i.
+        let x = &mut self.x[agent];
+        let y = &mut self.y[agent];
+        for t in 0..x.len() {
+            x[t] = mixed[0][t] - ctx.eta * y[t];
+            y[t] = mixed[1][t];
+        }
+    }
+
+    fn x(&self, agent: usize) -> &[f64] {
+        &self.x[agent]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::{max_dist_to_opt, run_plain};
+    use crate::problems::{linreg::LinReg, Problem};
+    use crate::topology::{MixingRule, Topology};
+
+    #[test]
+    fn exact_convergence() {
+        let p = LinReg::synthetic(8, 30, 0.1, 3);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut algo = DiGing::new();
+        let xs = run_plain(&mut algo, &p, &mix, 0.02, 4000);
+        let err = max_dist_to_opt(&xs, &p);
+        assert!(err < 1e-4, "DIGing err {err}");
+    }
+
+    #[test]
+    fn tracker_conserves_mean_gradient() {
+        // Σ_i y_i^k = Σ_i ∇f_i(x_i^k) after completion — the defining
+        // conservation law of gradient tracking (W doubly stochastic).
+        let p = LinReg::synthetic(4, 12, 0.1, 5);
+        let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+        let mut algo = DiGing::new();
+        let _ = run_plain(&mut algo, &p, &mix, 0.05, 30);
+        // After recv, y_i = (Wy)_i, so Σ_i y_i = Σ_i y_i (pre-mix) which
+        // equals Σ_i g_i(x^k_i); compare against the *current* gradients
+        // shifted by one completion: recompute after completing manually.
+        let d = p.dim();
+        let mut sum_y = vec![0.0f64; d];
+        let mut sum_g = vec![0.0f64; d];
+        let mut g = vec![0.0f64; d];
+        for i in 0..4 {
+            p.grad_full(i, algo.x(i), &mut g);
+            // completion that the next send would apply:
+            for t in 0..d {
+                sum_y[t] += (algo.y[i][t] + g[t] - algo.g_prev[i][t]) as f64;
+                sum_g[t] += g[t] as f64;
+            }
+        }
+        for t in 0..d {
+            assert!(
+                (sum_y[t] - sum_g[t]).abs() < 1e-3,
+                "tracking broken at coord {t}: {} vs {}",
+                sum_y[t],
+                sum_g[t]
+            );
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Exact Diffusion (Yuan et al. 2018) — adapt-then-combine with a
+//! correction step:
+//!
+//! ```text
+//! ψ^{k+1} = x^k − η ∇f(x^k)          (adapt)
+//! φ^{k+1} = ψ^{k+1} + x^k − ψ^k      (correct)
+//! x^{k+1} = (I+W)/2 · φ^{k+1}        (combine)
+//! ```
+//!
+//! Another member of the primal–dual family LEAD recovers (Remark 3 /
+//! Prop. 1, via A = (I+W)/2, M = ηI in Yuan et al. Eq. 97).
+
+use super::{AlgoSpec, Algorithm, Ctx};
+
+pub struct ExactDiffusion {
+    x: Vec<Vec<f64>>,
+    psi: Vec<Vec<f64>>,
+}
+
+impl ExactDiffusion {
+    pub fn new() -> Self {
+        ExactDiffusion { x: vec![], psi: vec![] }
+    }
+}
+
+impl Default for ExactDiffusion {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Algorithm for ExactDiffusion {
+    fn name(&self) -> String {
+        "ExactDiffusion".into()
+    }
+
+    fn spec(&self) -> AlgoSpec {
+        AlgoSpec { channels: 1, compressed: false }
+    }
+
+    fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
+        self.x = x0.to_vec();
+        // ψ⁰ = x⁰ makes the first correction a no-op.
+        self.psi = x0.to_vec();
+    }
+
+    fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
+        let x = &self.x[agent];
+        let psi_old = &mut self.psi[agent];
+        let phi = &mut out[0];
+        for t in 0..x.len() {
+            let psi_new = x[t] - ctx.eta * g[t];
+            phi[t] = psi_new + x[t] - psi_old[t];
+            psi_old[t] = psi_new;
+        }
+    }
+
+    fn recv(&mut self, _ctx: &Ctx, agent: usize, _g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
+        let x = &mut self.x[agent];
+        for t in 0..x.len() {
+            x[t] = 0.5 * (self_dec[0][t] + mixed[0][t]);
+        }
+    }
+
+    fn x(&self, agent: usize) -> &[f64] {
+        &self.x[agent]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::{max_dist_to_opt, run_plain};
+    use crate::problems::linreg::LinReg;
+    use crate::topology::{MixingRule, Topology};
+
+    #[test]
+    fn exact_convergence() {
+        let p = LinReg::synthetic(8, 30, 0.1, 3);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut algo = ExactDiffusion::new();
+        let xs = run_plain(&mut algo, &p, &mix, 0.1, 500);
+        let err = max_dist_to_opt(&xs, &p);
+        assert!(err < 1e-4, "ExactDiffusion err {err}");
+    }
+}

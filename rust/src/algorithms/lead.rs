@@ -1,0 +1,210 @@
+//! **LEAD** — the paper's Algorithm 1/2 (agent-perspective form).
+//!
+//! Per agent i and round k (communication is the single broadcast of the
+//! compressed difference `q_i`):
+//!
+//! ```text
+//! y_i   = x_i − η ∇f_i(x_i; ξ) − η d_i              (aux. variable, line 8)
+//! q_i   = COMPRESS(y_i − h_i)                       (line 9; engine-owned)
+//! ŷ_i   = h_i + q_i                                 (line 10)
+//! ŷw_i  = hw_i + Σ_j w_ij q_j                       (line 13)
+//! h_i   ← (1−α) h_i + α ŷ_i                         (line 14, momentum state)
+//! hw_i  ← (1−α) hw_i + α ŷw_i                       (line 15)
+//! d_i   ← d_i + γ/(2η) (ŷ_i − ŷw_i)                 (line 16, inexact dual)
+//! x_i   ← x_i − η ∇f_i(x_i; ξ) − η d_i              (line 17, same ξ!)
+//! ```
+//!
+//! Key invariants (tested in `rust/tests/theory.rs`):
+//! * `Σ_i d_i = 0` for all k (dual lives in Range(I−W)), *regardless of
+//!   compression error* — this is what makes the global average view
+//!   `x̄^{k+1} = x̄^k − η ḡ^k` exact (paper Eq. 3);
+//! * with C = 0 and γ = 1, the trajectory equals NIDS / D² (Prop. 1).
+
+use super::{zeros, AlgoSpec, Algorithm, Ctx};
+
+/// LEAD hyper-parameters. The paper fixes `α = 0.5, γ = 1.0` for every
+/// experiment (robustness is one of its claims; Fig. 7 sweeps this grid).
+#[derive(Clone, Copy, Debug)]
+pub struct LeadParams {
+    /// Dual stepsize γ ∈ (0, min{…}) per Theorem 1; paper default 1.0.
+    pub gamma: f64,
+    /// State momentum α per Theorem 1; paper default 0.5.
+    pub alpha: f64,
+}
+
+impl Default for LeadParams {
+    fn default() -> Self {
+        LeadParams { gamma: 1.0, alpha: 0.5 }
+    }
+}
+
+pub struct Lead {
+    pub params: LeadParams,
+    x: Vec<Vec<f64>>,
+    d: Vec<Vec<f64>>,
+    h: Vec<Vec<f64>>,
+    hw: Vec<Vec<f64>>,
+    /// Scratch: y_i of the current round (needed in recv).
+    y: Vec<Vec<f64>>,
+}
+
+impl Lead {
+    pub fn new(params: LeadParams) -> Self {
+        Lead { params, x: vec![], d: vec![], h: vec![], hw: vec![], y: vec![] }
+    }
+
+    /// Paper defaults (α = 0.5, γ = 1.0).
+    pub fn paper_default() -> Self {
+        Self::new(LeadParams::default())
+    }
+
+    /// Dual variable of an agent (diagnostics / invariant tests).
+    pub fn dual(&self, agent: usize) -> &[f64] {
+        &self.d[agent]
+    }
+
+    /// State variable H of an agent (diagnostics).
+    pub fn state_h(&self, agent: usize) -> &[f64] {
+        &self.h[agent]
+    }
+}
+
+impl Algorithm for Lead {
+    fn name(&self) -> String {
+        format!("LEAD(γ={}, α={})", self.params.gamma, self.params.alpha)
+    }
+
+    fn spec(&self) -> AlgoSpec {
+        AlgoSpec { channels: 1, compressed: true }
+    }
+
+    fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
+        let n = x0.len();
+        let d = x0[0].len();
+        // D¹ = (I−W)Z with Z = 0 ⇒ D¹ = 0 (guarantees D ∈ Range(I−W)).
+        self.d = zeros(n, d);
+        // H¹ = X⁰ (any choice is admissible; X⁰ keeps the first compressed
+        // difference small). Hw¹ = W H¹ — computed directly from the global
+        // state we own; on a real deployment this is the one-time
+        // uncompressed warm-up exchange of Alg. 2 line 3.
+        self.h = x0.to_vec();
+        self.hw = zeros(n, d);
+        for i in 0..n {
+            for j in std::iter::once(i).chain(ctx.mix.neighbors[i].iter().copied()) {
+                crate::linalg::axpy(ctx.mix.weight(i, j), &x0[j], &mut self.hw[i]);
+            }
+        }
+        // X¹ = X⁰ − η ∇F(X⁰; ξ⁰)  (Alg. 2 line 5).
+        self.x = x0.to_vec();
+        for i in 0..n {
+            crate::linalg::axpy(-ctx.eta, &g0[i], &mut self.x[i]);
+        }
+        self.y = zeros(n, d);
+    }
+
+    fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
+        let (x, d) = (&self.x[agent], &self.d[agent]);
+        let y = &mut self.y[agent];
+        // y = x − η g − η d
+        y.copy_from_slice(x);
+        crate::linalg::axpy(-ctx.eta, g, y);
+        crate::linalg::axpy(-ctx.eta, d, y);
+        // Broadcast the *difference* y − h; the engine compresses it.
+        let payload = &mut out[0];
+        crate::linalg::sub(y, &self.h[agent], payload);
+    }
+
+    fn recv(
+        &mut self,
+        ctx: &Ctx,
+        agent: usize,
+        g: &[f64],
+        self_dec: &[&[f64]],
+        mixed: &[&[f64]],
+    ) {
+        let LeadParams { gamma, alpha } = self.params;
+        let eta = ctx.eta;
+        let q_own = &self_dec[0]; // decoded own difference
+        let q_mix = &mixed[0]; // Σ_j w_ij q_j
+        let dim = q_own.len();
+        let h = &mut self.h[agent];
+        let hw = &mut self.hw[agent];
+        let dvar = &mut self.d[agent];
+        let x = &mut self.x[agent];
+
+        let c = gamma / (2.0 * eta);
+        for t in 0..dim {
+            let yhat = h[t] + q_own[t]; // ŷ = h + q
+            let yhat_w = hw[t] + q_mix[t]; // ŷw = hw + (Wq)
+            // Inexact dual ascent (line 16).
+            dvar[t] += c * (yhat - yhat_w);
+            // Momentum state tracking (lines 14–15).
+            h[t] += alpha * (yhat - h[t]);
+            hw[t] += alpha * (yhat_w - hw[t]);
+            // Primal update with the SAME stochastic gradient (line 17).
+            x[t] -= eta * (g[t] + dvar[t]);
+        }
+    }
+
+    fn x(&self, agent: usize) -> &[f64] {
+        &self.x[agent]
+    }
+
+    fn compression_reference(&self, agent: usize) -> Option<&[f64]> {
+        Some(&self.y[agent])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::{max_dist_to_opt, run_plain};
+    use crate::problems::{linreg::LinReg, Problem};
+    use crate::topology::{MixingRule, Topology};
+
+    #[test]
+    fn converges_linearly_without_compression() {
+        let p = LinReg::synthetic(8, 30, 0.1, 3);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut algo = Lead::paper_default();
+        let xs = run_plain(&mut algo, &p, &mix, 0.1, 400);
+        let err = max_dist_to_opt(&xs, &p);
+        assert!(err < 1e-4, "LEAD did not converge: {err}");
+    }
+
+    #[test]
+    fn dual_sums_to_zero() {
+        // 1ᵀD^k = 0 — the engine-level proptest covers the compressed
+        // case; this is the plain sanity check.
+        let p = LinReg::synthetic(6, 20, 0.1, 5);
+        let mix = Topology::Ring.build(6, MixingRule::UniformNeighbors);
+        let mut algo = Lead::paper_default();
+        let _ = run_plain(&mut algo, &p, &mix, 0.1, 50);
+        for t in 0..p.dim() {
+            let s: f64 = (0..6).map(|i| algo.dual(i)[t] as f64).sum();
+            assert!(s.abs() < 1e-3, "Σ_i d_i[{t}] = {s}");
+        }
+    }
+
+    #[test]
+    fn dual_approaches_negative_gradient() {
+        // D^k → −∇F(X*) (gradient-correction property, §3.1).
+        let p = LinReg::synthetic(4, 16, 0.1, 11);
+        let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+        let mut algo = Lead::paper_default();
+        let _ = run_plain(&mut algo, &p, &mix, 0.1, 600);
+        let xstar = p.optimum().unwrap();
+        let mut g = vec![0.0f64; p.dim()];
+        for i in 0..4 {
+            p.grad_full(i, xstar, &mut g);
+            let diff: f64 = algo
+                .dual(i)
+                .iter()
+                .zip(&g)
+                .map(|(d, gi)| ((*d + *gi) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(diff < 1e-2, "agent {i}: ‖d + ∇f_i(x*)‖ = {diff}");
+        }
+    }
+}

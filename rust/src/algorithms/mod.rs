@@ -1,0 +1,164 @@
+//! Decentralized optimization algorithms: LEAD (the paper's contribution)
+//! and the baselines it is evaluated against.
+//!
+//! Every algorithm in the paper's experimental section fits one
+//! communication pattern per round: each agent broadcasts one (or, for
+//! gradient-tracking methods, two) d-vectors to its neighbors, possibly
+//! compressed, and consumes (a) its *own* decoded broadcast and (b) the
+//! W-weighted mix `Σ_j w_ij decode(msg_j)` over its closed neighborhood.
+//! The [`Algorithm`] trait captures exactly that; the coordinator engine
+//! owns gradient evaluation, compression, mixing, and wire-bit accounting,
+//! so all algorithms are measured under identical rules.
+//!
+//! Round protocol driven by the engine:
+//!
+//! 1. engine computes `g_i = ∇f_i(x_i; ξ_i)` once per agent (LEAD reuses
+//!    the same sample in its two updates — paper Alg. 1 lines 4 & 7);
+//! 2. `send(i, g_i)` returns the per-channel payload vectors of agent i;
+//! 3. the engine compresses channel 0 (if the algorithm opts in), counts
+//!    wire bits, decodes, and forms the weighted mixes;
+//! 4. `recv(i, g_i, self_decoded, mixed)` applies the local update.
+
+pub mod choco;
+pub mod d2;
+pub mod deepsqueeze;
+pub mod dgd;
+pub mod diging;
+pub mod exact_diffusion;
+pub mod lead;
+pub mod nids;
+pub mod qdgd;
+
+use crate::topology::MixingMatrix;
+
+/// Static description the engine needs before the first round.
+#[derive(Clone, Debug)]
+pub struct AlgoSpec {
+    /// Number of broadcast channels per round (1 for everything except
+    /// gradient tracking, which sends the tracker too).
+    pub channels: usize,
+    /// Whether channel 0 should pass through the configured compressor.
+    /// Non-compressed baselines (DGD, NIDS, …) set this to false and are
+    /// billed 32 bits/element.
+    pub compressed: bool,
+}
+
+/// Per-round immutable context handed to the algorithm.
+pub struct Ctx<'a> {
+    pub mix: &'a MixingMatrix,
+    /// Round index, starting at 1 (round 0 is `init`).
+    pub round: usize,
+    /// Stepsize η for this round (engine applies any decay schedule).
+    pub eta: f64,
+}
+
+/// A decentralized algorithm.
+///
+/// The struct owns all per-agent state (x_i, duals, error memories, ...).
+/// `Sync` is required so the engine's worker pool can read iterates
+/// (`x(i)`) concurrently during the gradient phase; all mutation happens in
+/// the sequential leader phase.
+pub trait Algorithm: Send + Sync {
+    fn name(&self) -> String;
+
+    fn spec(&self) -> AlgoSpec;
+
+    /// Initialize state. `x0[i]` is agent i's initial iterate and `g0[i]`
+    /// the gradient at it (LEAD's init performs `X¹ = X⁰ − η∇F(X⁰)`).
+    fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]);
+
+    /// Produce the payload(s) agent i broadcasts this round, given the
+    /// fresh gradient `g`. Returns `spec().channels` vectors via `out`.
+    fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]);
+
+    /// Apply the received communication: `self_dec[c]` is agent i's own
+    /// decoded channel-c payload (== the sent payload when uncompressed),
+    /// `mixed[c] = Σ_{j∈N_i∪{i}} w_ij · decode(payload_j[c])`.
+    fn recv(
+        &mut self,
+        ctx: &Ctx,
+        agent: usize,
+        g: &[f64],
+        self_dec: &[&[f64]],
+        mixed: &[&[f64]],
+    );
+
+    /// Current iterate of agent i.
+    fn x(&self, agent: usize) -> &[f64];
+
+    /// Auxiliary diagnostic: the compression *input* of the last round
+    /// (`Y^k` for LEAD, the raw model for QDGD/DeepSqueeze, the gossip
+    /// difference for CHOCO). Used for the paper's Fig. 1d compression
+    /// error panel. Returns None for non-compressed algorithms.
+    fn compression_reference(&self, agent: usize) -> Option<&[f64]> {
+        let _ = agent;
+        None
+    }
+}
+
+/// Helper used by several algorithms: allocate n copies of a zero vector.
+pub(crate) fn zeros(n: usize, d: usize) -> Vec<Vec<f64>> {
+    vec![vec![0.0f64; d]; n]
+}
+
+pub mod testutil {
+    //! A miniature reference engine used by per-algorithm unit tests
+    //! (the real engines live in `coordinator` and get their own tests;
+    //! this one is deliberately simple — full mixing, no compression).
+
+    use super::*;
+    use crate::problems::Problem;
+
+    /// Run `algo` for `rounds` full-gradient rounds without compression.
+    /// Returns per-agent final iterates.
+    pub fn run_plain(
+        algo: &mut dyn Algorithm,
+        problem: &dyn Problem,
+        mix: &MixingMatrix,
+        eta: f64,
+        rounds: usize,
+    ) -> Vec<Vec<f64>> {
+        let n = problem.n_agents();
+        let d = problem.dim();
+        let spec = algo.spec();
+        let x0 = zeros(n, d);
+        let mut g = zeros(n, d);
+        for i in 0..n {
+            problem.grad_full(i, &x0[i], &mut g[i]);
+        }
+        let ctx0 = Ctx { mix, round: 0, eta };
+        algo.init(&ctx0, &x0, &g);
+        let mut payload = vec![vec![vec![0.0f64; d]; spec.channels]; n];
+        for round in 1..=rounds {
+            let ctx = Ctx { mix, round, eta };
+            for i in 0..n {
+                problem.grad_full(i, algo.x(i), &mut g[i]);
+            }
+            for i in 0..n {
+                let gi = g[i].clone();
+                algo.send(&ctx, i, &gi, &mut payload[i]);
+            }
+            for i in 0..n {
+                let mut mixed = vec![vec![0.0f64; d]; spec.channels];
+                for c in 0..spec.channels {
+                    for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
+                        crate::linalg::axpy(mix.weight(i, j), &payload[j][c], &mut mixed[c]);
+                    }
+                }
+                let self_dec: Vec<&[f64]> = payload[i].iter().map(|v| v.as_slice()).collect();
+                let mixed_refs: Vec<&[f64]> = mixed.iter().map(|v| v.as_slice()).collect();
+                let gi = g[i].clone();
+                algo.recv(&ctx, i, &gi, &self_dec, &mixed_refs);
+            }
+        }
+        (0..n).map(|i| algo.x(i).to_vec()).collect()
+    }
+
+    /// Max distance of any agent's iterate to the problem optimum.
+    pub fn max_dist_to_opt(xs: &[Vec<f64>], problem: &dyn Problem) -> f64 {
+        let opt = problem.optimum().expect("problem must expose optimum");
+        xs.iter()
+            .map(|x| crate::linalg::dist_sq(x, opt).sqrt())
+            .fold(0.0, f64::max)
+    }
+}

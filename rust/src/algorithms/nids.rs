@@ -1,0 +1,96 @@
+//! NIDS (Li, Shi & Yan 2019) in the two-step primal–dual form the paper
+//! builds LEAD from (Eqs. 4–5):
+//!
+//! ```text
+//! d_i^{k+1} = d_i^k + (1/2η) [(I−W)(x^k − η∇F(x^k) − η d^k)]_i
+//! x_i^{k+1} = x_i^k − η ∇f_i(x_i^k) − η d_i^{k+1}
+//! ```
+//!
+//! This is exactly LEAD with identity compression and γ = 1 (Prop. 1 /
+//! Cor. 3) — an equality our integration tests verify trajectory-for-
+//! trajectory against both [`super::lead::Lead`] and [`super::d2::D2`].
+
+use super::{zeros, AlgoSpec, Algorithm, Ctx};
+
+pub struct Nids {
+    x: Vec<Vec<f64>>,
+    d: Vec<Vec<f64>>,
+}
+
+impl Nids {
+    pub fn new() -> Self {
+        Nids { x: vec![], d: vec![] }
+    }
+
+    pub fn dual(&self, agent: usize) -> &[f64] {
+        &self.d[agent]
+    }
+}
+
+impl Default for Nids {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Algorithm for Nids {
+    fn name(&self) -> String {
+        "NIDS".into()
+    }
+
+    fn spec(&self) -> AlgoSpec {
+        AlgoSpec { channels: 1, compressed: false }
+    }
+
+    fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
+        let n = x0.len();
+        self.d = zeros(n, x0[0].len());
+        self.x = x0.to_vec();
+        // Same warm start as LEAD: x¹ = x⁰ − ηg⁰.
+        for i in 0..n {
+            crate::linalg::axpy(-ctx.eta, &g0[i], &mut self.x[i]);
+        }
+    }
+
+    fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
+        // Broadcast y = x − ηg − ηd (uncompressed).
+        let y = &mut out[0];
+        y.copy_from_slice(&self.x[agent]);
+        crate::linalg::axpy(-ctx.eta, g, y);
+        crate::linalg::axpy(-ctx.eta, &self.d[agent], y);
+    }
+
+    fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
+        // (I−W) y = y_i − (Wy)_i = self − mixed.
+        let eta = ctx.eta;
+        let c = 1.0 / (2.0 * eta);
+        let x = &mut self.x[agent];
+        let d = &mut self.d[agent];
+        for t in 0..x.len() {
+            d[t] += c * (self_dec[0][t] - mixed[0][t]);
+            x[t] -= eta * (g[t] + d[t]);
+        }
+    }
+
+    fn x(&self, agent: usize) -> &[f64] {
+        &self.x[agent]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::{max_dist_to_opt, run_plain};
+    use crate::problems::linreg::LinReg;
+    use crate::topology::{MixingRule, Topology};
+
+    #[test]
+    fn exact_convergence_heterogeneous() {
+        let p = LinReg::synthetic(8, 30, 0.1, 3);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut algo = Nids::new();
+        let xs = run_plain(&mut algo, &p, &mix, 0.1, 400);
+        let err = max_dist_to_opt(&xs, &p);
+        assert!(err < 1e-4, "NIDS should converge exactly, got {err}");
+    }
+}

@@ -1,0 +1,53 @@
+//! Identity "compression": transmits raw f64 values (32 bits/element).
+//!
+//! This is C = 0 in the paper's notation — LEAD with [`Identity`] recovers
+//! NIDS exactly (Proposition 1 / Corollary 3), which the integration tests
+//! verify trajectory-for-trajectory.
+
+use super::{CompressedMsg, Compressor};
+use crate::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".to_string()
+    }
+
+    fn compress(&self, x: &[f64], _rng: &mut Rng, out: &mut CompressedMsg) {
+        out.values.clear();
+        out.values.extend_from_slice(x);
+        // Raw IEEE-754 payload.
+        out.payload.clear();
+        out.payload.reserve(x.len() * 4);
+        for v in x {
+            out.payload.extend_from_slice(&(*v as f32).to_le_bytes());
+        }
+        out.wire_bits = (x.len() as u64) * 32;
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn variance_constant(&self, _d: usize) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_passthrough() {
+        let mut rng = Rng::new(0);
+        let x = vec![1.5f64, -2.25, 0.0];
+        let msg = Identity.compress_alloc(&x, &mut rng);
+        assert_eq!(msg.values, x);
+        assert_eq!(msg.wire_bits, 96);
+        assert_eq!(msg.payload.len(), 12);
+        assert_eq!(Identity.variance_constant(3), Some(0.0));
+    }
+}

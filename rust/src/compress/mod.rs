@@ -1,0 +1,118 @@
+//! Communication compression operators (paper §5 / Appendix C).
+//!
+//! Each [`Compressor`] turns a vector into (a) a packed wire payload whose
+//! exact bit count feeds the communication plots and (b) the decoded values
+//! every receiver reconstructs. LEAD's theory (Assumption 2) requires the
+//! operator to be *unbiased* with variance `E‖x − Q(x)‖² ≤ C‖x‖²`; the
+//! p-norm b-bit quantizer ([`quantize::QuantizeP`], Eq. 20) satisfies this,
+//! while top-k is biased and included only for the Fig. 6 comparison.
+
+pub mod identity;
+pub mod quantize;
+pub mod randk;
+pub mod topk;
+pub mod wire;
+
+use crate::rng::Rng;
+
+/// A compressed message: decoded values + exact wire size.
+///
+/// The decoded values are what every receiver reconstructs (codecs are
+/// deterministic given the payload, so decoding once is equivalent to each
+/// receiver decoding its own copy). `payload` holds the actual packed
+/// bytes; `wire_bits` is its exact size in bits, including per-block norms
+/// and any index/seed overhead.
+#[derive(Clone, Debug, Default)]
+pub struct CompressedMsg {
+    pub values: Vec<f64>,
+    pub payload: Vec<u8>,
+    pub wire_bits: u64,
+}
+
+impl CompressedMsg {
+    pub fn with_dim(d: usize) -> Self {
+        CompressedMsg { values: vec![0.0; d], payload: Vec::new(), wire_bits: 0 }
+    }
+}
+
+/// A communication compression operator.
+pub trait Compressor: Send + Sync {
+    /// Human-readable identifier, e.g. `q∞-2bit/512`.
+    fn name(&self) -> String;
+
+    /// Compress `x` into `out` (both `values` and `payload` are
+    /// overwritten; buffers are reused across rounds). `rng` supplies the
+    /// dither / index randomness — each agent passes its own stream so the
+    /// parallel engine stays deterministic.
+    fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg);
+
+    /// Whether `E[Q(x)] = x` (Assumption 2). LEAD's guarantees require it.
+    fn is_unbiased(&self) -> bool;
+
+    /// The worst-case variance constant C with `E‖x−Q(x)‖² ≤ C‖x‖²`, if
+    /// the operator is unbiased (None for biased operators).
+    fn variance_constant(&self, d: usize) -> Option<f64>;
+
+    /// Convenience: allocate-and-compress.
+    fn compress_alloc(&self, x: &[f64], rng: &mut Rng) -> CompressedMsg {
+        let mut out = CompressedMsg::with_dim(x.len());
+        self.compress(x, rng, &mut out);
+        out
+    }
+}
+
+/// Parse a compressor spec string: `none`, `qinf:<bits>[:<block>]`,
+/// `q2:<bits>`, `q1:<bits>`, `topk:<k>`, `randk:<k>`.
+pub fn parse(spec: &str) -> Option<Box<dyn Compressor>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts[0] {
+        "none" | "identity" => Some(Box::new(identity::Identity)),
+        "topk" => {
+            let k = parts.get(1)?.parse().ok()?;
+            Some(Box::new(topk::TopK::new(k)))
+        }
+        "randk" => {
+            let k = parts.get(1)?.parse().ok()?;
+            Some(Box::new(randk::RandK::new(k, true)))
+        }
+        p if p.starts_with('q') => {
+            let norm = match &p[1..] {
+                "inf" | "" => quantize::PNorm::Inf,
+                s => quantize::PNorm::P(s.parse().ok()?),
+            };
+            let bits = parts.get(1)?.parse().ok()?;
+            let block = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(512);
+            Some(Box::new(quantize::QuantizeP::new(bits, norm, block)))
+        }
+        _ => None,
+    }
+}
+
+/// Measured relative compression error `‖x − Q(x)‖₂ / ‖x‖₂`, averaged over
+/// `trials` fresh random draws of the dither (Figs. 5–6 metric).
+pub fn relative_error(c: &dyn Compressor, x: &[f64], rng: &mut Rng, trials: usize) -> f64 {
+    let norm = crate::linalg::norm2(x).max(1e-30);
+    let mut msg = CompressedMsg::with_dim(x.len());
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        c.compress(x, rng, &mut msg);
+        acc += crate::linalg::dist_sq(x, &msg.values).sqrt() / norm;
+    }
+    acc / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(parse("none").unwrap().name(), "identity");
+        assert!(parse("qinf:2").unwrap().name().contains("2bit"));
+        assert!(parse("q2:4:256").unwrap().name().contains("p=2"));
+        assert!(parse("topk:10").unwrap().name().contains("top"));
+        assert!(parse("randk:10").unwrap().name().contains("rand"));
+        assert!(parse("wat").is_none());
+        assert!(parse("topk").is_none());
+    }
+}

@@ -1,0 +1,310 @@
+//! p-norm b-bit stochastic quantization — the paper's compression operator
+//! (Eq. 14 for p = ∞, Theorem 3 / Eq. 20 in general):
+//!
+//! ```text
+//! Q_p(x) = (‖x‖_p · sign(x) · 2^{-(b-1)}) ⊙ ⌊ 2^{b-1} |x| / ‖x‖_p + u ⌋,
+//! u ~ U[0,1)^d
+//! ```
+//!
+//! The stochastic dither `u` makes the operator *unbiased* (Theorem 3), and
+//! the variance is bounded by `(1/4)‖sign(x)2^{-(b-1)}‖² ‖x‖_p²` — minimized
+//! by p = ∞, which is the paper's headline observation in Appendix C.
+//!
+//! Quantization is applied blockwise (paper §5 uses block = 512): each block
+//! gets its own norm so one outlier cannot destroy the precision of the
+//! whole vector. The wire format per block is
+//!
+//! ```text
+//! [ norm: f64 | per element: sign (1 bit) + level (b bits) ]
+//! ```
+//!
+//! `level ∈ {0, …, 2^{b-1}}` — note the inclusive upper end, which is why
+//! levels need `b` bits rather than `b−1`. Total wire size:
+//! `32·⌈d/block⌉ + d·(b+1)` bits. With b = 2 and block = 512 that is
+//! ≈ 3.06 bits/element vs 32 for raw f64 — a 10.4× reduction.
+
+use super::wire::{BitReader, BitWriter};
+use super::{CompressedMsg, Compressor};
+use crate::rng::Rng;
+
+/// Which norm scales the quantization grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PNorm {
+    /// Finite p ≥ 1.
+    P(f64),
+    /// ∞-norm (the paper's choice; smallest variance bound).
+    Inf,
+}
+
+impl PNorm {
+    fn eval(&self, x: &[f64]) -> f64 {
+        match self {
+            PNorm::Inf => crate::linalg::norm_inf(x) as f64,
+            PNorm::P(p) => crate::linalg::norm_p(x, *p),
+        }
+    }
+}
+
+/// Blockwise p-norm b-bit stochastic quantizer.
+#[derive(Clone, Debug)]
+pub struct QuantizeP {
+    /// Bits per magnitude level (b ≥ 1). Levels occupy b bits on the wire
+    /// plus one sign bit.
+    pub bits: u32,
+    pub norm: PNorm,
+    /// Block size for blockwise quantization (paper: 512).
+    pub block: usize,
+}
+
+impl QuantizeP {
+    pub fn new(bits: u32, norm: PNorm, block: usize) -> Self {
+        assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+        assert!(block >= 1);
+        QuantizeP { bits, norm, block }
+    }
+
+    /// The paper's default: 2-bit ∞-norm quantization, block 512.
+    pub fn paper_default() -> Self {
+        QuantizeP::new(2, PNorm::Inf, 512)
+    }
+
+    /// Encode one block into the bit stream, returning the dequantized
+    /// values in `vals`.
+    fn encode_block(&self, x: &[f64], rng: &mut Rng, w: &mut BitWriter, vals: &mut [f64]) {
+        // The wire carries the norm as f32 (32 bits); BOTH sides must use
+        // the f32-rounded value so sender-side decode == receiver decode.
+        let norm_f32 = self.norm.eval(x) as f32;
+        w.push_f32(norm_f32);
+        let norm = norm_f32 as f64;
+        if norm <= 0.0 || !norm.is_finite() {
+            // All-zero (or degenerate) block: levels are zero.
+            for (v, out) in x.iter().zip(vals.iter_mut()) {
+                let _ = v;
+                *out = 0.0;
+                w.push(0, 1 + self.bits);
+            }
+            return;
+        }
+        let scale = (1u64 << (self.bits - 1)) as f64; // 2^{b-1}
+        let unit = norm / scale; // ‖x‖_p · 2^{-(b-1)}
+        // Hot loop (§Perf): precompute 1/norm (divide → multiply) and fuse
+        // sign+level into a single bit-stream push — the LSB-first layout
+        // `sign | level<<1` is bit-identical to the two separate pushes, so
+        // decode() and the wire format are unchanged.
+        let inv = scale / norm;
+        let field_width = 1 + self.bits;
+        for (xi, out) in x.iter().zip(vals.iter_mut()) {
+            let sign_bit = u64::from(xi.is_sign_negative());
+            let scaled = xi.abs() * inv;
+            let level = (scaled + rng.uniform_f64()).floor() as u64;
+            debug_assert!(level <= scale as u64 + 1, "level {level} > {scale}");
+            let level = level.min(scale as u64); // guard fp edge (|x| == norm, u→1)
+            w.push(sign_bit | (level << 1), field_width);
+            let mag = unit * level as f64;
+            *out = if sign_bit == 1 { -mag } else { mag };
+        }
+    }
+}
+
+impl Compressor for QuantizeP {
+    fn name(&self) -> String {
+        let p = match self.norm {
+            PNorm::Inf => "∞".to_string(),
+            PNorm::P(p) => format!("p={p}"),
+        };
+        format!("q{}-{}bit/{}", p, self.bits, self.block)
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
+        out.values.resize(x.len(), 0.0);
+        let mut w = BitWriter::new();
+        std::mem::swap(&mut w.bytes, &mut out.payload); // reuse buffer
+        w.clear();
+        for (xb, vb) in x.chunks(self.block).zip(out.values.chunks_mut(self.block)) {
+            self.encode_block(xb, rng, &mut w, vb);
+        }
+        out.wire_bits = w.bits;
+        out.payload = w.bytes;
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    /// Worst-case C (Remark 7). For p = ∞ the supremum of
+    /// `‖x‖_∞²/‖x‖²` is 1 (a single spike), giving `C = B · 4^{-b}` with
+    /// B the effective block length. For finite p ≥ 2 the same bound holds
+    /// (‖x‖_p ≤ ‖x‖_2 ⇒ ratio ≤ 1 is false for p<2); for p < 2 the ratio
+    /// can reach `B^{2/p − 1}`.
+    fn variance_constant(&self, d: usize) -> Option<f64> {
+        let b_eff = self.block.min(d).max(1) as f64;
+        let base = b_eff / 4f64.powi(self.bits as i32);
+        Some(match self.norm {
+            PNorm::Inf => base,
+            PNorm::P(p) if p >= 2.0 => base,
+            PNorm::P(p) => base * b_eff.powf(2.0 / p - 1.0),
+        })
+    }
+}
+
+/// Decode a packed payload produced by [`QuantizeP::compress`] back into
+/// values. Used by tests to prove the wire format is complete (the decoded
+/// stream must reproduce `CompressedMsg::values` exactly) and by the
+/// network-simulation layer when byte-level transport is exercised.
+pub fn decode(q: &QuantizeP, payload: &[u8], d: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(d);
+    let mut r = BitReader::new(payload);
+    let scale = (1u64 << (q.bits - 1)) as f64;
+    let mut remaining = d;
+    while remaining > 0 {
+        let blk = remaining.min(q.block);
+        let norm = r.read_f32() as f64;
+        let unit = if norm > 0.0 { norm / scale } else { 0.0 };
+        for _ in 0..blk {
+            let sign = r.read(1);
+            let level = r.read(q.bits);
+            let mag = unit * level as f64;
+            out.push(if sign == 1 { -mag } else { mag });
+        }
+        remaining -= blk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist_sq, norm2_sq};
+    use crate::prop::forall;
+    use crate::prop_assert;
+
+    #[test]
+    fn wire_size_formula() {
+        let q = QuantizeP::new(2, PNorm::Inf, 512);
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..1000).map(|i| (i as f64).sin()).collect();
+        let msg = q.compress_alloc(&x, &mut rng);
+        let blocks = 1000usize.div_ceil(512) as u64;
+        assert_eq!(msg.wire_bits, blocks * 32 + 1000 * 3);
+        // ~3.06 bits/element => >10x compression.
+        assert!(msg.wire_bits * 10 < 32 * 1000);
+    }
+
+    #[test]
+    fn decode_matches_values_exactly() {
+        forall(60, 0xBEEF, |g| {
+            let bits = g.usize_in(1..=8) as u32;
+            let block = *g.choose(&[3usize, 64, 512]);
+            let q = QuantizeP::new(bits, PNorm::Inf, block);
+            let x = g.vec_f64(1..=700, 5.0);
+            let mut rng = Rng::new(g.case_seed);
+            let msg = q.compress_alloc(&x, &mut rng);
+            let mut dec = Vec::new();
+            decode(&q, &msg.payload, x.len(), &mut dec);
+            prop_assert!(dec == msg.values, "wire decode mismatch (bits={bits} block={block})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unbiased_statistically() {
+        // E[Q(x)] = x (Theorem 3): average many independent quantizations.
+        let q = QuantizeP::new(2, PNorm::Inf, 64);
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..64).map(|_| rng.normal_f64()).collect();
+        let trials = 20_000;
+        let mut mean = vec![0.0f64; 64];
+        let mut msg = CompressedMsg::with_dim(64);
+        for _ in 0..trials {
+            q.compress(&x, &mut rng, &mut msg);
+            for (m, v) in mean.iter_mut().zip(&msg.values) {
+                *m += *v as f64;
+            }
+        }
+        for (m, xi) in mean.iter().zip(&x) {
+            let avg = m / trials as f64;
+            // std error of the mean ≈ unit/sqrt(12·trials); allow 6 sigma.
+            let unit = crate::linalg::norm_inf(&x) / 2.0;
+            let tol = 6.0 * (unit as f64) / (12.0 * trials as f64).sqrt();
+            assert!((avg - *xi as f64).abs() < tol, "bias {} vs tol {tol}", avg - *xi as f64);
+        }
+    }
+
+    #[test]
+    fn variance_bound_holds() {
+        // E‖x−Q(x)‖² ≤ C‖x‖² with the Remark 7 constant.
+        forall(25, 0xFEED, |g| {
+            let bits = g.usize_in(1..=6) as u32;
+            let q = QuantizeP::new(bits, PNorm::Inf, 128);
+            let x = g.vec_f64(16..=256, 3.0);
+            let c = q.variance_constant(x.len()).unwrap();
+            let mut rng = Rng::new(g.case_seed ^ 1);
+            let mut msg = CompressedMsg::with_dim(x.len());
+            let trials = 300;
+            let mut err = 0.0;
+            for _ in 0..trials {
+                q.compress(&x, &mut rng, &mut msg);
+                err += dist_sq(&x, &msg.values);
+            }
+            err /= trials as f64;
+            let bound = c * norm2_sq(&x);
+            prop_assert!(
+                err <= bound * 1.15 + 1e-12,
+                "E err {err} exceeds C‖x‖² = {bound} (bits={bits})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inf_norm_beats_smaller_p() {
+        // Appendix C / Fig. 5: error decreases as p grows; ∞ is best.
+        let mut rng = Rng::new(42);
+        let x: Vec<f64> = (0..4096).map(|_| rng.normal_f64()).collect();
+        let err_for = |norm: PNorm| {
+            let q = QuantizeP::new(2, norm, 4096);
+            super::super::relative_error(&q, &x, &mut Rng::new(7), 20)
+        };
+        let e1 = err_for(PNorm::P(1.0));
+        let e2 = err_for(PNorm::P(2.0));
+        let e6 = err_for(PNorm::P(6.0));
+        let einf = err_for(PNorm::Inf);
+        assert!(e1 > e2 && e2 > e6 && e6 > einf, "e1={e1} e2={e2} e6={e6} einf={einf}");
+    }
+
+    #[test]
+    fn zero_and_spike_blocks() {
+        let q = QuantizeP::new(2, PNorm::Inf, 8);
+        let mut rng = Rng::new(3);
+        // Zero vector quantizes to zero with finite wire size.
+        let z = vec![0.0f64; 16];
+        let msg = q.compress_alloc(&z, &mut rng);
+        assert!(msg.values.iter().all(|&v| v == 0.0));
+        assert_eq!(msg.wire_bits, 2 * 32 + 16 * 3);
+        // A single spike: the spike itself is reproduced exactly
+        // (|x| == norm ⇒ level = 2^{b-1} regardless of dither).
+        let mut s = vec![0.0f64; 8];
+        s[3] = -2.5;
+        let msg = q.compress_alloc(&s, &mut rng);
+        assert_eq!(msg.values[3], -2.5);
+        for (i, v) in msg.values.iter().enumerate() {
+            if i != 3 {
+                assert_eq!(*v, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = Rng::new(9);
+        let x: Vec<f64> = (0..1024).map(|_| rng.normal_f64()).collect();
+        let mut prev = f64::INFINITY;
+        for bits in [1u32, 2, 4, 6, 8] {
+            let q = QuantizeP::new(bits, PNorm::Inf, 512);
+            let e = super::super::relative_error(&q, &x, &mut Rng::new(11), 10);
+            assert!(e < prev, "bits={bits}: {e} !< {prev}");
+            prev = e;
+        }
+        assert!(prev < 0.01); // 8-bit is near-lossless at this scale
+    }
+}

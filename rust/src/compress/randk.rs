@@ -1,0 +1,126 @@
+//! Random-k sparsification with shared-seed index selection.
+//!
+//! Keeps k uniformly random coordinates. Because sender and receivers can
+//! derive the index set from a shared per-round seed, *no index bits are
+//! transmitted* — only k values and a 64-bit seed. This is the trick noted
+//! in Appendix C.2 that makes random-k surprisingly competitive with top-k
+//! per bit. With `unbiased = true` values are scaled by d/k so that
+//! `E[Q(x)] = x` with variance constant `C = d/k − 1` (Assumption 2 holds).
+
+use super::wire::BitWriter;
+use super::{CompressedMsg, Compressor};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RandK {
+    pub k: usize,
+    /// Scale kept values by d/k to make the operator unbiased.
+    pub unbiased: bool,
+}
+
+impl RandK {
+    pub fn new(k: usize, unbiased: bool) -> Self {
+        assert!(k >= 1);
+        RandK { k, unbiased }
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("rand-{}{}", self.k, if self.unbiased { " (unbiased)" } else { "" })
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
+        let d = x.len();
+        let k = self.k.min(d);
+        let idx = rng.sample_indices(d, k);
+        let scale = if self.unbiased { d as f64 / k as f64 } else { 1.0 };
+
+        out.values.clear();
+        out.values.resize(d, 0.0);
+        let mut w = BitWriter::new();
+        std::mem::swap(&mut w.bytes, &mut out.payload);
+        w.clear();
+        // Shared seed (64 bits) lets receivers regenerate `idx` locally.
+        w.push(rng.next_u64(), 64);
+        for &i in &idx {
+            let wire = x[i] as f32; // f32 on the wire
+            w.push_f32(wire);
+            out.values[i] = wire as f64 * scale;
+        }
+        out.wire_bits = w.bits;
+        out.payload = w.bytes;
+    }
+
+    fn is_unbiased(&self) -> bool {
+        self.unbiased
+    }
+
+    fn variance_constant(&self, d: usize) -> Option<f64> {
+        if self.unbiased {
+            Some((d as f64 / self.k.min(d) as f64) - 1.0)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist_sq, norm2_sq};
+
+    #[test]
+    fn wire_is_values_plus_seed() {
+        let r = RandK::new(10, true);
+        let mut rng = Rng::new(4);
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let msg = r.compress_alloc(&x, &mut rng);
+        assert_eq!(msg.wire_bits, 64 + 10 * 32);
+        assert_eq!(msg.values.iter().filter(|&&v| v != 0.0).count(), 10);
+    }
+
+    #[test]
+    fn unbiased_mean_and_variance() {
+        let d = 50;
+        let k = 10;
+        let r = RandK::new(k, true);
+        let mut rng = Rng::new(8);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal_f64()).collect();
+        let trials = 30_000;
+        let mut mean = vec![0.0f64; d];
+        let mut var_acc = 0.0;
+        let mut msg = CompressedMsg::with_dim(d);
+        for _ in 0..trials {
+            r.compress(&x, &mut rng, &mut msg);
+            for (m, v) in mean.iter_mut().zip(&msg.values) {
+                *m += *v as f64;
+            }
+            var_acc += dist_sq(&x, &msg.values);
+        }
+        for (m, xi) in mean.iter().zip(&x) {
+            let avg = m / trials as f64;
+            assert!((avg - *xi as f64).abs() < 0.06, "bias {}", avg - *xi as f64);
+        }
+        // E‖x−Q(x)‖² = (d/k − 1)‖x‖² exactly for rand-k.
+        let c = r.variance_constant(d).unwrap();
+        let expected = c * norm2_sq(&x);
+        let measured = var_acc / trials as f64;
+        assert!(
+            (measured - expected).abs() / expected < 0.05,
+            "measured {measured} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn biased_mode_keeps_raw_values() {
+        let r = RandK::new(5, false);
+        let mut rng = Rng::new(1);
+        let x = vec![2.0f64; 20];
+        let msg = r.compress_alloc(&x, &mut rng);
+        for &v in &msg.values {
+            assert!(v == 0.0 || v == 2.0);
+        }
+        assert!(r.variance_constant(20).is_none());
+    }
+}

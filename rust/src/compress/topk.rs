@@ -1,0 +1,108 @@
+//! Top-k sparsification: keep the k largest-magnitude entries.
+//!
+//! Biased (violates Assumption 2), so LEAD's theory does not cover it — it
+//! is included for the Appendix C.2 / Fig. 6 comparison, which shows that
+//! per transmitted bit, ∞-norm quantization dominates top-k because top-k
+//! pays ⌈log₂ d⌉ index bits per surviving value.
+
+use super::wire::{index_bits, BitWriter};
+use super::{CompressedMsg, Compressor};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        TopK { k }
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("top-{}", self.k)
+    }
+
+    fn compress(&self, x: &[f64], _rng: &mut Rng, out: &mut CompressedMsg) {
+        let d = x.len();
+        let k = self.k.min(d);
+        // Partial selection of the k largest |x_i|.
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.select_nth_unstable_by(k.saturating_sub(1).min(d - 1), |&a, &b| {
+            x[b].abs().partial_cmp(&x[a].abs()).unwrap()
+        });
+        idx.truncate(k);
+        idx.sort_unstable(); // canonical wire order
+
+        out.values.clear();
+        out.values.resize(d, 0.0);
+        let mut w = BitWriter::new();
+        std::mem::swap(&mut w.bytes, &mut out.payload);
+        w.clear();
+        let ib = index_bits(d);
+        for &i in &idx {
+            w.push(i as u64, ib);
+            let wire = x[i] as f32; // f32 on the wire
+            w.push_f32(wire);
+            out.values[i] = wire as f64;
+        }
+        out.wire_bits = w.bits;
+        out.payload = w.bytes;
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn variance_constant(&self, _d: usize) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+    use crate::prop_assert;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let t = TopK::new(2);
+        let mut rng = Rng::new(1);
+        let x = vec![0.1f64, -5.0, 0.3, 4.0, -0.2];
+        let msg = t.compress_alloc(&x, &mut rng);
+        assert_eq!(msg.values, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
+        // 2 entries × (3 index bits + 32 value bits)
+        assert_eq!(msg.wire_bits, 2 * (3 + 32));
+    }
+
+    #[test]
+    fn exact_when_k_geq_d() {
+        let t = TopK::new(100);
+        let mut rng = Rng::new(2);
+        let x = vec![1.0f64, -2.0, 3.0];
+        let msg = t.compress_alloc(&x, &mut rng);
+        assert_eq!(msg.values, x);
+    }
+
+    #[test]
+    fn error_never_worse_than_dropping_all() {
+        forall(50, 0x70C0, |g| {
+            let x = g.vec_f64(1..=300, 4.0);
+            let k = g.usize_in(1..=x.len());
+            let t = TopK::new(k);
+            let mut rng = Rng::new(g.case_seed);
+            let msg = t.compress_alloc(&x, &mut rng);
+            let err = crate::linalg::dist_sq(&x, &msg.values);
+            let total = crate::linalg::norm2_sq(&x);
+            prop_assert!(err <= total + 1e-9, "err {err} > ‖x‖² {total}");
+            // Contraction property of top-k: err ≤ (1 − k/d)‖x‖².
+            let bound = (1.0 - k as f64 / x.len() as f64) * total;
+            prop_assert!(err <= bound + 1e-6, "err {err} > (1−k/d)‖x‖² {bound}");
+            Ok(())
+        });
+    }
+}

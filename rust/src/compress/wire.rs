@@ -1,0 +1,168 @@
+//! Bit-level wire format helpers.
+//!
+//! The paper's communication plots are measured in *bits transmitted*, so
+//! the codecs in this crate produce real packed bitstreams rather than
+//! estimating sizes. [`BitWriter`] / [`BitReader`] implement an LSB-first
+//! bit stream over a byte buffer; codecs append arbitrary-width fields.
+
+/// LSB-first bit writer over a growable byte buffer.
+#[derive(Default)]
+pub struct BitWriter {
+    pub bytes: Vec<u8>,
+    /// Number of valid bits in the stream.
+    pub bits: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset without deallocating (hot-loop reuse).
+    pub fn clear(&mut self) {
+        self.bytes.clear();
+        self.bits = 0;
+    }
+
+    /// Append the low `width` bits of `value` (width ≤ 64).
+    #[inline]
+    pub fn push(&mut self, value: u64, width: u32) {
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || value < (1u64 << width), "value {value} overflows {width} bits");
+        let mut remaining = width;
+        let mut v = value;
+        while remaining > 0 {
+            let bit_in_byte = (self.bits % 8) as u32;
+            if bit_in_byte == 0 {
+                self.bytes.push(0);
+            }
+            let take = remaining.min(8 - bit_in_byte);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            *self.bytes.last_mut().unwrap() |= ((v & mask) as u8) << bit_in_byte;
+            v >>= take;
+            self.bits += take as u64;
+            remaining -= take;
+        }
+    }
+
+    /// Append an f32 (32 bits, IEEE-754 little-endian bit order).
+    #[inline]
+    pub fn push_f32(&mut self, x: f32) {
+        self.push(x.to_bits() as u64, 32);
+    }
+}
+
+/// LSB-first bit reader.
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0 }
+    }
+
+    /// Read `width` bits (width ≤ 64). Panics past end of stream.
+    #[inline]
+    pub fn read(&mut self, width: u32) -> u64 {
+        debug_assert!(width <= 64);
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < width {
+            let byte = self.bytes[(self.pos / 8) as usize];
+            let bit_in_byte = (self.pos % 8) as u32;
+            let take = (width - got).min(8 - bit_in_byte);
+            let mask = ((1u16 << take) - 1) as u8;
+            let chunk = (byte >> bit_in_byte) & mask;
+            out |= (chunk as u64) << got;
+            got += take;
+            self.pos += take as u64;
+        }
+        out
+    }
+
+    #[inline]
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read(32) as u32)
+    }
+
+    /// Bits consumed so far.
+    pub fn position(&self) -> u64 {
+        self.pos
+    }
+}
+
+/// ceil(log2(n)) for n >= 1 — index field width for sparsifiers.
+pub fn index_bits(n: usize) -> u32 {
+    debug_assert!(n >= 1);
+    (usize::BITS - (n - 1).leading_zeros()).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.push_f32(-1.5);
+        w.push(0xDEADBEEF, 37);
+        w.push(1, 1);
+        w.push(u64::MAX, 64);
+        let mut r = BitReader::new(&w.bytes);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read_f32(), -1.5);
+        assert_eq!(r.read(37), 0xDEADBEEF);
+        assert_eq!(r.read(1), 1);
+        assert_eq!(r.read(64), u64::MAX);
+        assert_eq!(r.position(), w.bits);
+    }
+
+    #[test]
+    fn random_fields_roundtrip() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let n = 1 + rng.below(64);
+            let fields: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let width = 1 + rng.below(64) as u32;
+                    let value = if width == 64 { rng.next_u64() } else { rng.next_u64() & ((1u64 << width) - 1) };
+                    (value, width)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, width) in &fields {
+                w.push(v, width);
+            }
+            let mut r = BitReader::new(&w.bytes);
+            for &(v, width) in &fields {
+                assert_eq!(r.read(width), v, "width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_count_exact() {
+        let mut w = BitWriter::new();
+        w.push(1, 1);
+        w.push(2, 2);
+        assert_eq!(w.bits, 3);
+        assert_eq!(w.bytes.len(), 1);
+        w.push(0, 6);
+        assert_eq!(w.bits, 9);
+        assert_eq!(w.bytes.len(), 2);
+    }
+
+    #[test]
+    fn index_bits_values() {
+        assert_eq!(index_bits(1), 1);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(3), 2);
+        assert_eq!(index_bits(256), 8);
+        assert_eq!(index_bits(257), 9);
+        assert_eq!(index_bits(10_000), 14);
+    }
+}

@@ -1,0 +1,193 @@
+//! Run metrics: the quantities the paper plots, recorded per round.
+
+use crate::serialize::json;
+
+/// Metrics snapshot at one recorded round.
+#[derive(Clone, Debug)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// √((1/n) Σ_i ‖x_i − x*‖²) — the paper's "distance to x*"
+    /// (NaN when the problem exposes no optimum).
+    pub dist_opt: f64,
+    /// √((1/n) Σ_i ‖x_i − x̄‖²) — consensus error (Fig. 1c / Cor. 2).
+    pub consensus: f64,
+    /// Global objective f(x̄) at the averaged model.
+    pub loss: f64,
+    /// Mean absolute compression error of this round,
+    /// (1/n) Σ_i ‖decode(Q(p_i)) − p_i‖₂ (Fig. 1d). Zero when uncompressed.
+    pub comp_err: f64,
+    /// Cumulative wire bits transmitted per agent (i.e. total/n), so plots
+    /// against "bits" match the paper's per-agent budget axis.
+    pub bits_per_agent: f64,
+    /// Simulated communication time so far (network model), seconds.
+    pub sim_time: f64,
+}
+
+/// A full run: per-round series plus identification.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub algo: String,
+    pub problem: String,
+    pub compressor: String,
+    pub series: Vec<RoundMetrics>,
+    pub wall_secs: f64,
+}
+
+impl RunRecord {
+    pub fn last(&self) -> &RoundMetrics {
+        self.series.last().expect("empty run record")
+    }
+
+    /// First recorded round whose dist_opt ≤ tol; None if never reached.
+    pub fn rounds_to_tol(&self, tol: f64) -> Option<usize> {
+        self.series.iter().find(|m| m.dist_opt <= tol).map(|m| m.round)
+    }
+
+    /// Bits/agent spent when dist_opt first ≤ tol.
+    pub fn bits_to_tol(&self, tol: f64) -> Option<f64> {
+        self.series.iter().find(|m| m.dist_opt <= tol).map(|m| m.bits_per_agent)
+    }
+
+    /// Empirical contraction factor ρ̂ fitted over the linear-decay segment
+    /// (least-squares slope of log dist_opt between the first round and the
+    /// first round below `floor`).
+    pub fn empirical_rho(&self, floor: f64) -> Option<f64> {
+        let pts: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .filter(|m| m.dist_opt.is_finite() && m.dist_opt > floor)
+            .map(|m| (m.round as f64, m.dist_opt.ln()))
+            .collect();
+        if pts.len() < 3 {
+            return None;
+        }
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+        Some(slope.exp())
+    }
+
+    /// CSV with a header row (one line per recorded round).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,dist_opt,consensus,loss,comp_err,bits_per_agent,sim_time\n");
+        for m in &self.series {
+            s.push_str(&format!(
+                "{},{:e},{:e},{:e},{:e},{},{:e}\n",
+                m.round, m.dist_opt, m.consensus, m.loss, m.comp_err, m.bits_per_agent, m.sim_time
+            ));
+        }
+        s
+    }
+
+    /// Compact JSON (machine-readable record for EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        json::write_str(&mut out, "algo");
+        out.push(':');
+        json::write_str(&mut out, &self.algo);
+        out.push(',');
+        json::write_str(&mut out, "problem");
+        out.push(':');
+        json::write_str(&mut out, &self.problem);
+        out.push(',');
+        json::write_str(&mut out, "compressor");
+        out.push(':');
+        json::write_str(&mut out, &self.compressor);
+        out.push(',');
+        json::write_str(&mut out, "wall_secs");
+        out.push(':');
+        json::write_num(&mut out, self.wall_secs);
+        out.push(',');
+        json::write_str(&mut out, "series");
+        out.push_str(":[");
+        for (i, m) in self.series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "[{},{},{},{},{},{},{}]",
+                m.round,
+                fin(m.dist_opt),
+                fin(m.consensus),
+                fin(m.loss),
+                fin(m.comp_err),
+                m.bits_per_agent,
+                fin(m.sim_time)
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write CSV to `dir/<name>.csv`.
+    pub fn write_csv(&self, dir: &std::path::Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{name}.csv")), self.to_csv())
+    }
+}
+
+fn fin(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:e}")
+    } else {
+        "null".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(dists: &[f64]) -> RunRecord {
+        RunRecord {
+            algo: "test".into(),
+            problem: "p".into(),
+            compressor: "none".into(),
+            wall_secs: 0.1,
+            series: dists
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| RoundMetrics {
+                    round: i,
+                    dist_opt: d,
+                    consensus: d / 2.0,
+                    loss: d,
+                    comp_err: 0.0,
+                    bits_per_agent: (i as f64) * 100.0,
+                    sim_time: i as f64,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn tol_queries() {
+        let r = rec(&[1.0, 0.1, 0.01, 0.001]);
+        assert_eq!(r.rounds_to_tol(0.05), Some(2));
+        assert_eq!(r.bits_to_tol(0.05), Some(200.0));
+        assert_eq!(r.rounds_to_tol(1e-9), None);
+    }
+
+    #[test]
+    fn empirical_rho_of_geometric_series() {
+        // dist = 0.5^k ⇒ ρ̂ = 0.5.
+        let d: Vec<f64> = (0..30).map(|k| 0.5f64.powi(k)).collect();
+        let r = rec(&d);
+        let rho = r.empirical_rho(1e-12).unwrap();
+        assert!((rho - 0.5).abs() < 1e-6, "rho = {rho}");
+    }
+
+    #[test]
+    fn csv_and_json_shape() {
+        let r = rec(&[1.0, 0.5]);
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("round,"));
+        let js = crate::serialize::json::parse(&r.to_json()).unwrap();
+        assert_eq!(js.get("algo").unwrap().as_str(), Some("test"));
+        assert_eq!(js.get("series").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,10 @@
+//! Layer-3 coordinator: the round loop, simulated network, and metrics.
+//!
+//! [`engine::Engine`] is the single entry point examples and benches use;
+//! it owns the problem and topology and drives any [`crate::algorithms::
+//! Algorithm`] with any [`crate::compress::Compressor`] under identical
+//! accounting rules (see DESIGN.md §6).
+
+pub mod engine;
+pub mod metrics;
+pub mod network;

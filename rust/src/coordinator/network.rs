@@ -1,0 +1,89 @@
+//! Simulated gossip network: per-edge traffic accounting and a simple
+//! latency/bandwidth time model.
+//!
+//! The paper's communication plots use bits; real deployments care about
+//! time. Each round every agent broadcasts its payload to each neighbor;
+//! since all links operate in parallel in a synchronous gossip round, the
+//! round's simulated duration is `latency + max_link_bits / bandwidth`.
+
+use crate::topology::MixingMatrix;
+
+/// Link characteristics applied uniformly to all edges.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// One-way latency per round, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bits/second.
+    pub bandwidth_bps: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        // 1 Gb/s, 0.1 ms — a typical cluster interconnect.
+        LinkModel { latency_s: 1e-4, bandwidth_bps: 1e9 }
+    }
+}
+
+/// Traffic statistics accumulated over a run.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficStats {
+    /// Total bits broadcast per agent (sum over rounds of its payload size;
+    /// one broadcast serves all neighbors on a shared medium — for
+    /// point-to-point links multiply by the agent's degree).
+    pub broadcast_bits: Vec<u64>,
+    /// Total directed link-bits (payload × degree), network-wide.
+    pub link_bits: u64,
+    /// Simulated elapsed communication time, seconds.
+    pub sim_time: f64,
+    pub rounds: usize,
+}
+
+impl TrafficStats {
+    pub fn new(n: usize) -> Self {
+        TrafficStats { broadcast_bits: vec![0; n], ..Default::default() }
+    }
+
+    /// Account one synchronous gossip round. `bits[i]` is the payload size
+    /// agent i broadcast this round.
+    pub fn record_round(&mut self, mix: &MixingMatrix, link: &LinkModel, bits: &[u64]) {
+        debug_assert_eq!(bits.len(), self.broadcast_bits.len());
+        let mut max_bits = 0u64;
+        for (i, &b) in bits.iter().enumerate() {
+            self.broadcast_bits[i] += b;
+            self.link_bits += b * mix.neighbors[i].len() as u64;
+            max_bits = max_bits.max(b);
+        }
+        self.sim_time += link.latency_s + max_bits as f64 / link.bandwidth_bps;
+        self.rounds += 1;
+    }
+
+    /// Mean broadcast bits per agent so far.
+    pub fn mean_bits_per_agent(&self) -> f64 {
+        if self.broadcast_bits.is_empty() {
+            return 0.0;
+        }
+        self.broadcast_bits.iter().sum::<u64>() as f64 / self.broadcast_bits.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{MixingRule, Topology};
+
+    #[test]
+    fn accounting() {
+        let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+        let link = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let mut t = TrafficStats::new(4);
+        t.record_round(&mix, &link, &[1000, 2000, 1000, 1000]);
+        t.record_round(&mix, &link, &[1000, 1000, 1000, 1000]);
+        assert_eq!(t.broadcast_bits, vec![2000, 3000, 2000, 2000]);
+        // Each ring agent has 2 neighbors ⇒ link bits = 2 × broadcast.
+        assert_eq!(t.link_bits, 2 * 9000);
+        // time = 2 × latency + (2000 + 1000)/1e6
+        assert!((t.sim_time - (2e-3 + 3000.0 / 1e6)).abs() < 1e-12);
+        assert_eq!(t.rounds, 2);
+        assert!((t.mean_bits_per_agent() - 2250.0).abs() < 1e-9);
+    }
+}

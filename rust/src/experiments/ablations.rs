@@ -1,0 +1,191 @@
+//! Ablation studies over the design choices DESIGN.md §5 calls out —
+//! beyond the paper's own figures, these probe *why* LEAD behaves as it
+//! does:
+//!
+//! * **topology**: iteration complexity vs the graph condition number κ_g
+//!   (Corollary 1 predicts O(κ_f + κ_g) scaling at C ≈ 0);
+//! * **bit width**: the bits-per-round vs rounds-to-accuracy trade-off —
+//!   where the total-communication optimum sits;
+//! * **block size**: blockwise norms vs one global norm (the paper's
+//!   block = 512 choice);
+//! * **state momentum**: α-update (LEAD) vs raw integration (CHOCO-style
+//!   h ← h + q, i.e. α = 1) under aggressive compression (Remark 1).
+
+use crate::algorithms::lead::{Lead, LeadParams};
+use crate::compress::quantize::{PNorm, QuantizeP};
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::problems::linreg::LinReg;
+use crate::topology::{MixingRule, Topology};
+use std::path::Path;
+
+fn lead_run(
+    topo: &Topology,
+    n: usize,
+    comp: QuantizeP,
+    params: LeadParams,
+    rounds: usize,
+) -> crate::coordinator::metrics::RunRecord {
+    let p = LinReg::synthetic(n, 64, 0.1, 42);
+    let mix = topo.build(n, MixingRule::MetropolisHastings);
+    let mut e = Engine::new(
+        EngineConfig { record_every: 5, ..Default::default() },
+        mix,
+        Box::new(p),
+    );
+    e.run(Box::new(Lead::new(params)), Some(Box::new(comp)), rounds)
+}
+
+/// Topology ablation: rounds-to-1e-8 vs κ_g across graph families.
+pub fn topology(out: Option<&Path>) -> Vec<(String, f64, Option<usize>)> {
+    println!("\n== ablation: topology (LEAD 2-bit, n=16) ==");
+    println!("{:<12} {:>8} {:>8} {:>16}", "graph", "κ_g", "β", "rounds→1e-8");
+    let mut rows = Vec::new();
+    let mut csv = String::from("graph,kappa_g,beta,rounds\n");
+    for (name, topo) in [
+        ("full", Topology::FullyConnected),
+        ("grid", Topology::Grid2D),
+        ("er:0.4", Topology::ErdosRenyi { p: 0.4, seed: 3 }),
+        ("star", Topology::Star),
+        ("ring", Topology::Ring),
+        ("path", Topology::Path),
+    ] {
+        let mix = topo.build(16, MixingRule::MetropolisHastings);
+        let rec = lead_run(&topo, 16, QuantizeP::paper_default(), LeadParams::default(), 4000);
+        let hit = rec.rounds_to_tol(1e-8);
+        println!(
+            "{name:<12} {:>8.2} {:>8.3} {:>16}",
+            mix.kappa_g(),
+            mix.beta(),
+            hit.map_or("-".into(), |r| r.to_string())
+        );
+        csv.push_str(&format!("{name},{},{},{}\n", mix.kappa_g(), mix.beta(), hit.map_or(-1, |r| r as i64)));
+        rows.push((name.to_string(), mix.kappa_g(), hit));
+    }
+    if let Some(dir) = out {
+        std::fs::create_dir_all(dir).ok();
+        std::fs::write(dir.join("ablation_topology.csv"), csv).ok();
+    }
+    rows
+}
+
+/// Bit-width ablation: total bits to reach 1e-8 as a function of b —
+/// reveals the communication-optimal quantization level.
+pub fn bits(out: Option<&Path>) -> Vec<(u32, Option<f64>)> {
+    println!("\n== ablation: quantization bit width (LEAD, ring n=8) ==");
+    println!("{:<6} {:>16} {:>18}", "bits", "rounds→1e-8", "bits/agent→1e-8");
+    let mut rows = Vec::new();
+    let mut csv = String::from("bits,rounds,bits_per_agent\n");
+    for b in [1u32, 2, 3, 4, 6, 8, 12] {
+        // γ shrinks with compression error per Eq. (9).
+        let gamma = if b == 1 { 0.6 } else { 1.0 };
+        let rec = lead_run(
+            &Topology::Ring,
+            8,
+            QuantizeP::new(b, PNorm::Inf, 512),
+            LeadParams { gamma, alpha: 0.5 },
+            6000,
+        );
+        let r = rec.rounds_to_tol(1e-8);
+        let bits = rec.bits_to_tol(1e-8);
+        println!(
+            "{b:<6} {:>16} {:>18}",
+            r.map_or("-".into(), |x| x.to_string()),
+            bits.map_or("-".into(), |x| format!("{x:.3e}"))
+        );
+        csv.push_str(&format!("{b},{},{}\n", r.map_or(-1, |x| x as i64), bits.unwrap_or(-1.0)));
+        rows.push((b, bits));
+    }
+    if let Some(dir) = out {
+        std::fs::create_dir_all(dir).ok();
+        std::fs::write(dir.join("ablation_bits.csv"), csv).ok();
+    }
+    rows
+}
+
+/// Block-size ablation for the blockwise norm (paper uses 512).
+pub fn block_size(out: Option<&Path>) -> Vec<(usize, Option<usize>)> {
+    println!("\n== ablation: quantization block size (LEAD 2-bit, ring n=8, d=64) ==");
+    println!("{:<8} {:>16}", "block", "rounds→1e-8");
+    let mut rows = Vec::new();
+    let mut csv = String::from("block,rounds\n");
+    for block in [8usize, 16, 32, 64, 512] {
+        let rec = lead_run(
+            &Topology::Ring,
+            8,
+            QuantizeP::new(2, PNorm::Inf, block),
+            LeadParams::default(),
+            4000,
+        );
+        let r = rec.rounds_to_tol(1e-8);
+        println!("{block:<8} {:>16}", r.map_or("-".into(), |x| x.to_string()));
+        csv.push_str(&format!("{block},{}\n", r.map_or(-1, |x| x as i64)));
+        rows.push((block, r));
+    }
+    if let Some(dir) = out {
+        std::fs::create_dir_all(dir).ok();
+        std::fs::write(dir.join("ablation_block.csv"), csv).ok();
+    }
+    rows
+}
+
+/// Momentum-state ablation (Remark 1): LEAD's α-damped state update vs
+/// the CHOCO-style raw integration (α = 1) under aggressive 1-bit
+/// compression — the damped update should stay stable further.
+pub fn momentum(out: Option<&Path>) -> Vec<(f64, f64)> {
+    println!("\n== ablation: H-update momentum α under 1-bit compression ==");
+    println!("{:<8} {:>14}", "α", "final dist");
+    let mut rows = Vec::new();
+    let mut csv = String::from("alpha,final_dist\n");
+    for alpha in [0.25, 0.5, 0.75, 1.0] {
+        let rec = lead_run(
+            &Topology::Ring,
+            8,
+            QuantizeP::new(1, PNorm::Inf, 64),
+            LeadParams { gamma: 0.6, alpha },
+            2000,
+        );
+        let dist = rec.last().dist_opt;
+        println!("{alpha:<8} {:>14.3e}", dist);
+        csv.push_str(&format!("{alpha},{dist:e}\n"));
+        rows.push((alpha, dist));
+    }
+    if let Some(dir) = out {
+        std::fs::create_dir_all(dir).ok();
+        std::fs::write(dir.join("ablation_momentum.csv"), csv).ok();
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_complexity_tracks_kappa_g() {
+        let rows = topology(None);
+        // Corollary 1: better-conditioned graphs need no more rounds.
+        let full = rows.iter().find(|r| r.0 == "full").unwrap();
+        let path = rows.iter().find(|r| r.0 == "path").unwrap();
+        let (Some(rf), Some(rp)) = (full.2, path.2) else {
+            panic!("both must converge: {rows:?}");
+        };
+        assert!(full.1 < path.1, "κ_g(full) < κ_g(path)");
+        assert!(rf < rp, "full graph should need fewer rounds ({rf} vs {rp})");
+    }
+
+    #[test]
+    fn two_bits_nearly_optimal_total_communication() {
+        // The paper's 2-bit choice: within the bit-width sweep, very low
+        // bit widths minimize the total bits to accuracy.
+        let rows = bits(None);
+        let best = rows
+            .iter()
+            .filter_map(|(b, bits)| bits.map(|x| (*b, x)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!(best.0 <= 4, "total-bits optimum at {} bits — expected ≤ 4", best.0);
+        // 12-bit must cost more total bits than the optimum.
+        let twelve = rows.iter().find(|(b, _)| *b == 12).unwrap().1.unwrap();
+        assert!(twelve > best.1);
+    }
+}

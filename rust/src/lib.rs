@@ -1,0 +1,68 @@
+//! # LEAD — Linear Convergent Decentralized Optimization with Compression
+//!
+//! Full-system reproduction of Liu, Li, Wang, Tang & Yan (ICLR 2021).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! - **L3 (this crate)**: decentralized-training runtime — communication
+//!   topologies and mixing matrices, compression codecs with exact wire-bit
+//!   accounting, the LEAD algorithm plus eight baselines, sequential and
+//!   thread-parallel coordinator engines, experiment drivers for every
+//!   figure in the paper, metrics, and a CLI.
+//! - **L2 (python/compile)**: JAX compute graphs (linear/logistic
+//!   regression, MLP, transformer LM forward+backward) lowered once to HLO
+//!   text artifacts.
+//! - **L1 (python/compile/kernels)**: Pallas kernels for the paper's
+//!   quantization operator and the fused LEAD local step.
+//!
+//! At runtime the rust binary loads `artifacts/*.hlo.txt` through PJRT
+//! ([`runtime`]); Python is never on the round path.
+//!
+//! Quickstart (see also `examples/quickstart.rs`):
+//! ```no_run
+//! use lead::prelude::*;
+//! let topo = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+//! let problem = LinReg::synthetic(8, 200, 0.1, 42);
+//! let algo = Lead::new(LeadParams { gamma: 1.0, alpha: 0.5 });
+//! let compressor = QuantizeP::new(2, PNorm::Inf, 512);
+//! let mut engine = Engine::new(EngineConfig::default(), topo, Box::new(problem));
+//! let record = engine.run(Box::new(algo), Some(Box::new(compressor)), 300);
+//! println!("final distance to x*: {:.3e}", record.last().dist_opt);
+//! ```
+
+pub mod algorithms;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod linalg;
+pub mod problems;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod serialize;
+pub mod topology;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::algorithms::{
+        choco::ChocoSgd,
+        d2::D2,
+        deepsqueeze::DeepSqueeze,
+        dgd::Dgd,
+        diging::DiGing,
+        exact_diffusion::ExactDiffusion,
+        lead::{Lead, LeadParams},
+        nids::Nids,
+        qdgd::Qdgd,
+        Algorithm,
+    };
+    pub use crate::compress::{
+        identity::Identity, quantize::{PNorm, QuantizeP}, randk::RandK, topk::TopK, Compressor,
+    };
+    pub use crate::coordinator::engine::{Engine, EngineConfig, Schedule};
+    pub use crate::coordinator::metrics::{RoundMetrics, RunRecord};
+    pub use crate::problems::{linreg::LinReg, logreg::LogReg, DataSplit, Problem};
+    pub use crate::rng::Rng;
+    pub use crate::topology::{MixingMatrix, MixingRule, Topology};
+}

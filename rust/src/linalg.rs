@@ -1,0 +1,449 @@
+//! Minimal dense linear algebra over `f64`/`f64` slices.
+//!
+//! Everything the reproduction needs and nothing more: BLAS-1 vector ops on
+//! the hot path (all branch-free, auto-vectorizable loops), small dense
+//! matrix routines for problem setup (Gram matrices, Cholesky solve for the
+//! closed-form linear-regression optimum), and symmetric eigensolvers for
+//! the mixing-matrix spectral constants β = λmax(I−W) and
+//! κ_g = λmax(I−W)/λmin⁺(I−W) used throughout the paper's theory.
+//!
+//! Matrices are row-major `Vec<f64>` with explicit dimensions; at the sizes
+//! we need (n ≤ 64 agents, d ≤ a few hundred for setup-time solves) cache
+//! blocking is irrelevant and clarity wins.
+
+// ---------------------------------------------------------------------------
+// BLAS-1 on f64 (hot path)
+// ---------------------------------------------------------------------------
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(x: &mut [f64], alpha: f64) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Dot product, accumulated in f64 for stability.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        s += (*x as f64) * (*y as f64);
+    }
+    s
+}
+
+/// Squared L2 norm (f64 accumulator).
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    for v in x {
+        s += (*v as f64) * (*v as f64);
+    }
+    s
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// L-infinity norm.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    let mut m = 0.0f64;
+    for v in x {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// p-norm for finite p >= 1 (f64 accumulator).
+pub fn norm_p(x: &[f64], p: f64) -> f64 {
+    debug_assert!(p >= 1.0);
+    let mut s = 0.0f64;
+    for v in x {
+        s += (v.abs() as f64).powf(p);
+    }
+    s.powf(1.0 / p)
+}
+
+/// Squared distance ||a - b||^2.
+#[inline]
+pub fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        s += d * d;
+    }
+    s
+}
+
+/// Mean of rows: `xs` is a set of equal-length vectors; `out` = average.
+pub fn mean_rows(xs: &[Vec<f64>], out: &mut [f64]) {
+    out.fill(0.0);
+    for x in xs {
+        axpy(1.0, x, out);
+    }
+    scale(out, 1.0 / xs.len() as f64);
+}
+
+// ---------------------------------------------------------------------------
+// Dense matrices (f64, setup path)
+// ---------------------------------------------------------------------------
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// out = self * x (gemv).
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            let mut s = 0.0;
+            for j in 0..self.cols {
+                s += r[j] * x[j];
+            }
+            out[i] = s;
+        }
+    }
+
+    /// C = A * B.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for j in 0..b.cols {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Maximum absolute asymmetry |A - A^T|_inf — used by topology checks.
+    pub fn asymmetry(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let mut m = 0.0f64;
+        for i in 0..self.rows {
+            for j in 0..i {
+                m = m.max((self[(i, j)] - self[(j, i)]).abs());
+            }
+        }
+        m
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cholesky solve (SPD systems; linreg closed-form optimum)
+// ---------------------------------------------------------------------------
+
+/// Cholesky factorization A = L L^T of a symmetric positive-definite matrix.
+/// Returns the lower factor, or None if A is not (numerically) SPD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A x = b for SPD A via Cholesky. Panics if A is not SPD.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = a.rows;
+    assert_eq!(b.len(), n);
+    let l = cholesky(a).expect("solve_spd: matrix not SPD");
+    // Forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    // Backward: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+// ---------------------------------------------------------------------------
+// Symmetric eigensolver (Jacobi) — mixing-matrix spectra
+// ---------------------------------------------------------------------------
+
+/// All eigenvalues of a symmetric matrix via the cyclic Jacobi method,
+/// returned in ascending order. O(n^3) per sweep; fine for n ≤ a few hundred
+/// (we use it on n×n mixing matrices with n = #agents).
+pub fn eigvals_sym(a: &Mat) -> Vec<f64> {
+    assert_eq!(a.rows, a.cols, "eigvals_sym: square matrix required");
+    assert!(a.asymmetry() < 1e-9, "eigvals_sym: matrix not symmetric");
+    let n = a.rows;
+    let mut m = a.clone();
+    for _sweep in 0..100 {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in 0..i {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                // tan of rotation angle (stable formula).
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply Givens rotation J(p,q) on both sides.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+            }
+        }
+    }
+    let mut ev: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    ev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ev
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix by power iteration.
+/// Cheaper than Jacobi when only λmax is needed.
+pub fn lambda_max_sym(a: &Mat, iters: usize) -> f64 {
+    let n = a.rows;
+    let mut v = vec![1.0 / (n as f64).sqrt(); n];
+    let mut av = vec![0.0; n];
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        a.matvec(&v, &mut av);
+        let norm = av.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-300 {
+            return 0.0;
+        }
+        for i in 0..n {
+            v[i] = av[i] / norm;
+        }
+        lambda = norm;
+    }
+    // One Rayleigh quotient for sign/accuracy.
+    a.matvec(&v, &mut av);
+    let rq: f64 = v.iter().zip(&av).map(|(x, y)| x * y).sum();
+    let _ = lambda;
+    rq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blas1_basics() {
+        let mut y = vec![1.0f64, 2.0, 3.0];
+        axpy(2.0, &[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(norm_inf(&[-7.0, 3.0]), 7.0);
+        assert!((norm_p(&[3.0, 4.0], 2.0) - 5.0).abs() < 1e-9);
+        // p -> inf approaches the inf-norm; p=1 is the sum.
+        assert!((norm_p(&[1.0, -2.0, 3.0], 1.0) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                a[(i, j)] = (i * 3 + j) as f64;
+            }
+        }
+        let i3 = Mat::eye(3);
+        let c = a.matmul(&i3);
+        assert_eq!(c.data, a.data);
+    }
+
+    #[test]
+    fn cholesky_solve_roundtrip() {
+        // A = B^T B + I is SPD.
+        let mut b = Mat::zeros(4, 4);
+        let mut seed = 1u64;
+        for v in b.data.iter_mut() {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            *v = ((seed >> 33) as f64 / (1u64 << 31) as f64) - 0.5;
+        }
+        let mut a = b.transpose().matmul(&b);
+        for i in 0..4 {
+            a[(i, i)] += 1.0;
+        }
+        let x_true = vec![1.0, -2.0, 3.0, 0.5];
+        let mut rhs = vec![0.0; 4];
+        a.matvec(&x_true, &mut rhs);
+        let x = solve_spd(&a, &rhs);
+        for i in 0..4 {
+            assert!((x[i] - x_true[i]).abs() < 1e-10, "x={x:?}");
+        }
+    }
+
+    #[test]
+    fn jacobi_known_eigs() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let mut a = Mat::zeros(2, 2);
+        a[(0, 0)] = 2.0;
+        a[(0, 1)] = 1.0;
+        a[(1, 0)] = 1.0;
+        a[(1, 1)] = 2.0;
+        let ev = eigvals_sym(&a);
+        assert!((ev[0] - 1.0).abs() < 1e-10 && (ev[1] - 3.0).abs() < 1e-10, "{ev:?}");
+    }
+
+    #[test]
+    fn jacobi_vs_trace_det() {
+        // Random symmetric 6x6: eigenvalue sum == trace, within tolerance.
+        let n = 6;
+        let mut a = Mat::zeros(n, n);
+        let mut seed = 99u64;
+        for i in 0..n {
+            for j in 0..=i {
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let v = ((seed >> 33) as f64 / (1u64 << 31) as f64) - 0.5;
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        let ev = eigvals_sym(&a);
+        let sum: f64 = ev.iter().sum();
+        assert!((sum - trace).abs() < 1e-9, "sum={sum} trace={trace}");
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi() {
+        let n = 5;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = 1.0 / (1.0 + (i as f64 - j as f64).abs());
+            }
+        }
+        let ev = eigvals_sym(&a);
+        let lmax = lambda_max_sym(&a, 500);
+        assert!((lmax - ev[n - 1]).abs() < 1e-6, "power={lmax} jacobi={:?}", ev);
+    }
+}

@@ -1,0 +1,122 @@
+//! `lead` — CLI for the LEAD reproduction.
+//!
+//! ```text
+//! lead exp <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tables|all> [--out DIR] [--rounds N]
+//! lead run <config.toml> [--out DIR]        # custom single run
+//! lead info                                 # topology/spectral summary
+//! ```
+//! (clap is not in the offline vendor set; flags are parsed by hand.)
+
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::experiments;
+use lead::problems::DataSplit;
+use lead::topology::{MixingRule, Topology};
+use std::path::PathBuf;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let out = flag(&args, "--out").map(PathBuf::from);
+    let out_ref = out.as_deref();
+    let rounds = flag(&args, "--rounds").and_then(|r| r.parse().ok());
+
+    match args.first().map(String::as_str) {
+        Some("exp") => {
+            let which = args.get(1).map(String::as_str).unwrap_or("all");
+            let r = |default| rounds.unwrap_or(default);
+            match which {
+                "fig1" => drop(experiments::fig1(out_ref, r(1500))),
+                "fig2" => drop(experiments::fig_logreg(DataSplit::Heterogeneous, false, out_ref, r(600), 8000)),
+                "fig3" => drop(experiments::fig_logreg(DataSplit::Heterogeneous, true, out_ref, r(600), 8000)),
+                "fig4" => {
+                    experiments::fig4(DataSplit::Homogeneous, out_ref, r(150))?;
+                    experiments::fig4(DataSplit::Heterogeneous, out_ref, r(150))?;
+                }
+                "fig5" => drop(experiments::fig5(out_ref)),
+                "fig6" => drop(experiments::fig6(out_ref)),
+                "fig7" => drop(experiments::fig7(out_ref, r(1200))),
+                "fig8" => drop(experiments::fig_logreg(DataSplit::Homogeneous, false, out_ref, r(600), 8000)),
+                "fig9" => drop(experiments::fig_logreg(DataSplit::Homogeneous, true, out_ref, r(600), 8000)),
+                "tables" => experiments::tables(),
+                "ablations" => {
+                    experiments::ablations::topology(out_ref);
+                    experiments::ablations::bits(out_ref);
+                    experiments::ablations::block_size(out_ref);
+                    experiments::ablations::momentum(out_ref);
+                }
+                "all" => {
+                    experiments::tables();
+                    experiments::fig1(out_ref, rounds.unwrap_or(1500));
+                    experiments::fig_logreg(DataSplit::Heterogeneous, false, out_ref, rounds.unwrap_or(600), 8000);
+                    experiments::fig_logreg(DataSplit::Heterogeneous, true, out_ref, rounds.unwrap_or(600), 8000);
+                    experiments::fig_logreg(DataSplit::Homogeneous, false, out_ref, rounds.unwrap_or(600), 8000);
+                    experiments::fig_logreg(DataSplit::Homogeneous, true, out_ref, rounds.unwrap_or(600), 8000);
+                    experiments::fig5(out_ref);
+                    experiments::fig6(out_ref);
+                    experiments::fig7(out_ref, rounds.unwrap_or(1200));
+                    if let Err(e) = experiments::fig4(DataSplit::Homogeneous, out_ref, rounds.unwrap_or(150))
+                        .and_then(|_| experiments::fig4(DataSplit::Heterogeneous, out_ref, rounds.unwrap_or(150)))
+                    {
+                        eprintln!("fig4 skipped (artifacts missing?): {e}");
+                    }
+                }
+                other => anyhow::bail!("unknown experiment {other:?}"),
+            }
+        }
+        Some("run") => {
+            let path = args.get(1).ok_or_else(|| anyhow::anyhow!("usage: lead run <config.toml>"))?;
+            let src = std::fs::read_to_string(path)?;
+            let cfg = lead::config::RunConfig::from_toml(&src).map_err(|e| anyhow::anyhow!(e))?;
+            let topo = Topology::parse(&cfg.topology, cfg.seed)
+                .ok_or_else(|| anyhow::anyhow!("bad topology {:?}", cfg.topology))?;
+            let mix = topo.build(cfg.agents, MixingRule::UniformNeighbors);
+            let problem = Box::new(lead::problems::linreg::LinReg::synthetic(cfg.agents, 200, 0.1, cfg.seed));
+            let algo = lead::config::build_algo(&cfg.algo, cfg.gamma, cfg.alpha)
+                .ok_or_else(|| anyhow::anyhow!("unknown algo {:?}", cfg.algo))?;
+            let comp = lead::compress::parse(&cfg.compressor);
+            let mut engine = Engine::new(
+                EngineConfig {
+                    eta: cfg.eta,
+                    batch_size: cfg.batch_size,
+                    seed: cfg.seed,
+                    record_every: (cfg.rounds / 100).max(1),
+                    ..Default::default()
+                },
+                mix,
+                problem,
+            );
+            let rec = engine.run(algo, comp, cfg.rounds);
+            println!("{}", rec.to_csv());
+            if let Some(dir) = out_ref {
+                rec.write_csv(dir, "run")?;
+            }
+            eprintln!(
+                "final: dist={:.3e} consensus={:.3e} bits/agent={:.3e} ({:.2}s)",
+                rec.last().dist_opt,
+                rec.last().consensus,
+                rec.last().bits_per_agent,
+                rec.wall_secs
+            );
+        }
+        Some("info") => {
+            for name in ["ring", "full", "star", "path"] {
+                let t = Topology::parse(name, 0).unwrap();
+                let m = t.build(8, MixingRule::UniformNeighbors);
+                println!(
+                    "{name:<6} n=8  β={:.4}  λmin⁺={:.4}  κ_g={:.3}  gap={:.4}",
+                    m.beta(),
+                    m.lambda_min_plus(),
+                    m.kappa_g(),
+                    m.spectral_gap()
+                );
+            }
+        }
+        _ => {
+            eprintln!("usage: lead <exp|run|info> ... (see README)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,254 @@
+//! ℓ₂-regularized linear regression (paper §5, Fig. 1):
+//!
+//! ```text
+//! f_i(x) = ‖A_i x − b_i‖² + λ‖x‖²,  A_i ∈ R^{m×d},  b_i = A_i x' + ε
+//! ```
+//!
+//! The paper uses n = 8 agents, A_i ∈ R^{200×200}, λ = 0.1 and the
+//! full-batch gradient, so the problem is smooth + strongly convex and
+//! LEAD's linear rate is observable directly. The global optimum has the
+//! closed form `(Σ A_iᵀA_i + nλI) x* = Σ A_iᵀ b_i`, solved here in f64 via
+//! Cholesky at construction time.
+
+use super::Problem;
+use crate::linalg::{self, Mat};
+use crate::rng::{streams, Rng};
+
+pub struct LinReg {
+    pub n_agents: usize,
+    pub d: usize,
+    pub m: usize,
+    pub lambda: f64,
+    /// Per-agent data matrices, row-major m×d.
+    pub a: Vec<Vec<f64>>,
+    /// Per-agent targets, length m.
+    pub b: Vec<Vec<f64>>,
+    xstar: Vec<f64>,
+    mu_l: (f64, f64),
+}
+
+impl LinReg {
+    /// The paper's synthetic setup: square A_i with N(0, 1/√d) entries,
+    /// planted solution x', Gaussian target noise.
+    pub fn synthetic(n_agents: usize, d: usize, lambda: f64, seed: u64) -> LinReg {
+        Self::synthetic_rect(n_agents, d, d, lambda, seed)
+    }
+
+    /// General m×d variant (used by tests with small shapes).
+    pub fn synthetic_rect(n_agents: usize, m: usize, d: usize, lambda: f64, seed: u64) -> LinReg {
+        let root = Rng::new(seed).derive(streams::DATA);
+        let mut xp = vec![0.0f64; d];
+        root.derive(1000).fill_normal(&mut xp, 1.0);
+        let scale = 1.0 / (d as f64).sqrt();
+        let mut a = Vec::with_capacity(n_agents);
+        let mut b = Vec::with_capacity(n_agents);
+        for i in 0..n_agents {
+            let mut rng = root.derive(i as u64);
+            let mut ai = vec![0.0f64; m * d];
+            rng.fill_normal(&mut ai, scale);
+            let mut bi = vec![0.0f64; m];
+            for r in 0..m {
+                let row = &ai[r * d..(r + 1) * d];
+                bi[r] = linalg::dot(row, &xp) as f64 + 0.1 * rng.normal_f64();
+            }
+            a.push(ai);
+            b.push(bi);
+        }
+        let (xstar, mu_l) = Self::solve_optimum(n_agents, m, d, lambda, &a, &b);
+        LinReg { n_agents, d, m, lambda, a, b, xstar, mu_l }
+    }
+
+    /// Closed-form optimum and (μ, L) from the per-agent Hessians
+    /// `H_i = 2 A_iᵀ A_i + 2λ I`.
+    fn solve_optimum(
+        n: usize,
+        m: usize,
+        d: usize,
+        lambda: f64,
+        a: &[Vec<f64>],
+        b: &[Vec<f64>],
+    ) -> (Vec<f64>, (f64, f64)) {
+        // Accumulate Σ AᵀA and Σ Aᵀb in f64.
+        let mut gram = Mat::zeros(d, d);
+        let mut rhs = vec![0.0f64; d];
+        for i in 0..n {
+            for r in 0..m {
+                let row = &a[i][r * d..(r + 1) * d];
+                let bi = b[i][r] as f64;
+                for p in 0..d {
+                    let ap = row[p] as f64;
+                    rhs[p] += ap * bi;
+                    let grow = &mut gram.data[p * d..(p + 1) * d];
+                    for q in 0..d {
+                        grow[q] += ap * row[q] as f64;
+                    }
+                }
+            }
+        }
+        // (Σ AᵀA + nλ I) x* = Σ Aᵀ b.
+        let mut sys = gram.clone();
+        for p in 0..d {
+            sys[(p, p)] += n as f64 * lambda as f64;
+        }
+        let x64 = crate::linalg::solve_spd(&sys, &rhs);
+        let xstar: Vec<f64> = x64.iter().map(|&v| v as f64).collect();
+        // Assumption 4 is about each local f_i: report the worst-case
+        // per-agent constants, μ = min_i λmin(H_i), L = max_i λmax(H_i)
+        // with H_i = 2A_iᵀA_i + 2λI. Full Jacobi for small d; power
+        // iteration (L only, μ from the regularizer) for large d.
+        let per_agent_hessian = |i: usize| {
+            let mut h = Mat::zeros(d, d);
+            for r in 0..m {
+                let row = &a[i][r * d..(r + 1) * d];
+                for p in 0..d {
+                    let ap = 2.0 * row[p] as f64;
+                    let hrow = &mut h.data[p * d..(p + 1) * d];
+                    for q in 0..d {
+                        hrow[q] += ap * row[q] as f64;
+                    }
+                }
+            }
+            for p in 0..d {
+                h[(p, p)] += 2.0 * lambda as f64;
+            }
+            h
+        };
+        let (mu, l) = if d <= 64 {
+            let mut mu = f64::INFINITY;
+            let mut l = 0.0f64;
+            for i in 0..n {
+                let ev = crate::linalg::eigvals_sym(&per_agent_hessian(i));
+                mu = mu.min(ev[0]);
+                l = l.max(ev[d - 1]);
+            }
+            (mu, l)
+        } else {
+            let mut l = 0.0f64;
+            for i in 0..n {
+                l = l.max(crate::linalg::lambda_max_sym(&per_agent_hessian(i), 200));
+            }
+            (2.0 * lambda as f64, l) // μ ≥ 2λ always holds
+        };
+        let _ = gram;
+        (xstar, (mu, l))
+    }
+}
+
+impl Problem for LinReg {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    /// ∇f_i(x) = 2 A_iᵀ (A_i x − b_i) + 2λ x.
+    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
+        let (m, d) = (self.m, self.d);
+        let a = &self.a[agent];
+        let b = &self.b[agent];
+        for (o, xi) in out.iter_mut().zip(x) {
+            *o = 2.0 * self.lambda * xi;
+        }
+        // out += 2 Aᵀ (A x − b), computed row-wise to stay cache-friendly.
+        for r in 0..m {
+            let row = &a[r * d..(r + 1) * d];
+            let resid = 2.0 * (linalg::dot(row, x) as f64 - b[r]);
+            linalg::axpy(resid, row, out);
+        }
+    }
+
+    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
+        let (m, d) = (self.m, self.d);
+        let a = &self.a[agent];
+        let mut s = 0.0f64;
+        for r in 0..m {
+            let row = &a[r * d..(r + 1) * d];
+            let e = linalg::dot(row, x) - self.b[agent][r] as f64;
+            s += e * e;
+        }
+        s + self.lambda as f64 * linalg::norm2_sq(x)
+    }
+
+    fn optimum(&self) -> Option<&[f64]> {
+        Some(&self.xstar)
+    }
+
+    fn mu_l(&self) -> Option<(f64, f64)> {
+        Some(self.mu_l)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "linreg(n={}, A=R^{}x{}, λ={})",
+            self.n_agents, self.m, self.d, self.lambda
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Central finite-difference check of the analytic gradient.
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = LinReg::synthetic_rect(3, 12, 10, 0.1, 11);
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..10).map(|_| rng.normal_f64()).collect();
+        let mut g = vec![0.0f64; 10];
+        for agent in 0..3 {
+            p.grad_full(agent, &x, &mut g);
+            let h = 1e-3f64;
+            for j in 0..10 {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[j] += h;
+                xm[j] -= h;
+                let fd = (p.loss(agent, &xp) - p.loss(agent, &xm)) / (2.0 * h as f64);
+                assert!(
+                    (fd - g[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "agent {agent} coord {j}: fd={fd} analytic={}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimum_is_stationary_and_minimal() {
+        let p = LinReg::synthetic(4, 40, 0.1, 21);
+        let xs = p.optimum().unwrap().to_vec();
+        let mut g = vec![0.0f64; 40];
+        p.global_grad(&xs, &mut g);
+        assert!(linalg::norm2(&g) < 1e-3);
+        // Perturbation increases the global loss.
+        let f0 = p.global_loss(&xs);
+        let mut rng = Rng::new(5);
+        for _ in 0..5 {
+            let mut xp = xs.clone();
+            for v in xp.iter_mut() {
+                *v += 0.1 * rng.normal_f64();
+            }
+            assert!(p.global_loss(&xp) > f0);
+        }
+    }
+
+    #[test]
+    fn mu_l_bracket_hessian() {
+        let p = LinReg::synthetic(3, 20, 0.1, 31);
+        let (mu, l) = p.mu_l().unwrap();
+        assert!(mu > 0.0 && l >= mu, "mu={mu} l={l}");
+        // λmin ≥ 2λ for the regularized problem.
+        assert!(mu >= 2.0 * 0.1 - 1e-9);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p1 = LinReg::synthetic(2, 10, 0.1, 7);
+        let p2 = LinReg::synthetic(2, 10, 0.1, 7);
+        assert_eq!(p1.a, p2.a);
+        assert_eq!(p1.xstar, p2.xstar);
+    }
+}

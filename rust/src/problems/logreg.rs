@@ -1,0 +1,329 @@
+//! Multinomial logistic regression with ℓ₂ regularization (paper §5,
+//! Figs. 2–3, 8–9):
+//!
+//! ```text
+//! f_i(w) = (1/N_i) Σ_{s∈D_i} CE(softmax(W^T x_s), y_s) + (λ/2)‖W‖²
+//! ```
+//!
+//! The paper runs this on MNIST with λ = 1e-4 under homogeneous
+//! (shuffled) and heterogeneous (sorted-by-label) splits; we use the
+//! synthetic MNIST-like dataset from [`super::data`] (see DESIGN.md §3).
+//! The reference optimum is computed at construction by the in-repo
+//! L-BFGS solver on the *global* objective.
+
+use super::data::{partition, synth_classification, Dataset};
+use super::lbfgs::{minimize, LbfgsOptions};
+use super::{DataSplit, Problem};
+use crate::linalg;
+
+pub struct LogReg {
+    pub n_agents: usize,
+    /// Feature dimension (e.g. 784).
+    pub d_feat: usize,
+    /// Number of classes K; parameter dimension = d_feat * K.
+    pub classes: usize,
+    pub lambda: f64,
+    pub split: DataSplit,
+    ds: Dataset,
+    /// Per-agent sample indices into `ds`.
+    parts: Vec<Vec<usize>>,
+    xstar: Option<Vec<f64>>,
+}
+
+impl LogReg {
+    /// Build the synthetic MNIST-like problem. `n_total` samples of
+    /// dimension `d_feat` in `classes` classes, split across `n_agents`.
+    /// `solve_optimum = false` skips the L-BFGS solve (cheap tests).
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic(
+        n_agents: usize,
+        n_total: usize,
+        d_feat: usize,
+        classes: usize,
+        lambda: f64,
+        split: DataSplit,
+        seed: u64,
+        solve_optimum: bool,
+    ) -> LogReg {
+        let ds = synth_classification(n_total, d_feat, classes, 0.7, seed);
+        let parts = partition(&ds, n_agents, split, seed);
+        let mut p = LogReg { n_agents, d_feat, classes, lambda, split, ds, parts, xstar: None };
+        if solve_optimum {
+            p.solve_optimum();
+        }
+        p
+    }
+
+    /// Paper-shaped default: 8 agents, MNIST-like (784 features,
+    /// 10 classes), λ = 1e-4.
+    pub fn paper_shaped(n_total: usize, split: DataSplit, seed: u64) -> LogReg {
+        Self::synthetic(8, n_total, 784, 10, 1e-4, split, seed, true)
+    }
+
+    /// Run L-BFGS on the global objective to high precision.
+    pub fn solve_optimum(&mut self) {
+        let d = self.dim();
+        let res = minimize(
+            &vec![0.0f64; d],
+            &LbfgsOptions { max_iters: 3000, grad_tol: 1e-8, ..Default::default() },
+            |x, g| {
+                self.global_grad(x, g);
+                self.global_loss(x)
+            },
+        );
+        assert!(
+            res.grad_norm < 1e-4,
+            "L-BFGS failed to reach high precision: ‖g‖={} after {} iters",
+            res.grad_norm,
+            res.iterations
+        );
+        self.xstar = Some(res.x);
+    }
+
+    /// Softmax cross-entropy gradient accumulated over `idx`, mean-scaled,
+    /// plus λw. Parameters laid out feature-major: w[j*K + k].
+    fn grad_over(&self, x: &[f64], idx: &[usize], out: &mut [f64]) {
+        let k = self.classes;
+        let d = self.d_feat;
+        for (o, w) in out.iter_mut().zip(x) {
+            *o = self.lambda * w;
+        }
+        if idx.is_empty() {
+            return;
+        }
+        let inv = 1.0f64 / idx.len() as f64;
+        let mut logits = vec![0.0f64; k];
+        for &s in idx {
+            let row = self.ds.row(s);
+            // logits = W^T x_s
+            logits.fill(0.0);
+            for j in 0..d {
+                let xj = row[j];
+                if xj == 0.0 {
+                    continue;
+                }
+                let wrow = &x[j * k..(j + 1) * k];
+                for (l, w) in logits.iter_mut().zip(wrow) {
+                    *l += xj * w;
+                }
+            }
+            softmax_inplace(&mut logits);
+            logits[self.ds.labels[s]] -= 1.0; // p − onehot(y)
+            // out += inv * x_s ⊗ (p − y)
+            for j in 0..d {
+                let xj = row[j] * inv;
+                if xj == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[j * k..(j + 1) * k];
+                for (o, l) in orow.iter_mut().zip(&logits) {
+                    *o += xj * l;
+                }
+            }
+        }
+    }
+
+    fn loss_over(&self, x: &[f64], idx: &[usize]) -> f64 {
+        let k = self.classes;
+        let d = self.d_feat;
+        let mut logits = vec![0.0f64; k];
+        let mut ce = 0.0f64;
+        for &s in idx {
+            let row = self.ds.row(s);
+            logits.fill(0.0);
+            for j in 0..d {
+                let xj = row[j];
+                if xj == 0.0 {
+                    continue;
+                }
+                let wrow = &x[j * k..(j + 1) * k];
+                for (l, w) in logits.iter_mut().zip(wrow) {
+                    *l += xj * w;
+                }
+            }
+            // log-sum-exp, stabilized.
+            let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = m as f64
+                + logits.iter().map(|&l| ((l - m) as f64).exp()).sum::<f64>().ln();
+            ce += lse - logits[self.ds.labels[s]] as f64;
+        }
+        ce / idx.len().max(1) as f64 + 0.5 * self.lambda as f64 * linalg::norm2_sq(x)
+    }
+
+    /// Classification accuracy over all data (experiment logging).
+    pub fn accuracy(&self, x: &[f64]) -> f64 {
+        let k = self.classes;
+        let d = self.d_feat;
+        let mut logits = vec![0.0f64; k];
+        let mut correct = 0usize;
+        for s in 0..self.ds.n {
+            let row = self.ds.row(s);
+            logits.fill(0.0);
+            for j in 0..d {
+                let xj = row[j];
+                let wrow = &x[j * k..(j + 1) * k];
+                for (l, w) in logits.iter_mut().zip(wrow) {
+                    *l += xj * w;
+                }
+            }
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(pred == self.ds.labels[s]);
+        }
+        correct as f64 / self.ds.n as f64
+    }
+}
+
+fn softmax_inplace(logits: &mut [f64]) {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0f64;
+    for l in logits.iter_mut() {
+        *l = (*l - m).exp();
+        z += *l;
+    }
+    for l in logits.iter_mut() {
+        *l /= z;
+    }
+}
+
+impl Problem for LogReg {
+    fn dim(&self) -> usize {
+        self.d_feat * self.classes
+    }
+
+    fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
+        // Clone of the index list is avoided by passing the slice directly.
+        let idx: &[usize] = &self.parts[agent];
+        self.grad_over(x, idx, out);
+    }
+
+    fn grad_batch(&self, agent: usize, x: &[f64], idx: &[usize], out: &mut [f64]) {
+        // idx are *local* positions within the agent's shard.
+        let part = &self.parts[agent];
+        let mapped: Vec<usize> = idx.iter().map(|&i| part[i]).collect();
+        self.grad_over(x, &mapped, out);
+    }
+
+    fn n_samples(&self, agent: usize) -> usize {
+        self.parts[agent].len()
+    }
+
+    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
+        self.loss_over(x, &self.parts[agent])
+    }
+
+    fn optimum(&self) -> Option<&[f64]> {
+        self.xstar.as_deref()
+    }
+
+    fn mu_l(&self) -> Option<(f64, f64)> {
+        // μ = λ from the regularizer. L ≤ λ + max_i σmax(X_i)²/(2N_i) for
+        // softmax CE (Hessian ≼ ½ XᵀX/N per agent); we report the crude
+        // global bound λ + max_s ‖x_s‖²/2 which is cheap and safe.
+        let max_row = (0..self.ds.n)
+            .map(|s| linalg::norm2_sq(self.ds.row(s)))
+            .fold(0.0f64, f64::max);
+        Some((self.lambda as f64, self.lambda as f64 + 0.5 * max_row))
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "logreg(n={}, d={}x{}, λ={}, {:?})",
+            self.n_agents, self.d_feat, self.classes, self.lambda, self.split
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(split: DataSplit, solve: bool) -> LogReg {
+        LogReg::synthetic(4, 240, 12, 4, 1e-3, split, 17, solve)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = small(DataSplit::Heterogeneous, false);
+        let d = p.dim();
+        let mut rng = crate::rng::Rng::new(2);
+        let x: Vec<f64> = (0..d).map(|_| 0.3 * rng.normal_f64()).collect();
+        let mut g = vec![0.0f64; d];
+        p.grad_full(1, &x, &mut g);
+        let h = 1e-2f64;
+        for &j in &[0usize, 5, 17, d - 1] {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[j] += h;
+            xm[j] -= h;
+            let fd = (p.loss(1, &xp) - p.loss(1, &xm)) / (2.0 * h as f64);
+            assert!(
+                (fd - g[j] as f64).abs() < 1e-3 + 0.05 * fd.abs(),
+                "coord {j}: fd={fd} analytic={}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn optimum_stationary() {
+        let p = small(DataSplit::Homogeneous, true);
+        let xs = p.optimum().unwrap().to_vec();
+        let mut g = vec![0.0f64; p.dim()];
+        p.global_grad(&xs, &mut g);
+        assert!(linalg::norm2(&g) < 1e-4, "‖∇f(x*)‖ = {}", linalg::norm2(&g));
+    }
+
+    #[test]
+    fn training_improves_accuracy() {
+        let p = small(DataSplit::Homogeneous, true);
+        let xs = p.optimum().unwrap();
+        let acc0 = p.accuracy(&vec![0.0; p.dim()]);
+        let acc = p.accuracy(xs);
+        assert!(acc > acc0 + 0.2, "acc {acc0} -> {acc}");
+        assert!(acc > 0.5, "optimum accuracy only {acc}");
+    }
+
+    #[test]
+    fn hetero_more_heterogeneous_than_homo() {
+        let ph = small(DataSplit::Heterogeneous, true);
+        let po = small(DataSplit::Homogeneous, true);
+        let hh = crate::problems::gradient_heterogeneity(&ph, ph.optimum().unwrap());
+        let ho = crate::problems::gradient_heterogeneity(&po, po.optimum().unwrap());
+        assert!(
+            hh > 3.0 * ho,
+            "hetero grad-diversity {hh} not ≫ homo {ho}"
+        );
+    }
+
+    #[test]
+    fn batch_gradient_unbiased_wrt_full() {
+        // Average of per-sample batch gradients equals the full gradient.
+        let p = small(DataSplit::Heterogeneous, false);
+        let d = p.dim();
+        let x: Vec<f64> = (0..d).map(|i| ((i % 7) as f64 - 3.0) * 0.05).collect();
+        let n = p.n_samples(0);
+        let mut full = vec![0.0f64; d];
+        p.grad_full(0, &x, &mut full);
+        let mut acc = vec![0.0f64; d];
+        let mut g = vec![0.0f64; d];
+        for s in 0..n {
+            p.grad_batch(0, &x, &[s], &mut g);
+            for (a, v) in acc.iter_mut().zip(&g) {
+                *a += *v as f64;
+            }
+        }
+        for (a, f) in acc.iter().zip(&full) {
+            let avg = a / n as f64;
+            assert!((avg - *f as f64).abs() < 1e-4, "avg={avg} full={f}");
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! PJRT-backed problems: gradients computed by executing AOT artifacts
+//! (the L2 JAX graphs) through the runtime — Python never runs here.
+//!
+//! Three problems live behind this oracle:
+//! * [`PjrtLinReg`]  — the paper's linear regression with artifact-computed
+//!   gradients; cross-checked against the native oracle in tests.
+//! * [`MlpProblem`]  — the Fig. 4 "deep net" substitute: MLP classifier on
+//!   synthetic CIFAR-shaped data (3072 → 256 → 10), mini-batch gradients.
+//! * [`TransformerProblem`] — byte-level GPT LM for the end-to-end example
+//!   (examples/train_transformer.rs).
+
+use super::data::{partition, synth_classification, Dataset};
+use super::{DataSplit, Problem};
+use crate::rng::{streams, Rng};
+use crate::runtime::{Artifact, Manifest, ParamSpec, artifact::Value};
+use std::sync::Mutex;
+
+// SAFETY: the `xla` crate's PJRT wrappers hold non-atomic `Rc` refcounts,
+// so they are !Send/!Sync even though the underlying PJRT CPU client is
+// thread-safe for execution. These problem types (a) never clone the
+// wrappers after construction and (b) serialize EVERY artifact access
+// through their internal `Mutex`, so cross-thread use cannot race the
+// refcounts or the executable. The engine's worker pool only ever touches
+// the problems through `&self`.
+macro_rules! pjrt_problem_send_sync {
+    ($t:ty) => {
+        unsafe impl Send for $t {}
+        unsafe impl Sync for $t {}
+    };
+}
+pjrt_problem_send_sync!(PjrtLinReg);
+pjrt_problem_send_sync!(MlpProblem);
+pjrt_problem_send_sync!(TransformerProblem);
+
+// ---------------------------------------------------------------------------
+// Linear regression via PJRT
+// ---------------------------------------------------------------------------
+
+/// The native linreg problem with its gradient oracle swapped for the
+/// `linreg_grad` artifact. Shapes must match the AOT example (200×200).
+pub struct PjrtLinReg {
+    pub inner: super::linreg::LinReg,
+    grad_art: Artifact,
+    loss_art: Artifact,
+    lock: Mutex<()>,
+}
+
+impl PjrtLinReg {
+    pub fn new(manifest: &Manifest, inner: super::linreg::LinReg) -> anyhow::Result<Self> {
+        let grad_art = manifest.compile("linreg_grad")?;
+        let shape = &grad_art.meta.inputs[0].shape;
+        anyhow::ensure!(
+            shape == &vec![inner.m, inner.d],
+            "artifact expects A {:?}, problem has {}x{}",
+            shape,
+            inner.m,
+            inner.d
+        );
+        Ok(PjrtLinReg { inner, grad_art, loss_art: manifest.compile("linreg_loss")?, lock: Mutex::new(()) })
+    }
+}
+
+impl Problem for PjrtLinReg {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn n_agents(&self) -> usize {
+        self.inner.n_agents()
+    }
+    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
+        // PJRT CPU executables are not re-entrant across our threads the
+        // way the native oracle is; serialize executions.
+        let _g = self.lock.lock().unwrap();
+        let lam = [self.inner.lambda];
+        let res = self
+            .grad_art
+            .execute(&[
+                Value::F(&self.inner.a[agent]),
+                Value::F(&self.inner.b[agent]),
+                Value::F(x),
+                Value::F(&lam),
+            ])
+            .expect("linreg_grad artifact failed");
+        out.copy_from_slice(&res[0]);
+    }
+    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
+        let _g = self.lock.lock().unwrap();
+        let lam = [self.inner.lambda];
+        let res = self
+            .loss_art
+            .execute(&[
+                Value::F(&self.inner.a[agent]),
+                Value::F(&self.inner.b[agent]),
+                Value::F(x),
+                Value::F(&lam),
+            ])
+            .expect("linreg_loss artifact failed");
+        res[0][0]
+    }
+    fn optimum(&self) -> Option<&[f64]> {
+        self.inner.optimum()
+    }
+    fn mu_l(&self) -> Option<(f64, f64)> {
+        self.inner.mu_l()
+    }
+    fn name(&self) -> String {
+        format!("pjrt-{}", self.inner.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MLP on synthetic CIFAR-shaped data (Fig. 4 substitute)
+// ---------------------------------------------------------------------------
+
+pub struct MlpProblem {
+    ds: Dataset,
+    parts: Vec<Vec<usize>>,
+    grad_art: Artifact,
+    loss_art: Artifact,
+    spec: ParamSpec,
+    batch: usize,
+    classes: usize,
+    x0: Vec<f64>,
+    lock: Mutex<()>,
+}
+
+impl MlpProblem {
+    /// `n_per_agent` synthetic CIFAR-shaped samples per agent.
+    pub fn new(
+        manifest: &Manifest,
+        n_agents: usize,
+        n_per_agent: usize,
+        split: DataSplit,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let grad_art = manifest.compile("mlp_grad")?;
+        let loss_art = manifest.compile("mlp_loss")?;
+        let spec = ParamSpec::from_meta(&grad_art.meta);
+        let d_feat = grad_art.meta.inputs[0].shape[0]; // 3072
+        let classes = grad_art.meta.inputs[2].shape[1]; // 10
+        let batch = grad_art.meta.inputs[4].shape[0]; // 64
+        let ds = synth_classification(n_agents * n_per_agent, d_feat, classes, 0.8, seed);
+        let parts = partition(&ds, n_agents, split, seed);
+        // He-style init shared by all agents (consensus start).
+        let mut x0 = vec![0.0f64; spec.total];
+        let mut rng = Rng::new(seed).derive(streams::INIT);
+        for (o, n, shape) in &spec.slots {
+            let fan_in = shape[0].max(1) as f64;
+            for v in x0[*o..*o + *n].iter_mut() {
+                *v = rng.normal() / fan_in.sqrt();
+            }
+        }
+        Ok(MlpProblem { ds, parts, grad_art, loss_art, spec, batch, classes, x0, lock: Mutex::new(()) })
+    }
+
+    pub fn initial_point(&self) -> &[f64] {
+        &self.x0
+    }
+
+    fn batch_tensors(&self, agent: usize, idx: &[usize]) -> (Vec<f64>, Vec<f64>) {
+        let d = self.ds.d;
+        let mut xb = vec![0.0f64; self.batch * d];
+        let mut yb = vec![0.0f64; self.batch * self.classes];
+        for (slot, &local) in idx.iter().take(self.batch).enumerate() {
+            let s = self.parts[agent][local % self.parts[agent].len()];
+            xb[slot * d..(slot + 1) * d].copy_from_slice(self.ds.row(s));
+            yb[slot * self.classes + self.ds.labels[s]] = 1.0;
+        }
+        // Pad short batches by repeating the first sample.
+        if idx.len() < self.batch {
+            for slot in idx.len()..self.batch {
+                let s = self.parts[agent][0];
+                xb[slot * d..(slot + 1) * d].copy_from_slice(self.ds.row(s));
+                yb[slot * self.classes + self.ds.labels[s]] = 1.0;
+            }
+        }
+        (xb, yb)
+    }
+
+    fn run_grad(&self, agent: usize, x: &[f64], idx: &[usize], out: &mut [f64]) {
+        let _g = self.lock.lock().unwrap();
+        let (xb, yb) = self.batch_tensors(agent, idx);
+        let parts = self.spec.split(x);
+        let mut inputs: Vec<Value> = parts.into_iter().map(Value::F).collect();
+        inputs.push(Value::F(&xb));
+        inputs.push(Value::F(&yb));
+        let res = self.grad_art.execute(&inputs).expect("mlp_grad failed");
+        // res[0] = loss; res[1..] = grads in param order.
+        let grads: Vec<Vec<f64>> = res[1..].to_vec();
+        self.spec.gather(&grads, out);
+    }
+}
+
+impl Problem for MlpProblem {
+    fn dim(&self) -> usize {
+        self.spec.total
+    }
+    fn n_agents(&self) -> usize {
+        self.parts.len()
+    }
+    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
+        // Fixed-shape artifact: "full" gradient = first `batch` samples
+        // (deterministic surrogate; the Fig. 4 experiments are mini-batch).
+        let idx: Vec<usize> = (0..self.batch.min(self.parts[agent].len())).collect();
+        self.run_grad(agent, x, &idx, out);
+    }
+    fn grad_batch(&self, agent: usize, x: &[f64], idx: &[usize], out: &mut [f64]) {
+        self.run_grad(agent, x, idx, out);
+    }
+    fn n_samples(&self, agent: usize) -> usize {
+        self.parts[agent].len()
+    }
+    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
+        let _g = self.lock.lock().unwrap();
+        let idx: Vec<usize> = (0..self.batch.min(self.parts[agent].len())).collect();
+        let (xb, yb) = self.batch_tensors(agent, idx.as_slice());
+        let parts = self.spec.split(x);
+        let mut inputs: Vec<Value> = parts.into_iter().map(Value::F).collect();
+        inputs.push(Value::F(&xb));
+        inputs.push(Value::F(&yb));
+        self.loss_art.execute(&inputs).expect("mlp_loss failed")[0][0]
+    }
+    fn optimum(&self) -> Option<&[f64]> {
+        None
+    }
+    fn initial_point(&self) -> Option<Vec<f64>> {
+        Some(self.x0.clone())
+    }
+    fn name(&self) -> String {
+        format!("mlp(pjrt, {} agents, {} samples/agent)", self.parts.len(), self.parts[0].len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transformer LM (end-to-end example)
+// ---------------------------------------------------------------------------
+
+pub struct TransformerProblem {
+    step_art: Artifact,
+    spec: ParamSpec,
+    /// Per-agent byte corpora (synthetic, heterogeneous by construction:
+    /// each agent's text has a different token distribution).
+    corpora: Vec<Vec<i32>>,
+    batch: usize,
+    seq: usize,
+    x0: Vec<f64>,
+    lock: Mutex<()>,
+}
+
+impl TransformerProblem {
+    pub fn new(manifest: &Manifest, n_agents: usize, corpus_len: usize, seed: u64) -> anyhow::Result<Self> {
+        let step_art = manifest.compile("transformer_tiny_step")?;
+        let spec = ParamSpec::from_meta(&step_art.meta);
+        let tok = step_art.meta.inputs.last().unwrap();
+        let (batch, seq) = (tok.shape[0], tok.shape[1]);
+        // Synthetic byte corpus: agent-specific markov-ish patterns so the
+        // split is heterogeneous (each agent favors a different byte band).
+        let mut corpora = Vec::with_capacity(n_agents);
+        for a in 0..n_agents {
+            let mut rng = Rng::new(seed).derive(a as u64).derive(streams::DATA);
+            let base = (a * 29) % 200;
+            let mut cur = base as i32;
+            let mut text = Vec::with_capacity(corpus_len);
+            for _ in 0..corpus_len {
+                // Local structure: mostly small steps within the agent's
+                // band, occasional jumps — learnable next-byte statistics.
+                let step = if rng.uniform() < 0.85 {
+                    rng.below(7) as i32 - 3
+                } else {
+                    rng.below(56) as i32 - 28
+                };
+                cur = (base as i32 + (cur - base as i32 + step).rem_euclid(40)).clamp(0, 255);
+                text.push(cur);
+            }
+            corpora.push(text);
+        }
+        // Parameter init mirroring transformer.init_params: scales = 1,
+        // biases = 0, matrices ~ N(0, 1/fan_in).
+        let mut x0 = vec![0.0f64; spec.total];
+        let mut rng = Rng::new(seed).derive(streams::INIT);
+        for ((o, n, shape), port) in spec.slots.iter().zip(
+            step_art.meta.param_inputs.iter().map(|&i| &step_art.meta.inputs[i]),
+        ) {
+            let dst = &mut x0[*o..*o + *n];
+            if port.name.ends_with("_scale") {
+                dst.fill(1.0);
+            } else if port.name.ends_with("_bias") {
+                dst.fill(0.0);
+            } else {
+                let fan_in = shape[0].max(1) as f64;
+                for v in dst.iter_mut() {
+                    *v = rng.normal() / fan_in.sqrt();
+                }
+            }
+        }
+        Ok(TransformerProblem { step_art, spec, corpora, batch, seq, x0, lock: Mutex::new(()) })
+    }
+
+    pub fn initial_point(&self) -> &[f64] {
+        &self.x0
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.spec.total
+    }
+
+    fn sample_tokens(&self, agent: usize, rng: &mut Rng) -> Vec<i32> {
+        let corpus = &self.corpora[agent];
+        let mut toks = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let start = rng.below(corpus.len() - self.seq);
+            toks.extend_from_slice(&corpus[start..start + self.seq]);
+        }
+        toks
+    }
+
+    /// One train-step execution: returns (loss, grad_flat).
+    pub fn step(&self, agent: usize, x: &[f64], rng: &mut Rng) -> (f64, Vec<f64>) {
+        let toks = self.sample_tokens(agent, rng);
+        let _g = self.lock.lock().unwrap();
+        let parts = self.spec.split(x);
+        let mut inputs: Vec<Value> = parts.into_iter().map(Value::F).collect();
+        inputs.push(Value::I(&toks));
+        let res = self.step_art.execute(&inputs).expect("transformer step failed");
+        let loss = res[0][0];
+        let mut flat = vec![0.0f64; self.spec.total];
+        self.spec.gather(&res[1..].to_vec(), &mut flat);
+        (loss, flat)
+    }
+}
+
+impl Problem for TransformerProblem {
+    fn dim(&self) -> usize {
+        self.spec.total
+    }
+    fn n_agents(&self) -> usize {
+        self.corpora.len()
+    }
+    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
+        // Deterministic batch (corpus prefix) as the "full" surrogate.
+        let mut rng = Rng::new(0xF00D).derive(agent as u64);
+        let (_, g) = self.step(agent, x, &mut rng);
+        out.copy_from_slice(&g);
+    }
+    fn grad_batch(&self, agent: usize, x: &[f64], idx: &[usize], out: &mut [f64]) {
+        // idx carries the engine's per-round randomness; fold it into a
+        // sampling seed so batches vary per round.
+        let seed = idx.iter().fold(0x5EEDu64, |a, &b| a.wrapping_mul(31).wrapping_add(b as u64));
+        let mut rng = Rng::new(seed).derive(agent as u64);
+        let (_, g) = self.step(agent, x, &mut rng);
+        out.copy_from_slice(&g);
+    }
+    fn n_samples(&self, agent: usize) -> usize {
+        self.corpora[agent].len() - self.seq
+    }
+    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
+        let mut rng = Rng::new(0xE7A1).derive(agent as u64);
+        self.step(agent, x, &mut rng).0
+    }
+    fn optimum(&self) -> Option<&[f64]> {
+        None
+    }
+    fn initial_point(&self) -> Option<Vec<f64>> {
+        Some(self.x0.clone())
+    }
+    fn name(&self) -> String {
+        format!("transformer-lm(pjrt, {:.1}M params)", self.spec.total as f64 / 1e6)
+    }
+}

@@ -1,0 +1,142 @@
+//! A tiny property-based testing harness (proptest is not in the offline
+//! vendor set).
+//!
+//! Usage:
+//! ```
+//! use lead::prop::forall;
+//! use lead::prop_assert;
+//! forall(64, 0xC0FFEE, |g| {
+//!     let v = g.vec_f64(1..=100, 10.0);
+//!     let doubled: Vec<f64> = v.iter().map(|x| 2.0 * x).collect();
+//!     for (a, b) in v.iter().zip(&doubled) {
+//!         prop_assert!((b - 2.0 * a).abs() < 1e-6, "case failed");
+//!     }
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the harness reports the case index and the failing seed so the
+//! exact case can be replayed with `forall(1, seed, ...)`.
+
+use crate::rng::Rng;
+
+/// Per-case generator handle: wraps an RNG and offers common generators.
+pub struct Gen {
+    pub rng: Rng,
+    /// Seed that reproduces this exact case.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Uniform usize in an inclusive range.
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    /// Vector of f64 with entries uniform in [-scale, scale), random length.
+    pub fn vec_f64(&mut self, len: std::ops::RangeInclusive<usize>, scale: f64) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n)
+            .map(|_| (self.rng.uniform() * 2.0 - 1.0) * scale)
+            .collect()
+    }
+
+    /// Vector of f64 with standard normal entries.
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.uniform() < p
+    }
+}
+
+/// Result type for property bodies: Err(msg) fails the case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` randomized cases of `prop`. Panics (test failure) on the
+/// first failing case, printing the case index and replay seed.
+pub fn forall<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: root.derive(case as u64), case_seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case}/{cases} (replay: forall(1, {case_seed:#x}, ..)):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert inside a property body, producing an Err with context instead of
+/// panicking (so the harness can attach the replay seed).
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(100, 1, |g| {
+            let v = g.vec_f64(0..=50, 5.0);
+            let s: f64 = v.iter().sum();
+            let s2: f64 = v.iter().rev().sum();
+            // Reverse-order sums can differ in the last ulp; allow slack.
+            prop_assert!((s - s2).abs() <= 1e-9, "s={s} s2={s2}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        forall(100, 2, |g| {
+            let n = g.usize_in(0..=10);
+            prop_assert!(n < 10, "n was {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_cover_ranges() {
+        forall(200, 3, |g| {
+            let n = g.usize_in(3..=7);
+            prop_assert!((3..=7).contains(&n));
+            let x = g.f64_in(-1.0, 2.0);
+            prop_assert!((-1.0..2.0).contains(&x));
+            let v = g.vec_f64(1..=4, 1.0);
+            prop_assert!(!v.is_empty() && v.len() <= 4);
+            prop_assert!(v.iter().all(|x| x.abs() <= 1.0));
+            Ok(())
+        });
+    }
+}

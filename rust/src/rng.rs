@@ -1,0 +1,270 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Every stochastic choice in the system (data synthesis, quantization
+//! dither, mini-batch sampling) draws from an independent, seeded stream so
+//! that the sequential and thread-parallel coordinator engines produce
+//! bitwise-identical trajectories regardless of scheduling.
+//!
+//! The core generator is SplitMix64 (Steele et al., 2014): tiny state, full
+//! 64-bit period, passes BigCrush when used as a mixer, and — critically for
+//! us — supports O(1) stream derivation via [`Rng::derive`].
+
+/// SplitMix64 generator. 8 bytes of state, copyable, serializable by hand.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+/// Golden-ratio increment for SplitMix64.
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+impl Rng {
+    /// Create a generator from a seed. Two different seeds give streams that
+    /// are statistically independent for our purposes.
+    pub fn new(seed: u64) -> Self {
+        // Avalanche the seed once so that small seeds (0, 1, 2...) do not
+        // produce correlated early outputs.
+        let mut r = Rng { state: seed ^ 0x5DEE_CE66_D1CE_4E5B };
+        r.next_u64();
+        r
+    }
+
+    /// Derive an independent child stream identified by `tag`.
+    ///
+    /// Used to give each (agent, purpose) pair its own stream:
+    /// `root.derive(agent as u64).derive(PURPOSE_DITHER)`.
+    pub fn derive(&self, tag: u64) -> Rng {
+        let mut r = Rng { state: self.state ^ tag.wrapping_mul(GAMMA) ^ 0xA076_1D64_78BD_642F };
+        r.next_u64();
+        r
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GAMMA);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's unbiased multiply-shift
+    /// rejection method.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n {
+                return (m >> 64) as usize;
+            }
+            // Rejection zone: only loop when lo < n (probability < n/2^64).
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (both outputs used alternately would
+    /// complicate state; we use one and keep the generator allocation-free).
+    pub fn normal(&mut self) -> f64 {
+        // Guard against log(0).
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Standard normal as f32.
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill `out` with i.i.d. N(0, sigma^2) samples.
+    pub fn fill_normal(&mut self, out: &mut [f64], sigma: f64) {
+        for v in out.iter_mut() {
+            *v = self.normal() * sigma;
+        }
+    }
+
+    /// Fill `out` with i.i.d. U[0,1) samples (used for quantization dither).
+    pub fn fill_uniform(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.uniform();
+        }
+    }
+
+    /// Alias for [`Rng::normal`] used by generated numeric code.
+    #[inline]
+    pub fn normal_f64(&mut self) -> f64 {
+        self.normal()
+    }
+
+    /// Alias for [`Rng::uniform`].
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        self.uniform()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (Floyd's algorithm, then
+    /// shuffled so order is also random). Requires k <= n.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if let Some(pos) = chosen.iter().position(|&c| c == t) {
+                let _ = pos;
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        self.shuffle(&mut chosen);
+        chosen
+    }
+}
+
+/// Stream tags for purpose-separated child streams (see DESIGN.md §6).
+pub mod streams {
+    pub const DATA: u64 = 0x01;
+    pub const DITHER: u64 = 0x02;
+    pub const BATCH: u64 = 0x03;
+    pub const INIT: u64 = 0x04;
+    pub const TOPOLOGY: u64 = 0x05;
+    pub const GRADIENT_NOISE: u64 = 0x06;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn derive_independent() {
+        let root = Rng::new(7);
+        let mut a = root.derive(0);
+        let mut b = root.derive(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_unbiased() {
+        let mut r = Rng::new(11);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            let expected = n / 7;
+            assert!(
+                (c as i64 - expected as i64).abs() < (expected as i64) / 10,
+                "counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(13);
+        for _ in 0..50 {
+            let k = 1 + r.below(50);
+            let s = r.sample_indices(100, k);
+            assert_eq!(s.len(), k);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates in {s:?}");
+            assert!(s.iter().all(|&i| i < 100));
+        }
+    }
+}

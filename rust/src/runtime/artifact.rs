@@ -1,0 +1,282 @@
+//! Artifact loading: manifest parsing, HLO-text compilation, typed
+//! execution, and flat-parameter ↔ tensor mapping.
+
+use crate::serialize::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One tensor port of an artifact.
+#[derive(Clone, Debug)]
+pub struct Port {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl Port {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Manifest entry describing one lowered computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+    /// Indices of inputs that are trainable parameters (for ParamSpec).
+    pub param_inputs: Vec<usize>,
+    /// Indices of inputs that are per-step data.
+    pub data_inputs: Vec<usize>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_port(v: &Json) -> Result<Port> {
+    let name = v.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("port missing shape"))?
+        .iter()
+        .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = v.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
+    Ok(Port { name, shape, dtype })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let doc = json::parse(&raw).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in doc.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let idxs = |key: &str| -> Vec<usize> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|v| v.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default()
+            };
+            artifacts.push(ArtifactMeta {
+                name: a.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                file: a.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_port)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_port)
+                    .collect::<Result<Vec<_>>>()?,
+                param_inputs: idxs("param_inputs"),
+                data_inputs: idxs("data_inputs"),
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Compile one artifact on the shared PJRT client.
+    pub fn compile(&self, name: &str) -> Result<Artifact> {
+        let meta = self.get(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let _guard = super::client::compile_lock();
+        let exe = super::client()
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Artifact { meta, exe })
+    }
+}
+
+/// A compiled computation plus its port metadata.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A runtime input value (f64 host data is converted to the artifact's
+/// declared dtype at the FFI boundary).
+pub enum Value<'a> {
+    F(&'a [f64]),
+    I(&'a [i32]),
+}
+
+impl Artifact {
+    /// Execute with positional inputs; returns each output flattened to
+    /// f64 (scalars come back as length-1 vectors).
+    pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Vec<f64>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: {} inputs given, {} expected",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (v, port) in inputs.iter().zip(&self.meta.inputs) {
+            let lit = match v {
+                Value::F(data) => {
+                    if data.len() != port.elements() {
+                        bail!(
+                            "{}: input {} has {} elements, wants {:?}",
+                            self.meta.name,
+                            port.name,
+                            data.len(),
+                            port.shape
+                        );
+                    }
+                    let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                    shaped(xla::Literal::vec1(&f32s), &port.shape)?
+                }
+                Value::I(data) => {
+                    if data.len() != port.elements() {
+                        bail!("{}: int input {} wrong size", self.meta.name, port.name);
+                    }
+                    shaped(xla::Literal::vec1(data), &port.shape)?
+                }
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.meta.name))?;
+        // aot.py lowers with return_tuple=True: unpack all outputs.
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("{}: to_tuple: {e:?}", self.meta.name))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            let v: Vec<f32> =
+                part.to_vec().map_err(|e| anyhow!("{}: to_vec: {e:?}", self.meta.name))?;
+            out.push(v.into_iter().map(|x| x as f64).collect());
+        }
+        Ok(out)
+    }
+}
+
+fn shaped(lit: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
+    if shape.len() <= 1 {
+        // vec1 already has rank ≤ 1; scalars: reshape to rank 0.
+        if shape.is_empty() {
+            return lit.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"));
+        }
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// Mapping between a flat f64 parameter vector (what the decentralized
+/// algorithms operate on) and the per-tensor inputs of an artifact.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    /// (offset, len, shape) per parameter tensor, in artifact input order.
+    pub slots: Vec<(usize, usize, Vec<usize>)>,
+    pub total: usize,
+}
+
+impl ParamSpec {
+    pub fn from_meta(meta: &ArtifactMeta) -> ParamSpec {
+        let mut slots = Vec::new();
+        let mut off = 0;
+        for &i in &meta.param_inputs {
+            let n = meta.inputs[i].elements();
+            slots.push((off, n, meta.inputs[i].shape.clone()));
+            off += n;
+        }
+        ParamSpec { slots, total: off }
+    }
+
+    /// Views of `flat` per parameter tensor.
+    pub fn split<'a>(&self, flat: &'a [f64]) -> Vec<&'a [f64]> {
+        assert_eq!(flat.len(), self.total, "flat parameter size mismatch");
+        self.slots.iter().map(|&(o, n, _)| &flat[o..o + n]).collect()
+    }
+
+    /// Concatenate tensor buffers back into `flat`.
+    pub fn gather(&self, parts: &[Vec<f64>], flat: &mut [f64]) {
+        assert_eq!(parts.len(), self.slots.len());
+        for ((o, n, _), p) in self.slots.iter().zip(parts) {
+            assert_eq!(p.len(), *n);
+            flat[*o..*o + *n].copy_from_slice(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        // Artifact tests only run when `make artifacts` has been executed;
+        // pure-unit CI paths skip gracefully.
+        Manifest::load("artifacts").ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_lists() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        assert!(m.artifacts.len() >= 8);
+        let lin = m.get("linreg_grad").unwrap();
+        assert_eq!(lin.inputs.len(), 4);
+        assert_eq!(lin.inputs[0].shape, vec![200, 200]);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn param_spec_roundtrip() {
+        let meta = ArtifactMeta {
+            name: "t".into(),
+            file: "t".into(),
+            inputs: vec![
+                Port { name: "w1".into(), shape: vec![3, 2], dtype: "float32".into() },
+                Port { name: "b1".into(), shape: vec![2], dtype: "float32".into() },
+                Port { name: "x".into(), shape: vec![5], dtype: "float32".into() },
+            ],
+            outputs: vec![],
+            param_inputs: vec![0, 1],
+            data_inputs: vec![2],
+        };
+        let spec = ParamSpec::from_meta(&meta);
+        assert_eq!(spec.total, 8);
+        let flat: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let parts = spec.split(&flat);
+        assert_eq!(parts[0], &flat[0..6]);
+        assert_eq!(parts[1], &flat[6..8]);
+        let owned: Vec<Vec<f64>> = parts.iter().map(|p| p.to_vec()).collect();
+        let mut back = vec![0.0; 8];
+        spec.gather(&owned, &mut back);
+        assert_eq!(back, flat);
+    }
+}

@@ -1,0 +1,43 @@
+//! Process-wide PJRT CPU client (creating one per artifact would leak a
+//! thread pool each time; XLA clients are expensive singletons).
+//!
+//! SAFETY: the `xla` crate wraps the client in a non-atomic `Rc`, so the
+//! type is !Send/!Sync even though the PJRT CPU plugin itself is
+//! thread-safe. We never clone the wrapper after init and serialize every
+//! compile through [`compile_lock`]; executions are serialized by the
+//! problem-level mutexes in `problems::neural`.
+
+use std::sync::{Mutex, OnceLock};
+
+struct SharedClient(xla::PjRtClient);
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+static CLIENT: OnceLock<SharedClient> = OnceLock::new();
+static COMPILE_LOCK: Mutex<()> = Mutex::new(());
+
+/// The shared PJRT CPU client. Panics if the plugin cannot initialize —
+/// there is nothing useful the caller can do without a backend.
+pub fn client() -> &'static xla::PjRtClient {
+    &CLIENT
+        .get_or_init(|| {
+            SharedClient(xla::PjRtClient::cpu().expect("failed to initialize PJRT CPU client"))
+        })
+        .0
+}
+
+/// Guards XLA compilation (see module SAFETY note).
+pub fn compile_lock() -> std::sync::MutexGuard<'static, ()> {
+    COMPILE_LOCK.lock().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn client_initializes_once() {
+        let a = super::client();
+        let b = super::client();
+        assert_eq!(a.platform_name(), b.platform_name());
+        assert!(a.device_count() >= 1);
+    }
+}

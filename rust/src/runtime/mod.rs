@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the rust hot path. Python never runs at request time — it
+//! only authored the artifacts (see python/compile/aot.py).
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits protos with
+//! 64-bit ids that xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids — see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Artifact, Manifest, ParamSpec};
+pub use client::client;

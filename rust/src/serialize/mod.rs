@@ -1,0 +1,5 @@
+//! Serialization substrates (serde is not available in the offline vendor
+//! set, so the repo carries its own JSON and TOML-subset codecs).
+
+pub mod json;
+pub mod toml_mini;

@@ -1,0 +1,200 @@
+//! A small TOML-subset parser for experiment config files.
+//!
+//! Supports what our configs use: `[section]` headers, `key = value` with
+//! string / bool / integer / float / homogeneous-array values, `#` comments,
+//! and dotted keys inside values being out of scope. This is a config
+//! substrate, not a general TOML implementation — unknown syntax is a hard
+//! error so config typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Numeric coercion: ints read as floats too.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section name -> key -> value. Top-level keys live under
+/// the empty section name "".
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(src: &str) -> Result<Doc, String> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.rfind('"').ok_or("unterminated string")?;
+        if end != rest.len() - 1 {
+            return Err("trailing content after string".into());
+        }
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue; // allow trailing comma
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    // Number: int if it parses as i64 and has no float syntax.
+    let cleaned = s.replace('_', "");
+    if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    cleaned
+        .parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config() {
+        let src = r#"
+# experiment config
+name = "fig1"
+seed = 42
+eta = 0.1           # stepsize
+
+[lead]
+gamma = 1.0
+alpha = 0.5
+bits = 2
+blocks = [512, 1024]
+compress = "qinf"
+stochastic = false
+"#;
+        let doc = parse(src).unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("fig1"));
+        assert_eq!(doc[""]["seed"].as_i64(), Some(42));
+        assert_eq!(doc[""]["eta"].as_f64(), Some(0.1));
+        assert_eq!(doc["lead"]["gamma"].as_f64(), Some(1.0));
+        assert_eq!(doc["lead"]["bits"].as_f64(), Some(2.0));
+        assert_eq!(
+            doc["lead"]["blocks"].as_arr().unwrap(),
+            &[Value::Int(512), Value::Int(1024)]
+        );
+        assert_eq!(doc["lead"]["stochastic"].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"oops").is_err());
+    }
+
+    #[test]
+    fn comment_in_string() {
+        let doc = parse("k = \"a # b\"").unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some("a # b"));
+    }
+}

@@ -1,0 +1,397 @@
+//! Communication topologies and gossip mixing matrices (paper Assumption 1).
+//!
+//! A topology is an undirected connected graph over `n` agents; the mixing
+//! matrix `W` is symmetric, doubly stochastic, and primitive, with
+//! `w_ij = 0` whenever agents i and j are not connected. The paper's
+//! experiments use a ring of 8 agents with uniform weight 1/3; the theory
+//! depends on two spectral constants exposed by [`MixingMatrix`]:
+//! `β = λmax(I − W)` and the graph condition number
+//! `κ_g = λmax(I − W) / λmin⁺(I − W)`.
+
+pub mod spectral;
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Graph families used in the paper and in our ablations.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// Cycle over n agents (the paper's experimental setup; each agent has
+    /// exactly two 1-hop neighbors).
+    Ring,
+    /// Complete graph — recovers centralized averaging, κ_g = 1.
+    FullyConnected,
+    /// Star: agent 0 connected to everyone else.
+    Star,
+    /// Path (line) graph — worst-case κ_g among the deterministic families.
+    Path,
+    /// √n × √n torus grid (n must be a perfect square).
+    Grid2D,
+    /// Erdős–Rényi G(n, p), resampled until connected.
+    ErdosRenyi { p: f64, seed: u64 },
+}
+
+/// How to derive edge weights from the graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixingRule {
+    /// w_ij = 1/(deg_max + 1) for every edge, self-weight = remainder.
+    /// On the 8-ring this gives exactly the paper's uniform weight 1/3.
+    UniformNeighbors,
+    /// Metropolis–Hastings: w_ij = 1/(1 + max(deg_i, deg_j)), self-weight =
+    /// remainder. Symmetric and doubly stochastic for any graph.
+    MetropolisHastings,
+    /// Lazy Metropolis: (I + W_mh)/2 — guarantees λmin(W) > 0.
+    LazyMetropolis,
+}
+
+/// A validated mixing matrix plus adjacency structure.
+#[derive(Clone, Debug)]
+pub struct MixingMatrix {
+    pub n: usize,
+    /// Dense row-major weights; w\[i\]\[j\] = 0 iff no edge (and i != j).
+    pub w: Mat,
+    /// Neighbor lists excluding self (communication partners).
+    pub neighbors: Vec<Vec<usize>>,
+    /// Cached spectral constants (computed on build).
+    pub eigenvalues: Vec<f64>,
+}
+
+impl Topology {
+    /// Build the mixing matrix for `n` agents.
+    ///
+    /// Panics if the parameters are invalid (e.g. Grid2D with non-square n)
+    /// — topology construction happens at setup time where loud failure is
+    /// correct.
+    pub fn build(&self, n: usize, rule: MixingRule) -> MixingMatrix {
+        assert!(n >= 2, "need at least two agents");
+        let adj = self.adjacency(n);
+        MixingMatrix::from_adjacency(&adj, rule)
+    }
+
+    /// Adjacency sets (undirected, no self-loops).
+    pub fn adjacency(&self, n: usize) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); n];
+        let connect = |a: usize, b: usize, adj: &mut Vec<Vec<usize>>| {
+            if a != b && !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        };
+        match self {
+            Topology::Ring => {
+                for i in 0..n {
+                    connect(i, (i + 1) % n, &mut adj);
+                }
+            }
+            Topology::FullyConnected => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        connect(i, j, &mut adj);
+                    }
+                }
+            }
+            Topology::Star => {
+                for i in 1..n {
+                    connect(0, i, &mut adj);
+                }
+            }
+            Topology::Path => {
+                for i in 0..n - 1 {
+                    connect(i, i + 1, &mut adj);
+                }
+            }
+            Topology::Grid2D => {
+                let side = (n as f64).sqrt().round() as usize;
+                assert_eq!(side * side, n, "Grid2D requires a perfect square number of agents");
+                for r in 0..side {
+                    for c in 0..side {
+                        let id = r * side + c;
+                        connect(id, r * side + (c + 1) % side, &mut adj);
+                        connect(id, ((r + 1) % side) * side + c, &mut adj);
+                    }
+                }
+            }
+            Topology::ErdosRenyi { p, seed } => {
+                assert!((0.0..=1.0).contains(p), "ER probability out of range");
+                let mut rng = Rng::new(*seed).derive(crate::rng::streams::TOPOLOGY);
+                for attempt in 0..1000 {
+                    for a in adj.iter_mut() {
+                        a.clear();
+                    }
+                    for i in 0..n {
+                        for j in (i + 1)..n {
+                            if rng.uniform() < *p {
+                                connect(i, j, &mut adj);
+                            }
+                        }
+                    }
+                    if is_connected(&adj) {
+                        break;
+                    }
+                    assert!(attempt < 999, "could not sample a connected G(n,p); raise p");
+                }
+            }
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+        }
+        assert!(is_connected(&adj), "topology must be connected (Assumption 1)");
+        adj
+    }
+
+    /// Parse from a CLI/config string, e.g. "ring", "full", "er:0.3".
+    pub fn parse(s: &str, seed: u64) -> Option<Topology> {
+        match s {
+            "ring" => Some(Topology::Ring),
+            "full" | "complete" => Some(Topology::FullyConnected),
+            "star" => Some(Topology::Star),
+            "path" | "line" => Some(Topology::Path),
+            "grid" => Some(Topology::Grid2D),
+            _ => {
+                let p = s.strip_prefix("er:")?.parse::<f64>().ok()?;
+                Some(Topology::ErdosRenyi { p, seed })
+            }
+        }
+    }
+}
+
+/// BFS connectivity check.
+pub fn is_connected(adj: &[Vec<usize>]) -> bool {
+    let n = adj.len();
+    if n == 0 {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    let mut queue = vec![0usize];
+    seen[0] = true;
+    while let Some(u) = queue.pop() {
+        for &v in &adj[u] {
+            if !seen[v] {
+                seen[v] = true;
+                queue.push(v);
+            }
+        }
+    }
+    seen.iter().all(|&s| s)
+}
+
+impl MixingMatrix {
+    /// Build and validate W from adjacency sets.
+    pub fn from_adjacency(adj: &[Vec<usize>], rule: MixingRule) -> MixingMatrix {
+        let n = adj.len();
+        let deg: Vec<usize> = adj.iter().map(|a| a.len()).collect();
+        let mut w = Mat::zeros(n, n);
+        match rule {
+            MixingRule::UniformNeighbors => {
+                let dmax = *deg.iter().max().unwrap();
+                let wij = 1.0 / (dmax as f64 + 1.0);
+                for i in 0..n {
+                    for &j in &adj[i] {
+                        w[(i, j)] = wij;
+                    }
+                    w[(i, i)] = 1.0 - deg[i] as f64 * wij;
+                }
+            }
+            MixingRule::MetropolisHastings | MixingRule::LazyMetropolis => {
+                for i in 0..n {
+                    let mut row_sum = 0.0;
+                    for &j in &adj[i] {
+                        let wij = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+                        w[(i, j)] = wij;
+                        row_sum += wij;
+                    }
+                    w[(i, i)] = 1.0 - row_sum;
+                }
+                if rule == MixingRule::LazyMetropolis {
+                    for i in 0..n {
+                        for j in 0..n {
+                            w[(i, j)] *= 0.5;
+                        }
+                        w[(i, i)] += 0.5;
+                    }
+                }
+            }
+        }
+        let m = MixingMatrix {
+            n,
+            eigenvalues: crate::linalg::eigvals_sym(&w),
+            neighbors: adj.to_vec(),
+            w,
+        };
+        m.validate();
+        m
+    }
+
+    /// Build directly from an explicit weight matrix (tests, custom W).
+    pub fn from_weights(w: Mat) -> MixingMatrix {
+        let n = w.rows;
+        let mut neighbors = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && w[(i, j)] != 0.0 {
+                    neighbors[i].push(j);
+                }
+            }
+        }
+        let m = MixingMatrix { n, eigenvalues: crate::linalg::eigvals_sym(&w), neighbors, w };
+        m.validate();
+        m
+    }
+
+    /// Assert Assumption 1: symmetric, doubly stochastic, eigenvalues in
+    /// (-1, 1] with λ1 = 1 simple (primitive on a connected graph).
+    pub fn validate(&self) {
+        let n = self.n;
+        assert!(self.w.asymmetry() < 1e-9, "W not symmetric");
+        for i in 0..n {
+            let row: f64 = (0..n).map(|j| self.w[(i, j)]).sum();
+            assert!((row - 1.0).abs() < 1e-9, "row {i} sums to {row}");
+            for j in 0..n {
+                assert!(self.w[(i, j)] > -1e-12, "negative weight at ({i},{j})");
+            }
+        }
+        let ev = &self.eigenvalues;
+        assert!((ev[n - 1] - 1.0).abs() < 1e-8, "λ1 != 1: {ev:?}");
+        assert!(ev[0] > -1.0 + 1e-9, "λn <= -1: {ev:?}");
+        assert!(
+            ev[n - 2] < 1.0 - 1e-9,
+            "λ2 == 1 (disconnected or non-primitive): {ev:?}"
+        );
+    }
+
+    /// β = λmax(I − W) = 1 − λn(W) (used by Theorem 1 parameter ranges).
+    pub fn beta(&self) -> f64 {
+        1.0 - self.eigenvalues[0]
+    }
+
+    /// λmin⁺(I − W) = 1 − λ2(W), the smallest nonzero eigenvalue of I − W.
+    pub fn lambda_min_plus(&self) -> f64 {
+        1.0 - self.eigenvalues[self.n - 2]
+    }
+
+    /// Graph condition number κ_g = λmax(I−W)/λmin⁺(I−W) (Corollary 1).
+    pub fn kappa_g(&self) -> f64 {
+        self.beta() / self.lambda_min_plus()
+    }
+
+    /// Spectral gap 1 − max(|λ2|, |λn|) — classic gossip mixing rate.
+    pub fn spectral_gap(&self) -> f64 {
+        1.0 - self.eigenvalues[self.n - 2]
+            .abs()
+            .max(self.eigenvalues[0].abs())
+    }
+
+    /// Self weight w_ii.
+    #[inline]
+    pub fn self_weight(&self, i: usize) -> f64 {
+        self.w[(i, i)]
+    }
+
+    /// Edge weight w_ij.
+    #[inline]
+    pub fn weight(&self, i: usize, j: usize) -> f64 {
+        self.w[(i, j)]
+    }
+
+    /// Number of directed messages per gossip round (each agent sends its
+    /// payload to every neighbor).
+    pub fn directed_edges(&self) -> usize {
+        self.neighbors.iter().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring8_matches_paper() {
+        // Paper §5: 8 machines in a ring, mixing weight exactly 1/3.
+        let m = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        for i in 0..8 {
+            assert!((m.w[(i, i)] - 1.0 / 3.0).abs() < 1e-12);
+            assert!((m.w[(i, (i + 1) % 8)] - 1.0 / 3.0).abs() < 1e-12);
+            assert_eq!(m.neighbors[i].len(), 2);
+        }
+        // Ring eigenvalues: 1/3 + 2/3 cos(2πk/8).
+        for (k, want) in (0..8)
+            .map(|k| 1.0 / 3.0 + 2.0 / 3.0 * (2.0 * std::f64::consts::PI * k as f64 / 8.0).cos())
+            .enumerate()
+        {
+            assert!(
+                m.eigenvalues.iter().any(|e| (e - want).abs() < 1e-9),
+                "missing eigenvalue {want} (k={k}): {:?}",
+                m.eigenvalues
+            );
+        }
+        let beta_want = 1.0 - (1.0 / 3.0 + 2.0 / 3.0 * (std::f64::consts::PI).cos());
+        assert!((m.beta() - beta_want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fully_connected_kappa_is_one() {
+        let m = Topology::FullyConnected.build(8, MixingRule::UniformNeighbors);
+        assert!((m.kappa_g() - 1.0).abs() < 1e-8, "κ_g = {}", m.kappa_g());
+        // W = (1/n) 11^T exactly for uniform weights on K_n.
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((m.w[(i, j)] - 0.125).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn metropolis_star_valid() {
+        let m = Topology::Star.build(9, MixingRule::MetropolisHastings);
+        m.validate();
+        assert_eq!(m.neighbors[0].len(), 8);
+        assert_eq!(m.neighbors[3], vec![0]);
+    }
+
+    #[test]
+    fn lazy_metropolis_positive_spectrum() {
+        let m = Topology::Path.build(10, MixingRule::LazyMetropolis);
+        assert!(m.eigenvalues[0] > 0.0, "{:?}", m.eigenvalues);
+    }
+
+    #[test]
+    fn grid_requires_square() {
+        let m = Topology::Grid2D.build(9, MixingRule::MetropolisHastings);
+        assert_eq!(m.n, 9);
+        for i in 0..9 {
+            assert!(m.neighbors[i].len() >= 2);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn grid_non_square_panics() {
+        let _ = Topology::Grid2D.build(8, MixingRule::MetropolisHastings);
+    }
+
+    #[test]
+    fn erdos_renyi_connected() {
+        for seed in 0..5 {
+            let m = Topology::ErdosRenyi { p: 0.3, seed }.build(16, MixingRule::MetropolisHastings);
+            m.validate();
+            assert!(is_connected(&m.neighbors));
+        }
+    }
+
+    #[test]
+    fn path_worst_conditioning() {
+        let ring = Topology::Ring.build(16, MixingRule::MetropolisHastings);
+        let path = Topology::Path.build(16, MixingRule::MetropolisHastings);
+        let full = Topology::FullyConnected.build(16, MixingRule::MetropolisHastings);
+        assert!(path.kappa_g() > ring.kappa_g());
+        assert!(ring.kappa_g() > full.kappa_g() - 1e-9);
+    }
+
+    #[test]
+    fn parse_strings() {
+        assert_eq!(Topology::parse("ring", 0), Some(Topology::Ring));
+        assert_eq!(Topology::parse("full", 0), Some(Topology::FullyConnected));
+        assert!(matches!(Topology::parse("er:0.4", 7), Some(Topology::ErdosRenyi { .. })));
+        assert_eq!(Topology::parse("bogus", 0), None);
+    }
+}

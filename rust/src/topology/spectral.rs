@@ -1,0 +1,136 @@
+//! Spectral utilities over mixing matrices: the quantities the paper's
+//! Theorem 1 / Corollary 1 need beyond what [`MixingMatrix`] caches, plus
+//! helpers used by the theory-validation tests.
+
+use super::MixingMatrix;
+use crate::linalg::Mat;
+
+/// λmax((I − W)†) = 1 / λmin⁺(I − W): appears in the Lyapunov weight of
+/// Theorem 1 and the second branch of ρ.
+pub fn lambda_max_pinv_i_minus_w(m: &MixingMatrix) -> f64 {
+    1.0 / m.lambda_min_plus()
+}
+
+/// The second branch of the paper's contraction factor ρ (Theorem 1):
+/// `1 − γ / (2 λmax((I−W)†))`.
+pub fn rho_dual_branch(m: &MixingMatrix, gamma: f64) -> f64 {
+    1.0 - gamma / (2.0 * lambda_max_pinv_i_minus_w(m))
+}
+
+/// Theorem 1 admissible γ upper bound, Eq. (9):
+/// `min{ 2/((3C+1)β), 2μη(2−μη)/([2−μη(2−μη)] C β) }` (second branch only
+/// for C > 0).
+pub fn gamma_upper_bound(m: &MixingMatrix, c: f64, mu: f64, eta: f64) -> f64 {
+    let beta = m.beta();
+    let first = 2.0 / ((3.0 * c + 1.0) * beta);
+    if c <= 0.0 {
+        return first;
+    }
+    let t = mu * eta * (2.0 - mu * eta);
+    let second = 2.0 * t / ((2.0 - t) * c * beta);
+    first.min(second)
+}
+
+/// Theorem 1 admissible α interval, Eq. (10), given γ. Returns (lo, hi);
+/// empty (lo > hi) means the (γ, η) pair is outside the theory's region.
+pub fn alpha_interval(m: &MixingMatrix, c: f64, mu: f64, eta: f64, gamma: f64) -> (f64, f64) {
+    let beta = m.beta();
+    let a1 = 4.0 * (1.0 + c) / (c * beta * gamma + 2.0);
+    let lo = c * beta * gamma / (2.0 * (1.0 + c));
+    let t = mu * eta * (2.0 - mu * eta);
+    let hi = (1.0 / a1) * ((2.0 - beta * gamma) / (4.0 - beta * gamma)).min(t);
+    (lo, hi)
+}
+
+/// The full contraction factor ρ from Theorem 1 for a given parameter
+/// choice (used to check measured rates against theory).
+pub fn rho_theorem1(
+    m: &MixingMatrix,
+    c: f64,
+    mu: f64,
+    eta: f64,
+    gamma: f64,
+    alpha: f64,
+) -> f64 {
+    let beta = m.beta();
+    let a1 = 4.0 * (1.0 + c) / (c * beta * gamma + 2.0);
+    let t = mu * eta * (2.0 - mu * eta);
+    let r1 = (1.0 - t) / (1.0 - a1 * alpha);
+    let r2 = rho_dual_branch(m, gamma);
+    let r3 = 1.0 - alpha;
+    r1.max(r2).max(r3)
+}
+
+/// I − W as a dense matrix (for tests that need the explicit operator).
+pub fn i_minus_w(m: &MixingMatrix) -> Mat {
+    let n = m.n;
+    let mut out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            out[(i, j)] = if i == j { 1.0 - m.w[(i, j)] } else { -m.w[(i, j)] };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{MixingRule, Topology};
+
+    fn ring8() -> MixingMatrix {
+        Topology::Ring.build(8, MixingRule::UniformNeighbors)
+    }
+
+    #[test]
+    fn pinv_eigen_consistency() {
+        let m = ring8();
+        let lam = lambda_max_pinv_i_minus_w(&m);
+        assert!((lam - 1.0 / m.lambda_min_plus()).abs() < 1e-12);
+        assert!(lam > 1.0); // ring is not fully connected
+    }
+
+    #[test]
+    fn rho_below_one_for_valid_params() {
+        // Check that the Theorem 1 recipe yields ρ < 1 across compression
+        // levels on the paper's ring.
+        let m = ring8();
+        let (mu, l) = (0.5, 5.0);
+        let eta = 2.0 / (mu + l);
+        for &c in &[0.0, 0.1, 0.5, 1.0, 4.0] {
+            let gamma = 0.999 * gamma_upper_bound(&m, c, mu, eta);
+            assert!(gamma > 0.0);
+            let (lo, hi) = alpha_interval(&m, c, mu, eta, gamma);
+            if c > 0.0 {
+                assert!(lo <= hi, "empty α interval at C={c}: ({lo}, {hi})");
+            }
+            let alpha = 0.5 * (lo + hi);
+            let rho = rho_theorem1(&m, c, mu, eta, gamma, alpha.max(lo));
+            assert!(rho < 1.0, "ρ={rho} at C={c}");
+            assert!(rho > 0.0);
+        }
+    }
+
+    #[test]
+    fn rho_degrades_with_compression() {
+        // More compression error (larger C) ⇒ no faster contraction.
+        let m = ring8();
+        let (mu, l) = (1.0, 10.0);
+        let eta = 2.0 / (mu + l);
+        let rho_at = |c: f64| {
+            let gamma = 0.999 * gamma_upper_bound(&m, c, mu, eta);
+            let (lo, hi) = alpha_interval(&m, c, mu, eta, gamma);
+            rho_theorem1(&m, c, mu, eta, gamma, 0.5 * (lo + hi).max(lo))
+        };
+        assert!(rho_at(0.01) <= rho_at(1.0) + 1e-12);
+        assert!(rho_at(1.0) <= rho_at(8.0) + 1e-12);
+    }
+
+    #[test]
+    fn i_minus_w_psd() {
+        let m = ring8();
+        let ev = crate::linalg::eigvals_sym(&i_minus_w(&m));
+        assert!(ev[0] > -1e-10, "{ev:?}");
+        assert!((ev[ev.len() - 1] - m.beta()).abs() < 1e-9);
+    }
+}

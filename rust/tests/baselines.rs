@@ -1,0 +1,104 @@
+//! Cross-algorithm integration tests: the orderings the paper's figures
+//! report, reproduced on the synthetic linear-regression workload (Fig. 1
+//! regime: 8-agent ring, full gradient, heterogeneous data).
+
+use lead::algorithms::{
+    choco::ChocoSgd, d2::D2, deepsqueeze::DeepSqueeze, dgd::Dgd, diging::DiGing,
+    exact_diffusion::ExactDiffusion, lead::Lead, nids::Nids, qdgd::Qdgd, Algorithm,
+};
+use lead::compress::quantize::{PNorm, QuantizeP};
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::problems::linreg::LinReg;
+use lead::topology::{MixingRule, Topology};
+
+fn run(algo: Box<dyn Algorithm>, compressed: bool, rounds: usize, eta: f64) -> lead::coordinator::metrics::RunRecord {
+    let p = LinReg::synthetic(8, 30, 0.1, 101);
+    let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+    let mut e = Engine::new(
+        EngineConfig { eta, record_every: 20, ..Default::default() },
+        mix,
+        Box::new(p),
+    );
+    let comp: Option<Box<dyn lead::compress::Compressor>> = if compressed {
+        Some(Box::new(QuantizeP::new(2, PNorm::Inf, 512)))
+    } else {
+        None
+    };
+    e.run(algo, comp, rounds)
+}
+
+/// Fig. 1a ordering: exact methods (LEAD, NIDS, D², ExactDiffusion,
+/// DIGing) reach high precision; DGD-family (DGD, QDGD, DeepSqueeze,
+/// CHOCO) stall at a bias.
+#[test]
+fn figure1_ordering() {
+    let exact: Vec<(&str, f64)> = vec![
+        ("LEAD+2bit", run(Box::new(Lead::paper_default()), true, 1200, 0.1).last().dist_opt),
+        ("NIDS", run(Box::new(Nids::new()), false, 1200, 0.1).last().dist_opt),
+        ("D2", run(Box::new(D2::new()), false, 1200, 0.1).last().dist_opt),
+        ("ExactDiffusion", run(Box::new(ExactDiffusion::new()), false, 1200, 0.1).last().dist_opt),
+        ("DIGing", run(Box::new(DiGing::new()), false, 4000, 0.02).last().dist_opt),
+    ];
+    for (name, err) in &exact {
+        assert!(*err < 1e-7, "{name} should be exact, got {err}");
+    }
+    let biased: Vec<(&str, f64)> = vec![
+        ("DGD", run(Box::new(Dgd::new()), false, 1200, 0.1).last().dist_opt),
+        ("QDGD", run(Box::new(Qdgd::new(0.2)), true, 1200, 0.1).last().dist_opt),
+        ("DeepSqueeze", run(Box::new(DeepSqueeze::new(0.2)), true, 1200, 0.1).last().dist_opt),
+        ("CHOCO-SGD", run(Box::new(ChocoSgd::new(0.8)), true, 1200, 0.1).last().dist_opt),
+    ];
+    for (name, err) in &biased {
+        assert!(
+            *err > 1e-6,
+            "{name} is a DGD-type method and should retain bias, got {err}"
+        );
+        assert!(*err < 10.0, "{name} diverged: {err}");
+    }
+}
+
+/// Fig. 1b: per *bit*, LEAD dominates the non-compressed exact methods.
+#[test]
+fn figure1_bits_efficiency() {
+    let lead_rec = run(Box::new(Lead::paper_default()), true, 1500, 0.1);
+    let nids_rec = run(Box::new(Nids::new()), false, 1500, 0.1);
+    let tol = 1e-6;
+    let lead_bits = lead_rec.bits_to_tol(tol).expect("LEAD reached tol");
+    let nids_bits = nids_rec.bits_to_tol(tol).expect("NIDS reached tol");
+    assert!(
+        lead_bits < 0.25 * nids_bits,
+        "LEAD {lead_bits:.3e} bits vs NIDS {nids_bits:.3e} — expected ≥4× saving"
+    );
+}
+
+/// Fig. 1d: compression error vanishes for LEAD and CHOCO (difference
+/// compression) but stays large for QDGD and DeepSqueeze (model
+/// compression).
+#[test]
+fn figure1_compression_error_contrast() {
+    let lead_rec = run(Box::new(Lead::paper_default()), true, 800, 0.1);
+    let choco_rec = run(Box::new(ChocoSgd::new(0.8)), true, 800, 0.1);
+    let qdgd_rec = run(Box::new(Qdgd::new(0.2)), true, 800, 0.1);
+    let ds_rec = run(Box::new(DeepSqueeze::new(0.2)), true, 800, 0.1);
+    assert!(lead_rec.last().comp_err < 1e-6, "LEAD comp err {}", lead_rec.last().comp_err);
+    assert!(choco_rec.last().comp_err < 1e-2, "CHOCO comp err {}", choco_rec.last().comp_err);
+    assert!(
+        qdgd_rec.last().comp_err > 10.0 * lead_rec.last().comp_err.max(1e-9),
+        "QDGD comp err should stay large: {}",
+        qdgd_rec.last().comp_err
+    );
+    assert!(
+        ds_rec.last().comp_err > 10.0 * lead_rec.last().comp_err.max(1e-9),
+        "DeepSqueeze comp err should stay large: {}",
+        ds_rec.last().comp_err
+    );
+}
+
+/// DIGing transmits two channels ⇒ exactly 2× the bits of NIDS per round.
+#[test]
+fn diging_pays_double_bits() {
+    let nids_rec = run(Box::new(Nids::new()), false, 100, 0.1);
+    let diging_rec = run(Box::new(DiGing::new()), false, 100, 0.05);
+    let ratio = diging_rec.last().bits_per_agent / nids_rec.last().bits_per_agent;
+    assert!((ratio - 2.0).abs() < 1e-9, "ratio {ratio}");
+}

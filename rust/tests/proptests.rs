@@ -1,0 +1,173 @@
+//! Randomized property tests over the whole stack (the in-repo `prop`
+//! harness stands in for proptest; failures print a replay seed).
+
+use lead::compress::quantize::{decode, PNorm, QuantizeP};
+use lead::compress::{randk::RandK, topk::TopK, CompressedMsg, Compressor};
+use lead::prop::forall;
+use lead::prop_assert;
+use lead::rng::Rng;
+use lead::topology::{MixingMatrix, MixingRule, Topology};
+
+/// Any topology × any mixing rule yields a matrix satisfying Assumption 1,
+/// and the cached spectral constants are consistent with the eigenvalues.
+#[test]
+fn mixing_matrices_satisfy_assumption1() {
+    forall(60, 0x701, |g| {
+        let n = g.usize_in(2..=24);
+        let topo = match g.usize_in(0..=4) {
+            0 => Topology::Ring,
+            1 => Topology::FullyConnected,
+            2 => Topology::Star,
+            3 => Topology::Path,
+            _ => Topology::ErdosRenyi { p: 0.5, seed: g.case_seed },
+        };
+        let rule = *g.choose(&[
+            MixingRule::UniformNeighbors,
+            MixingRule::MetropolisHastings,
+            MixingRule::LazyMetropolis,
+        ]);
+        let m = topo.build(n, rule); // validate() runs inside
+        prop_assert!(m.beta() > 0.0 && m.beta() < 2.0, "β = {}", m.beta());
+        prop_assert!(m.kappa_g() >= 1.0 - 1e-9, "κ_g = {}", m.kappa_g());
+        // Mixing preserves the average: 1ᵀW = 1ᵀ.
+        for j in 0..n {
+            let col: f64 = (0..n).map(|i| m.w[(i, j)]).sum();
+            prop_assert!((col - 1.0).abs() < 1e-9, "column {j} sums to {col}");
+        }
+        Ok(())
+    });
+}
+
+/// Gossip with any valid W converges to consensus on the average
+/// (primitivity ⇒ W^k → 11ᵀ/n).
+#[test]
+fn gossip_converges_to_average() {
+    forall(30, 0x702, |g| {
+        let n = g.usize_in(3..=12);
+        let topo = g.choose(&[Topology::Ring, Topology::Star, Topology::Path]).clone();
+        let m: MixingMatrix = topo.build(n, MixingRule::LazyMetropolis);
+        let mut x: Vec<f64> = (0..n).map(|_| g.f64_in(-5.0, 5.0)).collect();
+        let avg: f64 = x.iter().sum::<f64>() / n as f64;
+        for _ in 0..2000 {
+            let mut nx = vec![0.0; n];
+            for i in 0..n {
+                for j in 0..n {
+                    nx[i] += m.w[(i, j)] * x[j];
+                }
+            }
+            x = nx;
+        }
+        for (i, xi) in x.iter().enumerate() {
+            prop_assert!((xi - avg).abs() < 1e-6, "agent {i}: {xi} vs avg {avg}");
+        }
+        Ok(())
+    });
+}
+
+/// Wire-format completeness: decode(payload) == values for every codec
+/// that ships packed bytes, across random shapes and parameters.
+#[test]
+fn quantizer_wire_roundtrip_random() {
+    forall(120, 0x703, |g| {
+        let bits = g.usize_in(1..=12) as u32;
+        let block = *g.choose(&[1usize, 2, 7, 64, 512, 4096]);
+        let q = QuantizeP::new(bits, if g.bool_with(0.5) { PNorm::Inf } else { PNorm::P(2.0) }, block);
+        let x = g.vec_f64(1..=2000, 100.0);
+        let mut rng = Rng::new(g.case_seed);
+        let msg = q.compress_alloc(&x, &mut rng);
+        // Exact bit count.
+        let blocks = x.len().div_ceil(block) as u64;
+        prop_assert!(
+            msg.wire_bits == blocks * 32 + (x.len() as u64) * (1 + bits as u64),
+            "bits {} != formula",
+            msg.wire_bits
+        );
+        prop_assert!(msg.payload.len() as u64 == msg.wire_bits.div_ceil(8));
+        let mut dec = Vec::new();
+        decode(&q, &msg.payload, x.len(), &mut dec);
+        prop_assert!(dec == msg.values, "decode mismatch");
+        Ok(())
+    });
+}
+
+/// Unbiased codecs: averaging many compressions approaches the input
+/// (law of large numbers with bounded variance C‖x‖²).
+#[test]
+fn unbiasedness_across_codecs() {
+    forall(8, 0x704, |g| {
+        let d = g.usize_in(16..=64);
+        let x = g.vec_normal(d);
+        let codecs: Vec<Box<dyn Compressor>> = vec![
+            Box::new(QuantizeP::new(2, PNorm::Inf, 32)),
+            Box::new(RandK::new((d / 3).max(1), true)),
+        ];
+        let mut rng = Rng::new(g.case_seed);
+        for c in &codecs {
+            let trials = 4000;
+            let mut mean = vec![0.0f64; d];
+            let mut msg = CompressedMsg::with_dim(d);
+            for _ in 0..trials {
+                c.compress(&x, &mut rng, &mut msg);
+                for (m, v) in mean.iter_mut().zip(&msg.values) {
+                    *m += v / trials as f64;
+                }
+            }
+            let cconst = c.variance_constant(d).unwrap().max(0.25);
+            let norm = lead::linalg::norm2(&x);
+            let tol = 6.0 * (cconst.sqrt() * norm) / (trials as f64).sqrt();
+            let bias = lead::linalg::dist_sq(&mean, &x).sqrt();
+            prop_assert!(bias < tol, "{}: bias {bias} > {tol}", c.name());
+        }
+        Ok(())
+    });
+}
+
+/// Top-k is a contraction: ‖x − Q(x)‖² ≤ (1 − k/d)‖x‖², and never expands.
+#[test]
+fn topk_contraction_random() {
+    forall(80, 0x705, |g| {
+        let x = g.vec_f64(1..=400, 10.0);
+        let k = g.usize_in(1..=x.len());
+        let t = TopK::new(k);
+        let mut rng = Rng::new(1);
+        let msg = t.compress_alloc(&x, &mut rng);
+        let err = lead::linalg::dist_sq(&x, &msg.values);
+        let bound = (1.0 - k as f64 / x.len() as f64) * lead::linalg::norm2_sq(&x);
+        prop_assert!(err <= bound + 1e-9, "err {err} > bound {bound}");
+        Ok(())
+    });
+}
+
+/// Engine determinism: same seed ⇒ identical runs; different seed ⇒
+/// different dither draws (compressed runs diverge in their randomness but
+/// both converge).
+#[test]
+fn engine_seed_determinism() {
+    use lead::algorithms::lead::Lead;
+    use lead::coordinator::engine::{Engine, EngineConfig};
+    use lead::problems::linreg::LinReg;
+    let run = |seed: u64| {
+        let p = LinReg::synthetic(4, 16, 0.1, 3);
+        let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+        let mut e = Engine::new(
+            EngineConfig { seed, record_every: 10, ..Default::default() },
+            mix,
+            Box::new(p),
+        );
+        e.run(
+            Box::new(Lead::paper_default()),
+            Some(Box::new(QuantizeP::new(2, PNorm::Inf, 16))),
+            100,
+        )
+    };
+    let a = run(7);
+    let b = run(7);
+    let c = run(8);
+    for (ma, mb) in a.series.iter().zip(&b.series) {
+        assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits());
+    }
+    assert!(
+        a.series.iter().zip(&c.series).any(|(x, y)| x.dist_opt != y.dist_opt),
+        "different seeds should give different dither"
+    );
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime integration tests: the three-layer contract.
+//!
+//! These tests require `make artifacts` to have run (they skip with a
+//! message otherwise, so pure-rust CI still passes).
+
+use lead::algorithms::lead::Lead;
+use lead::compress::quantize::{PNorm, QuantizeP};
+use lead::compress::Compressor;
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::problems::linreg::LinReg;
+use lead::problems::neural::{MlpProblem, PjrtLinReg, TransformerProblem};
+use lead::problems::{DataSplit, Problem};
+use lead::rng::Rng;
+use lead::runtime::{artifact::Value, Manifest};
+use lead::topology::{MixingRule, Topology};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+/// L2 contract: artifact gradient == native rust gradient (1e-4, f32 FFI).
+#[test]
+fn pjrt_linreg_grad_matches_native() {
+    let Some(m) = manifest() else { return };
+    let native = LinReg::synthetic(8, 200, 0.1, 7);
+    let native2 = LinReg::synthetic(8, 200, 0.1, 7);
+    let pjrt = PjrtLinReg::new(&m, native2).unwrap();
+    let mut rng = Rng::new(1);
+    let mut x = vec![0.0f64; 200];
+    rng.fill_normal(&mut x, 1.0);
+    let mut g_native = vec![0.0f64; 200];
+    let mut g_pjrt = vec![0.0f64; 200];
+    for agent in [0usize, 3, 7] {
+        native.grad_full(agent, &x, &mut g_native);
+        pjrt.grad_full(agent, &x, &mut g_pjrt);
+        let denom = lead::linalg::norm2(&g_native).max(1.0);
+        let rel = lead::linalg::dist_sq(&g_native, &g_pjrt).sqrt() / denom;
+        assert!(rel < 1e-4, "agent {agent}: relative grad diff {rel}");
+        let l_native = native.loss(agent, &x);
+        let l_pjrt = pjrt.loss(agent, &x);
+        assert!(
+            (l_native - l_pjrt).abs() / l_native.abs().max(1.0) < 1e-4,
+            "loss {l_native} vs {l_pjrt}"
+        );
+    }
+}
+
+/// L1 contract: the Pallas quantization kernel (via PJRT) == the rust wire
+/// codec given the same dither sequence.
+#[test]
+fn pjrt_quantize_kernel_matches_rust_codec() {
+    let Some(m) = manifest() else { return };
+    let art = m.compile("quantize_2bit_4096").unwrap();
+    let d = 4096;
+    let mut rng = Rng::new(9);
+    let mut x = vec![0.0f64; d];
+    rng.fill_normal(&mut x, 2.0);
+    // The rust codec consumes one uniform draw per element in order; replay
+    // the identical dither into the kernel.
+    let mut dither_rng = Rng::new(0xD17E4);
+    let mut u = vec![0.0f64; d];
+    dither_rng.fill_uniform(&mut u);
+    let res = art.execute(&[Value::F(&x), Value::F(&u)]).unwrap();
+    let kernel_vals = &res[0];
+
+    let q = QuantizeP::new(2, PNorm::Inf, 512);
+    let mut codec_rng = Rng::new(0xD17E4);
+    let msg = q.compress_alloc(&x, &mut codec_rng);
+
+    // f32 (kernel) vs f64-with-f32-norm (codec): identical up to one
+    // quantization level at f32 resolution; count exact matches.
+    let unit: f64 = x.iter().fold(0.0f64, |a, b| a.max(b.abs())) / 2.0;
+    let mut mismatched = 0usize;
+    for i in 0..d {
+        let diff = (kernel_vals[i] - msg.values[i]).abs();
+        if diff > 1e-5 * unit {
+            // floor-boundary flips: at most one level apart
+            assert!(diff <= unit * 1.001, "elem {i}: kernel {} codec {}", kernel_vals[i], msg.values[i]);
+            mismatched += 1;
+        }
+    }
+    assert!(
+        (mismatched as f64) < 0.001 * d as f64,
+        "{mismatched}/{d} boundary mismatches — formula drift?"
+    );
+}
+
+/// L1 contract: fused lead_step artifact == rust composition.
+#[test]
+fn pjrt_lead_step_matches_rust() {
+    let Some(m) = manifest() else { return };
+    let art = m.compile("lead_step_4096").unwrap();
+    let d = 4096;
+    let mut rng = Rng::new(21);
+    let mut x = vec![0.0f64; d];
+    let mut g = vec![0.0f64; d];
+    let mut dv = vec![0.0f64; d];
+    let mut h = vec![0.0f64; d];
+    let mut u = vec![0.0f64; d];
+    rng.fill_normal(&mut x, 1.0);
+    rng.fill_normal(&mut g, 1.0);
+    rng.fill_normal(&mut dv, 0.2);
+    rng.fill_normal(&mut h, 1.0);
+    rng.fill_uniform(&mut u);
+    let (eta, alpha) = (0.1f64, 0.5f64);
+    let res = art
+        .execute(&[
+            Value::F(&x),
+            Value::F(&g),
+            Value::F(&dv),
+            Value::F(&h),
+            Value::F(&u),
+            Value::F(&[eta]),
+            Value::F(&[alpha]),
+        ])
+        .unwrap();
+    let (y_k, q_k, h_k) = (&res[0], &res[1], &res[2]);
+    // Rust reference composition.
+    let mut y = vec![0.0f64; d];
+    for t in 0..d {
+        y[t] = x[t] - eta * g[t] - eta * dv[t];
+    }
+    for t in 0..d {
+        assert!((y_k[t] - y[t]).abs() < 1e-5 * (1.0 + y[t].abs()), "y[{t}]");
+    }
+    // h_new = h + α q must hold between the kernel's own outputs.
+    for t in 0..d {
+        let want = h[t] + alpha * q_k[t];
+        assert!((h_k[t] - want).abs() < 1e-5 * (1.0 + want.abs()), "h[{t}]");
+    }
+    // q is a valid 2-bit/512-block quantization of y − h: every value is
+    // a multiple of its block's unit.
+    for blk in 0..d / 512 {
+        let lo = blk * 512;
+        let norm = (lo..lo + 512).fold(0.0f64, |a, t| a.max((y[t] - h[t]).abs()));
+        let unit = norm / 2.0;
+        if unit < 1e-12 {
+            continue;
+        }
+        for t in lo..lo + 512 {
+            let lev = q_k[t].abs() / unit;
+            assert!(
+                (lev - lev.round()).abs() < 1e-3 && lev.round() <= 2.0,
+                "q[{t}] = {} not on the grid (unit {unit})",
+                q_k[t]
+            );
+        }
+    }
+}
+
+/// End-to-end: LEAD + 2-bit quantization on the PJRT gradient oracle
+/// converges identically in character to the native-oracle run.
+#[test]
+fn pjrt_engine_run_converges() {
+    let Some(m) = manifest() else { return };
+    let native = LinReg::synthetic(8, 200, 0.1, 55);
+    let pjrt = PjrtLinReg::new(&m, native).unwrap();
+    let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+    let mut e = Engine::new(
+        EngineConfig { record_every: 20, ..Default::default() },
+        mix,
+        Box::new(pjrt),
+    );
+    let rec = e.run(
+        Box::new(Lead::paper_default()),
+        Some(Box::new(QuantizeP::paper_default())),
+        200,
+    );
+    // f32 gradients ⇒ floor around 1e-5 relative; linear decay before it.
+    assert!(rec.last().dist_opt < 1e-3, "pjrt run: {}", rec.last().dist_opt);
+    let rho = rec.empirical_rho(1e-4).unwrap();
+    assert!(rho < 0.99, "ρ̂ = {rho}");
+}
+
+/// MLP problem: gradients flow, one engine round of LEAD improves loss.
+#[test]
+fn mlp_problem_trains() {
+    let Some(m) = manifest() else { return };
+    let p = MlpProblem::new(&m, 4, 128, DataSplit::Heterogeneous, 3).unwrap();
+    let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+    let loss0 = {
+        let x0 = p.initial_point().to_vec();
+        (0..4).map(|i| p.loss(i, &x0)).sum::<f64>() / 4.0
+    };
+    let mut e = Engine::new(
+        EngineConfig { eta: 0.05, batch_size: Some(64), record_every: 5, ..Default::default() },
+        mix,
+        Box::new(p),
+    );
+    let rec = e.run(
+        Box::new(Lead::paper_default()),
+        Some(Box::new(QuantizeP::paper_default())),
+        15,
+    );
+    assert!(
+        rec.last().loss < loss0,
+        "loss should drop: {loss0} -> {}",
+        rec.last().loss
+    );
+}
+
+/// Transformer problem loads, inits, and one step produces finite loss
+/// near ln(vocab) plus non-trivial gradients.
+#[test]
+fn transformer_problem_step() {
+    let Some(m) = manifest() else { return };
+    let p = TransformerProblem::new(&m, 2, 4096, 11).unwrap();
+    assert!(p.param_count() > 100_000);
+    let x0 = p.initial_point().to_vec();
+    let mut rng = Rng::new(3);
+    let (loss, grad) = p.step(0, &x0, &mut rng);
+    assert!(loss.is_finite() && (loss - (256f64).ln()).abs() < 1.5, "loss {loss}");
+    let gnorm = lead::linalg::norm2(&grad);
+    assert!(gnorm > 1e-3 && gnorm.is_finite(), "‖g‖ = {gnorm}");
+}
