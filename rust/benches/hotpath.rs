@@ -1,11 +1,165 @@
-//! Microbench: end-to-end coordinator rounds/sec (§Perf, L3).
-//! LEAD + 2-bit q∞ on the paper's logreg shape (d = 7850), native oracle,
-//! 1 vs 4 worker threads; plus the linreg Fig. 1 shape.
+//! Microbench: end-to-end coordinator rounds/sec (§Perf, L3), plus the
+//! sparse-mixing benchmark for the paper's headline regime.
+//!
+//! Part 1 — mix phase, dense vs sparse: ring n = 32, d = 10⁵, top-k with
+//! k = d/100. The dense path decodes every message to a d-vector and
+//! accumulates O(deg·d) per agent; the sparse path scatter-adds the
+//! k-entry view in O(deg·k). Same messages, bitwise-identical output —
+//! the speedup is pure representation (target ≥5×, typically ≫).
+//!
+//! Part 2 — full engine rounds/s on the same shape, old hot path (dense
+//! mix + sequential apply) vs new (sparse mix + parallel mix/apply pool),
+//! plus the original LEAD + 2-bit q∞ shapes at 1/4/8 threads.
+
 use lead::algorithms::lead::Lead;
 use lead::compress::quantize::QuantizeP;
-use lead::coordinator::engine::{Engine, EngineConfig};
-use lead::problems::{linreg::LinReg, logreg::LogReg, DataSplit};
+use lead::compress::topk::TopK;
+use lead::compress::{CompressedMsg, Compressor, StripSparse};
+use lead::coordinator::engine::{mix_msgs, Engine, EngineConfig};
+use lead::problems::{linreg::LinReg, logreg::LogReg, DataSplit, Problem};
+use lead::rng::Rng;
 use lead::topology::{MixingRule, Topology};
+
+/// Separable quadratic ½‖x − b_i‖² — an O(d) gradient oracle so the
+/// d = 10⁵ engine benches time the communication path, not the problem.
+struct Quad {
+    n: usize,
+    d: usize,
+    targets: Vec<Vec<f64>>,
+}
+
+impl Quad {
+    fn new(n: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let targets = (0..n)
+            .map(|_| {
+                let mut b = vec![0.0f64; d];
+                rng.fill_normal(&mut b, 1.0);
+                b
+            })
+            .collect();
+        Quad { n, d, targets }
+    }
+}
+
+impl Problem for Quad {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn n_agents(&self) -> usize {
+        self.n
+    }
+    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
+        let b = &self.targets[agent];
+        for t in 0..x.len() {
+            out[t] = x[t] - b[t];
+        }
+    }
+    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
+        0.5 * lead::linalg::dist_sq(x, &self.targets[agent])
+    }
+    fn optimum(&self) -> Option<&[f64]> {
+        None
+    }
+    fn name(&self) -> String {
+        format!("quad(n={}, d={})", self.n, self.d)
+    }
+}
+
+/// Part 1: isolated mix phase, all agents, dense vs sparse representation.
+fn bench_mix_phase() {
+    let n = 32usize;
+    let d = 100_000usize;
+    let k = d / 100;
+    let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+    let topk = TopK::new(k);
+    let mut rng = Rng::new(7);
+    let msgs_sparse: Vec<CompressedMsg> = (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f64; d];
+            rng.fill_normal(&mut x, 1.0);
+            topk.compress_alloc(&x, &mut rng)
+        })
+        .collect();
+    let msgs_dense: Vec<CompressedMsg> = msgs_sparse
+        .iter()
+        .map(|m| {
+            let mut m = m.clone();
+            m.sparse = None;
+            m
+        })
+        .collect();
+
+    let mut out = vec![0.0f64; d];
+    let time_all = |msgs: &[CompressedMsg], out: &mut Vec<f64>, reps: usize| -> f64 {
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            for i in 0..n {
+                out.fill(0.0);
+                mix_msgs(&mix, i, msgs, out);
+            }
+        }
+        t.elapsed().as_secs_f64() / reps as f64
+    };
+    // Warmup + measure (one "round" = mixing for all n agents).
+    time_all(&msgs_dense, &mut out, 1);
+    let dense_s = time_all(&msgs_dense, &mut out, 10);
+    time_all(&msgs_sparse, &mut out, 1);
+    let sparse_s = time_all(&msgs_sparse, &mut out, 10);
+    // Sanity: identical output on the last agent mixed.
+    let mut dense_out = vec![0.0f64; d];
+    mix_msgs(&mix, n - 1, &msgs_dense, &mut dense_out);
+    out.fill(0.0);
+    mix_msgs(&mix, n - 1, &msgs_sparse, &mut out);
+    let identical = dense_out.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "mix phase  ring n={n} d={d} top-k k={k}:  dense {:8.3} ms/round   sparse {:8.3} ms/round   speedup {:6.1}x   bitwise-identical: {identical}",
+        dense_s * 1e3,
+        sparse_s * 1e3,
+        dense_s / sparse_s
+    );
+}
+
+/// Part 2: full engine rounds/s, old hot path vs new, same numerics.
+fn bench_engine_sparse() {
+    let n = 32usize;
+    let d = 100_000usize;
+    let k = d / 100;
+    let rounds = 15usize;
+    let run = |name: &str, threads: usize, comp: Box<dyn Compressor>| -> f64 {
+        let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+        let mut e = Engine::new(
+            EngineConfig {
+                eta: 0.05,
+                threads,
+                record_every: usize::MAX / 2,
+                ..Default::default()
+            },
+            mix,
+            Box::new(Quad::new(n, d, 3)),
+        );
+        let t = std::time::Instant::now();
+        let rec = e.run(Box::new(Lead::paper_default()), Some(comp), rounds);
+        let secs = t.elapsed().as_secs_f64();
+        println!(
+            "engine     {name:<34} threads={threads}  {:8.2} rounds/s  (consensus {:.2e})",
+            rounds as f64 / secs,
+            rec.last().consensus
+        );
+        secs
+    };
+    let dense_seq =
+        run("quad d=1e5 top-k dense (old path)", 1, Box::new(StripSparse(TopK::new(k))));
+    let sparse_seq = run("quad d=1e5 top-k sparse", 1, Box::new(TopK::new(k)));
+    let dense_par = run("quad d=1e5 top-k dense", 8, Box::new(StripSparse(TopK::new(k))));
+    let sparse_par = run("quad d=1e5 top-k sparse", 8, Box::new(TopK::new(k)));
+    println!(
+        "engine     sparse speedup: {:4.2}x sequential, {:4.2}x at 8 threads, {:4.2}x combined (old 1-thread dense vs new 8-thread sparse)",
+        dense_seq / sparse_seq,
+        dense_par / sparse_par,
+        dense_seq / sparse_par
+    );
+}
 
 fn bench(name: &str, problem: Box<dyn lead::problems::Problem>, threads: usize, rounds: usize) {
     let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
@@ -29,6 +183,8 @@ fn bench(name: &str, problem: Box<dyn lead::problems::Problem>, threads: usize, 
 }
 
 fn main() {
+    bench_mix_phase();
+    bench_engine_sparse();
     for threads in [1usize, 4, 8] {
         bench(
             "linreg d=200 (fig1 shape)",

@@ -18,27 +18,47 @@
 //! which is exactly the engine's mixed channel), so per-neighbor mirrors
 //! never need to be materialized.
 
-use super::{zeros, AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 pub struct ChocoSgd {
     /// Gossip stepsize γ (paper Tables: 0.6–0.8).
     pub gamma: f64,
-    x: Vec<Vec<f64>>,
+    x: Mat,
     /// Own public copy x̂_i.
-    xhat: Vec<Vec<f64>>,
+    xhat: Mat,
     /// s_i = Σ_j w_ij x̂_j, maintained incrementally.
-    s: Vec<Vec<f64>>,
+    s: Mat,
     /// Scratch: x^{k+½} between send and recv.
-    xhalf: Vec<Vec<f64>>,
+    xhalf: Mat,
+}
+
+/// Per-agent CHOCO apply step over disjoint state rows.
+#[inline]
+fn apply_agent(
+    gamma: f64,
+    q_own: &[f64],
+    q_mix: &[f64],
+    x: &mut [f64],
+    xh: &mut [f64],
+    s: &mut [f64],
+    half: &mut [f64],
+) {
+    for t in 0..x.len() {
+        xh[t] += q_own[t]; // x̂_i ← x̂_i + q_i
+        s[t] += q_mix[t]; // s_i ← s_i + Σ w_ij q_j
+        x[t] = half[t] + gamma * (s[t] - xh[t]);
+    }
 }
 
 impl ChocoSgd {
     pub fn new(gamma: f64) -> Self {
-        ChocoSgd { gamma, x: vec![], xhat: vec![], s: vec![], xhalf: vec![] }
+        let empty = Mat::zeros(0, 0);
+        ChocoSgd { gamma, x: empty.clone(), xhat: empty.clone(), s: empty.clone(), xhalf: empty }
     }
 
     pub fn public_copy(&self, agent: usize) -> &[f64] {
-        &self.xhat[agent]
+        self.xhat.row(agent)
     }
 }
 
@@ -53,16 +73,16 @@ impl Algorithm for ChocoSgd {
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
         let (n, d) = (x0.len(), x0[0].len());
-        self.x = x0.to_vec();
-        self.xhat = zeros(n, d);
-        self.s = zeros(n, d);
-        self.xhalf = zeros(n, d);
+        self.x = Mat::from_rows(x0);
+        self.xhat = Mat::zeros(n, d);
+        self.s = Mat::zeros(n, d);
+        self.xhalf = Mat::zeros(n, d);
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        let x = &self.x[agent];
-        let xh = &self.xhat[agent];
-        let half = &mut self.xhalf[agent];
+        let x = self.x.row(agent);
+        let xh = self.xhat.row(agent);
+        let half = self.xhalf.row_mut(agent);
         let payload = &mut out[0];
         for t in 0..x.len() {
             half[t] = x[t] - ctx.eta * g[t];
@@ -70,21 +90,42 @@ impl Algorithm for ChocoSgd {
         }
     }
 
-    fn recv(&mut self, _ctx: &Ctx, agent: usize, _g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
+    fn recv(
+        &mut self,
+        _ctx: &Ctx,
+        agent: usize,
+        _g: &[f64],
+        self_dec: &[&[f64]],
+        mixed: &[&[f64]],
+    ) {
+        apply_agent(
+            self.gamma,
+            self_dec[0],
+            mixed[0],
+            self.x.row_mut(agent),
+            self.xhat.row_mut(agent),
+            self.s.row_mut(agent),
+            self.xhalf.row_mut(agent),
+        );
+    }
+
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+        let _ = (ctx, g);
         let gamma = self.gamma;
-        let xh = &mut self.xhat[agent];
-        let s = &mut self.s[agent];
-        let half = &self.xhalf[agent];
-        let x = &mut self.x[agent];
-        for t in 0..x.len() {
-            xh[t] += self_dec[0][t]; // x̂_i ← x̂_i + q_i
-            s[t] += mixed[0][t]; // s_i ← s_i + Σ w_ij q_j
-            x[t] = half[t] + gamma * (s[t] - xh[t]);
-        }
+        super::par_agents(
+            threads,
+            vec![&mut self.x, &mut self.xhat, &mut self.s, &mut self.xhalf],
+            |i, rows| match rows {
+                [x, xh, s, half] => {
+                    apply_agent(gamma, inbox.own(i, 0), inbox.mix(i, 0), x, xh, s, half)
+                }
+                _ => unreachable!(),
+            },
+        );
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 }
 

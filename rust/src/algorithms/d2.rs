@@ -9,17 +9,36 @@
 //! gradients — implemented independently in its history form so the
 //! Prop. 1 equivalence can be *tested* rather than assumed.
 
-use super::{AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 pub struct D2 {
-    x: Vec<Vec<f64>>,
-    x_prev: Vec<Vec<f64>>,
-    g_prev: Vec<Vec<f64>>,
+    x: Mat,
+    x_prev: Mat,
+    g_prev: Mat,
+}
+
+/// Per-agent D² apply step: x⁺ = (z + Wz)/2, history shifts.
+#[inline]
+fn apply_agent(
+    g: &[f64],
+    z_own: &[f64],
+    z_mix: &[f64],
+    x: &mut [f64],
+    xp: &mut [f64],
+    gp: &mut [f64],
+) {
+    for t in 0..x.len() {
+        let xnew = 0.5 * (z_own[t] + z_mix[t]);
+        xp[t] = x[t];
+        x[t] = xnew;
+    }
+    gp.copy_from_slice(g);
 }
 
 impl D2 {
     pub fn new() -> Self {
-        D2 { x: vec![], x_prev: vec![], g_prev: vec![] }
+        D2 { x: Mat::zeros(0, 0), x_prev: Mat::zeros(0, 0), g_prev: Mat::zeros(0, 0) }
     }
 }
 
@@ -41,39 +60,50 @@ impl Algorithm for D2 {
     fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
         // Matches LEAD's init (Prop. 1 derivation assumes D¹ = 0):
         // x⁰ stored as history, x¹ = x⁰ − ηg⁰.
-        self.x_prev = x0.to_vec();
-        self.g_prev = g0.to_vec();
-        self.x = x0.to_vec();
-        for (x, g) in self.x.iter_mut().zip(g0) {
-            crate::linalg::axpy(-ctx.eta, g, x);
+        self.x_prev = Mat::from_rows(x0);
+        self.g_prev = Mat::from_rows(g0);
+        self.x = Mat::from_rows(x0);
+        for (i, g) in g0.iter().enumerate() {
+            crate::linalg::axpy(-ctx.eta, g, self.x.row_mut(i));
         }
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
         // z = 2x − x_prev − ηg + ηg_prev
         let z = &mut out[0];
-        let x = &self.x[agent];
-        let xp = &self.x_prev[agent];
-        let gp = &self.g_prev[agent];
+        let x = self.x.row(agent);
+        let xp = self.x_prev.row(agent);
+        let gp = self.g_prev.row(agent);
         for t in 0..x.len() {
             z[t] = 2.0 * x[t] - xp[t] - ctx.eta * (g[t] - gp[t]);
         }
     }
 
     fn recv(&mut self, _ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
-        // x⁺ = (z + Wz)/2 per agent; history shifts.
-        let x = &mut self.x[agent];
-        let xp = &mut self.x_prev[agent];
-        for t in 0..x.len() {
-            let xnew = 0.5 * (self_dec[0][t] + mixed[0][t]);
-            xp[t] = x[t];
-            x[t] = xnew;
-        }
-        self.g_prev[agent].copy_from_slice(g);
+        apply_agent(
+            g,
+            self_dec[0],
+            mixed[0],
+            self.x.row_mut(agent),
+            self.x_prev.row_mut(agent),
+            self.g_prev.row_mut(agent),
+        );
+    }
+
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+        let _ = ctx;
+        super::par_agents(
+            threads,
+            vec![&mut self.x, &mut self.x_prev, &mut self.g_prev],
+            |i, rows| match rows {
+                [x, xp, gp] => apply_agent(&g[i], inbox.own(i, 0), inbox.mix(i, 0), x, xp, gp),
+                _ => unreachable!(),
+            },
+        );
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 }
 

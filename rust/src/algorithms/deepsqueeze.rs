@@ -13,23 +13,44 @@
 //! before the next compression — and it still compresses a full-magnitude
 //! model vector, so its compression error does not vanish (Fig. 1d).
 
-use super::{zeros, AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 pub struct DeepSqueeze {
     /// Gossip damping γ (paper Tables: 0.2–0.6).
     pub gamma: f64,
-    x: Vec<Vec<f64>>,
+    x: Mat,
     /// Error-feedback memory e_i.
-    e: Vec<Vec<f64>>,
+    e: Mat,
+}
+
+/// Per-agent DeepSqueeze apply step over disjoint state rows.
+#[inline]
+fn apply_agent(
+    gamma: f64,
+    eta: f64,
+    g: &[f64],
+    c_own: &[f64],
+    c_mix: &[f64],
+    x: &mut [f64],
+    e: &mut [f64],
+) {
+    for t in 0..x.len() {
+        // Error feedback: e ← (v + e) − c (v + e is what we sent).
+        let sent = x[t] - eta * g[t] + e[t];
+        e[t] = sent - c_own[t];
+        // Gossip on the compressed models.
+        x[t] = c_own[t] + gamma * (c_mix[t] - c_own[t]);
+    }
 }
 
 impl DeepSqueeze {
     pub fn new(gamma: f64) -> Self {
-        DeepSqueeze { gamma, x: vec![], e: vec![] }
+        DeepSqueeze { gamma, x: Mat::zeros(0, 0), e: Mat::zeros(0, 0) }
     }
 
     pub fn error_memory(&self, agent: usize) -> &[f64] {
-        &self.e[agent]
+        self.e.row(agent)
     }
 }
 
@@ -43,14 +64,14 @@ impl Algorithm for DeepSqueeze {
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
-        self.x = x0.to_vec();
-        self.e = zeros(x0.len(), x0[0].len());
+        self.x = Mat::from_rows(x0);
+        self.e = Mat::zeros(x0.len(), x0[0].len());
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
         // Broadcast v + e; engine compresses it into c.
-        let x = &self.x[agent];
-        let e = &self.e[agent];
+        let x = self.x.row(agent);
+        let e = self.e.row(agent);
         let payload = &mut out[0];
         for t in 0..x.len() {
             payload[t] = x[t] - ctx.eta * g[t] + e[t];
@@ -58,23 +79,28 @@ impl Algorithm for DeepSqueeze {
     }
 
     fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
+        apply_agent(
+            self.gamma,
+            ctx.eta,
+            g,
+            self_dec[0],
+            mixed[0],
+            self.x.row_mut(agent),
+            self.e.row_mut(agent),
+        );
+    }
+
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
         let gamma = self.gamma;
         let eta = ctx.eta;
-        let x = &mut self.x[agent];
-        let e = &mut self.e[agent];
-        let c_own = &self_dec[0];
-        let c_mix = &mixed[0];
-        for t in 0..x.len() {
-            // Error feedback: e ← (v + e) − c (v + e is what we sent).
-            let sent = x[t] - eta * g[t] + e[t];
-            e[t] = sent - c_own[t];
-            // Gossip on the compressed models.
-            x[t] = c_own[t] + gamma * (c_mix[t] - c_own[t]);
-        }
+        super::par_agents(threads, vec![&mut self.x, &mut self.e], |i, rows| match rows {
+            [x, e] => apply_agent(gamma, eta, &g[i], inbox.own(i, 0), inbox.mix(i, 0), x, e),
+            _ => unreachable!(),
+        });
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 }
 

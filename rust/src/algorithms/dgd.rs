@@ -9,15 +9,23 @@
 //! x* under data heterogeneity (paper §3.1) — our integration tests check
 //! precisely that bias, which LEAD/NIDS eliminate.
 
-use super::{AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 pub struct Dgd {
-    x: Vec<Vec<f64>>,
+    x: Mat,
+}
+
+/// Per-agent DGD apply step.
+#[inline]
+fn apply_agent(eta: f64, g: &[f64], x_mix: &[f64], x: &mut [f64]) {
+    x.copy_from_slice(x_mix);
+    crate::linalg::axpy(-eta, g, x);
 }
 
 impl Dgd {
     pub fn new() -> Self {
-        Dgd { x: vec![] }
+        Dgd { x: Mat::zeros(0, 0) }
     }
 }
 
@@ -37,21 +45,27 @@ impl Algorithm for Dgd {
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
-        self.x = x0.to_vec();
+        self.x = Mat::from_rows(x0);
     }
 
     fn send(&mut self, _ctx: &Ctx, agent: usize, _g: &[f64], out: &mut [Vec<f64>]) {
-        out[0].copy_from_slice(&self.x[agent]);
+        out[0].copy_from_slice(self.x.row(agent));
     }
 
     fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], _self_dec: &[&[f64]], mixed: &[&[f64]]) {
-        let x = &mut self.x[agent];
-        x.copy_from_slice(&mixed[0]);
-        crate::linalg::axpy(-ctx.eta, g, x);
+        apply_agent(ctx.eta, g, mixed[0], self.x.row_mut(agent));
+    }
+
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+        let eta = ctx.eta;
+        super::par_agents(threads, vec![&mut self.x], |i, rows| match rows {
+            [x] => apply_agent(eta, &g[i], inbox.mix(i, 0), x),
+            _ => unreachable!(),
+        });
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 }
 

@@ -15,25 +15,36 @@
 //! start of the next round; we therefore *complete* y lazily in `send`
 //! using the fresh gradient before broadcasting.
 
-use super::{AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 pub struct DiGing {
-    x: Vec<Vec<f64>>,
+    x: Mat,
     /// Tracker; between rounds holds the mixed part (Wy)_i awaiting the
     /// `+ g^{k+1} − g^k` completion.
-    y: Vec<Vec<f64>>,
-    g_prev: Vec<Vec<f64>>,
+    y: Mat,
+    g_prev: Mat,
+}
+
+/// Per-agent DIGing apply step: x⁺ = (Wx)_i − η y_i (own completed
+/// tracker), y ← (Wy)_i.
+#[inline]
+fn apply_agent(eta: f64, x_mix: &[f64], y_mix: &[f64], x: &mut [f64], y: &mut [f64]) {
+    for t in 0..x.len() {
+        x[t] = x_mix[t] - eta * y[t];
+        y[t] = y_mix[t];
+    }
 }
 
 impl DiGing {
     pub fn new() -> Self {
-        DiGing { x: vec![], y: vec![], g_prev: vec![] }
+        DiGing { x: Mat::zeros(0, 0), y: Mat::zeros(0, 0), g_prev: Mat::zeros(0, 0) }
     }
 
     /// Gradient tracker (diagnostics: mean over agents equals the mean
     /// gradient — conservation property tested below).
     pub fn tracker(&self, agent: usize) -> &[f64] {
-        &self.y[agent]
+        self.y.row(agent)
     }
 }
 
@@ -53,37 +64,47 @@ impl Algorithm for DiGing {
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
-        self.x = x0.to_vec();
-        self.y = g0.to_vec(); // y¹ = ∇F(x¹)
-        self.g_prev = g0.to_vec();
+        self.x = Mat::from_rows(x0);
+        self.y = Mat::from_rows(g0); // y¹ = ∇F(x¹)
+        self.g_prev = Mat::from_rows(g0);
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
         // Complete y^k = (Wy^{k−1})_i + g^k − g^{k−1} with the fresh g.
         if ctx.round > 1 {
-            let y = &mut self.y[agent];
-            let gp = &self.g_prev[agent];
+            let y = self.y.row_mut(agent);
+            let gp = self.g_prev.row(agent);
             for t in 0..y.len() {
                 y[t] += g[t] - gp[t];
             }
         }
-        self.g_prev[agent].copy_from_slice(g);
-        out[0].copy_from_slice(&self.x[agent]);
-        out[1].copy_from_slice(&self.y[agent]);
+        self.g_prev.row_mut(agent).copy_from_slice(g);
+        out[0].copy_from_slice(self.x.row(agent));
+        out[1].copy_from_slice(self.y.row(agent));
     }
 
-    fn recv(&mut self, ctx: &Ctx, agent: usize, _g: &[f64], _self_dec: &[&[f64]], mixed: &[&[f64]]) {
-        // x⁺ = (Wx)_i − η y_i (own completed tracker), y ← (Wy)_i.
-        let x = &mut self.x[agent];
-        let y = &mut self.y[agent];
-        for t in 0..x.len() {
-            x[t] = mixed[0][t] - ctx.eta * y[t];
-            y[t] = mixed[1][t];
-        }
+    fn recv(
+        &mut self,
+        ctx: &Ctx,
+        agent: usize,
+        _g: &[f64],
+        _self_dec: &[&[f64]],
+        mixed: &[&[f64]],
+    ) {
+        apply_agent(ctx.eta, mixed[0], mixed[1], self.x.row_mut(agent), self.y.row_mut(agent));
+    }
+
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+        let _ = g;
+        let eta = ctx.eta;
+        super::par_agents(threads, vec![&mut self.x, &mut self.y], |i, rows| match rows {
+            [x, y] => apply_agent(eta, inbox.mix(i, 0), inbox.mix(i, 1), x, y),
+            _ => unreachable!(),
+        });
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 }
 
@@ -123,7 +144,7 @@ mod tests {
             p.grad_full(i, algo.x(i), &mut g);
             // completion that the next send would apply:
             for t in 0..d {
-                sum_y[t] += (algo.y[i][t] + g[t] - algo.g_prev[i][t]) as f64;
+                sum_y[t] += (algo.y.row(i)[t] + g[t] - algo.g_prev.row(i)[t]) as f64;
                 sum_g[t] += g[t] as f64;
             }
         }

@@ -10,16 +10,25 @@
 //! Another member of the primal–dual family LEAD recovers (Remark 3 /
 //! Prop. 1, via A = (I+W)/2, M = ηI in Yuan et al. Eq. 97).
 
-use super::{AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 pub struct ExactDiffusion {
-    x: Vec<Vec<f64>>,
-    psi: Vec<Vec<f64>>,
+    x: Mat,
+    psi: Mat,
+}
+
+/// Per-agent combine step: x = (φ + Wφ)/2.
+#[inline]
+fn apply_agent(phi_own: &[f64], phi_mix: &[f64], x: &mut [f64]) {
+    for t in 0..x.len() {
+        x[t] = 0.5 * (phi_own[t] + phi_mix[t]);
+    }
 }
 
 impl ExactDiffusion {
     pub fn new() -> Self {
-        ExactDiffusion { x: vec![], psi: vec![] }
+        ExactDiffusion { x: Mat::zeros(0, 0), psi: Mat::zeros(0, 0) }
     }
 }
 
@@ -39,14 +48,14 @@ impl Algorithm for ExactDiffusion {
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
-        self.x = x0.to_vec();
+        self.x = Mat::from_rows(x0);
         // ψ⁰ = x⁰ makes the first correction a no-op.
-        self.psi = x0.to_vec();
+        self.psi = Mat::from_rows(x0);
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        let x = &self.x[agent];
-        let psi_old = &mut self.psi[agent];
+        let x = self.x.row(agent);
+        let psi_old = self.psi.row_mut(agent);
         let phi = &mut out[0];
         for t in 0..x.len() {
             let psi_new = x[t] - ctx.eta * g[t];
@@ -55,15 +64,27 @@ impl Algorithm for ExactDiffusion {
         }
     }
 
-    fn recv(&mut self, _ctx: &Ctx, agent: usize, _g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
-        let x = &mut self.x[agent];
-        for t in 0..x.len() {
-            x[t] = 0.5 * (self_dec[0][t] + mixed[0][t]);
-        }
+    fn recv(
+        &mut self,
+        _ctx: &Ctx,
+        agent: usize,
+        _g: &[f64],
+        self_dec: &[&[f64]],
+        mixed: &[&[f64]],
+    ) {
+        apply_agent(self_dec[0], mixed[0], self.x.row_mut(agent));
+    }
+
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+        let _ = (ctx, g);
+        super::par_agents(threads, vec![&mut self.x], |i, rows| match rows {
+            [x] => apply_agent(inbox.own(i, 0), inbox.mix(i, 0), x),
+            _ => unreachable!(),
+        });
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 }
 

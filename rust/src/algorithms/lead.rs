@@ -20,7 +20,8 @@
 //!   `x̄^{k+1} = x̄^k − η ḡ^k` exact (paper Eq. 3);
 //! * with C = 0 and γ = 1, the trajectory equals NIDS / D² (Prop. 1).
 
-use super::{zeros, AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 /// LEAD hyper-parameters. The paper fixes `α = 0.5, γ = 1.0` for every
 /// experiment (robustness is one of its claims; Fig. 7 sweeps this grid).
@@ -40,17 +41,59 @@ impl Default for LeadParams {
 
 pub struct Lead {
     pub params: LeadParams,
-    x: Vec<Vec<f64>>,
-    d: Vec<Vec<f64>>,
-    h: Vec<Vec<f64>>,
-    hw: Vec<Vec<f64>>,
-    /// Scratch: y_i of the current round (needed in recv).
-    y: Vec<Vec<f64>>,
+    x: Mat,
+    d: Mat,
+    h: Mat,
+    hw: Mat,
+    /// Scratch: y_i of the current round (written in send, read-only in
+    /// the apply phase and by `compression_reference`).
+    y: Mat,
+}
+
+/// Per-agent LEAD apply step (Alg. 1 lines 14–17) over disjoint state
+/// rows — the single definition shared by the sequential `recv` and the
+/// parallel `recv_all` paths. The flat argument list mirrors the state
+/// rows handed out by `par_agents`; bundling them would just move the
+/// unpacking into both callers.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn apply_agent(
+    params: LeadParams,
+    eta: f64,
+    g: &[f64],
+    q_own: &[f64],
+    q_mix: &[f64],
+    x: &mut [f64],
+    dvar: &mut [f64],
+    h: &mut [f64],
+    hw: &mut [f64],
+) {
+    let LeadParams { gamma, alpha } = params;
+    let c = gamma / (2.0 * eta);
+    for t in 0..x.len() {
+        let yhat = h[t] + q_own[t]; // ŷ = h + q
+        let yhat_w = hw[t] + q_mix[t]; // ŷw = hw + (Wq)
+        // Inexact dual ascent (line 16).
+        dvar[t] += c * (yhat - yhat_w);
+        // Momentum state tracking (lines 14–15).
+        h[t] += alpha * (yhat - h[t]);
+        hw[t] += alpha * (yhat_w - hw[t]);
+        // Primal update with the SAME stochastic gradient (line 17).
+        x[t] -= eta * (g[t] + dvar[t]);
+    }
 }
 
 impl Lead {
     pub fn new(params: LeadParams) -> Self {
-        Lead { params, x: vec![], d: vec![], h: vec![], hw: vec![], y: vec![] }
+        let empty = Mat::zeros(0, 0);
+        Lead {
+            params,
+            x: empty.clone(),
+            d: empty.clone(),
+            h: empty.clone(),
+            hw: empty.clone(),
+            y: empty,
+        }
     }
 
     /// Paper defaults (α = 0.5, γ = 1.0).
@@ -60,12 +103,12 @@ impl Lead {
 
     /// Dual variable of an agent (diagnostics / invariant tests).
     pub fn dual(&self, agent: usize) -> &[f64] {
-        &self.d[agent]
+        self.d.row(agent)
     }
 
     /// State variable H of an agent (diagnostics).
     pub fn state_h(&self, agent: usize) -> &[f64] {
-        &self.h[agent]
+        self.h.row(agent)
     }
 }
 
@@ -82,36 +125,34 @@ impl Algorithm for Lead {
         let n = x0.len();
         let d = x0[0].len();
         // D¹ = (I−W)Z with Z = 0 ⇒ D¹ = 0 (guarantees D ∈ Range(I−W)).
-        self.d = zeros(n, d);
+        self.d = Mat::zeros(n, d);
         // H¹ = X⁰ (any choice is admissible; X⁰ keeps the first compressed
         // difference small). Hw¹ = W H¹ — computed directly from the global
         // state we own; on a real deployment this is the one-time
         // uncompressed warm-up exchange of Alg. 2 line 3.
-        self.h = x0.to_vec();
-        self.hw = zeros(n, d);
+        self.h = Mat::from_rows(x0);
+        self.hw = Mat::zeros(n, d);
         for i in 0..n {
             for j in std::iter::once(i).chain(ctx.mix.neighbors[i].iter().copied()) {
-                crate::linalg::axpy(ctx.mix.weight(i, j), &x0[j], &mut self.hw[i]);
+                crate::linalg::axpy(ctx.mix.weight(i, j), &x0[j], self.hw.row_mut(i));
             }
         }
         // X¹ = X⁰ − η ∇F(X⁰; ξ⁰)  (Alg. 2 line 5).
-        self.x = x0.to_vec();
+        self.x = Mat::from_rows(x0);
         for i in 0..n {
-            crate::linalg::axpy(-ctx.eta, &g0[i], &mut self.x[i]);
+            crate::linalg::axpy(-ctx.eta, &g0[i], self.x.row_mut(i));
         }
-        self.y = zeros(n, d);
+        self.y = Mat::zeros(n, d);
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        let (x, d) = (&self.x[agent], &self.d[agent]);
-        let y = &mut self.y[agent];
+        let y = self.y.row_mut(agent);
         // y = x − η g − η d
-        y.copy_from_slice(x);
+        y.copy_from_slice(self.x.row(agent));
         crate::linalg::axpy(-ctx.eta, g, y);
-        crate::linalg::axpy(-ctx.eta, d, y);
+        crate::linalg::axpy(-ctx.eta, self.d.row(agent), y);
         // Broadcast the *difference* y − h; the engine compresses it.
-        let payload = &mut out[0];
-        crate::linalg::sub(y, &self.h[agent], payload);
+        crate::linalg::sub(y, self.h.row(agent), &mut out[0]);
     }
 
     fn recv(
@@ -122,36 +163,41 @@ impl Algorithm for Lead {
         self_dec: &[&[f64]],
         mixed: &[&[f64]],
     ) {
-        let LeadParams { gamma, alpha } = self.params;
-        let eta = ctx.eta;
-        let q_own = &self_dec[0]; // decoded own difference
-        let q_mix = &mixed[0]; // Σ_j w_ij q_j
-        let dim = q_own.len();
-        let h = &mut self.h[agent];
-        let hw = &mut self.hw[agent];
-        let dvar = &mut self.d[agent];
-        let x = &mut self.x[agent];
+        apply_agent(
+            self.params,
+            ctx.eta,
+            g,
+            self_dec[0],
+            mixed[0],
+            self.x.row_mut(agent),
+            self.d.row_mut(agent),
+            self.h.row_mut(agent),
+            self.hw.row_mut(agent),
+        );
+    }
 
-        let c = gamma / (2.0 * eta);
-        for t in 0..dim {
-            let yhat = h[t] + q_own[t]; // ŷ = h + q
-            let yhat_w = hw[t] + q_mix[t]; // ŷw = hw + (Wq)
-            // Inexact dual ascent (line 16).
-            dvar[t] += c * (yhat - yhat_w);
-            // Momentum state tracking (lines 14–15).
-            h[t] += alpha * (yhat - h[t]);
-            hw[t] += alpha * (yhat_w - hw[t]);
-            // Primal update with the SAME stochastic gradient (line 17).
-            x[t] -= eta * (g[t] + dvar[t]);
-        }
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+        let params = self.params;
+        let eta = ctx.eta;
+        super::par_agents(
+            threads,
+            vec![&mut self.x, &mut self.d, &mut self.h, &mut self.hw],
+            |i, rows| match rows {
+                [x, dvar, h, hw] => {
+                    let (own, mixed) = (inbox.own(i, 0), inbox.mix(i, 0));
+                    apply_agent(params, eta, &g[i], own, mixed, x, dvar, h, hw)
+                }
+                _ => unreachable!(),
+            },
+        );
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 
     fn compression_reference(&self, agent: usize) -> Option<&[f64]> {
-        Some(&self.y[agent])
+        Some(self.y.row(agent))
     }
 }
 
@@ -205,6 +251,26 @@ mod tests {
                 .sum::<f64>()
                 .sqrt();
             assert!(diff < 1e-2, "agent {i}: ‖d + ∇f_i(x*)‖ = {diff}");
+        }
+    }
+
+    /// The parallel apply phase must equal the sequential one bitwise —
+    /// algorithm-level check (the engine-level test covers the full loop).
+    #[test]
+    fn recv_all_parallel_equals_sequential() {
+        use crate::algorithms::testutil::run_plain_threads;
+        let p = LinReg::synthetic(8, 30, 0.1, 3);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let run = |threads: usize| {
+            let mut algo = Lead::paper_default();
+            run_plain_threads(&mut algo, &p, &mix, 0.1, 20, threads)
+        };
+        let seq = run(1);
+        let par = run(4);
+        for (a, b) in seq.iter().zip(&par) {
+            for (u, v) in a.iter().zip(b) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
         }
     }
 }

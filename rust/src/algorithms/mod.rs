@@ -17,7 +17,21 @@
 //! 2. `send(i, g_i)` returns the per-channel payload vectors of agent i;
 //! 3. the engine compresses channel 0 (if the algorithm opts in), counts
 //!    wire bits, decodes, and forms the weighted mixes;
-//! 4. `recv(i, g_i, self_decoded, mixed)` applies the local update.
+//! 4. `recv_all(g, inbox, threads)` applies the local updates — in
+//!    parallel over agents when `threads > 1`, which is safe because
+//!    per-agent state is disjoint (see [`par_agents`]).
+//!
+//! # State layout and the parallel apply phase
+//!
+//! Per-agent state lives in contiguous row-major [`Mat`] buffers (one row
+//! per agent) rather than `Vec<Vec<f64>>`: the hot apply loops then stream
+//! over cache-friendly, auto-vectorizable rows, and [`par_agents`] can
+//! hand disjoint row bundles to a scoped worker pool without any
+//! synchronization. Each algorithm expresses its per-agent update once as
+//! a plain-function kernel over those rows; the sequential [`Algorithm::
+//! recv`] path (used by invariant tests that probe state mid-round) and
+//! the parallel [`Algorithm::recv_all`] path both call that kernel, so
+//! they cannot drift apart.
 
 pub mod choco;
 pub mod d2;
@@ -29,6 +43,7 @@ pub mod lead;
 pub mod nids;
 pub mod qdgd;
 
+use crate::linalg::Mat;
 use crate::topology::MixingMatrix;
 
 /// Static description the engine needs before the first round.
@@ -52,12 +67,53 @@ pub struct Ctx<'a> {
     pub eta: f64,
 }
 
+/// The per-round received communication, assembled once by the engine (or
+/// a test harness) and consumed by [`Algorithm::recv_all`].
+///
+/// Both views are per-agent, per-channel borrowed slices, so the inbox is
+/// `Sync` and can be read concurrently by the apply-phase worker pool.
+pub struct Inbox<'a> {
+    /// `self_dec[i][c]` — agent i's own decoded channel-c payload
+    /// (== the sent payload when uncompressed).
+    pub self_dec: Vec<Vec<&'a [f64]>>,
+    /// `mixed[i][c] = Σ_{j∈N_i∪{i}} w_ij · decode(payload_j[c])`.
+    pub mixed: Vec<Vec<&'a [f64]>>,
+}
+
+impl<'a> Inbox<'a> {
+    /// Assemble an inbox from raw (uncompressed) payloads and per-agent
+    /// mixes — the harness case where every agent's own decoded payload is
+    /// just what it sent. The engine builds its view by hand instead, to
+    /// splice decoded channel-0 messages in front of the raw payloads.
+    pub fn from_payloads(payload: &'a [Vec<Vec<f64>>], mixed: &'a [Vec<Vec<f64>>]) -> Inbox<'a> {
+        Inbox {
+            self_dec: payload
+                .iter()
+                .map(|p| p.iter().map(|v| v.as_slice()).collect())
+                .collect(),
+            mixed: mixed.iter().map(|a| a.iter().map(|v| v.as_slice()).collect()).collect(),
+        }
+    }
+
+    /// Agent i's own decoded channel-c payload.
+    #[inline]
+    pub fn own(&self, agent: usize, channel: usize) -> &'a [f64] {
+        self.self_dec[agent][channel]
+    }
+
+    /// The W-weighted channel-c mix delivered to agent i.
+    #[inline]
+    pub fn mix(&self, agent: usize, channel: usize) -> &'a [f64] {
+        self.mixed[agent][channel]
+    }
+}
+
 /// A decentralized algorithm.
 ///
-/// The struct owns all per-agent state (x_i, duals, error memories, ...).
-/// `Sync` is required so the engine's worker pool can read iterates
-/// (`x(i)`) concurrently during the gradient phase; all mutation happens in
-/// the sequential leader phase.
+/// The struct owns all per-agent state (x_i, duals, error memories, ...)
+/// as row-major [`Mat`]s — one row per agent. `Sync` is required so the
+/// engine's worker pool can read iterates (`x(i)`) concurrently during the
+/// gradient phase and apply per-agent updates concurrently in `recv_all`.
 pub trait Algorithm: Send + Sync {
     fn name(&self) -> String;
 
@@ -71,9 +127,12 @@ pub trait Algorithm: Send + Sync {
     /// fresh gradient `g`. Returns `spec().channels` vectors via `out`.
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]);
 
-    /// Apply the received communication: `self_dec[c]` is agent i's own
-    /// decoded channel-c payload (== the sent payload when uncompressed),
-    /// `mixed[c] = Σ_{j∈N_i∪{i}} w_ij · decode(payload_j[c])`.
+    /// Apply the received communication for ONE agent: `self_dec[c]` is
+    /// agent i's own decoded channel-c payload, `mixed[c]` the W-weighted
+    /// mix. Sequential path — kept for harnesses that probe invariants
+    /// between single-agent updates; the engine calls [`recv_all`].
+    ///
+    /// [`recv_all`]: Algorithm::recv_all
     fn recv(
         &mut self,
         ctx: &Ctx,
@@ -82,6 +141,23 @@ pub trait Algorithm: Send + Sync {
         self_dec: &[&[f64]],
         mixed: &[&[f64]],
     );
+
+    /// Apply the received communication for ALL agents. Implementations
+    /// override this with a [`par_agents`]-based version that updates
+    /// agents on `threads` workers; the default falls back to the
+    /// sequential per-agent [`recv`].
+    ///
+    /// Contract: the result must be bitwise-identical to calling `recv`
+    /// for agents `0..n` in order (per-agent updates touch disjoint state
+    /// and no RNG, so scheduling cannot change the trajectory).
+    ///
+    /// [`recv`]: Algorithm::recv
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+        let _ = threads;
+        for (i, gi) in g.iter().enumerate() {
+            self.recv(ctx, i, gi, &inbox.self_dec[i], &inbox.mixed[i]);
+        }
+    }
 
     /// Current iterate of agent i.
     fn x(&self, agent: usize) -> &[f64];
@@ -96,6 +172,63 @@ pub trait Algorithm: Send + Sync {
     }
 }
 
+/// Run `f(i, rows)` for every agent i, where `rows[m]` is agent i's row of
+/// `mats[m]` — sequentially when `threads == 1`, otherwise chunked across
+/// a scoped worker pool.
+///
+/// Safety model: each `Mat` is split into disjoint per-thread row ranges
+/// (`chunks_mut`), so no two workers ever alias state; `f` receives only
+/// agent i's rows plus whatever `Sync` references it captured. Combined
+/// with the no-RNG contract of [`Algorithm::recv_all`], the parallel
+/// schedule is bitwise-equal to the sequential one.
+pub fn par_agents<F>(threads: usize, mats: Vec<&mut Mat>, f: F)
+where
+    F: Fn(usize, &mut [&mut [f64]]) + Sync,
+{
+    let n = mats.first().map_or(0, |m| m.rows);
+    debug_assert!(mats.iter().all(|m| m.rows == n), "par_agents: agent-count mismatch");
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || mats.iter().any(|m| m.cols == 0) {
+        let mut mats = mats;
+        for i in 0..n {
+            let mut rows: Vec<&mut [f64]> = mats.iter_mut().map(|m| m.row_mut(i)).collect();
+            f(i, &mut rows);
+        }
+        return;
+    }
+    let widths: Vec<usize> = mats.iter().map(|m| m.cols).collect();
+    let chunk = n.div_ceil(threads);
+    // bundles[t][m] = thread t's contiguous row range of mats[m].
+    let mut bundles: Vec<Vec<&mut [f64]>> = Vec::new();
+    for m in mats {
+        let w = chunk * m.cols;
+        for (t, ch) in m.data.chunks_mut(w).enumerate() {
+            if bundles.len() <= t {
+                bundles.push(Vec::new());
+            }
+            bundles[t].push(ch);
+        }
+    }
+    std::thread::scope(|s| {
+        for (t, mut bundle) in bundles.into_iter().enumerate() {
+            let base = t * chunk;
+            let f = &f;
+            let widths = &widths;
+            s.spawn(move || {
+                let rows_here = bundle[0].len() / widths[0];
+                for off in 0..rows_here {
+                    let mut rows: Vec<&mut [f64]> = bundle
+                        .iter_mut()
+                        .zip(widths.iter())
+                        .map(|(ch, &w)| &mut ch[off * w..(off + 1) * w])
+                        .collect();
+                    f(base + off, &mut rows);
+                }
+            });
+        }
+    });
+}
+
 /// Helper used by several algorithms: allocate n copies of a zero vector.
 pub(crate) fn zeros(n: usize, d: usize) -> Vec<Vec<f64>> {
     vec![vec![0.0f64; d]; n]
@@ -104,7 +237,8 @@ pub(crate) fn zeros(n: usize, d: usize) -> Vec<Vec<f64>> {
 pub mod testutil {
     //! A miniature reference engine used by per-algorithm unit tests
     //! (the real engines live in `coordinator` and get their own tests;
-    //! this one is deliberately simple — full mixing, no compression).
+    //! this one is deliberately simple — full mixing, no compression —
+    //! but drives the same `recv_all` apply phase the coordinator uses).
 
     use super::*;
     use crate::problems::Problem;
@@ -118,6 +252,20 @@ pub mod testutil {
         eta: f64,
         rounds: usize,
     ) -> Vec<Vec<f64>> {
+        run_plain_threads(algo, problem, mix, eta, rounds, 1)
+    }
+
+    /// [`run_plain`] with an explicit apply-phase thread count — used by
+    /// the parallel-equals-sequential tests to pin the `recv_all`
+    /// contract without going through the full engine.
+    pub fn run_plain_threads(
+        algo: &mut dyn Algorithm,
+        problem: &dyn Problem,
+        mix: &MixingMatrix,
+        eta: f64,
+        rounds: usize,
+        threads: usize,
+    ) -> Vec<Vec<f64>> {
         let n = problem.n_agents();
         let d = problem.dim();
         let spec = algo.spec();
@@ -129,6 +277,7 @@ pub mod testutil {
         let ctx0 = Ctx { mix, round: 0, eta };
         algo.init(&ctx0, &x0, &g);
         let mut payload = vec![vec![vec![0.0f64; d]; spec.channels]; n];
+        let mut mixed_all = vec![vec![vec![0.0f64; d]; spec.channels]; n];
         for round in 1..=rounds {
             let ctx = Ctx { mix, round, eta };
             for i in 0..n {
@@ -138,18 +287,16 @@ pub mod testutil {
                 let gi = g[i].clone();
                 algo.send(&ctx, i, &gi, &mut payload[i]);
             }
-            for i in 0..n {
-                let mut mixed = vec![vec![0.0f64; d]; spec.channels];
-                for c in 0..spec.channels {
+            for (i, mixed) in mixed_all.iter_mut().enumerate() {
+                for (c, mx) in mixed.iter_mut().enumerate() {
+                    mx.fill(0.0);
                     for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
-                        crate::linalg::axpy(mix.weight(i, j), &payload[j][c], &mut mixed[c]);
+                        crate::linalg::axpy(mix.weight(i, j), &payload[j][c], mx);
                     }
                 }
-                let self_dec: Vec<&[f64]> = payload[i].iter().map(|v| v.as_slice()).collect();
-                let mixed_refs: Vec<&[f64]> = mixed.iter().map(|v| v.as_slice()).collect();
-                let gi = g[i].clone();
-                algo.recv(&ctx, i, &gi, &self_dec, &mixed_refs);
             }
+            let inbox = Inbox::from_payloads(&payload, &mixed_all);
+            algo.recv_all(&ctx, &g, &inbox, threads);
         }
         (0..n).map(|i| algo.x(i).to_vec()).collect()
     }
@@ -160,5 +307,88 @@ pub mod testutil {
         xs.iter()
             .map(|x| crate::linalg::dist_sq(x, opt).sqrt())
             .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every algorithm's recv_all closure must be schedule-invariant:
+    /// threads > 1 (including counts that don't divide n and exceed n)
+    /// reproduces the sequential trajectory bitwise. This is the
+    /// per-algorithm wiring check (slice-pattern order, channel indices);
+    /// the chunking mechanism itself is covered below.
+    #[test]
+    fn all_algorithms_recv_all_parallel_equals_sequential() {
+        use crate::problems::linreg::LinReg;
+        use crate::topology::{MixingRule, Topology};
+        let p = LinReg::synthetic(8, 30, 0.1, 3);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let builders: Vec<(&str, fn() -> Box<dyn Algorithm>)> = vec![
+            ("lead", || Box::new(lead::Lead::paper_default())),
+            ("nids", || Box::new(nids::Nids::new())),
+            ("d2", || Box::new(d2::D2::new())),
+            ("dgd", || Box::new(dgd::Dgd::new())),
+            ("diging", || Box::new(diging::DiGing::new())),
+            ("exact_diffusion", || Box::new(exact_diffusion::ExactDiffusion::new())),
+            ("choco", || Box::new(choco::ChocoSgd::new(0.8))),
+            ("deepsqueeze", || Box::new(deepsqueeze::DeepSqueeze::new(0.2))),
+            ("qdgd", || Box::new(qdgd::Qdgd::new(0.2))),
+        ];
+        for (name, build) in builders {
+            let run = |threads: usize| {
+                let mut algo = build();
+                testutil::run_plain_threads(&mut *algo, &p, &mix, 0.05, 15, threads)
+            };
+            let seq = run(1);
+            for threads in [3usize, 4, 16] {
+                let par = run(threads);
+                for (a, b) in seq.iter().zip(&par) {
+                    for (u, v) in a.iter().zip(b) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{name} threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// par_agents must visit every agent exactly once with its own rows,
+    /// for any thread count (including thread counts above n).
+    #[test]
+    fn par_agents_covers_all_rows_disjointly() {
+        for n in [1usize, 3, 7, 8] {
+            for threads in [1usize, 2, 3, 8, 16] {
+                let mut a = Mat::zeros(n, 4);
+                let mut b = Mat::zeros(n, 2);
+                par_agents(threads, vec![&mut a, &mut b], |i, rows| match rows {
+                    [ra, rb] => {
+                        for v in ra.iter_mut() {
+                            *v += (i + 1) as f64;
+                        }
+                        for v in rb.iter_mut() {
+                            *v += 10.0 * (i + 1) as f64;
+                        }
+                    }
+                    _ => unreachable!(),
+                });
+                for i in 0..n {
+                    assert!(a.row(i).iter().all(|&v| v == (i + 1) as f64), "n={n} t={threads}");
+                    assert!(b.row(i).iter().all(|&v| v == 10.0 * (i + 1) as f64));
+                }
+            }
+        }
+    }
+
+    /// Zero-width state (d = 0) must not panic (degenerate chunk size).
+    #[test]
+    fn par_agents_handles_zero_cols() {
+        let mut a = Mat::zeros(4, 0);
+        let visited = std::sync::atomic::AtomicUsize::new(0);
+        let v = &visited;
+        par_agents(4, vec![&mut a], |_, _| {
+            v.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(visited.load(std::sync::atomic::Ordering::Relaxed), 4);
     }
 }

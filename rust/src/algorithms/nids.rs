@@ -10,20 +10,32 @@
 //! Cor. 3) — an equality our integration tests verify trajectory-for-
 //! trajectory against both [`super::lead::Lead`] and [`super::d2::D2`].
 
-use super::{zeros, AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 pub struct Nids {
-    x: Vec<Vec<f64>>,
-    d: Vec<Vec<f64>>,
+    x: Mat,
+    d: Mat,
+}
+
+/// Per-agent NIDS apply step over disjoint state rows.
+#[inline]
+fn apply_agent(eta: f64, g: &[f64], y_own: &[f64], y_mix: &[f64], x: &mut [f64], d: &mut [f64]) {
+    // (I−W) y = y_i − (Wy)_i = self − mixed.
+    let c = 1.0 / (2.0 * eta);
+    for t in 0..x.len() {
+        d[t] += c * (y_own[t] - y_mix[t]);
+        x[t] -= eta * (g[t] + d[t]);
+    }
 }
 
 impl Nids {
     pub fn new() -> Self {
-        Nids { x: vec![], d: vec![] }
+        Nids { x: Mat::zeros(0, 0), d: Mat::zeros(0, 0) }
     }
 
     pub fn dual(&self, agent: usize) -> &[f64] {
-        &self.d[agent]
+        self.d.row(agent)
     }
 }
 
@@ -44,36 +56,43 @@ impl Algorithm for Nids {
 
     fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
         let n = x0.len();
-        self.d = zeros(n, x0[0].len());
-        self.x = x0.to_vec();
+        self.d = Mat::zeros(n, x0[0].len());
+        self.x = Mat::from_rows(x0);
         // Same warm start as LEAD: x¹ = x⁰ − ηg⁰.
         for i in 0..n {
-            crate::linalg::axpy(-ctx.eta, &g0[i], &mut self.x[i]);
+            crate::linalg::axpy(-ctx.eta, &g0[i], self.x.row_mut(i));
         }
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
         // Broadcast y = x − ηg − ηd (uncompressed).
         let y = &mut out[0];
-        y.copy_from_slice(&self.x[agent]);
+        y.copy_from_slice(self.x.row(agent));
         crate::linalg::axpy(-ctx.eta, g, y);
-        crate::linalg::axpy(-ctx.eta, &self.d[agent], y);
+        crate::linalg::axpy(-ctx.eta, self.d.row(agent), y);
     }
 
     fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
-        // (I−W) y = y_i − (Wy)_i = self − mixed.
+        apply_agent(
+            ctx.eta,
+            g,
+            self_dec[0],
+            mixed[0],
+            self.x.row_mut(agent),
+            self.d.row_mut(agent),
+        );
+    }
+
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
         let eta = ctx.eta;
-        let c = 1.0 / (2.0 * eta);
-        let x = &mut self.x[agent];
-        let d = &mut self.d[agent];
-        for t in 0..x.len() {
-            d[t] += c * (self_dec[0][t] - mixed[0][t]);
-            x[t] -= eta * (g[t] + d[t]);
-        }
+        super::par_agents(threads, vec![&mut self.x, &mut self.d], |i, rows| match rows {
+            [x, d] => apply_agent(eta, &g[i], inbox.own(i, 0), inbox.mix(i, 0), x, d),
+            _ => unreachable!(),
+        });
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 }
 

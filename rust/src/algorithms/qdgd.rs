@@ -12,17 +12,37 @@
 //! this is the Fig. 1d contrast with LEAD, and why QDGD needs a small
 //! effective stepsize to converge at all (§2).
 
-use super::{AlgoSpec, Algorithm, Ctx};
+use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use crate::linalg::Mat;
 
 pub struct Qdgd {
     /// Consensus/stepsize damping γ (paper Table 1–4: 0.1–0.4).
     pub gamma: f64,
-    x: Vec<Vec<f64>>,
+    x: Mat,
+}
+
+/// Per-agent QDGD apply step. `wii` is the agent's self-weight: mixed
+/// includes w_ii·Q(x_i) but QDGD uses the *exact* own model, so the own
+/// term is swapped out: m = mixed + w_ii (x_i − Q(x_i)).
+#[inline]
+fn apply_agent(
+    gamma: f64,
+    eta: f64,
+    wii: f64,
+    g: &[f64],
+    q_own: &[f64],
+    q_mix: &[f64],
+    x: &mut [f64],
+) {
+    for t in 0..x.len() {
+        let m = q_mix[t] + wii * (x[t] - q_own[t]);
+        x[t] += gamma * (m - x[t]) - gamma * eta * g[t];
+    }
 }
 
 impl Qdgd {
     pub fn new(gamma: f64) -> Self {
-        Qdgd { gamma, x: vec![] }
+        Qdgd { gamma, x: Mat::zeros(0, 0) }
     }
 }
 
@@ -36,29 +56,46 @@ impl Algorithm for Qdgd {
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
-        self.x = x0.to_vec();
+        self.x = Mat::from_rows(x0);
     }
 
     fn send(&mut self, _ctx: &Ctx, agent: usize, _g: &[f64], out: &mut [Vec<f64>]) {
         // Quantize the raw model (the defining design choice of QDGD).
-        out[0].copy_from_slice(&self.x[agent]);
+        out[0].copy_from_slice(self.x.row(agent));
     }
 
     fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
-        // mixed includes w_ii·Q(x_i); QDGD uses the agent's *exact* own
-        // model, so swap the own term: m = mixed + w_ii (x_i − Q(x_i)).
-        let wii = ctx.mix.self_weight(agent);
+        apply_agent(
+            self.gamma,
+            ctx.eta,
+            ctx.mix.self_weight(agent),
+            g,
+            self_dec[0],
+            mixed[0],
+            self.x.row_mut(agent),
+        );
+    }
+
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
         let gamma = self.gamma;
         let eta = ctx.eta;
-        let x = &mut self.x[agent];
-        for t in 0..x.len() {
-            let m = mixed[0][t] + wii * (x[t] - self_dec[0][t]);
-            x[t] += gamma * (m - x[t]) - gamma * eta * g[t];
-        }
+        let mix = ctx.mix;
+        super::par_agents(threads, vec![&mut self.x], |i, rows| match rows {
+            [x] => apply_agent(
+                gamma,
+                eta,
+                mix.self_weight(i),
+                &g[i],
+                inbox.own(i, 0),
+                inbox.mix(i, 0),
+                x,
+            ),
+            _ => unreachable!(),
+        });
     }
 
     fn x(&self, agent: usize) -> &[f64] {
-        &self.x[agent]
+        self.x.row(agent)
     }
 }
 

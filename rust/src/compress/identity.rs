@@ -18,6 +18,8 @@ impl Compressor for Identity {
     fn compress(&self, x: &[f64], _rng: &mut Rng, out: &mut CompressedMsg) {
         out.values.clear();
         out.values.extend_from_slice(x);
+        out.sparse = None; // dense message — engine mixes over `values`
+
         // Raw IEEE-754 payload.
         out.payload.clear();
         out.payload.reserve(x.len() * 4);

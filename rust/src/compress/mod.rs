@@ -6,6 +6,21 @@
 //! operator to be *unbiased* with variance `E‖x − Q(x)‖² ≤ C‖x‖²`; the
 //! p-norm b-bit quantizer ([`quantize::QuantizeP`], Eq. 20) satisfies this,
 //! while top-k is biased and included only for the Fig. 6 comparison.
+//!
+//! # Sparse message representation
+//!
+//! Sparsifying codecs (top-k, rand-k) decode to a vector with k ≪ d
+//! nonzeros. Alongside the dense `values`, they publish the nonzeros as a
+//! [`CompressedMsg::sparse`] list of `(index, value)` pairs so the engine's
+//! mix step can scatter-add in O(deg·k) instead of O(deg·d) per agent
+//! (CHOCO-SGD-style sparse gossip). The sparse view is *exactly* the
+//! nonzero entries of `values` in ascending index order; mixing through it
+//! is bitwise-identical to dense accumulation because an accumulator that
+//! starts at +0.0 is never changed by adding the omitted ±0.0 terms (IEEE
+//! 754 round-to-nearest never produces −0.0 from a sum unless both addends
+//! are −0.0, which a +0.0 start rules out). Dense codecs (quantizers,
+//! identity) leave `sparse` as `None` and mixing falls back to `axpy` over
+//! `values`.
 
 pub mod identity;
 pub mod quantize;
@@ -25,13 +40,18 @@ use crate::rng::Rng;
 #[derive(Clone, Debug, Default)]
 pub struct CompressedMsg {
     pub values: Vec<f64>,
+    /// Sparse view of `values` for sparsifying codecs: exactly the nonzero
+    /// `(index, value)` pairs, ascending by index. `None` ⇒ dense message
+    /// (see the module docs for the bitwise-equality argument that lets
+    /// the engine mix through this view).
+    pub sparse: Option<Vec<(u32, f64)>>,
     pub payload: Vec<u8>,
     pub wire_bits: u64,
 }
 
 impl CompressedMsg {
     pub fn with_dim(d: usize) -> Self {
-        CompressedMsg { values: vec![0.0; d], payload: Vec::new(), wire_bits: 0 }
+        CompressedMsg { values: vec![0.0; d], sparse: None, payload: Vec::new(), wire_bits: 0 }
     }
 }
 
@@ -40,10 +60,14 @@ pub trait Compressor: Send + Sync {
     /// Human-readable identifier, e.g. `q∞-2bit/512`.
     fn name(&self) -> String;
 
-    /// Compress `x` into `out` (both `values` and `payload` are
-    /// overwritten; buffers are reused across rounds). `rng` supplies the
-    /// dither / index randomness — each agent passes its own stream so the
-    /// parallel engine stays deterministic.
+    /// Compress `x` into `out`. `values`, `payload`, **and `sparse`** must
+    /// all be overwritten (buffers are reused across rounds, so a codec
+    /// that leaves `sparse` untouched can expose a stale view from a
+    /// previous compressor and silently corrupt the engine's sparse mix
+    /// path): sparsifiers publish the canonical nonzero list, dense codecs
+    /// must set `sparse = None`. `rng` supplies the dither / index
+    /// randomness — each agent passes its own stream so the parallel
+    /// engine stays deterministic.
     fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg);
 
     /// Whether `E[Q(x)] = x` (Assumption 2). LEAD's guarantees require it.
@@ -58,6 +82,32 @@ pub trait Compressor: Send + Sync {
         let mut out = CompressedMsg::with_dim(x.len());
         self.compress(x, rng, &mut out);
         out
+    }
+}
+
+/// Wrapper that delegates to the inner codec but withholds the sparse
+/// view, forcing receivers onto the dense mixing path. Numerically a
+/// no-op (the sparse view is a pure representation change) — used by the
+/// engine's sparse-vs-dense trajectory-equality test and the hotpath
+/// benchmark's dense-vs-sparse A/B.
+pub struct StripSparse<C: Compressor>(pub C);
+
+impl<C: Compressor> Compressor for StripSparse<C> {
+    fn name(&self) -> String {
+        format!("dense-{}", self.0.name())
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
+        self.0.compress(x, rng, out);
+        out.sparse = None;
+    }
+
+    fn is_unbiased(&self) -> bool {
+        self.0.is_unbiased()
+    }
+
+    fn variance_constant(&self, d: usize) -> Option<f64> {
+        self.0.variance_constant(d)
     }
 }
 

@@ -117,6 +117,7 @@ impl Compressor for QuantizeP {
 
     fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
         out.values.resize(x.len(), 0.0);
+        out.sparse = None; // dense message — every coordinate carries a level
         let mut w = BitWriter::new();
         std::mem::swap(&mut w.bytes, &mut out.payload); // reuse buffer
         w.clear();
@@ -160,7 +161,11 @@ pub fn decode(q: &QuantizeP, payload: &[u8], d: usize, out: &mut Vec<f64>) {
     while remaining > 0 {
         let blk = remaining.min(q.block);
         let norm = r.read_f32() as f64;
-        let unit = if norm > 0.0 { norm / scale } else { 0.0 };
+        // Mirror encode_block's degenerate-norm guard exactly: a zero,
+        // negative (impossible for a norm, but defensive), infinite, or NaN
+        // block norm encodes all-zero levels, so it must decode to 0.0 —
+        // `inf · 0` would otherwise produce NaN here.
+        let unit = if norm > 0.0 && norm.is_finite() { norm / scale } else { 0.0 };
         for _ in 0..blk {
             let sign = r.read(1);
             let level = r.read(q.bits);
@@ -204,6 +209,41 @@ mod tests {
             prop_assert!(dec == msg.values, "wire decode mismatch (bits={bits} block={block})");
             Ok(())
         });
+    }
+
+    #[test]
+    fn decode_matches_values_on_nonfinite_norm() {
+        // Regression: encode_block zeroes every level when the block norm
+        // is not finite, but decode only guarded `norm > 0.0`, turning an
+        // inf norm into `inf · 0 = NaN`. Both an explicit inf entry and an
+        // f64 too large for the f32 wire norm must round-trip to zeros.
+        let q = QuantizeP::new(2, PNorm::Inf, 8);
+        let mut rng = Rng::new(17);
+        let roundtrip = |x: &[f64], rng: &mut Rng| {
+            let msg = q.compress_alloc(x, rng);
+            let mut dec = Vec::new();
+            decode(&q, &msg.payload, x.len(), &mut dec);
+            assert!(
+                dec.iter().zip(&msg.values).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "decode diverged from encoder values: {dec:?} vs {:?}",
+                msg.values
+            );
+            msg
+        };
+        for spike in [f64::INFINITY, 1e39] {
+            let mut x = vec![0.5f64; 16];
+            x[2] = spike; // first block norm becomes inf on the f32 wire
+            let msg = roundtrip(&x, &mut rng);
+            assert!(
+                msg.values[..8].iter().all(|&v| v == 0.0),
+                "degenerate block must encode zeros (spike {spike})"
+            );
+        }
+        // A NaN entry leaves the ∞-norm finite (f64::max ignores NaN) but
+        // must still round-trip without panicking or diverging.
+        let mut x = vec![0.5f64; 16];
+        x[2] = f64::NAN;
+        let _ = roundtrip(&x, &mut rng);
     }
 
     #[test]

@@ -32,12 +32,14 @@ impl Compressor for RandK {
 
     fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
         let d = x.len();
-        let k = self.k.min(d);
+        let k = if d == 0 { 0 } else { self.k.min(d) };
         let idx = rng.sample_indices(d, k);
-        let scale = if self.unbiased { d as f64 / k as f64 } else { 1.0 };
+        let scale = if self.unbiased && k > 0 { d as f64 / k as f64 } else { 1.0 };
 
         out.values.clear();
         out.values.resize(d, 0.0);
+        let sp = out.sparse.get_or_insert_with(Vec::new);
+        sp.clear();
         let mut w = BitWriter::new();
         std::mem::swap(&mut w.bytes, &mut out.payload);
         w.clear();
@@ -46,8 +48,13 @@ impl Compressor for RandK {
         for &i in &idx {
             let wire = x[i] as f32; // f32 on the wire
             w.push_f32(wire);
-            out.values[i] = wire as f64 * scale;
+            let v = wire as f64 * scale;
+            out.values[i] = v;
+            if v != 0.0 {
+                sp.push((i as u32, v));
+            }
         }
+        sp.sort_unstable_by_key(|&(i, _)| i); // canonical ascending order
         out.wire_bits = w.bits;
         out.payload = w.bytes;
     }

@@ -28,17 +28,26 @@ impl Compressor for TopK {
 
     fn compress(&self, x: &[f64], _rng: &mut Rng, out: &mut CompressedMsg) {
         let d = x.len();
+        out.values.clear();
+        out.values.resize(d, 0.0);
+        let sp = out.sparse.get_or_insert_with(Vec::new);
+        sp.clear();
+        if d == 0 {
+            // Empty input: nothing on the wire (the selection below would
+            // underflow at d − 1).
+            out.payload.clear();
+            out.wire_bits = 0;
+            return;
+        }
         let k = self.k.min(d);
-        // Partial selection of the k largest |x_i|.
+        // Partial selection of the k largest |x_i|. total_cmp keeps the
+        // comparator total in the presence of NaN (NaN sorts largest, so
+        // NaN entries are kept and surface downstream rather than panic).
         let mut idx: Vec<usize> = (0..d).collect();
-        idx.select_nth_unstable_by(k.saturating_sub(1).min(d - 1), |&a, &b| {
-            x[b].abs().partial_cmp(&x[a].abs()).unwrap()
-        });
+        idx.select_nth_unstable_by(k - 1, |&a, &b| x[b].abs().total_cmp(&x[a].abs()));
         idx.truncate(k);
         idx.sort_unstable(); // canonical wire order
 
-        out.values.clear();
-        out.values.resize(d, 0.0);
         let mut w = BitWriter::new();
         std::mem::swap(&mut w.bytes, &mut out.payload);
         w.clear();
@@ -47,7 +56,11 @@ impl Compressor for TopK {
             w.push(i as u64, ib);
             let wire = x[i] as f32; // f32 on the wire
             w.push_f32(wire);
-            out.values[i] = wire as f64;
+            let v = wire as f64;
+            out.values[i] = v;
+            if v != 0.0 {
+                sp.push((i as u32, v));
+            }
         }
         out.wire_bits = w.bits;
         out.payload = w.bytes;
@@ -77,6 +90,53 @@ mod tests {
         assert_eq!(msg.values, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
         // 2 entries × (3 index bits + 32 value bits)
         assert_eq!(msg.wire_bits, 2 * (3 + 32));
+    }
+
+    #[test]
+    fn empty_input_is_empty_message() {
+        // Regression: `d − 1` underflowed in the selection when x was empty.
+        let t = TopK::new(3);
+        let mut rng = Rng::new(7);
+        let msg = t.compress_alloc(&[], &mut rng);
+        assert!(msg.values.is_empty());
+        assert_eq!(msg.wire_bits, 0);
+        assert!(msg.payload.is_empty());
+        assert_eq!(msg.sparse.as_deref(), Some(&[][..]));
+    }
+
+    #[test]
+    fn nan_entries_do_not_panic_and_rank_largest() {
+        // Regression: partial_cmp(..).unwrap() panicked on NaN input.
+        let t = TopK::new(1);
+        let mut rng = Rng::new(8);
+        let x = vec![1.0f64, f64::NAN, 2.0];
+        let msg = t.compress_alloc(&x, &mut rng);
+        // total_cmp ranks NaN above every finite magnitude.
+        assert!(msg.values[1].is_nan());
+        assert_eq!(msg.values[0], 0.0);
+        assert_eq!(msg.values[2], 0.0);
+        // Deterministic: a second compression gives the same selection.
+        let msg2 = t.compress_alloc(&x, &mut rng);
+        assert_eq!(msg.wire_bits, msg2.wire_bits);
+        assert!(msg2.values[1].is_nan());
+    }
+
+    #[test]
+    fn sparse_view_matches_dense_nonzeros() {
+        let t = TopK::new(2);
+        let mut rng = Rng::new(9);
+        let x = vec![0.1f64, -5.0, 0.3, 4.0, -0.2];
+        let msg = t.compress_alloc(&x, &mut rng);
+        assert_eq!(msg.sparse, Some(vec![(1u32, -5.0), (3u32, 4.0)]));
+        // Indices ascend and mirror the nonzeros of `values` exactly.
+        let nz: Vec<(u32, f64)> = msg
+            .values
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        assert_eq!(msg.sparse, Some(nz));
     }
 
     #[test]

@@ -1,18 +1,35 @@
 //! The coordinator engine: drives algorithms over a simulated gossip
 //! network with exact wire-bit accounting.
 //!
+//! # Round phases and threading model
+//!
 //! One engine instance owns the problem, the topology, and the round loop.
-//! Per round it (1) evaluates per-agent gradients — in parallel across a
-//! worker pool when `threads > 1`, mirroring the leader/worker split of a
-//! real deployment — (2) collects per-agent broadcasts, (3) compresses
-//! channel 0 when the algorithm opts in, (4) forms the W-weighted mixes,
-//! and (5) applies the local updates. Determinism is scheduling-independent
-//! because every stochastic choice draws from a per-(agent, purpose) RNG
-//! stream; the `parallel_equals_sequential` test asserts bitwise equality.
+//! Per round it runs five phases; three of them fan out over the same
+//! scoped worker pool when `threads > 1`:
+//!
+//! 1. **gradients** — per-agent `∇f_i` at the current iterates
+//!    *(parallel)*; mini-batch indices are drawn up front in agent order
+//!    so the RNG stream is schedule-independent.
+//! 2. **send** — per-agent payload assembly (sequential; cheap, and the
+//!    only phase that may touch shared scratch inside an algorithm).
+//! 3. **compress** — channel 0 through the configured codec, one dither
+//!    RNG stream per agent *(parallel)*.
+//! 4. **mix** — W-weighted neighborhood mixes *(parallel)*. Messages that
+//!    publish a sparse view ([`CompressedMsg::sparse`]: top-k / rand-k)
+//!    are accumulated by scatter-add in O(deg·k) instead of O(deg·d) —
+//!    see [`mix_msgs`] for the bitwise-equality argument.
+//! 5. **apply** — [`Algorithm::recv_all`] *(parallel)*: per-agent state is
+//!    disjoint row-major rows, so agents update independently.
+//!
+//! Determinism is scheduling-independent because every stochastic choice
+//! draws from a per-(agent, purpose) RNG stream and the parallel phases
+//! touch disjoint per-agent data; the `parallel_equals_sequential` tests
+//! assert bitwise equality for both dense (quantizer) and sparse (top-k)
+//! messages.
 
 use super::metrics::{RoundMetrics, RunRecord};
 use super::network::{LinkModel, TrafficStats};
-use crate::algorithms::{Algorithm, Ctx};
+use crate::algorithms::{Algorithm, Ctx, Inbox};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::problems::Problem;
 use crate::rng::{streams, Rng};
@@ -36,7 +53,8 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Record metrics every k rounds (metrics cost a full loss pass).
     pub record_every: usize,
-    /// Worker threads for gradient evaluation + compression (1 = inline).
+    /// Worker threads for the gradient, compression, mix, and apply
+    /// phases (1 = inline).
     pub threads: usize,
     pub link: LinkModel,
 }
@@ -53,6 +71,75 @@ impl Default for EngineConfig {
             link: LinkModel::default(),
         }
     }
+}
+
+/// W-weighted mix of decoded channel-0 messages for agent `i`, written
+/// into `out` (which must be zero-filled by the caller).
+///
+/// Messages carrying a sparse view are scatter-added in O(k); dense
+/// messages fall back to `axpy` over `values`. The result is bitwise
+/// identical to dense accumulation for every message: the sparse list
+/// holds exactly the nonzeros of `values`, and adding the omitted ±0.0
+/// terms cannot change an accumulator that starts at +0.0 (IEEE 754
+/// round-to-nearest yields −0.0 only from `(−0.0) + (−0.0)`, which a
+/// +0.0 start makes unreachable). The sparse-vs-dense proptest in
+/// `rust/tests/proptests.rs` pins this down across codecs/topologies.
+pub fn mix_msgs(mix: &MixingMatrix, i: usize, msgs: &[CompressedMsg], out: &mut [f64]) {
+    for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
+        let w = mix.weight(i, j);
+        match &msgs[j].sparse {
+            Some(entries) => crate::linalg::scatter_axpy(w, entries, out),
+            None => crate::linalg::axpy(w, &msgs[j].values, out),
+        }
+    }
+}
+
+/// Worker threads actually worth using for a phase that streams
+/// `work_per_agent` f64 elements per agent: `thread::scope` re-spawns OS
+/// threads every round, which costs more than the loop itself on small
+/// problems (fig1 shape: n·d ≈ 1600), so below the threshold the phase
+/// runs inline. Thread count never affects trajectories (the
+/// `parallel_equals_sequential` tests), so this is purely a perf knob.
+fn phase_threads(threads: usize, n: usize, work_per_agent: usize) -> usize {
+    const MIN_ELEMS: usize = 32_768;
+    if n.saturating_mul(work_per_agent) < MIN_ELEMS {
+        1
+    } else {
+        threads.max(1).min(n.max(1))
+    }
+}
+
+/// Run `f(i, &mut items[i])` for every item — inline when `threads == 1`,
+/// otherwise chunked across a scoped worker pool. The single scheduling
+/// site for the engine's gradient, compression, and mix fan-outs (the
+/// apply phase uses the row-splitting [`crate::algorithms::par_agents`]).
+/// `f` must be independent per item for the schedule to be
+/// trajectory-invariant.
+fn par_chunks<T, F>(threads: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        for (i, it) in items.iter_mut().enumerate() {
+            f(i, it);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, ch) in items.chunks_mut(chunk).enumerate() {
+            let base = t * chunk;
+            let f = &f;
+            s.spawn(move || {
+                for (off, it) in ch.iter_mut().enumerate() {
+                    f(base + off, it);
+                }
+            });
+        }
+    });
 }
 
 pub struct Engine {
@@ -74,6 +161,26 @@ impl Engine {
         }
     }
 
+    /// Draw this round's mini-batch indices for every agent, in agent
+    /// order. The single sampling site for round 0 and the round loop, so
+    /// both consume the per-agent BATCH streams identically (a duplicated
+    /// round-0 draw used to clamp the batch size differently).
+    fn draw_batches(&self, batch_rngs: &mut [Rng]) -> Vec<Option<Vec<usize>>> {
+        let n = self.mix.n;
+        let batch = self.cfg.batch_size;
+        (0..n)
+            .map(|i| {
+                batch.map(|b| {
+                    let ns = self.problem.n_samples(i);
+                    if ns == 0 {
+                        return vec![];
+                    }
+                    (0..b.min(ns)).map(|_| batch_rngs[i].below(ns)).collect()
+                })
+            })
+            .collect()
+    }
+
     /// Evaluate all agents' gradients at their current iterates into `g`.
     fn gradients(
         &self,
@@ -81,52 +188,14 @@ impl Engine {
         g: &mut [Vec<f64>],
         batch_rngs: &mut [Rng],
     ) {
-        let n = self.mix.n;
         let problem = &*self.problem;
-        let batch = self.cfg.batch_size;
         // Draw batch indices first (RNG must advance deterministically in
         // agent order regardless of thread scheduling).
-        let batches: Vec<Option<Vec<usize>>> = (0..n)
-            .map(|i| {
-                batch.map(|b| {
-                    let ns = problem.n_samples(i);
-                    let b = b.min(ns.max(1));
-                    if ns == 0 {
-                        vec![]
-                    } else {
-                        (0..b).map(|_| batch_rngs[i].below(ns)).collect()
-                    }
-                })
-            })
-            .collect();
-        let threads = self.cfg.threads.max(1).min(n);
-        if threads == 1 {
-            for i in 0..n {
-                match &batches[i] {
-                    Some(idx) => problem.grad_batch(i, algo.x(i), idx, &mut g[i]),
-                    None => problem.grad_full(i, algo.x(i), &mut g[i]),
-                }
-            }
-        } else {
-            // Leader/worker split: chunk agents across a scoped pool.
-            let chunk = n.div_ceil(threads);
-            let algo_ref: &dyn Algorithm = algo;
-            std::thread::scope(|s| {
-                for (t, gs) in g.chunks_mut(chunk).enumerate() {
-                    let base = t * chunk;
-                    let batches = &batches;
-                    s.spawn(move || {
-                        for (off, gi) in gs.iter_mut().enumerate() {
-                            let i = base + off;
-                            match &batches[i] {
-                                Some(idx) => problem.grad_batch(i, algo_ref.x(i), idx, gi),
-                                None => problem.grad_full(i, algo_ref.x(i), gi),
-                            }
-                        }
-                    });
-                }
-            });
-        }
+        let batches = self.draw_batches(batch_rngs);
+        par_chunks(self.cfg.threads, g, |i, gi| match &batches[i] {
+            Some(idx) => problem.grad_batch(i, algo.x(i), idx, gi),
+            None => problem.grad_full(i, algo.x(i), gi),
+        });
     }
 
     /// Run `algo` for `rounds` rounds. `compressor` applies to channel 0
@@ -154,17 +223,12 @@ impl Engine {
         let x0_vec = self.problem.initial_point().unwrap_or_else(|| vec![0.0f64; d]);
         let x0 = vec![x0_vec; n];
         let mut g = vec![vec![0.0f64; d]; n];
+        // Round-0 gradients go through the same batch-drawing path as the
+        // round loop (identical RNG stream and clamping).
+        let batches0 = self.draw_batches(&mut batch_rngs);
         for i in 0..n {
-            match self.cfg.batch_size {
-                Some(b) => {
-                    let ns = self.problem.n_samples(i);
-                    let idx: Vec<usize> = if ns == 0 {
-                        vec![]
-                    } else {
-                        (0..b.min(ns)).map(|_| batch_rngs[i].below(ns)).collect()
-                    };
-                    self.problem.grad_batch(i, &x0[i], &idx, &mut g[i]);
-                }
+            match &batches0[i] {
+                Some(idx) => self.problem.grad_batch(i, &x0[i], idx, &mut g[i]),
                 None => self.problem.grad_full(i, &x0[i], &mut g[i]),
             }
         }
@@ -173,7 +237,9 @@ impl Engine {
 
         let mut payload = vec![vec![vec![0.0f64; d]; spec.channels]; n];
         let mut msgs: Vec<CompressedMsg> = (0..n).map(|_| CompressedMsg::with_dim(d)).collect();
-        let mut mixed = vec![vec![0.0f64; d]; spec.channels];
+        // Per-agent mixes, materialized so the mix and apply phases can
+        // both fan out over agents (n·channels·d, allocated once).
+        let mut mixed_all = vec![vec![vec![0.0f64; d]; spec.channels]; n];
         let mut traffic = TrafficStats::new(n);
         let mut series = Vec::new();
         let mut round_bits = vec![0u64; n];
@@ -197,25 +263,12 @@ impl Engine {
             let mut comp_err_acc = 0.0f64;
             if use_comp {
                 let comp = compressor.as_deref().unwrap();
-                let threads = self.cfg.threads.max(1).min(n);
-                if threads == 1 {
-                    for i in 0..n {
-                        comp.compress(&payload[i][0], &mut dither_rngs[i], &mut msgs[i]);
-                    }
-                } else {
-                    let chunk = n.div_ceil(threads);
+                {
                     let payload_ref = &payload;
-                    std::thread::scope(|s| {
-                        for ((t, ms), rs) in
-                            msgs.chunks_mut(chunk).enumerate().zip(dither_rngs.chunks_mut(chunk))
-                        {
-                            let base = t * chunk;
-                            s.spawn(move || {
-                                for (off, (m, r)) in ms.iter_mut().zip(rs.iter_mut()).enumerate() {
-                                    comp.compress(&payload_ref[base + off][0], r, m);
-                                }
-                            });
-                        }
+                    let mut pairs: Vec<(&mut CompressedMsg, &mut Rng)> =
+                        msgs.iter_mut().zip(dither_rngs.iter_mut()).collect();
+                    par_chunks(self.cfg.threads, &mut pairs, |i, (m, r)| {
+                        comp.compress(&payload_ref[i][0], r, m);
                     });
                 }
                 for i in 0..n {
@@ -232,31 +285,50 @@ impl Engine {
             }
             traffic.record_round(&self.mix, &self.cfg.link, &round_bits);
 
-            // (4)+(5) mix and apply per agent.
-            for i in 0..n {
-                for (c, mx) in mixed.iter_mut().enumerate() {
-                    mx.fill(0.0);
-                    for j in std::iter::once(i).chain(self.mix.neighbors[i].iter().copied()) {
-                        let w = self.mix.weight(i, j);
-                        let src: &[f64] =
-                            if c == 0 && use_comp { &msgs[j].values } else { &payload[j][c] };
-                        crate::linalg::axpy(w, src, mx);
-                    }
-                }
-                // Own decoded channel-0 payload — borrowed, no copies on
-                // the hot path (§Perf: saves n·d clones per round).
-                let self_dec: Vec<&[f64]> = (0..spec.channels)
-                    .map(|c| {
+            // (4) mix (parallel over agents; sparse-aware on channel 0).
+            let mix_apply_threads = phase_threads(self.cfg.threads, n, spec.channels * d);
+            {
+                let mix = &self.mix;
+                let payload_ref = &payload;
+                let msgs_ref = &msgs;
+                par_chunks(mix_apply_threads, &mut mixed_all, |i, out| {
+                    for (c, mx) in out.iter_mut().enumerate() {
+                        mx.fill(0.0);
                         if c == 0 && use_comp {
-                            msgs[i].values.as_slice()
+                            mix_msgs(mix, i, msgs_ref, mx);
                         } else {
-                            payload[i][c].as_slice()
+                            for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
+                                crate::linalg::axpy(mix.weight(i, j), &payload_ref[j][c], mx);
+                            }
                         }
-                    })
-                    .collect();
-                let mixed_refs: Vec<&[f64]> = mixed.iter().map(|v| v.as_slice()).collect();
-                algo.recv(&ctx, i, &g[i], &self_dec, &mixed_refs);
+                    }
+                });
             }
+
+            // (5) apply (parallel inside recv_all; per-agent state rows
+            // are disjoint). Own decoded channel-0 payload is borrowed —
+            // no copies on the hot path (§Perf: saves n·d clones/round).
+            let inbox = Inbox {
+                self_dec: (0..n)
+                    .map(|i| {
+                        (0..spec.channels)
+                            .map(|c| {
+                                if c == 0 && use_comp {
+                                    msgs[i].values.as_slice()
+                                } else {
+                                    payload[i][c].as_slice()
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect(),
+                mixed: mixed_all
+                    .iter()
+                    .map(|a| a.iter().map(|v| v.as_slice()).collect())
+                    .collect(),
+            };
+            algo.recv_all(&ctx, &g, &inbox, mix_apply_threads);
+            drop(inbox);
 
             if round % self.cfg.record_every == 0 || round == rounds {
                 series.push(self.observe(&*algo, round, comp_err_acc / n as f64, &traffic));
@@ -320,6 +392,7 @@ mod tests {
     use crate::algorithms::nids::Nids;
     use crate::compress::identity::Identity;
     use crate::compress::quantize::QuantizeP;
+    use crate::compress::topk::TopK;
     use crate::problems::linreg::LinReg;
     use crate::topology::{MixingRule, Topology};
 
@@ -378,6 +451,12 @@ mod tests {
 
     #[test]
     fn parallel_equals_sequential() {
+        // 4 worker threads must reproduce the single-thread trajectory
+        // bit-for-bit (dense quantizer messages). At this problem size the
+        // gradient and compression phases fan out; mix/apply run inline
+        // via phase_threads — their parallel paths are pinned by
+        // par_chunks_mix_equals_inline and by
+        // algorithms::tests::all_algorithms_recv_all_parallel_equals_sequential.
         let run = |threads: usize| {
             let mut e = ring_engine(threads);
             e.run(
@@ -391,6 +470,83 @@ mod tests {
         for (ma, mb) in a.series.iter().zip(&b.series) {
             assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits(), "round {}", ma.round);
             assert_eq!(ma.bits_per_agent, mb.bits_per_agent);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential_sparse_topk() {
+        // Same guarantee with sparse top-k messages in flight, including
+        // a thread count that does not divide n.
+        let run = |threads: usize| {
+            let mut e = ring_engine(threads);
+            e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(10))), 60)
+        };
+        let a = run(1);
+        let b = run(3);
+        let c = run(8);
+        for ((ma, mb), mc) in a.series.iter().zip(&b.series).zip(&c.series) {
+            assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits(), "round {}", ma.round);
+            assert_eq!(ma.dist_opt.to_bits(), mc.dist_opt.to_bits(), "round {}", ma.round);
+            assert_eq!(ma.bits_per_agent, mb.bits_per_agent);
+        }
+    }
+
+    /// The chunked fan-out itself: mixing through par_chunks at several
+    /// thread counts must be bitwise-equal to the inline loop (the engine
+    /// tests above run small problems, which phase_threads keeps inline —
+    /// this pins the parallel path directly).
+    #[test]
+    fn par_chunks_mix_equals_inline() {
+        let n = 8;
+        let d = 257; // not a multiple of any chunk size
+        let mix = Topology::Ring.build(n, MixingRule::MetropolisHastings);
+        let topk = TopK::new(19);
+        let mut rng = crate::rng::Rng::new(77);
+        let msgs: Vec<CompressedMsg> = (0..n)
+            .map(|_| {
+                let mut x = vec![0.0f64; d];
+                rng.fill_normal(&mut x, 1.0);
+                topk.compress_alloc(&x, &mut rng)
+            })
+            .collect();
+        let mut inline = vec![vec![0.0f64; d]; n];
+        for (i, out) in inline.iter_mut().enumerate() {
+            mix_msgs(&mix, i, &msgs, out);
+        }
+        for threads in [2usize, 3, 8] {
+            let mut par = vec![vec![0.0f64; d]; n];
+            par_chunks(threads, &mut par, |i, out| mix_msgs(&mix, i, &msgs, out));
+            for (a, b) in inline.iter().zip(&par) {
+                for (u, v) in a.iter().zip(b) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phase_threads_gates_small_work() {
+        assert_eq!(phase_threads(8, 8, 200), 1, "fig1 shape stays inline");
+        assert_eq!(phase_threads(8, 32, 100_000), 8, "bench shape fans out");
+        assert_eq!(phase_threads(8, 2, 100_000), 2, "clamped to n");
+    }
+
+    #[test]
+    fn sparse_and_dense_messages_same_trajectory() {
+        // Forcing the dense fallback (sparse = None) must not change the
+        // run at all: the sparse view is a pure representation change.
+        use crate::compress::StripSparse;
+        let mut e1 = ring_engine(1);
+        let rec_sparse = e1.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(10))), 60);
+        let mut e2 = ring_engine(1);
+        let rec_dense = e2.run(
+            Box::new(Lead::paper_default()),
+            Some(Box::new(StripSparse(TopK::new(10)))),
+            60,
+        );
+        for (a, b) in rec_sparse.series.iter().zip(&rec_dense.series) {
+            assert_eq!(a.dist_opt.to_bits(), b.dist_opt.to_bits(), "round {}", a.round);
+            assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
         }
     }
 

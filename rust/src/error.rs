@@ -1,0 +1,35 @@
+//! Minimal error plumbing (anyhow is not in the offline vendor set).
+//!
+//! Everything fallible in the crate returns [`Result`]; errors are boxed
+//! `std::error::Error` trait objects built from plain strings via [`err`].
+//! `?` converts any concrete error (io, parse, …) automatically.
+
+/// Boxed dynamic error, `Send + Sync` so it crosses the worker pool.
+pub type Error = Box<dyn std::error::Error + Send + Sync>;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Build an [`Error`] from a message: `return Err(err(format!("...")))`.
+pub fn err(msg: impl Into<String>) -> Error {
+    msg.into().into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn string_and_io_errors_convert() {
+        fn fails() -> Result<()> {
+            Err(err("boom"))
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "boom");
+
+        fn io_err() -> Result<String> {
+            let s = std::fs::read_to_string("/nonexistent/definitely/missing")?;
+            Ok(s)
+        }
+        assert!(io_err().is_err());
+    }
+}

@@ -132,7 +132,7 @@ pub fn fig_logreg(
 
 /// Fig. 4: "deep net" (MLP on synthetic CIFAR-shaped data via PJRT).
 /// Reports loss trajectories; divergence shows up as NaN (the paper's *).
-pub fn fig4(split: DataSplit, out: Option<&Path>, rounds: usize) -> anyhow::Result<Vec<RunRecord>> {
+pub fn fig4(split: DataSplit, out: Option<&Path>, rounds: usize) -> crate::error::Result<Vec<RunRecord>> {
     use crate::problems::neural::MlpProblem;
     let manifest = crate::runtime::Manifest::load("artifacts")?;
     let setups = config::table4_dnn(split == DataSplit::Heterogeneous);

@@ -34,6 +34,7 @@ pub mod algorithms;
 pub mod compress;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod experiments;
 pub mod linalg;
 pub mod problems;

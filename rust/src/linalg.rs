@@ -24,6 +24,20 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// Sparse counterpart of [`axpy`]: `y[i] += alpha * v` for each `(i, v)`
+/// entry. When `entries` holds exactly the nonzeros of a dense vector and
+/// `y` is accumulated from +0.0, the result is bitwise-identical to the
+/// dense `axpy` over that vector (the omitted terms are ±0.0 additions,
+/// which cannot change any partial sum reachable from a +0.0 start under
+/// IEEE 754 round-to-nearest). This is what lets the engine mix top-k /
+/// rand-k messages in O(deg·k) without perturbing trajectories.
+#[inline]
+pub fn scatter_axpy(alpha: f64, entries: &[(u32, f64)], y: &mut [f64]) {
+    for &(i, v) in entries {
+        y[i as usize] += alpha * v;
+    }
+}
+
 /// out = a - b
 #[inline]
 pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
@@ -138,6 +152,24 @@ impl Mat {
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Pack equal-length row vectors into a contiguous row-major matrix
+    /// (the algorithms' per-agent state layout: one row per agent).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, Vec::len);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "from_rows: ragged input");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
     }
 
     /// out = self * x (gemv).
@@ -364,6 +396,36 @@ mod tests {
         assert!((norm_p(&[3.0, 4.0], 2.0) - 5.0).abs() < 1e-9);
         // p -> inf approaches the inf-norm; p=1 is the sum.
         assert!((norm_p(&[1.0, -2.0, 3.0], 1.0) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scatter_axpy_matches_dense() {
+        let dense = vec![0.0f64, -2.5, 0.0, 4.0, 0.0, 1.25];
+        let entries: Vec<(u32, f64)> = dense
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        let mut y_dense = vec![0.0f64; 6];
+        let mut y_sparse = vec![0.0f64; 6];
+        for w in [1.0 / 3.0, -0.7, 0.123456789] {
+            axpy(w, &dense, &mut y_dense);
+            scatter_axpy(w, &entries, &mut y_sparse);
+        }
+        for (a, b) in y_dense.iter().zip(&y_sparse) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn mat_rows_roundtrip() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut m = Mat::from_rows(&rows);
+        assert_eq!((m.rows, m.cols), (3, 2));
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        m.row_mut(2)[0] = 9.0;
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0, 9.0, 6.0]);
     }
 
     #[test]

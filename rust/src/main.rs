@@ -8,6 +8,7 @@
 //! (clap is not in the offline vendor set; flags are parsed by hand.)
 
 use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::error::err;
 use lead::experiments;
 use lead::problems::DataSplit;
 use lead::topology::{MixingRule, Topology};
@@ -17,7 +18,7 @@ fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lead::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let out = flag(&args, "--out").map(PathBuf::from);
     let out_ref = out.as_deref();
@@ -63,19 +64,20 @@ fn main() -> anyhow::Result<()> {
                         eprintln!("fig4 skipped (artifacts missing?): {e}");
                     }
                 }
-                other => anyhow::bail!("unknown experiment {other:?}"),
+                other => return Err(err(format!("unknown experiment {other:?}"))),
             }
         }
         Some("run") => {
-            let path = args.get(1).ok_or_else(|| anyhow::anyhow!("usage: lead run <config.toml>"))?;
+            let path = args.get(1).ok_or_else(|| err("usage: lead run <config.toml>"))?;
             let src = std::fs::read_to_string(path)?;
-            let cfg = lead::config::RunConfig::from_toml(&src).map_err(|e| anyhow::anyhow!(e))?;
+            let cfg = lead::config::RunConfig::from_toml(&src).map_err(err)?;
             let topo = Topology::parse(&cfg.topology, cfg.seed)
-                .ok_or_else(|| anyhow::anyhow!("bad topology {:?}", cfg.topology))?;
+                .ok_or_else(|| err(format!("bad topology {:?}", cfg.topology)))?;
             let mix = topo.build(cfg.agents, MixingRule::UniformNeighbors);
-            let problem = Box::new(lead::problems::linreg::LinReg::synthetic(cfg.agents, 200, 0.1, cfg.seed));
+            let problem =
+                Box::new(lead::problems::linreg::LinReg::synthetic(cfg.agents, 200, 0.1, cfg.seed));
             let algo = lead::config::build_algo(&cfg.algo, cfg.gamma, cfg.alpha)
-                .ok_or_else(|| anyhow::anyhow!("unknown algo {:?}", cfg.algo))?;
+                .ok_or_else(|| err(format!("unknown algo {:?}", cfg.algo)))?;
             let comp = lead::compress::parse(&cfg.compressor);
             let mut engine = Engine::new(
                 EngineConfig {

@@ -11,8 +11,9 @@
 
 use super::data::{partition, synth_classification, Dataset};
 use super::{DataSplit, Problem};
+use crate::error::{err, Result};
 use crate::rng::{streams, Rng};
-use crate::runtime::{Artifact, Manifest, ParamSpec, artifact::Value};
+use crate::runtime::{artifact::Value, Artifact, Manifest, ParamSpec};
 use std::sync::Mutex;
 
 // SAFETY: the `xla` crate's PJRT wrappers hold non-atomic `Rc` refcounts,
@@ -46,17 +47,21 @@ pub struct PjrtLinReg {
 }
 
 impl PjrtLinReg {
-    pub fn new(manifest: &Manifest, inner: super::linreg::LinReg) -> anyhow::Result<Self> {
+    pub fn new(manifest: &Manifest, inner: super::linreg::LinReg) -> Result<Self> {
         let grad_art = manifest.compile("linreg_grad")?;
         let shape = &grad_art.meta.inputs[0].shape;
-        anyhow::ensure!(
-            shape == &vec![inner.m, inner.d],
-            "artifact expects A {:?}, problem has {}x{}",
-            shape,
-            inner.m,
-            inner.d
-        );
-        Ok(PjrtLinReg { inner, grad_art, loss_art: manifest.compile("linreg_loss")?, lock: Mutex::new(()) })
+        if shape != &vec![inner.m, inner.d] {
+            return Err(err(format!(
+                "artifact expects A {:?}, problem has {}x{}",
+                shape, inner.m, inner.d
+            )));
+        }
+        Ok(PjrtLinReg {
+            inner,
+            grad_art,
+            loss_art: manifest.compile("linreg_loss")?,
+            lock: Mutex::new(()),
+        })
     }
 }
 
@@ -132,7 +137,7 @@ impl MlpProblem {
         n_per_agent: usize,
         split: DataSplit,
         seed: u64,
-    ) -> anyhow::Result<Self> {
+    ) -> Result<Self> {
         let grad_art = manifest.compile("mlp_grad")?;
         let loss_art = manifest.compile("mlp_loss")?;
         let spec = ParamSpec::from_meta(&grad_art.meta);
@@ -248,7 +253,7 @@ pub struct TransformerProblem {
 }
 
 impl TransformerProblem {
-    pub fn new(manifest: &Manifest, n_agents: usize, corpus_len: usize, seed: u64) -> anyhow::Result<Self> {
+    pub fn new(manifest: &Manifest, n_agents: usize, corpus_len: usize, seed: u64) -> Result<Self> {
         let step_art = manifest.compile("transformer_tiny_step")?;
         let spec = ParamSpec::from_meta(&step_art.meta);
         let tok = step_art.meta.inputs.last().unwrap();

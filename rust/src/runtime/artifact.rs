@@ -1,8 +1,15 @@
 //! Artifact loading: manifest parsing, HLO-text compilation, typed
 //! execution, and flat-parameter ↔ tensor mapping.
+//!
+//! Manifest parsing and the parameter mapping are pure rust and always
+//! available; compilation/execution need the PJRT backend (`pjrt`
+//! feature + vendored `xla` bindings). Without the feature, `compile`
+//! and `execute` return a descriptive error so callers (experiment
+//! drivers, integration tests) degrade to a skip instead of failing to
+//! build.
 
+use crate::error::{err, Result};
 use crate::serialize::json::{self, Json};
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One tensor port of an artifact.
@@ -44,9 +51,9 @@ fn parse_port(v: &Json) -> Result<Port> {
     let shape = v
         .get("shape")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("port missing shape"))?
+        .ok_or_else(|| err("port missing shape"))?
         .iter()
-        .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .map(|s| s.as_usize().ok_or_else(|| err("bad dim")))
         .collect::<Result<Vec<_>>>()?;
     let dtype = v.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
     Ok(Port { name, shape, dtype })
@@ -56,9 +63,10 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
-        let raw = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
-        let doc = json::parse(&raw).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let raw = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            err(format!("reading {}/manifest.json — run `make artifacts`: {e}", dir.display()))
+        })?;
+        let doc = json::parse(&raw).map_err(|e| err(format!("manifest parse: {e}")))?;
         let mut artifacts = Vec::new();
         for a in doc.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
             let idxs = |key: &str| -> Vec<usize> {
@@ -95,28 +103,8 @@ impl Manifest {
         self.artifacts
             .iter()
             .find(|a| a.name == name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+            .ok_or_else(|| err(format!("artifact {name:?} not in manifest")))
     }
-
-    /// Compile one artifact on the shared PJRT client.
-    pub fn compile(&self, name: &str) -> Result<Artifact> {
-        let meta = self.get(name)?.clone();
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let _guard = super::client::compile_lock();
-        let exe = super::client()
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        Ok(Artifact { meta, exe })
-    }
-}
-
-/// A compiled computation plus its port metadata.
-pub struct Artifact {
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
 }
 
 /// A runtime input value (f64 host data is converted to the artifact's
@@ -126,73 +114,138 @@ pub enum Value<'a> {
     I(&'a [i32]),
 }
 
-impl Artifact {
-    /// Execute with positional inputs; returns each output flattened to
-    /// f64 (scalars come back as length-1 vectors).
-    pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Vec<f64>>> {
-        if inputs.len() != self.meta.inputs.len() {
-            bail!(
-                "{}: {} inputs given, {} expected",
-                self.meta.name,
-                inputs.len(),
-                self.meta.inputs.len()
-            );
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::*;
+
+    impl Manifest {
+        /// Compile one artifact on the shared PJRT client.
+        pub fn compile(&self, name: &str) -> Result<Artifact> {
+            let meta = self.get(name)?.clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| err(format!("loading {}: {e:?}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let _guard = crate::runtime::client::compile_lock();
+            let exe = crate::runtime::client()
+                .compile(&comp)
+                .map_err(|e| err(format!("compiling {name}: {e:?}")))?;
+            Ok(Artifact { meta, exe })
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (v, port) in inputs.iter().zip(&self.meta.inputs) {
-            let lit = match v {
-                Value::F(data) => {
-                    if data.len() != port.elements() {
-                        bail!(
-                            "{}: input {} has {} elements, wants {:?}",
-                            self.meta.name,
-                            port.name,
-                            data.len(),
-                            port.shape
-                        );
+    }
+
+    /// A compiled computation plus its port metadata.
+    pub struct Artifact {
+        pub meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Artifact {
+        /// Execute with positional inputs; returns each output flattened to
+        /// f64 (scalars come back as length-1 vectors).
+        pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Vec<f64>>> {
+            if inputs.len() != self.meta.inputs.len() {
+                return Err(err(format!(
+                    "{}: {} inputs given, {} expected",
+                    self.meta.name,
+                    inputs.len(),
+                    self.meta.inputs.len()
+                )));
+            }
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (v, port) in inputs.iter().zip(&self.meta.inputs) {
+                let lit = match v {
+                    Value::F(data) => {
+                        if data.len() != port.elements() {
+                            return Err(err(format!(
+                                "{}: input {} has {} elements, wants {:?}",
+                                self.meta.name,
+                                port.name,
+                                data.len(),
+                                port.shape
+                            )));
+                        }
+                        let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                        shaped(xla::Literal::vec1(&f32s), &port.shape)?
                     }
-                    let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
-                    shaped(xla::Literal::vec1(&f32s), &port.shape)?
-                }
-                Value::I(data) => {
-                    if data.len() != port.elements() {
-                        bail!("{}: int input {} wrong size", self.meta.name, port.name);
+                    Value::I(data) => {
+                        if data.len() != port.elements() {
+                            return Err(err(format!(
+                                "{}: int input {} wrong size",
+                                self.meta.name, port.name
+                            )));
+                        }
+                        shaped(xla::Literal::vec1(data), &port.shape)?
                     }
-                    shaped(xla::Literal::vec1(data), &port.shape)?
-                }
-            };
-            literals.push(lit);
+                };
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| err(format!("{}: execute: {e:?}", self.meta.name)))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| err(format!("{}: to_literal: {e:?}", self.meta.name)))?;
+            // aot.py lowers with return_tuple=True: unpack all outputs.
+            let parts = tuple
+                .to_tuple()
+                .map_err(|e| err(format!("{}: to_tuple: {e:?}", self.meta.name)))?;
+            let mut out = Vec::with_capacity(parts.len());
+            for part in parts {
+                let v: Vec<f32> = part
+                    .to_vec()
+                    .map_err(|e| err(format!("{}: to_vec: {e:?}", self.meta.name)))?;
+                out.push(v.into_iter().map(|x| x as f64).collect());
+            }
+            Ok(out)
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("{}: execute: {e:?}", self.meta.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.meta.name))?;
-        // aot.py lowers with return_tuple=True: unpack all outputs.
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("{}: to_tuple: {e:?}", self.meta.name))?;
-        let mut out = Vec::with_capacity(parts.len());
-        for part in parts {
-            let v: Vec<f32> =
-                part.to_vec().map_err(|e| anyhow!("{}: to_vec: {e:?}", self.meta.name))?;
-            out.push(v.into_iter().map(|x| x as f64).collect());
+    }
+
+    fn shaped(lit: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
+        if shape.len() <= 1 {
+            // vec1 already has rank ≤ 1; scalars: reshape to rank 0.
+            if shape.is_empty() {
+                return lit.reshape(&[]).map_err(|e| err(format!("reshape scalar: {e:?}")));
+            }
+            return Ok(lit);
         }
-        Ok(out)
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(|e| err(format!("reshape {shape:?}: {e:?}")))
     }
 }
 
-fn shaped(lit: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
-    if shape.len() <= 1 {
-        // vec1 already has rank ≤ 1; scalars: reshape to rank 0.
-        if shape.is_empty() {
-            return lit.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"));
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::*;
+
+    impl Manifest {
+        /// Stub: the PJRT backend is not compiled in. Validates the name
+        /// against the manifest, then reports the backend as unavailable so
+        /// callers skip gracefully.
+        pub fn compile(&self, name: &str) -> Result<Artifact> {
+            let _ = self.get(name)?;
+            Err(err(format!(
+                "artifact {name:?}: PJRT backend not built — enable the `pjrt` feature \
+                 with the vendored `xla` bindings"
+            )))
         }
-        return Ok(lit);
     }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+
+    /// Stub artifact (never constructed without the `pjrt` feature; the
+    /// type exists so downstream signatures compile unchanged).
+    pub struct Artifact {
+        pub meta: ArtifactMeta,
+    }
+
+    impl Artifact {
+        pub fn execute(&self, _inputs: &[Value]) -> Result<Vec<Vec<f64>>> {
+            Err(err(format!("{}: PJRT backend not built", self.meta.name)))
+        }
+    }
 }
+
+pub use backend::Artifact;
 
 /// Mapping between a flat f64 parameter vector (what the decentralized
 /// algorithms operate on) and the per-tensor inputs of an artifact.

@@ -5,9 +5,15 @@
 //! HLO *text* is the interchange format (jax ≥ 0.5 emits protos with
 //! 64-bit ids that xla_extension 0.5.1 rejects; the text parser reassigns
 //! ids — see /opt/xla-example/README.md).
+//!
+//! The backend itself (the vendored `xla` PJRT bindings) is gated behind
+//! the `pjrt` cargo feature; without it, manifest parsing still works and
+//! `compile`/`execute` return a descriptive error.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
 
 pub use artifact::{Artifact, Manifest, ParamSpec};
+#[cfg(feature = "pjrt")]
 pub use client::client;

@@ -2,7 +2,7 @@
 //! harness stands in for proptest; failures print a replay seed).
 
 use lead::compress::quantize::{decode, PNorm, QuantizeP};
-use lead::compress::{randk::RandK, topk::TopK, CompressedMsg, Compressor};
+use lead::compress::{identity::Identity, randk::RandK, topk::TopK, CompressedMsg, Compressor};
 use lead::prop::forall;
 use lead::prop_assert;
 use lead::rng::Rng;
@@ -134,6 +134,99 @@ fn topk_contraction_random() {
         let err = lead::linalg::dist_sq(&x, &msg.values);
         let bound = (1.0 - k as f64 / x.len() as f64) * lead::linalg::norm2_sq(&x);
         prop_assert!(err <= bound + 1e-9, "err {err} > bound {bound}");
+        Ok(())
+    });
+}
+
+/// Sparse-aware mixing is *bitwise* equal to the dense path, for random
+/// topologies × {TopK, RandK, QuantizeP, Identity}: the engine's
+/// `mix_msgs` (scatter-add over each message's sparse view when present)
+/// must reproduce plain dense `axpy` accumulation over `msgs[j].values`
+/// exactly — this is what licenses the O(deg·k) hot path.
+#[test]
+fn sparse_mixing_bitwise_equals_dense() {
+    use lead::coordinator::engine::mix_msgs;
+    forall(60, 0x706, |g| {
+        let n = g.usize_in(2..=12);
+        let d = g.usize_in(1..=120);
+        let topo = g
+            .choose(&[Topology::Ring, Topology::Star, Topology::Path, Topology::FullyConnected])
+            .clone();
+        let rule = *g.choose(&[
+            MixingRule::UniformNeighbors,
+            MixingRule::MetropolisHastings,
+            MixingRule::LazyMetropolis,
+        ]);
+        let mix = topo.build(n, rule);
+        let k = g.usize_in(1..=d);
+        let codecs: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK::new(k)),
+            Box::new(RandK::new(k, true)),
+            Box::new(QuantizeP::new(2, PNorm::Inf, 32)),
+            Box::new(Identity),
+        ];
+        for c in &codecs {
+            let mut rng = Rng::new(g.case_seed ^ 0xD15C);
+            let msgs: Vec<CompressedMsg> = (0..n)
+                .map(|_| {
+                    let x: Vec<f64> = (0..d).map(|_| g.f64_in(-5.0, 5.0)).collect();
+                    c.compress_alloc(&x, &mut rng)
+                })
+                .collect();
+            for i in 0..n {
+                // Reference: dense accumulation over decoded values, in
+                // the same closed-neighborhood order.
+                let mut dense = vec![0.0f64; d];
+                for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
+                    lead::linalg::axpy(mix.weight(i, j), &msgs[j].values, &mut dense);
+                }
+                let mut sparse = vec![0.0f64; d];
+                mix_msgs(&mix, i, &msgs, &mut sparse);
+                for (t, (a, b)) in dense.iter().zip(&sparse).enumerate() {
+                    prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{}: agent {i} coord {t}: dense {a} vs sparse {b}",
+                        c.name()
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The sparse view, when present, is exactly the nonzeros of `values` in
+/// ascending index order — the invariant `mix_msgs` relies on.
+#[test]
+fn sparse_view_is_canonical_nonzeros() {
+    forall(80, 0x707, |g| {
+        let d = g.usize_in(0..=200);
+        let k = g.usize_in(1..=d.max(1));
+        let codecs: Vec<Box<dyn Compressor>> =
+            vec![Box::new(TopK::new(k)), Box::new(RandK::new(k, g.bool_with(0.5)))];
+        let x: Vec<f64> = (0..d).map(|_| g.f64_in(-8.0, 8.0)).collect();
+        for c in &codecs {
+            let mut rng = Rng::new(g.case_seed);
+            let msg = c.compress_alloc(&x, &mut rng);
+            let sp = msg.sparse.as_ref().expect("sparsifiers must publish a sparse view");
+            let expected: Vec<(u32, f64)> = msg
+                .values
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, &v)| (i as u32, v))
+                .collect();
+            prop_assert!(
+                sp.len() == expected.len()
+                    && sp
+                        .iter()
+                        .zip(&expected)
+                        .all(|(a, b)| a.0 == b.0 && a.1.to_bits() == b.1.to_bits()),
+                "{}: sparse view not canonical (d={d}, k={k})",
+                c.name()
+            );
+            prop_assert!(sp.len() <= k, "{}: more than k entries", c.name());
+        }
         Ok(())
     });
 }
