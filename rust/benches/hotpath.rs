@@ -1,5 +1,7 @@
-//! Microbench: end-to-end coordinator rounds/sec (§Perf, L3), plus the
-//! sparse-mixing benchmark for the paper's headline regime.
+//! Microbench: end-to-end coordinator rounds/sec (§Perf, L3) with the
+//! old-vs-new scheduler A/B, per-phase timing breakdown, and a
+//! machine-readable `BENCH_hotpath.json` at the repo root so the perf
+//! trajectory is tracked across PRs.
 //!
 //! Part 1 — mix phase, dense vs sparse: ring n = 32, d = 10⁵, top-k with
 //! k = d/100. The dense path decodes every message to a d-vector and
@@ -7,64 +9,29 @@
 //! k-entry view in O(deg·k). Same messages, bitwise-identical output —
 //! the speedup is pure representation (target ≥5×, typically ≫).
 //!
-//! Part 2 — full engine rounds/s on the same shape, old hot path (dense
-//! mix + sequential apply) vs new (sparse mix + parallel mix/apply pool),
-//! plus the original LEAD + 2-bit q∞ shapes at 1/4/8 threads.
+//! Part 2 — engine A/B: the pre-PR loop ([`Scheduler::SpawnPerPhase`]:
+//! scoped thread spawns per phase, sequential send, per-round alloc +
+//! comp-err pass) vs the persistent pool loop ([`Scheduler::Persistent`]:
+//! fused produce, zero-alloc steady state). The headline config is
+//! n = 32, d ≈ 10⁴ where spawn/alloc overhead dominates FLOPs (target
+//! ≥1.5× rounds/s); a d = 10⁵ sparse config covers the paper's
+//! large-model regime. Trajectories are bitwise-identical
+//! (`scheduler_modes_bitwise_identical` in the engine tests), so the A/B
+//! measures scheduling alone.
+//!
+//! Run `cargo bench --bench hotpath` (full) or
+//! `cargo bench --bench hotpath -- --smoke` (one short config; wired
+//! into CI so regressions in the harness itself are caught early).
 
 use lead::algorithms::lead::Lead;
 use lead::compress::quantize::QuantizeP;
 use lead::compress::topk::TopK;
 use lead::compress::{CompressedMsg, Compressor, StripSparse};
-use lead::coordinator::engine::{mix_msgs, Engine, EngineConfig};
-use lead::problems::{linreg::LinReg, logreg::LogReg, DataSplit, Problem};
+use lead::coordinator::engine::{mix_msgs, Engine, EngineConfig, Scheduler};
+use lead::coordinator::metrics::PhaseTimes;
+use lead::problems::{linreg::LinReg, logreg::LogReg, quad::Quad, DataSplit};
 use lead::rng::Rng;
 use lead::topology::{MixingRule, Topology};
-
-/// Separable quadratic ½‖x − b_i‖² — an O(d) gradient oracle so the
-/// d = 10⁵ engine benches time the communication path, not the problem.
-struct Quad {
-    n: usize,
-    d: usize,
-    targets: Vec<Vec<f64>>,
-}
-
-impl Quad {
-    fn new(n: usize, d: usize, seed: u64) -> Self {
-        let mut rng = Rng::new(seed);
-        let targets = (0..n)
-            .map(|_| {
-                let mut b = vec![0.0f64; d];
-                rng.fill_normal(&mut b, 1.0);
-                b
-            })
-            .collect();
-        Quad { n, d, targets }
-    }
-}
-
-impl Problem for Quad {
-    fn dim(&self) -> usize {
-        self.d
-    }
-    fn n_agents(&self) -> usize {
-        self.n
-    }
-    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
-        let b = &self.targets[agent];
-        for t in 0..x.len() {
-            out[t] = x[t] - b[t];
-        }
-    }
-    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
-        0.5 * lead::linalg::dist_sq(x, &self.targets[agent])
-    }
-    fn optimum(&self) -> Option<&[f64]> {
-        None
-    }
-    fn name(&self) -> String {
-        format!("quad(n={}, d={})", self.n, self.d)
-    }
-}
 
 /// Part 1: isolated mix phase, all agents, dense vs sparse representation.
 fn bench_mix_phase() {
@@ -120,45 +87,116 @@ fn bench_mix_phase() {
     );
 }
 
-/// Part 2: full engine rounds/s, old hot path vs new, same numerics.
-fn bench_engine_sparse() {
-    let n = 32usize;
-    let d = 100_000usize;
-    let k = d / 100;
-    let rounds = 15usize;
-    let run = |name: &str, threads: usize, comp: Box<dyn Compressor>| -> f64 {
-        let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
-        let mut e = Engine::new(
-            EngineConfig {
-                eta: 0.05,
-                threads,
-                record_every: usize::MAX / 2,
-                ..Default::default()
-            },
-            mix,
-            Box::new(Quad::new(n, d, 3)),
-        );
-        let t = std::time::Instant::now();
-        let rec = e.run(Box::new(Lead::paper_default()), Some(comp), rounds);
-        let secs = t.elapsed().as_secs_f64();
-        println!(
-            "engine     {name:<34} threads={threads}  {:8.2} rounds/s  (consensus {:.2e})",
-            rounds as f64 / secs,
-            rec.last().consensus
-        );
-        secs
-    };
-    let dense_seq =
-        run("quad d=1e5 top-k dense (old path)", 1, Box::new(StripSparse(TopK::new(k))));
-    let sparse_seq = run("quad d=1e5 top-k sparse", 1, Box::new(TopK::new(k)));
-    let dense_par = run("quad d=1e5 top-k dense", 8, Box::new(StripSparse(TopK::new(k))));
-    let sparse_par = run("quad d=1e5 top-k sparse", 8, Box::new(TopK::new(k)));
-    println!(
-        "engine     sparse speedup: {:4.2}x sequential, {:4.2}x at 8 threads, {:4.2}x combined (old 1-thread dense vs new 8-thread sparse)",
-        dense_seq / sparse_seq,
-        dense_par / sparse_par,
-        dense_seq / sparse_par
+/// One engine run under the given scheduler; returns (rounds/s, phases).
+fn timed_run(
+    n: usize,
+    d: usize,
+    rounds: usize,
+    threads: usize,
+    scheduler: Scheduler,
+    comp: Box<dyn Compressor>,
+) -> (f64, PhaseTimes) {
+    let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+    let mut e = Engine::new(
+        EngineConfig {
+            eta: 0.05,
+            threads,
+            record_every: usize::MAX / 2,
+            scheduler,
+            ..Default::default()
+        },
+        mix,
+        Box::new(Quad::new(n, d, 3)),
     );
+    let t = std::time::Instant::now();
+    let rec = e.run(Box::new(Lead::paper_default()), Some(comp), rounds);
+    let secs = t.elapsed().as_secs_f64();
+    let _ = rec.last().consensus; // keep the run observable
+    (rounds as f64 / secs, rec.phases)
+}
+
+struct AbResult {
+    name: String,
+    n: usize,
+    d: usize,
+    threads: usize,
+    rounds: usize,
+    old_rps: f64,
+    new_rps: f64,
+    old_phases: PhaseTimes,
+    new_phases: PhaseTimes,
+}
+
+impl AbResult {
+    fn speedup(&self) -> f64 {
+        self.new_rps / self.old_rps
+    }
+
+    fn to_json(&self) -> String {
+        // Config names are static ASCII literals (no escaping needed);
+        // numbers map non-finite to null so the file always parses.
+        let fin = |x: f64| if x.is_finite() { format!("{x:.3}") } else { "null".into() };
+        format!(
+            "{{\"name\":\"{}\",\"n\":{},\"d\":{},\"threads\":{},\"rounds\":{},\
+             \"old_rounds_per_s\":{},\"new_rounds_per_s\":{},\"speedup\":{},\
+             \"old_phases\":{},\"new_phases\":{}}}",
+            self.name,
+            self.n,
+            self.d,
+            self.threads,
+            self.rounds,
+            fin(self.old_rps),
+            fin(self.new_rps),
+            fin(self.speedup()),
+            self.old_phases.to_json(),
+            self.new_phases.to_json()
+        )
+    }
+}
+
+/// Part 2: full-engine A/B, pre-PR spawn-per-phase loop vs persistent
+/// pool loop, with the legacy run doubling as the per-phase breakdown
+/// (its gradient/send/compress/mix/apply buckets are split; the new
+/// loop fuses the first three into `produce`).
+fn bench_engine_ab(
+    name: &str,
+    n: usize,
+    d: usize,
+    rounds: usize,
+    threads: usize,
+    make_comp: &dyn Fn() -> Box<dyn Compressor>,
+) -> AbResult {
+    // Warm the CPU/allocator on the new path first.
+    let _ = timed_run(n, d, rounds.min(5), threads, Scheduler::Persistent, make_comp());
+    let (old_rps, old_phases) =
+        timed_run(n, d, rounds, threads, Scheduler::SpawnPerPhase, make_comp());
+    let (new_rps, new_phases) = timed_run(n, d, rounds, threads, Scheduler::Persistent, make_comp());
+    let r = AbResult {
+        name: name.to_string(),
+        n,
+        d,
+        threads,
+        rounds,
+        old_rps,
+        new_rps,
+        old_phases,
+        new_phases,
+    };
+    println!(
+        "engine A/B {name:<34} threads={threads}  old {old_rps:8.2} r/s  new {new_rps:8.2} r/s  speedup {:5.2}x",
+        r.speedup()
+    );
+    let p = &old_phases;
+    println!(
+        "           old per-phase totals (s): gradient {:.3}  send {:.3}  compress {:.3}  mix {:.3}  apply {:.3}",
+        p.gradient, p.send, p.compress, p.mix, p.apply
+    );
+    let p = &new_phases;
+    println!(
+        "           new per-phase totals (s): produce {:.3} (fused grad+send+compress)  mix {:.3}  apply {:.3}",
+        p.produce, p.mix, p.apply
+    );
+    r
 }
 
 fn bench(name: &str, problem: Box<dyn lead::problems::Problem>, threads: usize, rounds: usize) {
@@ -182,9 +220,74 @@ fn bench(name: &str, problem: Box<dyn lead::problems::Problem>, threads: usize, 
     );
 }
 
+/// Write the bench record at the repository root (one level above the
+/// crate's manifest, so it lands in the same place regardless of the
+/// invocation directory). The full sweep owns `BENCH_hotpath.json` — the
+/// committed perf-trajectory baseline; smoke runs write a separate
+/// throwaway file so a CI/local smoke can never clobber the baseline.
+fn write_json(results: &[AbResult], smoke: bool) {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level below the repo root")
+        .to_path_buf();
+    let configs: Vec<String> = results.iter().map(|r| r.to_json()).collect();
+    let json = format!(
+        "{{\"schema\":1,\"bench\":\"hotpath\",\"smoke\":{},\"configs\":[{}]}}\n",
+        smoke,
+        configs.join(",")
+    );
+    let name = if smoke { "BENCH_hotpath_smoke.json" } else { "BENCH_hotpath.json" };
+    let path = root.join(name);
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        // CI smoke: one short config proving the A/B harness, the phase
+        // breakdown, and the JSON emission all work end to end.
+        let r = bench_engine_ab("smoke quad d=2e3 q∞-2bit", 16, 2_000, 10, 4, &|| {
+            Box::new(QuantizeP::paper_default())
+        });
+        write_json(&[r], true);
+        return;
+    }
+
     bench_mix_phase();
-    bench_engine_sparse();
+    let mut results = Vec::new();
+    // Headline acceptance config: small-d, spawn/alloc overhead dominates.
+    results.push(bench_engine_ab("quad n=32 d=1e4 q∞-2bit (headline)", 32, 10_000, 40, 8, &|| {
+        Box::new(QuantizeP::paper_default())
+    }));
+    results.push(bench_engine_ab("quad n=32 d=1e4 top-k k=100", 32, 10_000, 40, 8, &|| {
+        Box::new(TopK::new(100))
+    }));
+    // Large-d sparse regime (the paper's many-rounds/large-model axis).
+    results.push(bench_engine_ab("quad n=32 d=1e5 top-k k=1000", 32, 100_000, 15, 8, &|| {
+        Box::new(TopK::new(1000))
+    }));
+    // Dense-vs-sparse representation on the new scheduler (old Part 2).
+    {
+        let (dense_rps, _) = timed_run(
+            32,
+            100_000,
+            15,
+            8,
+            Scheduler::Persistent,
+            Box::new(StripSparse(TopK::new(1000))),
+        );
+        let (sparse_rps, _) =
+            timed_run(32, 100_000, 15, 8, Scheduler::Persistent, Box::new(TopK::new(1000)));
+        println!(
+            "engine     d=1e5 dense {dense_rps:8.2} r/s vs sparse {sparse_rps:8.2} r/s  ({:4.2}x from the sparse view)",
+            sparse_rps / dense_rps
+        );
+    }
+    write_json(&results, false);
+
     for threads in [1usize, 4, 8] {
         bench(
             "linreg d=200 (fig1 shape)",

@@ -18,7 +18,7 @@
 //! which is exactly the engine's mixed channel), so per-neighbor mirrors
 //! never need to be materialized.
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 pub struct ChocoSgd {
@@ -31,6 +31,17 @@ pub struct ChocoSgd {
     s: Mat,
     /// Scratch: x^{k+½} between send and recv.
     xhalf: Mat,
+}
+
+/// Per-agent CHOCO send step over disjoint rows: stash `x^{k+½} = x − ηg`
+/// and broadcast the public-copy difference `x^{k+½} − x̂` (the engine
+/// compresses it into q).
+#[inline]
+fn send_agent(eta: f64, x: &[f64], xh: &[f64], g: &[f64], half: &mut [f64], out0: &mut [f64]) {
+    for t in 0..x.len() {
+        half[t] = x[t] - eta * g[t];
+        out0[t] = half[t] - xh[t];
+    }
 }
 
 /// Per-agent CHOCO apply step over disjoint state rows.
@@ -68,7 +79,7 @@ impl Algorithm for ChocoSgd {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: true }
+        AlgoSpec { channels: 1, compressed: true, reads_own: true }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -80,14 +91,30 @@ impl Algorithm for ChocoSgd {
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        let x = self.x.row(agent);
-        let xh = self.xhat.row(agent);
-        let half = self.xhalf.row_mut(agent);
-        let payload = &mut out[0];
-        for t in 0..x.len() {
-            half[t] = x[t] - ctx.eta * g[t];
-            payload[t] = half[t] - xh[t];
-        }
+        let ChocoSgd { x, xhat, xhalf, .. } = self;
+        send_agent(ctx.eta, x.row(agent), xhat.row(agent), g, xhalf.row_mut(agent), &mut out[0]);
+    }
+
+    fn produce_all(
+        &mut self,
+        ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let eta = ctx.eta;
+        let ChocoSgd { x, xhat, xhalf, .. } = self;
+        let (x, xhat) = (&*x, &*xhat);
+        super::par_agents2(exec, &mut [xhalf], g, payload, |i, rows, gi, pi| match rows {
+            [half] => {
+                grad(i, x.row(i), gi);
+                send_agent(eta, x.row(i), xhat.row(i), gi, half, &mut pi[0]);
+                sink(i, pi);
+            }
+            _ => unreachable!(),
+        });
     }
 
     fn recv(
@@ -109,12 +136,12 @@ impl Algorithm for ChocoSgd {
         );
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let _ = (ctx, g);
         let gamma = self.gamma;
         super::par_agents(
-            threads,
-            vec![&mut self.x, &mut self.xhat, &mut self.s, &mut self.xhalf],
+            exec,
+            &mut [&mut self.x, &mut self.xhat, &mut self.s, &mut self.xhalf],
             |i, rows| match rows {
                 [x, xh, s, half] => {
                     apply_agent(gamma, inbox.own(i, 0), inbox.mix(i, 0), x, xh, s, half)

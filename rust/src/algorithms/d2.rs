@@ -9,13 +9,21 @@
 //! gradients — implemented independently in its history form so the
 //! Prop. 1 equivalence can be *tested* rather than assumed.
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 pub struct D2 {
     x: Mat,
     x_prev: Mat,
     g_prev: Mat,
+}
+
+/// Per-agent D² send step: broadcast `z = 2x − x_prev − η(g − g_prev)`.
+#[inline]
+fn send_agent(eta: f64, x: &[f64], xp: &[f64], gp: &[f64], g: &[f64], out0: &mut [f64]) {
+    for t in 0..x.len() {
+        out0[t] = 2.0 * x[t] - xp[t] - eta * (g[t] - gp[t]);
+    }
 }
 
 /// Per-agent D² apply step: x⁺ = (z + Wz)/2, history shifts.
@@ -54,7 +62,7 @@ impl Algorithm for D2 {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: false }
+        AlgoSpec { channels: 1, compressed: false, reads_own: true }
     }
 
     fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
@@ -69,14 +77,32 @@ impl Algorithm for D2 {
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        // z = 2x − x_prev − ηg + ηg_prev
-        let z = &mut out[0];
-        let x = self.x.row(agent);
-        let xp = self.x_prev.row(agent);
-        let gp = self.g_prev.row(agent);
-        for t in 0..x.len() {
-            z[t] = 2.0 * x[t] - xp[t] - ctx.eta * (g[t] - gp[t]);
-        }
+        send_agent(
+            ctx.eta,
+            self.x.row(agent),
+            self.x_prev.row(agent),
+            self.g_prev.row(agent),
+            g,
+            &mut out[0],
+        );
+    }
+
+    fn produce_all(
+        &mut self,
+        ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let eta = ctx.eta;
+        let (x, xp, gp) = (&self.x, &self.x_prev, &self.g_prev);
+        super::par_agents2(exec, &mut [], g, payload, |i, _rows, gi, pi| {
+            grad(i, x.row(i), gi);
+            send_agent(eta, x.row(i), xp.row(i), gp.row(i), gi, &mut pi[0]);
+            sink(i, pi);
+        });
     }
 
     fn recv(&mut self, _ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
@@ -90,11 +116,11 @@ impl Algorithm for D2 {
         );
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let _ = ctx;
         super::par_agents(
-            threads,
-            vec![&mut self.x, &mut self.x_prev, &mut self.g_prev],
+            exec,
+            &mut [&mut self.x, &mut self.x_prev, &mut self.g_prev],
             |i, rows| match rows {
                 [x, xp, gp] => apply_agent(&g[i], inbox.own(i, 0), inbox.mix(i, 0), x, xp, gp),
                 _ => unreachable!(),

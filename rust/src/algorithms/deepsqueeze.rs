@@ -13,7 +13,7 @@
 //! before the next compression — and it still compresses a full-magnitude
 //! model vector, so its compression error does not vanish (Fig. 1d).
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 pub struct DeepSqueeze {
@@ -22,6 +22,15 @@ pub struct DeepSqueeze {
     x: Mat,
     /// Error-feedback memory e_i.
     e: Mat,
+}
+
+/// Per-agent DeepSqueeze send step: broadcast `v + e = x − ηg + e` (the
+/// engine compresses it into c).
+#[inline]
+fn send_agent(eta: f64, x: &[f64], e: &[f64], g: &[f64], out0: &mut [f64]) {
+    for t in 0..x.len() {
+        out0[t] = x[t] - eta * g[t] + e[t];
+    }
 }
 
 /// Per-agent DeepSqueeze apply step over disjoint state rows.
@@ -60,7 +69,7 @@ impl Algorithm for DeepSqueeze {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: true }
+        AlgoSpec { channels: 1, compressed: true, reads_own: true }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -69,13 +78,25 @@ impl Algorithm for DeepSqueeze {
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        // Broadcast v + e; engine compresses it into c.
-        let x = self.x.row(agent);
-        let e = self.e.row(agent);
-        let payload = &mut out[0];
-        for t in 0..x.len() {
-            payload[t] = x[t] - ctx.eta * g[t] + e[t];
-        }
+        send_agent(ctx.eta, self.x.row(agent), self.e.row(agent), g, &mut out[0]);
+    }
+
+    fn produce_all(
+        &mut self,
+        ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let eta = ctx.eta;
+        let (x, e) = (&self.x, &self.e);
+        super::par_agents2(exec, &mut [], g, payload, |i, _rows, gi, pi| {
+            grad(i, x.row(i), gi);
+            send_agent(eta, x.row(i), e.row(i), gi, &mut pi[0]);
+            sink(i, pi);
+        });
     }
 
     fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
@@ -90,10 +111,10 @@ impl Algorithm for DeepSqueeze {
         );
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let gamma = self.gamma;
         let eta = ctx.eta;
-        super::par_agents(threads, vec![&mut self.x, &mut self.e], |i, rows| match rows {
+        super::par_agents(exec, &mut [&mut self.x, &mut self.e], |i, rows| match rows {
             [x, e] => apply_agent(gamma, eta, &g[i], inbox.own(i, 0), inbox.mix(i, 0), x, e),
             _ => unreachable!(),
         });

@@ -9,7 +9,7 @@
 //! x* under data heterogeneity (paper §3.1) — our integration tests check
 //! precisely that bias, which LEAD/NIDS eliminate.
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 pub struct Dgd {
@@ -41,7 +41,8 @@ impl Algorithm for Dgd {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: false }
+        // recv uses only the mixed channel, never its own decoded payload.
+        AlgoSpec { channels: 1, compressed: false, reads_own: false }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -52,13 +53,30 @@ impl Algorithm for Dgd {
         out[0].copy_from_slice(self.x.row(agent));
     }
 
+    fn produce_all(
+        &mut self,
+        _ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let x = &self.x;
+        super::par_agents2(exec, &mut [], g, payload, |i, _rows, gi, pi| {
+            grad(i, x.row(i), gi);
+            pi[0].copy_from_slice(x.row(i));
+            sink(i, pi);
+        });
+    }
+
     fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], _self_dec: &[&[f64]], mixed: &[&[f64]]) {
         apply_agent(ctx.eta, g, mixed[0], self.x.row_mut(agent));
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let eta = ctx.eta;
-        super::par_agents(threads, vec![&mut self.x], |i, rows| match rows {
+        super::par_agents(exec, &mut [&mut self.x], |i, rows| match rows {
             [x] => apply_agent(eta, &g[i], inbox.mix(i, 0), x),
             _ => unreachable!(),
         });

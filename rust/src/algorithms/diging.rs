@@ -15,7 +15,7 @@
 //! start of the next round; we therefore *complete* y lazily in `send`
 //! using the fresh gradient before broadcasting.
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 pub struct DiGing {
@@ -24,6 +24,21 @@ pub struct DiGing {
     /// `+ g^{k+1} − g^k` completion.
     y: Mat,
     g_prev: Mat,
+}
+
+/// Per-agent DIGing send step over disjoint rows: lazily complete the
+/// tracker `y^k = (Wy^{k−1})_i + g^k − g^{k−1}` with the fresh gradient,
+/// shift the gradient history, and broadcast (x, y) on two channels.
+#[inline]
+fn send_agent(round: usize, x: &[f64], g: &[f64], y: &mut [f64], gp: &mut [f64], out: &mut [Vec<f64>]) {
+    if round > 1 {
+        for t in 0..y.len() {
+            y[t] += g[t] - gp[t];
+        }
+    }
+    gp.copy_from_slice(g);
+    out[0].copy_from_slice(x);
+    out[1].copy_from_slice(y);
 }
 
 /// Per-agent DIGing apply step: x⁺ = (Wx)_i − η y_i (own completed
@@ -60,7 +75,8 @@ impl Algorithm for DiGing {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 2, compressed: false }
+        // recv uses only the mixed channels, never its own payloads.
+        AlgoSpec { channels: 2, compressed: false, reads_own: false }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
@@ -70,17 +86,30 @@ impl Algorithm for DiGing {
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        // Complete y^k = (Wy^{k−1})_i + g^k − g^{k−1} with the fresh g.
-        if ctx.round > 1 {
-            let y = self.y.row_mut(agent);
-            let gp = self.g_prev.row(agent);
-            for t in 0..y.len() {
-                y[t] += g[t] - gp[t];
+        let DiGing { x, y, g_prev } = self;
+        send_agent(ctx.round, x.row(agent), g, y.row_mut(agent), g_prev.row_mut(agent), out);
+    }
+
+    fn produce_all(
+        &mut self,
+        ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let round = ctx.round;
+        let DiGing { x, y, g_prev } = self;
+        let x = &*x;
+        super::par_agents2(exec, &mut [y, g_prev], g, payload, |i, rows, gi, pi| match rows {
+            [y, gp] => {
+                grad(i, x.row(i), gi);
+                send_agent(round, x.row(i), gi, y, gp, pi);
+                sink(i, pi);
             }
-        }
-        self.g_prev.row_mut(agent).copy_from_slice(g);
-        out[0].copy_from_slice(self.x.row(agent));
-        out[1].copy_from_slice(self.y.row(agent));
+            _ => unreachable!(),
+        });
     }
 
     fn recv(
@@ -94,10 +123,10 @@ impl Algorithm for DiGing {
         apply_agent(ctx.eta, mixed[0], mixed[1], self.x.row_mut(agent), self.y.row_mut(agent));
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let _ = g;
         let eta = ctx.eta;
-        super::par_agents(threads, vec![&mut self.x, &mut self.y], |i, rows| match rows {
+        super::par_agents(exec, &mut [&mut self.x, &mut self.y], |i, rows| match rows {
             [x, y] => apply_agent(eta, inbox.mix(i, 0), inbox.mix(i, 1), x, y),
             _ => unreachable!(),
         });

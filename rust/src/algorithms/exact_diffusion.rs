@@ -10,12 +10,23 @@
 //! Another member of the primal–dual family LEAD recovers (Remark 3 /
 //! Prop. 1, via A = (I+W)/2, M = ηI in Yuan et al. Eq. 97).
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 pub struct ExactDiffusion {
     x: Mat,
     psi: Mat,
+}
+
+/// Per-agent adapt+correct step over disjoint rows: `ψ⁺ = x − ηg`,
+/// broadcast `φ = ψ⁺ + x − ψ`, then shift ψ.
+#[inline]
+fn send_agent(eta: f64, x: &[f64], g: &[f64], psi: &mut [f64], out0: &mut [f64]) {
+    for t in 0..x.len() {
+        let psi_new = x[t] - eta * g[t];
+        out0[t] = psi_new + x[t] - psi[t];
+        psi[t] = psi_new;
+    }
 }
 
 /// Per-agent combine step: x = (φ + Wφ)/2.
@@ -44,7 +55,7 @@ impl Algorithm for ExactDiffusion {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: false }
+        AlgoSpec { channels: 1, compressed: false, reads_own: true }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -54,14 +65,30 @@ impl Algorithm for ExactDiffusion {
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        let x = self.x.row(agent);
-        let psi_old = self.psi.row_mut(agent);
-        let phi = &mut out[0];
-        for t in 0..x.len() {
-            let psi_new = x[t] - ctx.eta * g[t];
-            phi[t] = psi_new + x[t] - psi_old[t];
-            psi_old[t] = psi_new;
-        }
+        let ExactDiffusion { x, psi } = self;
+        send_agent(ctx.eta, x.row(agent), g, psi.row_mut(agent), &mut out[0]);
+    }
+
+    fn produce_all(
+        &mut self,
+        ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let eta = ctx.eta;
+        let ExactDiffusion { x, psi } = self;
+        let x = &*x;
+        super::par_agents2(exec, &mut [psi], g, payload, |i, rows, gi, pi| match rows {
+            [psi] => {
+                grad(i, x.row(i), gi);
+                send_agent(eta, x.row(i), gi, psi, &mut pi[0]);
+                sink(i, pi);
+            }
+            _ => unreachable!(),
+        });
     }
 
     fn recv(
@@ -75,9 +102,9 @@ impl Algorithm for ExactDiffusion {
         apply_agent(self_dec[0], mixed[0], self.x.row_mut(agent));
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let _ = (ctx, g);
-        super::par_agents(threads, vec![&mut self.x], |i, rows| match rows {
+        super::par_agents(exec, &mut [&mut self.x], |i, rows| match rows {
             [x] => apply_agent(inbox.own(i, 0), inbox.mix(i, 0), x),
             _ => unreachable!(),
         });

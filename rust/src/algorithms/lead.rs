@@ -20,7 +20,7 @@
 //!   `x̄^{k+1} = x̄^k − η ḡ^k` exact (paper Eq. 3);
 //! * with C = 0 and γ = 1, the trajectory equals NIDS / D² (Prop. 1).
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 /// LEAD hyper-parameters. The paper fixes `α = 0.5, γ = 1.0` for every
@@ -48,6 +48,18 @@ pub struct Lead {
     /// Scratch: y_i of the current round (written in send, read-only in
     /// the apply phase and by `compression_reference`).
     y: Mat,
+}
+
+/// Per-agent LEAD send step (Alg. 1 lines 8–9) over disjoint rows:
+/// `y = x − ηg − ηd`, broadcast `y − h` (the engine compresses it). The
+/// single definition shared by the sequential `send` and the fused
+/// `produce_all` paths.
+#[inline]
+fn send_agent(eta: f64, x: &[f64], d: &[f64], h: &[f64], g: &[f64], y: &mut [f64], out0: &mut [f64]) {
+    y.copy_from_slice(x);
+    crate::linalg::axpy(-eta, g, y);
+    crate::linalg::axpy(-eta, d, y);
+    crate::linalg::sub(y, h, out0);
 }
 
 /// Per-agent LEAD apply step (Alg. 1 lines 14–17) over disjoint state
@@ -118,7 +130,7 @@ impl Algorithm for Lead {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: true }
+        AlgoSpec { channels: 1, compressed: true, reads_own: true }
     }
 
     fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
@@ -146,13 +158,30 @@ impl Algorithm for Lead {
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        let y = self.y.row_mut(agent);
-        // y = x − η g − η d
-        y.copy_from_slice(self.x.row(agent));
-        crate::linalg::axpy(-ctx.eta, g, y);
-        crate::linalg::axpy(-ctx.eta, self.d.row(agent), y);
-        // Broadcast the *difference* y − h; the engine compresses it.
-        crate::linalg::sub(y, self.h.row(agent), &mut out[0]);
+        let Lead { x, d, h, y, .. } = self;
+        send_agent(ctx.eta, x.row(agent), d.row(agent), h.row(agent), g, y.row_mut(agent), &mut out[0]);
+    }
+
+    fn produce_all(
+        &mut self,
+        ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let eta = ctx.eta;
+        let Lead { x, d, h, y, .. } = self;
+        let (x, d, h) = (&*x, &*d, &*h);
+        super::par_agents2(exec, &mut [y], g, payload, |i, rows, gi, pi| match rows {
+            [y] => {
+                grad(i, x.row(i), gi);
+                send_agent(eta, x.row(i), d.row(i), h.row(i), gi, y, &mut pi[0]);
+                sink(i, pi);
+            }
+            _ => unreachable!(),
+        });
     }
 
     fn recv(
@@ -176,12 +205,12 @@ impl Algorithm for Lead {
         );
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let params = self.params;
         let eta = ctx.eta;
         super::par_agents(
-            threads,
-            vec![&mut self.x, &mut self.d, &mut self.h, &mut self.hw],
+            exec,
+            &mut [&mut self.x, &mut self.d, &mut self.h, &mut self.hw],
             |i, rows| match rows {
                 [x, dvar, h, hw] => {
                     let (own, mixed) = (inbox.own(i, 0), inbox.mix(i, 0));

@@ -12,26 +12,31 @@
 //!
 //! Round protocol driven by the engine:
 //!
-//! 1. engine computes `g_i = ∇f_i(x_i; ξ_i)` once per agent (LEAD reuses
-//!    the same sample in its two updates — paper Alg. 1 lines 4 & 7);
-//! 2. `send(i, g_i)` returns the per-channel payload vectors of agent i;
-//! 3. the engine compresses channel 0 (if the algorithm opts in), counts
-//!    wire bits, decodes, and forms the weighted mixes;
-//! 4. `recv_all(g, inbox, threads)` applies the local updates — in
-//!    parallel over agents when `threads > 1`, which is safe because
-//!    per-agent state is disjoint (see [`par_agents`]).
+//! 1. [`Algorithm::produce_all`] — the fused *produce* phase, one parallel
+//!    task per agent: evaluate `g_i = ∇f_i(x_i; ξ_i)` through the
+//!    engine-supplied gradient oracle (LEAD reuses the same sample in its
+//!    two updates — paper Alg. 1 lines 4 & 7), assemble the broadcast
+//!    payload(s), and hand them to the engine's `sink` (channel-0
+//!    compression + wire-bit accounting) without an intervening barrier;
+//! 2. the engine forms the W-weighted mixes (sparse-aware on channel 0);
+//! 3. [`Algorithm::recv_all`] applies the local updates — in parallel over
+//!    agents, which is safe because per-agent state is disjoint (see
+//!    [`par_agents`]).
 //!
-//! # State layout and the parallel apply phase
+//! The sequential [`Algorithm::send`] / [`Algorithm::recv`] pair is kept
+//! for harnesses that probe invariants between single-agent steps; each
+//! algorithm expresses its per-agent send and apply updates once as
+//! plain-function kernels, and both the sequential and fused/parallel
+//! paths call those kernels, so they cannot drift apart.
 //!
-//! Per-agent state lives in contiguous row-major [`Mat`] buffers (one row
-//! per agent) rather than `Vec<Vec<f64>>`: the hot apply loops then stream
-//! over cache-friendly, auto-vectorizable rows, and [`par_agents`] can
-//! hand disjoint row bundles to a scoped worker pool without any
-//! synchronization. Each algorithm expresses its per-agent update once as
-//! a plain-function kernel over those rows; the sequential [`Algorithm::
-//! recv`] path (used by invariant tests that probe state mid-round) and
-//! the parallel [`Algorithm::recv_all`] path both call that kernel, so
-//! they cannot drift apart.
+//! # State layout and the parallel phases
+//!
+//! Per-agent state lives in contiguous row-major [`crate::linalg::Mat`]
+//! buffers (one row
+//! per agent) rather than `Vec<Vec<f64>>`: the hot loops then stream over
+//! cache-friendly, auto-vectorizable rows, and [`par_agents`] /
+//! [`par_agents2`] can hand disjoint row bundles to the worker pool
+//! (`crate::pool`) without any synchronization or per-round allocation.
 
 pub mod choco;
 pub mod d2;
@@ -43,8 +48,10 @@ pub mod lead;
 pub mod nids;
 pub mod qdgd;
 
-use crate::linalg::Mat;
+use crate::compress::CompressedMsg;
 use crate::topology::MixingMatrix;
+
+pub use crate::pool::{par_agents, par_agents2, Exec, WorkerPool};
 
 /// Static description the engine needs before the first round.
 #[derive(Clone, Debug)]
@@ -56,6 +63,12 @@ pub struct AlgoSpec {
     /// Non-compressed baselines (DGD, NIDS, …) set this to false and are
     /// billed 32 bits/element.
     pub compressed: bool,
+    /// Whether the apply phase consults the agent's *own* decoded
+    /// channel-0 payload ([`Inbox::own`]). When false, the engine may
+    /// skip materializing the dense decoded vector of sparse messages
+    /// entirely (§Perf) — so this MUST be true for any algorithm whose
+    /// `recv`/`recv_all` reads `inbox.own(i, 0)`.
+    pub reads_own: bool,
 }
 
 /// Per-round immutable context handed to the algorithm.
@@ -67,53 +80,89 @@ pub struct Ctx<'a> {
     pub eta: f64,
 }
 
-/// The per-round received communication, assembled once by the engine (or
-/// a test harness) and consumed by [`Algorithm::recv_all`].
+/// The per-round received communication, consumed by
+/// [`Algorithm::recv_all`].
 ///
-/// Both views are per-agent, per-channel borrowed slices, so the inbox is
-/// `Sync` and can be read concurrently by the apply-phase worker pool.
+/// A zero-allocation *view* over the engine's reusable round buffers
+/// (§Perf): constructing one copies three references, and the accessors
+/// resolve per (agent, channel) on demand. When the engine compressed
+/// channel 0, `decoded0` overrides the raw payload with the decoded
+/// messages every receiver reconstructs.
 pub struct Inbox<'a> {
-    /// `self_dec[i][c]` — agent i's own decoded channel-c payload
-    /// (== the sent payload when uncompressed).
-    pub self_dec: Vec<Vec<&'a [f64]>>,
+    /// Raw per-agent, per-channel payloads as sent.
+    payload: &'a [Vec<Vec<f64>>],
     /// `mixed[i][c] = Σ_{j∈N_i∪{i}} w_ij · decode(payload_j[c])`.
-    pub mixed: Vec<Vec<&'a [f64]>>,
+    mixed: &'a [Vec<Vec<f64>>],
+    /// Decoded channel-0 messages (compressed runs only).
+    decoded0: Option<&'a [CompressedMsg]>,
 }
 
 impl<'a> Inbox<'a> {
     /// Assemble an inbox from raw (uncompressed) payloads and per-agent
-    /// mixes — the harness case where every agent's own decoded payload is
-    /// just what it sent. The engine builds its view by hand instead, to
-    /// splice decoded channel-0 messages in front of the raw payloads.
+    /// mixes — every agent's own decoded payload is just what it sent.
     pub fn from_payloads(payload: &'a [Vec<Vec<f64>>], mixed: &'a [Vec<Vec<f64>>]) -> Inbox<'a> {
-        Inbox {
-            self_dec: payload
-                .iter()
-                .map(|p| p.iter().map(|v| v.as_slice()).collect())
-                .collect(),
-            mixed: mixed.iter().map(|a| a.iter().map(|v| v.as_slice()).collect()).collect(),
-        }
+        Inbox { payload, mixed, decoded0: None }
+    }
+
+    /// Engine view: decoded channel-0 messages spliced in front of the
+    /// raw payloads. Messages must have a valid dense view whenever the
+    /// algorithm's spec sets [`AlgoSpec::reads_own`] (the engine
+    /// materializes it inside the produce phase).
+    pub fn with_decoded0(
+        payload: &'a [Vec<Vec<f64>>],
+        mixed: &'a [Vec<Vec<f64>>],
+        msgs: &'a [CompressedMsg],
+    ) -> Inbox<'a> {
+        Inbox { payload, mixed, decoded0: Some(msgs) }
     }
 
     /// Agent i's own decoded channel-c payload.
     #[inline]
     pub fn own(&self, agent: usize, channel: usize) -> &'a [f64] {
-        self.self_dec[agent][channel]
+        match self.decoded0 {
+            Some(msgs) if channel == 0 => {
+                let m = &msgs[agent];
+                // Hard assert (one predictable branch per agent per round):
+                // a mis-declared `reads_own: false` would otherwise return
+                // a stale previous-round vector and silently corrupt the
+                // trajectory in release builds.
+                assert!(
+                    !m.dense_stale,
+                    "Inbox::own on a stale dense view — the algorithm must set \
+                     AlgoSpec::reads_own so the engine materializes it"
+                );
+                &m.values
+            }
+            _ => &self.payload[agent][channel],
+        }
     }
 
     /// The W-weighted channel-c mix delivered to agent i.
     #[inline]
     pub fn mix(&self, agent: usize, channel: usize) -> &'a [f64] {
-        self.mixed[agent][channel]
+        &self.mixed[agent][channel]
     }
 }
+
+/// Per-agent gradient oracle handed to [`Algorithm::produce_all`]:
+/// `grad(agent, x_agent, out)` evaluates `∇f_agent` at `x_agent` into
+/// `out` (full or mini-batch — the engine decides; batch indices are
+/// pre-drawn in agent order so the RNG stream is schedule-independent).
+pub type GradFn<'e> = &'e (dyn Fn(usize, &[f64], &mut [f64]) + Sync);
+
+/// Per-agent payload sink handed to [`Algorithm::produce_all`]:
+/// `sink(agent, payload_agent)` compresses/accounts the just-assembled
+/// payload. The engine relies on it being invoked **exactly once per
+/// agent**, each agent from a single worker (it writes per-agent engine
+/// buffers through that index).
+pub type SinkFn<'e> = &'e (dyn Fn(usize, &mut [Vec<f64>]) + Sync);
 
 /// A decentralized algorithm.
 ///
 /// The struct owns all per-agent state (x_i, duals, error memories, ...)
-/// as row-major [`Mat`]s — one row per agent. `Sync` is required so the
-/// engine's worker pool can read iterates (`x(i)`) concurrently during the
-/// gradient phase and apply per-agent updates concurrently in `recv_all`.
+/// as row-major [`crate::linalg::Mat`]s — one row per agent. `Sync` is required so the
+/// engine's worker pool can read iterates (`x(i)`) concurrently and apply
+/// per-agent updates concurrently in `produce_all` / `recv_all`.
 pub trait Algorithm: Send + Sync {
     fn name(&self) -> String;
 
@@ -125,7 +174,40 @@ pub trait Algorithm: Send + Sync {
 
     /// Produce the payload(s) agent i broadcasts this round, given the
     /// fresh gradient `g`. Returns `spec().channels` vectors via `out`.
+    /// Sequential path — kept for harnesses; the engine drives
+    /// [`produce_all`]. Implementations may only touch per-agent state
+    /// rows (plus shared reads), so the fused parallel path stays
+    /// equivalent.
+    ///
+    /// [`produce_all`]: Algorithm::produce_all
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]);
+
+    /// Fused produce phase: for every agent, evaluate the gradient via
+    /// `grad`, assemble the payload(s), and hand them to `sink` — one
+    /// task per agent, parallel over `exec`. Implementations override
+    /// this with a [`par_agents2`]-based version; the default is the
+    /// sequential loop.
+    ///
+    /// Contract: bitwise-equivalent to `grad(i, x(i), g[i]); send(i);
+    /// sink(i)` for agents `0..n` in order (per-agent work touches
+    /// disjoint state and no RNG), and `sink` is invoked exactly once per
+    /// agent.
+    fn produce_all(
+        &mut self,
+        ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let _ = exec;
+        for i in 0..g.len() {
+            grad(i, self.x(i), &mut g[i]);
+            self.send(ctx, i, &g[i], &mut payload[i]);
+            sink(i, &mut payload[i]);
+        }
+    }
 
     /// Apply the received communication for ONE agent: `self_dec[c]` is
     /// agent i's own decoded channel-c payload, `mixed[c]` the W-weighted
@@ -144,18 +226,22 @@ pub trait Algorithm: Send + Sync {
 
     /// Apply the received communication for ALL agents. Implementations
     /// override this with a [`par_agents`]-based version that updates
-    /// agents on `threads` workers; the default falls back to the
-    /// sequential per-agent [`recv`].
+    /// agents across `exec`'s workers; the default falls back to the
+    /// sequential per-agent [`recv`] (and, unlike the overrides, is not
+    /// allocation-free).
     ///
     /// Contract: the result must be bitwise-identical to calling `recv`
     /// for agents `0..n` in order (per-agent updates touch disjoint state
     /// and no RNG, so scheduling cannot change the trajectory).
     ///
     /// [`recv`]: Algorithm::recv
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
-        let _ = threads;
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
+        let _ = exec;
+        let ch = self.spec().channels;
         for (i, gi) in g.iter().enumerate() {
-            self.recv(ctx, i, gi, &inbox.self_dec[i], &inbox.mixed[i]);
+            let own: Vec<&[f64]> = (0..ch).map(|c| inbox.own(i, c)).collect();
+            let mixed: Vec<&[f64]> = (0..ch).map(|c| inbox.mix(i, c)).collect();
+            self.recv(ctx, i, gi, &own, &mixed);
         }
     }
 
@@ -172,63 +258,6 @@ pub trait Algorithm: Send + Sync {
     }
 }
 
-/// Run `f(i, rows)` for every agent i, where `rows[m]` is agent i's row of
-/// `mats[m]` — sequentially when `threads == 1`, otherwise chunked across
-/// a scoped worker pool.
-///
-/// Safety model: each `Mat` is split into disjoint per-thread row ranges
-/// (`chunks_mut`), so no two workers ever alias state; `f` receives only
-/// agent i's rows plus whatever `Sync` references it captured. Combined
-/// with the no-RNG contract of [`Algorithm::recv_all`], the parallel
-/// schedule is bitwise-equal to the sequential one.
-pub fn par_agents<F>(threads: usize, mats: Vec<&mut Mat>, f: F)
-where
-    F: Fn(usize, &mut [&mut [f64]]) + Sync,
-{
-    let n = mats.first().map_or(0, |m| m.rows);
-    debug_assert!(mats.iter().all(|m| m.rows == n), "par_agents: agent-count mismatch");
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || mats.iter().any(|m| m.cols == 0) {
-        let mut mats = mats;
-        for i in 0..n {
-            let mut rows: Vec<&mut [f64]> = mats.iter_mut().map(|m| m.row_mut(i)).collect();
-            f(i, &mut rows);
-        }
-        return;
-    }
-    let widths: Vec<usize> = mats.iter().map(|m| m.cols).collect();
-    let chunk = n.div_ceil(threads);
-    // bundles[t][m] = thread t's contiguous row range of mats[m].
-    let mut bundles: Vec<Vec<&mut [f64]>> = Vec::new();
-    for m in mats {
-        let w = chunk * m.cols;
-        for (t, ch) in m.data.chunks_mut(w).enumerate() {
-            if bundles.len() <= t {
-                bundles.push(Vec::new());
-            }
-            bundles[t].push(ch);
-        }
-    }
-    std::thread::scope(|s| {
-        for (t, mut bundle) in bundles.into_iter().enumerate() {
-            let base = t * chunk;
-            let f = &f;
-            let widths = &widths;
-            s.spawn(move || {
-                let rows_here = bundle[0].len() / widths[0];
-                for off in 0..rows_here {
-                    let mut rows: Vec<&mut [f64]> = bundle
-                        .iter_mut()
-                        .zip(widths.iter())
-                        .map(|(ch, &w)| &mut ch[off * w..(off + 1) * w])
-                        .collect();
-                    f(base + off, &mut rows);
-                }
-            });
-        }
-    });
-}
-
 /// Helper used by several algorithms: allocate n copies of a zero vector.
 pub(crate) fn zeros(n: usize, d: usize) -> Vec<Vec<f64>> {
     vec![vec![0.0f64; d]; n]
@@ -238,7 +267,8 @@ pub mod testutil {
     //! A miniature reference engine used by per-algorithm unit tests
     //! (the real engines live in `coordinator` and get their own tests;
     //! this one is deliberately simple — full mixing, no compression —
-    //! but drives the same `recv_all` apply phase the coordinator uses).
+    //! but drives the same fused `produce_all` and parallel `recv_all`
+    //! phases the coordinator uses).
 
     use super::*;
     use crate::problems::Problem;
@@ -255,9 +285,10 @@ pub mod testutil {
         run_plain_threads(algo, problem, mix, eta, rounds, 1)
     }
 
-    /// [`run_plain`] with an explicit apply-phase thread count — used by
-    /// the parallel-equals-sequential tests to pin the `recv_all`
-    /// contract without going through the full engine.
+    /// [`run_plain`] with an explicit thread count (a private
+    /// [`WorkerPool`] is stood up when > 1) — used by the
+    /// parallel-equals-sequential tests to pin the `produce_all` and
+    /// `recv_all` contracts without going through the full engine.
     pub fn run_plain_threads(
         algo: &mut dyn Algorithm,
         problem: &dyn Problem,
@@ -266,6 +297,11 @@ pub mod testutil {
         rounds: usize,
         threads: usize,
     ) -> Vec<Vec<f64>> {
+        let pool = (threads > 1).then(|| WorkerPool::new(threads));
+        let exec = match &pool {
+            Some(p) => Exec::pool(p),
+            None => Exec::seq(),
+        };
         let n = problem.n_agents();
         let d = problem.dim();
         let spec = algo.spec();
@@ -278,15 +314,11 @@ pub mod testutil {
         algo.init(&ctx0, &x0, &g);
         let mut payload = vec![vec![vec![0.0f64; d]; spec.channels]; n];
         let mut mixed_all = vec![vec![vec![0.0f64; d]; spec.channels]; n];
+        let grad = |i: usize, x: &[f64], out: &mut [f64]| problem.grad_full(i, x, out);
+        let sink = |_i: usize, _p: &mut [Vec<f64>]| {};
         for round in 1..=rounds {
             let ctx = Ctx { mix, round, eta };
-            for i in 0..n {
-                problem.grad_full(i, algo.x(i), &mut g[i]);
-            }
-            for i in 0..n {
-                let gi = g[i].clone();
-                algo.send(&ctx, i, &gi, &mut payload[i]);
-            }
+            algo.produce_all(&ctx, &grad, &mut g, &mut payload, &sink, exec);
             for (i, mixed) in mixed_all.iter_mut().enumerate() {
                 for (c, mx) in mixed.iter_mut().enumerate() {
                     mx.fill(0.0);
@@ -296,7 +328,7 @@ pub mod testutil {
                 }
             }
             let inbox = Inbox::from_payloads(&payload, &mixed_all);
-            algo.recv_all(&ctx, &g, &inbox, threads);
+            algo.recv_all(&ctx, &g, &inbox, exec);
         }
         (0..n).map(|i| algo.x(i).to_vec()).collect()
     }
@@ -313,12 +345,14 @@ pub mod testutil {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat;
 
-    /// Every algorithm's recv_all closure must be schedule-invariant:
-    /// threads > 1 (including counts that don't divide n and exceed n)
-    /// reproduces the sequential trajectory bitwise. This is the
-    /// per-algorithm wiring check (slice-pattern order, channel indices);
-    /// the chunking mechanism itself is covered below.
+    /// Every algorithm's fused produce + recv_all closures must be
+    /// schedule-invariant: threads > 1 (including counts that don't
+    /// divide n and exceed n) reproduces the sequential trajectory
+    /// bitwise. This is the per-algorithm wiring check (slice-pattern
+    /// order, channel indices); the chunking mechanism itself is covered
+    /// in `crate::pool`.
     #[test]
     fn all_algorithms_recv_all_parallel_equals_sequential() {
         use crate::problems::linreg::LinReg;
@@ -353,15 +387,77 @@ mod tests {
         }
     }
 
+    /// The fused produce path must equal the split sequential path
+    /// (grad → send per agent) for every algorithm — payloads, gradients,
+    /// and post-send state all bitwise.
+    #[test]
+    fn produce_all_equals_sequential_grad_then_send() {
+        use crate::problems::linreg::LinReg;
+        use crate::problems::Problem;
+        use crate::topology::{MixingRule, Topology};
+        let p = LinReg::synthetic(8, 30, 0.1, 5);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let builders: Vec<(&str, fn() -> Box<dyn Algorithm>)> = vec![
+            ("lead", || Box::new(lead::Lead::paper_default())),
+            ("diging", || Box::new(diging::DiGing::new())),
+            ("choco", || Box::new(choco::ChocoSgd::new(0.8))),
+            ("exact_diffusion", || Box::new(exact_diffusion::ExactDiffusion::new())),
+        ];
+        let n = 8;
+        let d = p.dim();
+        for (name, build) in builders {
+            let setup = |algo: &mut dyn Algorithm| {
+                let x0 = zeros(n, d);
+                let mut g = zeros(n, d);
+                for i in 0..n {
+                    p.grad_full(i, &x0[i], &mut g[i]);
+                }
+                algo.init(&Ctx { mix: &mix, round: 0, eta: 0.05 }, &x0, &g);
+            };
+            // Sequential reference.
+            let mut a = build();
+            setup(&mut *a);
+            let ctx = Ctx { mix: &mix, round: 1, eta: 0.05 };
+            let ch = a.spec().channels;
+            let mut g_ref = zeros(n, d);
+            let mut pay_ref = vec![vec![vec![0.0f64; d]; ch]; n];
+            for i in 0..n {
+                p.grad_full(i, a.x(i), &mut g_ref[i]);
+                let gi = g_ref[i].clone();
+                a.send(&ctx, i, &gi, &mut pay_ref[i]);
+            }
+            // Fused parallel path.
+            let pool = WorkerPool::new(3);
+            let mut b = build();
+            setup(&mut *b);
+            let mut g_fused = zeros(n, d);
+            let mut pay_fused = vec![vec![vec![0.0f64; d]; ch]; n];
+            let grad = |i: usize, x: &[f64], out: &mut [f64]| p.grad_full(i, x, out);
+            let sink = |_i: usize, _p: &mut [Vec<f64>]| {};
+            b.produce_all(&ctx, &grad, &mut g_fused, &mut pay_fused, &sink, Exec::pool(&pool));
+            for i in 0..n {
+                for (u, v) in g_ref[i].iter().zip(&g_fused[i]) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{name}: gradient drift agent {i}");
+                }
+                for c in 0..ch {
+                    for (u, v) in pay_ref[i][c].iter().zip(&pay_fused[i][c]) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{name}: payload drift agent {i} ch {c}");
+                    }
+                }
+            }
+        }
+    }
+
     /// par_agents must visit every agent exactly once with its own rows,
     /// for any thread count (including thread counts above n).
     #[test]
     fn par_agents_covers_all_rows_disjointly() {
         for n in [1usize, 3, 7, 8] {
             for threads in [1usize, 2, 3, 8, 16] {
+                let pool = WorkerPool::new(threads);
                 let mut a = Mat::zeros(n, 4);
                 let mut b = Mat::zeros(n, 2);
-                par_agents(threads, vec![&mut a, &mut b], |i, rows| match rows {
+                par_agents(Exec::pool(&pool), &mut [&mut a, &mut b], |i, rows| match rows {
                     [ra, rb] => {
                         for v in ra.iter_mut() {
                             *v += (i + 1) as f64;
@@ -383,10 +479,11 @@ mod tests {
     /// Zero-width state (d = 0) must not panic (degenerate chunk size).
     #[test]
     fn par_agents_handles_zero_cols() {
+        let pool = WorkerPool::new(4);
         let mut a = Mat::zeros(4, 0);
         let visited = std::sync::atomic::AtomicUsize::new(0);
         let v = &visited;
-        par_agents(4, vec![&mut a], |_, _| {
+        par_agents(Exec::pool(&pool), &mut [&mut a], |_, _| {
             v.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         });
         assert_eq!(visited.load(std::sync::atomic::Ordering::Relaxed), 4);

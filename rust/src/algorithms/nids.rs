@@ -10,12 +10,20 @@
 //! Cor. 3) — an equality our integration tests verify trajectory-for-
 //! trajectory against both [`super::lead::Lead`] and [`super::d2::D2`].
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 pub struct Nids {
     x: Mat,
     d: Mat,
+}
+
+/// Per-agent NIDS send step: broadcast `y = x − ηg − ηd` (uncompressed).
+#[inline]
+fn send_agent(eta: f64, x: &[f64], d: &[f64], g: &[f64], out0: &mut [f64]) {
+    out0.copy_from_slice(x);
+    crate::linalg::axpy(-eta, g, out0);
+    crate::linalg::axpy(-eta, d, out0);
 }
 
 /// Per-agent NIDS apply step over disjoint state rows.
@@ -51,7 +59,7 @@ impl Algorithm for Nids {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: false }
+        AlgoSpec { channels: 1, compressed: false, reads_own: true }
     }
 
     fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
@@ -65,11 +73,25 @@ impl Algorithm for Nids {
     }
 
     fn send(&mut self, ctx: &Ctx, agent: usize, g: &[f64], out: &mut [Vec<f64>]) {
-        // Broadcast y = x − ηg − ηd (uncompressed).
-        let y = &mut out[0];
-        y.copy_from_slice(self.x.row(agent));
-        crate::linalg::axpy(-ctx.eta, g, y);
-        crate::linalg::axpy(-ctx.eta, self.d.row(agent), y);
+        send_agent(ctx.eta, self.x.row(agent), self.d.row(agent), g, &mut out[0]);
+    }
+
+    fn produce_all(
+        &mut self,
+        ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let eta = ctx.eta;
+        let (x, dv) = (&self.x, &self.d);
+        super::par_agents2(exec, &mut [], g, payload, |i, _rows, gi, pi| {
+            grad(i, x.row(i), gi);
+            send_agent(eta, x.row(i), dv.row(i), gi, &mut pi[0]);
+            sink(i, pi);
+        });
     }
 
     fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
@@ -83,9 +105,9 @@ impl Algorithm for Nids {
         );
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let eta = ctx.eta;
-        super::par_agents(threads, vec![&mut self.x, &mut self.d], |i, rows| match rows {
+        super::par_agents(exec, &mut [&mut self.x, &mut self.d], |i, rows| match rows {
             [x, d] => apply_agent(eta, &g[i], inbox.own(i, 0), inbox.mix(i, 0), x, d),
             _ => unreachable!(),
         });

@@ -12,7 +12,7 @@
 //! this is the Fig. 1d contrast with LEAD, and why QDGD needs a small
 //! effective stepsize to converge at all (§2).
 
-use super::{AlgoSpec, Algorithm, Ctx, Inbox};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
 use crate::linalg::Mat;
 
 pub struct Qdgd {
@@ -52,7 +52,7 @@ impl Algorithm for Qdgd {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: true }
+        AlgoSpec { channels: 1, compressed: true, reads_own: true }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -62,6 +62,23 @@ impl Algorithm for Qdgd {
     fn send(&mut self, _ctx: &Ctx, agent: usize, _g: &[f64], out: &mut [Vec<f64>]) {
         // Quantize the raw model (the defining design choice of QDGD).
         out[0].copy_from_slice(self.x.row(agent));
+    }
+
+    fn produce_all(
+        &mut self,
+        _ctx: &Ctx,
+        grad: GradFn<'_>,
+        g: &mut [Vec<f64>],
+        payload: &mut [Vec<Vec<f64>>],
+        sink: SinkFn<'_>,
+        exec: Exec<'_>,
+    ) {
+        let x = &self.x;
+        super::par_agents2(exec, &mut [], g, payload, |i, _rows, gi, pi| {
+            grad(i, x.row(i), gi);
+            pi[0].copy_from_slice(x.row(i));
+            sink(i, pi);
+        });
     }
 
     fn recv(&mut self, ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
@@ -76,11 +93,11 @@ impl Algorithm for Qdgd {
         );
     }
 
-    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, threads: usize) {
+    fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let gamma = self.gamma;
         let eta = ctx.eta;
         let mix = ctx.mix;
-        super::par_agents(threads, vec![&mut self.x], |i, rows| match rows {
+        super::par_agents(exec, &mut [&mut self.x], |i, rows| match rows {
             [x] => apply_agent(
                 gamma,
                 eta,

@@ -19,6 +19,7 @@ impl Compressor for Identity {
         out.values.clear();
         out.values.extend_from_slice(x);
         out.sparse = None; // dense message — engine mixes over `values`
+        out.dense_stale = false;
 
         // Raw IEEE-754 payload.
         out.payload.clear();

@@ -13,12 +13,17 @@
 //! nonzeros. Alongside the dense `values`, they publish the nonzeros as a
 //! [`CompressedMsg::sparse`] list of `(index, value)` pairs so the engine's
 //! mix step can scatter-add in O(deg·k) instead of O(deg·d) per agent
-//! (CHOCO-SGD-style sparse gossip). The sparse view is *exactly* the
-//! nonzero entries of `values` in ascending index order; mixing through it
-//! is bitwise-identical to dense accumulation because an accumulator that
-//! starts at +0.0 is never changed by adding the omitted ±0.0 terms (IEEE
-//! 754 round-to-nearest never produces −0.0 from a sum unless both addends
-//! are −0.0, which a +0.0 start rules out). Dense codecs (quantizers,
+//! (CHOCO-SGD-style sparse gossip). Through [`Compressor::compress`] the
+//! sparse view is *exactly* the nonzero entries of `values` in ascending
+//! index order; the scratch-carrying hot path
+//! ([`Compressor::compress_into`]) may additionally include explicitly
+//! selected ±0.0-valued entries so the dense vector can be reconstructed
+//! lazily and bit-exactly ([`CompressedMsg::ensure_dense`]). Either way,
+//! mixing through the sparse view is bitwise-identical to dense
+//! accumulation: an accumulator that starts at +0.0 is never changed by
+//! adding ±0.0 terms — whether omitted or explicit — because IEEE 754
+//! round-to-nearest never produces −0.0 from a sum unless both addends
+//! are −0.0, which a +0.0 start rules out. Dense codecs (quantizers,
 //! identity) leave `sparse` as `None` and mixing falls back to `axpy` over
 //! `values`.
 
@@ -40,19 +45,61 @@ use crate::rng::Rng;
 #[derive(Clone, Debug, Default)]
 pub struct CompressedMsg {
     pub values: Vec<f64>,
-    /// Sparse view of `values` for sparsifying codecs: exactly the nonzero
-    /// `(index, value)` pairs, ascending by index. `None` ⇒ dense message
-    /// (see the module docs for the bitwise-equality argument that lets
-    /// the engine mix through this view).
+    /// Sparse view of `values` for sparsifying codecs: the selected
+    /// `(index, value)` pairs, ascending by index. After
+    /// [`Compressor::compress`] this is exactly the nonzeros of `values`;
+    /// after [`Compressor::compress_into`] it may also carry selected
+    /// entries whose value is ±0.0 (see the module docs — mixing through
+    /// either form is bitwise-equal to dense accumulation). `None` ⇒
+    /// dense message.
     pub sparse: Option<Vec<(u32, f64)>>,
+    /// §Perf: sparse fast paths ([`Compressor::compress_into`]) may skip
+    /// the O(d) dense fill of `values` and mark it stale; call
+    /// [`CompressedMsg::ensure_dense`] before reading `values`.
+    /// [`Compressor::compress`] always leaves `values` valid (`false`).
+    pub dense_stale: bool,
     pub payload: Vec<u8>,
     pub wire_bits: u64,
 }
 
 impl CompressedMsg {
     pub fn with_dim(d: usize) -> Self {
-        CompressedMsg { values: vec![0.0; d], sparse: None, payload: Vec::new(), wire_bits: 0 }
+        CompressedMsg {
+            values: vec![0.0; d],
+            sparse: None,
+            dense_stale: false,
+            payload: Vec::new(),
+            wire_bits: 0,
+        }
     }
+
+    /// Rebuild `values` from the sparse view if a sparse fast path left it
+    /// stale; no-op otherwise. The scatter reproduces the eager dense
+    /// encoding bit-for-bit because `compress_into` records *every*
+    /// selected entry (including ±0.0 values): `fill(0.0)` + scatter is
+    /// exactly the eager clear + per-entry write.
+    pub fn ensure_dense(&mut self) {
+        if !self.dense_stale {
+            return;
+        }
+        self.values.fill(0.0);
+        if let Some(sp) = &self.sparse {
+            for &(i, v) in sp {
+                self.values[i as usize] = v;
+            }
+        }
+        self.dense_stale = false;
+    }
+}
+
+/// Reusable per-agent codec scratch (§Perf): buffers
+/// [`Compressor::compress_into`] implementations use to keep the engine's
+/// steady-state round loop allocation-free (top-k reuses its selection
+/// index buffer here instead of collecting `0..d` every call).
+#[derive(Default)]
+pub struct CodecScratch {
+    /// Selection working set for sparsifiers (top-k partial select).
+    pub idx: Vec<usize>,
 }
 
 /// A communication compression operator.
@@ -60,15 +107,43 @@ pub trait Compressor: Send + Sync {
     /// Human-readable identifier, e.g. `q∞-2bit/512`.
     fn name(&self) -> String;
 
-    /// Compress `x` into `out`. `values`, `payload`, **and `sparse`** must
-    /// all be overwritten (buffers are reused across rounds, so a codec
-    /// that leaves `sparse` untouched can expose a stale view from a
-    /// previous compressor and silently corrupt the engine's sparse mix
-    /// path): sparsifiers publish the canonical nonzero list, dense codecs
-    /// must set `sparse = None`. `rng` supplies the dither / index
-    /// randomness — each agent passes its own stream so the parallel
-    /// engine stays deterministic.
+    /// Compress `x` into `out`. `values`, `payload`, `sparse`, **and
+    /// `dense_stale`** must all be overwritten (buffers are reused across
+    /// rounds, so a codec that leaves `sparse` or `dense_stale` untouched
+    /// can expose a stale view from a previous compressor and silently
+    /// corrupt the engine's sparse mix path): sparsifiers publish the
+    /// canonical nonzero list, dense codecs must set `sparse = None`, and
+    /// `compress` always materializes `values` (`dense_stale = false` —
+    /// only [`Compressor::compress_into`] may defer the dense fill). `rng`
+    /// supplies the dither / index randomness — each agent passes its own
+    /// stream so the parallel engine stays deterministic.
     fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg);
+
+    /// Scratch-carrying compression for the engine's hot loop. Semantics
+    /// match [`Compressor::compress`] with two §Perf relaxations:
+    ///
+    /// 1. `scratch` may be used to avoid per-call allocations;
+    /// 2. sparsifying codecs may skip the O(d) dense fill of
+    ///    `out.values`, publish **all** selected `(index, value)` entries
+    ///    — including ±0.0 values — in `out.sparse`, and set
+    ///    `out.dense_stale = true`. Consumers that need the dense vector
+    ///    call [`CompressedMsg::ensure_dense`], which reconstructs it
+    ///    bit-exactly; mixing through the sparse view is bitwise-equal to
+    ///    the dense path either way (module docs).
+    ///
+    /// A codec that leaves `dense_stale` set MUST publish a sparse view
+    /// (otherwise the message is unreadable). Codecs without a fast path
+    /// inherit this default, which falls back to `compress` (dense valid).
+    fn compress_into(
+        &self,
+        x: &[f64],
+        rng: &mut Rng,
+        out: &mut CompressedMsg,
+        scratch: &mut CodecScratch,
+    ) {
+        let _ = scratch;
+        self.compress(x, rng, out);
+    }
 
     /// Whether `E[Q(x)] = x` (Assumption 2). LEAD's guarantees require it.
     fn is_unbiased(&self) -> bool;

@@ -118,6 +118,7 @@ impl Compressor for QuantizeP {
     fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
         out.values.resize(x.len(), 0.0);
         out.sparse = None; // dense message — every coordinate carries a level
+        out.dense_stale = false;
         let mut w = BitWriter::new();
         std::mem::swap(&mut w.bytes, &mut out.payload); // reuse buffer
         w.clear();

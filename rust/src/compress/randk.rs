@@ -38,6 +38,7 @@ impl Compressor for RandK {
 
         out.values.clear();
         out.values.resize(d, 0.0);
+        out.dense_stale = false;
         let sp = out.sparse.get_or_insert_with(Vec::new);
         sp.clear();
         let mut w = BitWriter::new();

@@ -6,7 +6,7 @@
 //! pays ⌈log₂ d⌉ index bits per surviving value.
 
 use super::wire::{index_bits, BitWriter};
-use super::{CompressedMsg, Compressor};
+use super::{CodecScratch, CompressedMsg, Compressor};
 use crate::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -19,17 +19,26 @@ impl TopK {
         assert!(k >= 1);
         TopK { k }
     }
-}
 
-impl Compressor for TopK {
-    fn name(&self) -> String {
-        format!("top-{}", self.k)
-    }
-
-    fn compress(&self, x: &[f64], _rng: &mut Rng, out: &mut CompressedMsg) {
+    /// The single selection + wire-emission path behind both
+    /// [`Compressor::compress`] and [`Compressor::compress_into`], so the
+    /// two can never drift. Picks the k largest-|x_i| coordinates
+    /// (`total_cmp` keeps the comparator total under NaN — NaN sorts
+    /// largest, surfacing downstream rather than panicking), emits them in
+    /// ascending-index wire order, and publishes the views:
+    ///
+    /// * `eager_dense = true` (compress): materialize `values` and the
+    ///   canonical nonzero-only sparse list;
+    /// * `eager_dense = false` (compress_into): defer the O(d) dense fill
+    ///   (`dense_stale`) and record ALL selected entries — ±0.0 included —
+    ///   so the lazy decode is bit-exact (see the `Compressor` docs).
+    fn select_and_emit(&self, x: &[f64], out: &mut CompressedMsg, idx: &mut Vec<usize>, eager_dense: bool) {
         let d = x.len();
-        out.values.clear();
-        out.values.resize(d, 0.0);
+        if eager_dense {
+            out.values.clear();
+        }
+        out.values.resize(d, 0.0); // lazy case: contents stale until ensure_dense
+        out.dense_stale = false;
         let sp = out.sparse.get_or_insert_with(Vec::new);
         sp.clear();
         if d == 0 {
@@ -39,31 +48,62 @@ impl Compressor for TopK {
             out.wire_bits = 0;
             return;
         }
+        out.dense_stale = !eager_dense;
         let k = self.k.min(d);
-        // Partial selection of the k largest |x_i|. total_cmp keeps the
-        // comparator total in the presence of NaN (NaN sorts largest, so
-        // NaN entries are kept and surface downstream rather than panic).
-        let mut idx: Vec<usize> = (0..d).collect();
+        idx.clear();
+        idx.extend(0..d);
         idx.select_nth_unstable_by(k - 1, |&a, &b| x[b].abs().total_cmp(&x[a].abs()));
-        idx.truncate(k);
-        idx.sort_unstable(); // canonical wire order
+        let sel = &mut idx[..k];
+        sel.sort_unstable(); // canonical wire order
 
         let mut w = BitWriter::new();
         std::mem::swap(&mut w.bytes, &mut out.payload);
         w.clear();
         let ib = index_bits(d);
-        for &i in &idx {
+        for &i in sel.iter() {
             w.push(i as u64, ib);
             let wire = x[i] as f32; // f32 on the wire
             w.push_f32(wire);
             let v = wire as f64;
-            out.values[i] = v;
-            if v != 0.0 {
+            if eager_dense {
+                out.values[i] = v;
+                if v != 0.0 {
+                    sp.push((i as u32, v));
+                }
+            } else {
                 sp.push((i as u32, v));
             }
         }
         out.wire_bits = w.bits;
         out.payload = w.bytes;
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("top-{}", self.k)
+    }
+
+    fn compress(&self, x: &[f64], _rng: &mut Rng, out: &mut CompressedMsg) {
+        let mut idx = Vec::new();
+        self.select_and_emit(x, out, &mut idx, true);
+    }
+
+    /// Hot-path variant (§Perf): reuses `scratch.idx` for the partial
+    /// selection (the eager path allocates it per call) and skips the
+    /// O(d) dense fill — the sparse view carries **every** selected entry,
+    /// ±0.0 values included, so [`CompressedMsg::ensure_dense`] rebuilds
+    /// `values` bit-identically to the eager path on demand. Wire payload,
+    /// wire bits, and the selected set are identical to [`TopK::compress`]
+    /// by construction: both call the same [`TopK::select_and_emit`].
+    fn compress_into(
+        &self,
+        x: &[f64],
+        _rng: &mut Rng,
+        out: &mut CompressedMsg,
+        scratch: &mut CodecScratch,
+    ) {
+        self.select_and_emit(x, out, &mut scratch.idx, false);
     }
 
     fn is_unbiased(&self) -> bool {
@@ -137,6 +177,55 @@ mod tests {
             .map(|(i, &v)| (i as u32, v))
             .collect();
         assert_eq!(msg.sparse, Some(nz));
+    }
+
+    /// The scratch fast path must match the eager path exactly: same wire
+    /// payload/bits, same selected set, and a lazily-rebuilt dense vector
+    /// that is bit-identical — including ±0.0 selected entries, which is
+    /// why `compress_into` records zero-valued selections explicitly.
+    #[test]
+    fn compress_into_matches_compress_bitwise() {
+        use crate::compress::CodecScratch;
+        forall(60, 0x70C1, |g| {
+            let mut x = g.vec_f64(1..=300, 4.0);
+            // Plant exact and negative zeros so the zero-valued-selection
+            // path is exercised (k ≥ d selects them).
+            if x.len() >= 3 {
+                x[0] = 0.0;
+                x[1] = -0.0;
+            }
+            let k = g.usize_in(1..=x.len());
+            let t = TopK::new(k);
+            let mut rng = Rng::new(g.case_seed);
+            let eager = t.compress_alloc(&x, &mut rng);
+            let mut scratch = CodecScratch::default();
+            let mut lazy = crate::compress::CompressedMsg::default();
+            // Two calls through the same scratch: reuse must not change
+            // results.
+            t.compress_into(&x, &mut rng, &mut lazy, &mut scratch);
+            t.compress_into(&x, &mut rng, &mut lazy, &mut scratch);
+            prop_assert!(lazy.payload == eager.payload, "wire payload drifted");
+            prop_assert!(lazy.wire_bits == eager.wire_bits, "wire bits drifted");
+            prop_assert!(x.is_empty() || lazy.dense_stale, "fast path should defer the dense fill");
+            lazy.ensure_dense();
+            prop_assert!(
+                lazy.values.len() == eager.values.len()
+                    && lazy.values.iter().zip(&eager.values).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lazy dense decode != eager values"
+            );
+            // The fast-path sparse view is a superset of the canonical
+            // nonzeros: all selected entries, zeros included.
+            let sp = lazy.sparse.as_ref().unwrap();
+            prop_assert!(sp.len() == k.min(x.len()), "must record every selected entry");
+            prop_assert!(sp.windows(2).all(|w| w[0].0 < w[1].0), "ascending index order");
+            for &(i, v) in sp {
+                prop_assert!(
+                    v.to_bits() == eager.values[i as usize].to_bits(),
+                    "entry {i} mismatch"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

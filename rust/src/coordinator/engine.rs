@@ -1,39 +1,77 @@
 //! The coordinator engine: drives algorithms over a simulated gossip
 //! network with exact wire-bit accounting.
 //!
-//! # Round phases and threading model
+//! # Round phases and scheduling
 //!
 //! One engine instance owns the problem, the topology, and the round loop.
-//! Per round it runs five phases; three of them fan out over the same
-//! scoped worker pool when `threads > 1`:
+//! With the default [`Scheduler::Persistent`] a round is **three**
+//! barrier-synchronized dispatches on a [`WorkerPool`] whose workers are
+//! spawned once per run:
 //!
-//! 1. **gradients** — per-agent `∇f_i` at the current iterates
-//!    *(parallel)*; mini-batch indices are drawn up front in agent order
-//!    so the RNG stream is schedule-independent.
-//! 2. **send** — per-agent payload assembly (sequential; cheap, and the
-//!    only phase that may touch shared scratch inside an algorithm).
-//! 3. **compress** — channel 0 through the configured codec, one dither
-//!    RNG stream per agent *(parallel)*.
-//! 4. **mix** — W-weighted neighborhood mixes *(parallel)*. Messages that
-//!    publish a sparse view ([`CompressedMsg::sparse`]: top-k / rand-k)
-//!    are accumulated by scatter-add in O(deg·k) instead of O(deg·d) —
-//!    see [`mix_msgs`] for the bitwise-equality argument.
-//! 5. **apply** — [`Algorithm::recv_all`] *(parallel)*: per-agent state is
-//!    disjoint row-major rows, so agents update independently.
+//! 1. **produce** — [`Algorithm::produce_all`]: one task per agent fusing
+//!    gradient evaluation (`∇f_i`, mini-batch indices pre-drawn in agent
+//!    order so the RNG stream is schedule-independent), payload assembly,
+//!    and channel-0 compression (one dither RNG stream per agent) with
+//!    wire-bit accounting;
+//! 2. **mix** — W-weighted neighborhood mixes. Messages that publish a
+//!    sparse view ([`CompressedMsg::sparse`]: top-k / rand-k) are
+//!    accumulated by scatter-add in O(deg·k) instead of O(deg·d) — see
+//!    [`mix_msgs`] for the bitwise-equality argument;
+//! 3. **apply** — [`Algorithm::recv_all`]: per-agent state is disjoint
+//!    row-major rows, so agents update independently.
+//!
+//! [`Scheduler::SpawnPerPhase`] preserves the pre-pool behavior (scoped
+//! thread spawns per phase, sequential send, separate compress dispatch,
+//! per-round compression-error pass) as the A/B baseline for
+//! `benches/hotpath.rs`; both schedulers produce bitwise-identical
+//! trajectories (`scheduler_modes_bitwise_identical`).
 //!
 //! Determinism is scheduling-independent because every stochastic choice
 //! draws from a per-(agent, purpose) RNG stream and the parallel phases
 //! touch disjoint per-agent data; the `parallel_equals_sequential` tests
 //! assert bitwise equality for both dense (quantizer) and sparse (top-k)
 //! messages.
+//!
+//! # §Perf — steady-state zero-allocation contract
+//!
+//! After warm-up (first round or two: lazy buffer growth), a
+//! non-observed round of the persistent scheduler performs **zero heap
+//! allocations** on both the dense (quantizer) and sparse (top-k) paths —
+//! enforced by the counting-allocator test
+//! `rust/tests/alloc_steady_state.rs`. The conventions that make this
+//! hold:
+//!
+//! * every per-round buffer (`g`, `payload`, `msgs`, `mixed_all`,
+//!   `round_bits`, mini-batch index sets, codec scratch) is hoisted out
+//!   of the loop and reused; codecs reuse their payload/sparse buffers
+//!   ([`Compressor::compress_into`] + [`CodecScratch`]);
+//! * [`Inbox`] is a zero-copy *view* over those buffers, rebuilt each
+//!   round by copying three references;
+//! * sparse codecs may skip the O(d) dense decode; the engine
+//!   materializes it inside the produce task only when the algorithm's
+//!   [`AlgoSpec::reads_own`] demands it, and otherwise only on observed
+//!   rounds (`record_every`) for the compression-error metric — which is
+//!   the error of the *observed* round, computed on demand;
+//! * pool dispatches and the [`par_agents`]-family row bundles are
+//!   allocation-free ([`crate::pool`] docs).
+//!
+//! Codecs outside the guarantee (rand-k's index sampling) and observed
+//! rounds (metrics passes allocate scratch) are documented exceptions.
+//!
+//! [`AlgoSpec::reads_own`]: crate::algorithms::AlgoSpec::reads_own
+//! [`CodecScratch`]: crate::compress::CodecScratch
+//! [`Compressor::compress_into`]: crate::compress::Compressor::compress_into
+//! [`par_agents`]: crate::pool::par_agents
 
-use super::metrics::{RoundMetrics, RunRecord};
+use super::metrics::{PhaseTimes, RoundMetrics, RunRecord};
 use super::network::{LinkModel, TrafficStats};
 use crate::algorithms::{Algorithm, Ctx, Inbox};
-use crate::compress::{CompressedMsg, Compressor};
+use crate::compress::{CodecScratch, CompressedMsg, Compressor};
+use crate::pool::{par_chunks, Exec, SendPtr, WorkerPool};
 use crate::problems::Problem;
 use crate::rng::{streams, Rng};
 use crate::topology::MixingMatrix;
+use std::time::Instant;
 
 /// Stepsize schedule (Theorem 1 uses constant; Theorem 2 diminishing).
 #[derive(Clone, Copy, Debug)]
@@ -41,6 +79,19 @@ pub enum Schedule {
     Constant,
     /// η_k = η · t0 / (t0 + k) — the O(1/k) decay of Theorem 2.
     Diminishing { t0: f64 },
+}
+
+/// Which execution backend drives the parallel phases (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scheduler {
+    /// Persistent worker pool, fused produce phase, zero-alloc loop.
+    #[default]
+    Persistent,
+    /// Pre-pool behavior: scoped thread spawns per phase, sequential
+    /// send, separate compress dispatch, per-round compression-error
+    /// pass. Kept as the A/B baseline; trajectories are bitwise-identical
+    /// to [`Scheduler::Persistent`].
+    SpawnPerPhase,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -53,10 +104,11 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Record metrics every k rounds (metrics cost a full loss pass).
     pub record_every: usize,
-    /// Worker threads for the gradient, compression, mix, and apply
-    /// phases (1 = inline).
+    /// Worker threads for the produce, mix, and apply phases (1 = inline).
     pub threads: usize,
     pub link: LinkModel,
+    /// Execution backend (default: persistent pool).
+    pub scheduler: Scheduler,
 }
 
 impl Default for EngineConfig {
@@ -69,6 +121,7 @@ impl Default for EngineConfig {
             record_every: 10,
             threads: 1,
             link: LinkModel::default(),
+            scheduler: Scheduler::default(),
         }
     }
 }
@@ -79,26 +132,32 @@ impl Default for EngineConfig {
 /// Messages carrying a sparse view are scatter-added in O(k); dense
 /// messages fall back to `axpy` over `values`. The result is bitwise
 /// identical to dense accumulation for every message: the sparse list
-/// holds exactly the nonzeros of `values`, and adding the omitted ±0.0
-/// terms cannot change an accumulator that starts at +0.0 (IEEE 754
+/// holds every nonzero of the (possibly lazily materialized) dense
+/// vector, plus at most some explicitly-selected ±0.0 entries, and ±0.0
+/// additions cannot change an accumulator that starts at +0.0 (IEEE 754
 /// round-to-nearest yields −0.0 only from `(−0.0) + (−0.0)`, which a
-/// +0.0 start makes unreachable). The sparse-vs-dense proptest in
-/// `rust/tests/proptests.rs` pins this down across codecs/topologies.
+/// +0.0 start makes unreachable — so the accumulator is never −0.0, and
+/// both omitted and explicit zero terms are no-ops). The sparse-vs-dense
+/// proptest in `rust/tests/proptests.rs` pins this down across
+/// codecs/topologies.
 pub fn mix_msgs(mix: &MixingMatrix, i: usize, msgs: &[CompressedMsg], out: &mut [f64]) {
     for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
         let w = mix.weight(i, j);
         match &msgs[j].sparse {
             Some(entries) => crate::linalg::scatter_axpy(w, entries, out),
-            None => crate::linalg::axpy(w, &msgs[j].values, out),
+            None => {
+                debug_assert!(!msgs[j].dense_stale, "dense mix over a stale message");
+                crate::linalg::axpy(w, &msgs[j].values, out)
+            }
         }
     }
 }
 
 /// Worker threads actually worth using for a phase that streams
-/// `work_per_agent` f64 elements per agent: `thread::scope` re-spawns OS
-/// threads every round, which costs more than the loop itself on small
-/// problems (fig1 shape: n·d ≈ 1600), so below the threshold the phase
-/// runs inline. Thread count never affects trajectories (the
+/// `work_per_agent` f64 elements per agent: even pool dispatch (two
+/// condvar hops) costs more than the loop itself on tiny problems (fig1
+/// shape: n·d ≈ 1600), so below the threshold the phase runs inline.
+/// Thread count never affects trajectories (the
 /// `parallel_equals_sequential` tests), so this is purely a perf knob.
 fn phase_threads(threads: usize, n: usize, work_per_agent: usize) -> usize {
     const MIN_ELEMS: usize = 32_768;
@@ -107,39 +166,6 @@ fn phase_threads(threads: usize, n: usize, work_per_agent: usize) -> usize {
     } else {
         threads.max(1).min(n.max(1))
     }
-}
-
-/// Run `f(i, &mut items[i])` for every item — inline when `threads == 1`,
-/// otherwise chunked across a scoped worker pool. The single scheduling
-/// site for the engine's gradient, compression, and mix fan-outs (the
-/// apply phase uses the row-splitting [`crate::algorithms::par_agents`]).
-/// `f` must be independent per item for the schedule to be
-/// trajectory-invariant.
-fn par_chunks<T, F>(threads: usize, items: &mut [T], f: F)
-where
-    T: Send,
-    F: Fn(usize, &mut T) + Sync,
-{
-    let n = items.len();
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 {
-        for (i, it) in items.iter_mut().enumerate() {
-            f(i, it);
-        }
-        return;
-    }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, ch) in items.chunks_mut(chunk).enumerate() {
-            let base = t * chunk;
-            let f = &f;
-            s.spawn(move || {
-                for (off, it) in ch.iter_mut().enumerate() {
-                    f(base + off, it);
-                }
-            });
-        }
-    });
 }
 
 pub struct Engine {
@@ -161,41 +187,20 @@ impl Engine {
         }
     }
 
-    /// Draw this round's mini-batch indices for every agent, in agent
-    /// order. The single sampling site for round 0 and the round loop, so
-    /// both consume the per-agent BATCH streams identically (a duplicated
-    /// round-0 draw used to clamp the batch size differently).
-    fn draw_batches(&self, batch_rngs: &mut [Rng]) -> Vec<Option<Vec<usize>>> {
-        let n = self.mix.n;
-        let batch = self.cfg.batch_size;
-        (0..n)
-            .map(|i| {
-                batch.map(|b| {
-                    let ns = self.problem.n_samples(i);
-                    if ns == 0 {
-                        return vec![];
-                    }
-                    (0..b.min(ns)).map(|_| batch_rngs[i].below(ns)).collect()
-                })
-            })
-            .collect()
-    }
-
-    /// Evaluate all agents' gradients at their current iterates into `g`.
-    fn gradients(
-        &self,
-        algo: &dyn Algorithm,
-        g: &mut [Vec<f64>],
-        batch_rngs: &mut [Rng],
-    ) {
-        let problem = &*self.problem;
-        // Draw batch indices first (RNG must advance deterministically in
-        // agent order regardless of thread scheduling).
-        let batches = self.draw_batches(batch_rngs);
-        par_chunks(self.cfg.threads, g, |i, gi| match &batches[i] {
-            Some(idx) => problem.grad_batch(i, algo.x(i), idx, gi),
-            None => problem.grad_full(i, algo.x(i), gi),
-        });
+    /// Draw this round's mini-batch indices for every agent into the
+    /// reused per-agent scratch (§Perf: no per-round allocation), in
+    /// agent order — the single sampling site for round 0 and the round
+    /// loop, so both consume the per-agent BATCH streams identically.
+    /// No-op (indices unused) when `batch_size` is None.
+    fn draw_batches(&self, batch_rngs: &mut [Rng], batch_idx: &mut [Vec<usize>]) {
+        let Some(b) = self.cfg.batch_size else { return };
+        for (i, idx) in batch_idx.iter_mut().enumerate() {
+            idx.clear();
+            let ns = self.problem.n_samples(i);
+            for _ in 0..b.min(ns) {
+                idx.push(batch_rngs[i].below(ns));
+            }
+        }
     }
 
     /// Run `algo` for `rounds` rounds. `compressor` applies to channel 0
@@ -207,16 +212,26 @@ impl Engine {
         compressor: Option<Box<dyn Compressor>>,
         rounds: usize,
     ) -> RunRecord {
-        let wall_start = std::time::Instant::now();
+        let wall_start = Instant::now();
         let n = self.mix.n;
         let d = self.problem.dim();
         let spec = algo.spec();
         let use_comp = spec.compressed && compressor.is_some();
+        let legacy = self.cfg.scheduler == Scheduler::SpawnPerPhase;
+        // One pool per run: workers outlive every phase dispatch.
+        let pool = (!legacy && self.cfg.threads > 1).then(|| WorkerPool::new(self.cfg.threads));
+        let exec = match &pool {
+            Some(p) => Exec::pool(p),
+            None if legacy => Exec::spawn(self.cfg.threads),
+            None => Exec::seq(),
+        };
         let root = Rng::new(self.cfg.seed);
         let mut dither_rngs: Vec<Rng> =
             (0..n).map(|i| root.derive(i as u64).derive(streams::DITHER)).collect();
         let mut batch_rngs: Vec<Rng> =
             (0..n).map(|i| root.derive(i as u64).derive(streams::BATCH)).collect();
+        let batching = self.cfg.batch_size.is_some();
+        let mut batch_idx: Vec<Vec<usize>> = vec![Vec::new(); n];
 
         // x⁰ = problem-provided init (or zeros — the paper's setup for
         // convex problems), identical for every agent: consensus start.
@@ -225,24 +240,35 @@ impl Engine {
         let mut g = vec![vec![0.0f64; d]; n];
         // Round-0 gradients go through the same batch-drawing path as the
         // round loop (identical RNG stream and clamping).
-        let batches0 = self.draw_batches(&mut batch_rngs);
+        self.draw_batches(&mut batch_rngs, &mut batch_idx);
         for i in 0..n {
-            match &batches0[i] {
-                Some(idx) => self.problem.grad_batch(i, &x0[i], idx, &mut g[i]),
-                None => self.problem.grad_full(i, &x0[i], &mut g[i]),
+            if batching {
+                self.problem.grad_batch(i, &x0[i], &batch_idx[i], &mut g[i]);
+            } else {
+                self.problem.grad_full(i, &x0[i], &mut g[i]);
             }
         }
         let ctx0 = Ctx { mix: &self.mix, round: 0, eta: self.eta_at(0) };
         algo.init(&ctx0, &x0, &g);
 
+        // Reusable round scratch (§Perf: allocated once, zero allocations
+        // per steady-state round).
         let mut payload = vec![vec![vec![0.0f64; d]; spec.channels]; n];
         let mut msgs: Vec<CompressedMsg> = (0..n).map(|_| CompressedMsg::with_dim(d)).collect();
+        let mut codec_scratch: Vec<CodecScratch> =
+            (0..n).map(|_| CodecScratch::default()).collect();
         // Per-agent mixes, materialized so the mix and apply phases can
         // both fan out over agents (n·channels·d, allocated once).
         let mut mixed_all = vec![vec![vec![0.0f64; d]; spec.channels]; n];
         let mut traffic = TrafficStats::new(n);
         let mut series = Vec::new();
         let mut round_bits = vec![0u64; n];
+        let mut phases = PhaseTimes::default();
+        // Whether the apply phase needs each agent's own decoded dense
+        // vector (§Perf: sparse messages skip the O(d) decode otherwise).
+        let need_own_dense = spec.reads_own;
+        let raw_bits_all = (spec.channels as u64) * (d as u64) * 32;
+        let extra_channel_bits = (spec.channels as u64 - 1) * (d as u64) * 32;
 
         // Record the initial state as round 0.
         series.push(self.observe(&*algo, 0, 0.0, &traffic));
@@ -250,48 +276,117 @@ impl Engine {
         for round in 1..=rounds {
             let eta = self.eta_at(round);
             let ctx = Ctx { mix: &self.mix, round, eta };
+            // Mini-batch draws stay sequential in agent order (RNG must
+            // advance deterministically regardless of thread scheduling).
+            self.draw_batches(&mut batch_rngs, &mut batch_idx);
+            // Legacy-only: the pre-PR loop paid a compression-error pass
+            // every round; observed values are identical either way.
+            let mut comp_err_legacy = 0.0f64;
 
-            // (1) gradients (parallel across workers)
-            self.gradients(&*algo, &mut g, &mut batch_rngs);
-
-            // (2) local sends
-            for i in 0..n {
-                algo.send(&ctx, i, &g[i], &mut payload[i]);
-            }
-
-            // (3) compression of channel 0 (parallel; per-agent dither RNG)
-            let mut comp_err_acc = 0.0f64;
-            if use_comp {
-                let comp = compressor.as_deref().unwrap();
+            if legacy {
+                // (1) gradients (parallel across spawned workers)
+                let t = Instant::now();
                 {
-                    let payload_ref = &payload;
-                    let mut pairs: Vec<(&mut CompressedMsg, &mut Rng)> =
-                        msgs.iter_mut().zip(dither_rngs.iter_mut()).collect();
-                    par_chunks(self.cfg.threads, &mut pairs, |i, (m, r)| {
-                        comp.compress(&payload_ref[i][0], r, m);
+                    let problem = &*self.problem;
+                    let bi = &batch_idx;
+                    let algo_ref: &dyn Algorithm = &*algo;
+                    par_chunks(exec, &mut g, |i, gi| {
+                        if batching {
+                            problem.grad_batch(i, algo_ref.x(i), &bi[i], gi);
+                        } else {
+                            problem.grad_full(i, algo_ref.x(i), gi);
+                        }
                     });
                 }
+                phases.gradient += t.elapsed().as_secs_f64();
+
+                // (2) local sends (sequential)
+                let t = Instant::now();
                 for i in 0..n {
-                    comp_err_acc += crate::linalg::dist_sq(&payload[i][0], &msgs[i].values).sqrt();
-                    // Extra channels (none of the compressed algorithms use
-                    // them today) would be billed raw.
-                    round_bits[i] =
-                        msgs[i].wire_bits + (spec.channels as u64 - 1) * (d as u64) * 32;
+                    algo.send(&ctx, i, &g[i], &mut payload[i]);
                 }
+                phases.send += t.elapsed().as_secs_f64();
+
+                // (3) compression of channel 0 (parallel; per-agent
+                // dither RNG; eager dense decode)
+                let t = Instant::now();
+                if use_comp {
+                    let comp = compressor.as_deref().unwrap();
+                    {
+                        let payload_ref = &payload;
+                        let mut pairs: Vec<(&mut CompressedMsg, &mut Rng)> =
+                            msgs.iter_mut().zip(dither_rngs.iter_mut()).collect();
+                        par_chunks(exec, &mut pairs, |i, (m, r)| {
+                            comp.compress(&payload_ref[i][0], r, m);
+                        });
+                    }
+                    for i in 0..n {
+                        comp_err_legacy +=
+                            crate::linalg::dist_sq(&payload[i][0], &msgs[i].values).sqrt();
+                        round_bits[i] = msgs[i].wire_bits + extra_channel_bits;
+                    }
+                    comp_err_legacy /= n as f64;
+                } else {
+                    for i in 0..n {
+                        round_bits[i] = raw_bits_all;
+                    }
+                }
+                phases.compress += t.elapsed().as_secs_f64();
             } else {
-                for i in 0..n {
-                    round_bits[i] = (spec.channels as u64) * (d as u64) * 32;
-                }
+                // (1) fused produce: gradient → send → compress, one task
+                // per agent, one barrier.
+                let t = Instant::now();
+                let problem = &*self.problem;
+                let bi = &batch_idx;
+                let grad = |i: usize, x: &[f64], out: &mut [f64]| {
+                    if batching {
+                        problem.grad_batch(i, x, &bi[i], out);
+                    } else {
+                        problem.grad_full(i, x, out);
+                    }
+                };
+                let comp = compressor.as_deref();
+                let msgs_p = SendPtr(msgs.as_mut_ptr());
+                let rngs_p = SendPtr(dither_rngs.as_mut_ptr());
+                let scratch_p = SendPtr(codec_scratch.as_mut_ptr());
+                let bits_p = SendPtr(round_bits.as_mut_ptr());
+                let sink = move |i: usize, p: &mut [Vec<f64>]| {
+                    // SAFETY: produce_all invokes the sink exactly once
+                    // per agent, each agent from a single worker, so the
+                    // per-agent entries written through these pointers are
+                    // never aliased (contract on Algorithm::produce_all).
+                    unsafe {
+                        if use_comp {
+                            let m = &mut *msgs_p.0.add(i);
+                            comp.unwrap().compress_into(
+                                &p[0],
+                                &mut *rngs_p.0.add(i),
+                                m,
+                                &mut *scratch_p.0.add(i),
+                            );
+                            if need_own_dense {
+                                m.ensure_dense();
+                            }
+                            *bits_p.0.add(i) = m.wire_bits + extra_channel_bits;
+                        } else {
+                            *bits_p.0.add(i) = raw_bits_all;
+                        }
+                    }
+                };
+                algo.produce_all(&ctx, &grad, &mut g, &mut payload, &sink, exec);
+                phases.produce += t.elapsed().as_secs_f64();
             }
             traffic.record_round(&self.mix, &self.cfg.link, &round_bits);
 
-            // (4) mix (parallel over agents; sparse-aware on channel 0).
-            let mix_apply_threads = phase_threads(self.cfg.threads, n, spec.channels * d);
+            // (2) mix (parallel over agents; sparse-aware on channel 0).
+            let mix_apply_exec =
+                exec.with_threads(phase_threads(self.cfg.threads, n, spec.channels * d));
+            let t = Instant::now();
             {
                 let mix = &self.mix;
                 let payload_ref = &payload;
                 let msgs_ref = &msgs;
-                par_chunks(mix_apply_threads, &mut mixed_all, |i, out| {
+                par_chunks(mix_apply_exec, &mut mixed_all, |i, out| {
                     for (c, mx) in out.iter_mut().enumerate() {
                         mx.fill(0.0);
                         if c == 0 && use_comp {
@@ -304,34 +399,44 @@ impl Engine {
                     }
                 });
             }
+            phases.mix += t.elapsed().as_secs_f64();
 
-            // (5) apply (parallel inside recv_all; per-agent state rows
-            // are disjoint). Own decoded channel-0 payload is borrowed —
-            // no copies on the hot path (§Perf: saves n·d clones/round).
-            let inbox = Inbox {
-                self_dec: (0..n)
-                    .map(|i| {
-                        (0..spec.channels)
-                            .map(|c| {
-                                if c == 0 && use_comp {
-                                    msgs[i].values.as_slice()
-                                } else {
-                                    payload[i][c].as_slice()
-                                }
-                            })
-                            .collect()
-                    })
-                    .collect(),
-                mixed: mixed_all
-                    .iter()
-                    .map(|a| a.iter().map(|v| v.as_slice()).collect())
-                    .collect(),
+            // (3) apply (parallel inside recv_all; per-agent state rows
+            // are disjoint). The inbox is a zero-copy view over the round
+            // buffers; own decoded channel-0 payloads are borrowed — no
+            // copies on the hot path (§Perf).
+            let t = Instant::now();
+            let inbox = if use_comp {
+                Inbox::with_decoded0(&payload, &mixed_all, &msgs)
+            } else {
+                Inbox::from_payloads(&payload, &mixed_all)
             };
-            algo.recv_all(&ctx, &g, &inbox, mix_apply_threads);
+            algo.recv_all(&ctx, &g, &inbox, mix_apply_exec);
             drop(inbox);
+            phases.apply += t.elapsed().as_secs_f64();
 
             if round % self.cfg.record_every == 0 || round == rounds {
-                series.push(self.observe(&*algo, round, comp_err_acc / n as f64, &traffic));
+                let t = Instant::now();
+                // The recorded compression error is the error of the
+                // *observed* round — never a stale accumulation across
+                // unobserved rounds (regression:
+                // `comp_err_is_per_observed_round`). The persistent
+                // scheduler computes it lazily here (§Perf: skips the
+                // O(n·d) pass on unobserved rounds).
+                let comp_err = if legacy {
+                    comp_err_legacy
+                } else if use_comp {
+                    let mut acc = 0.0f64;
+                    for i in 0..n {
+                        msgs[i].ensure_dense();
+                        acc += crate::linalg::dist_sq(&payload[i][0], &msgs[i].values).sqrt();
+                    }
+                    acc / n as f64
+                } else {
+                    0.0
+                };
+                series.push(self.observe(&*algo, round, comp_err, &traffic));
+                phases.observe += t.elapsed().as_secs_f64();
             }
         }
 
@@ -344,6 +449,7 @@ impl Engine {
             },
             series,
             wall_secs: wall_start.elapsed().as_secs_f64(),
+            phases,
         }
     }
 
@@ -451,10 +557,10 @@ mod tests {
 
     #[test]
     fn parallel_equals_sequential() {
-        // 4 worker threads must reproduce the single-thread trajectory
+        // 4 pool workers must reproduce the single-thread trajectory
         // bit-for-bit (dense quantizer messages). At this problem size the
-        // gradient and compression phases fan out; mix/apply run inline
-        // via phase_threads — their parallel paths are pinned by
+        // fused produce phase fans out; mix/apply run inline via
+        // phase_threads — their parallel paths are pinned by
         // par_chunks_mix_equals_inline and by
         // algorithms::tests::all_algorithms_recv_all_parallel_equals_sequential.
         let run = |threads: usize| {
@@ -491,10 +597,88 @@ mod tests {
         }
     }
 
+    /// The persistent pool scheduler must reproduce the legacy
+    /// spawn-per-phase loop bit-for-bit — metrics included — on both the
+    /// dense (quantize) and sparse (top-k) paths. This is the old-vs-new
+    /// scheduler A/B pinned as a correctness property.
+    #[test]
+    fn scheduler_modes_bitwise_identical() {
+        let run = |scheduler: Scheduler, topk: bool, threads: usize| {
+            let p = LinReg::synthetic(8, 30, 0.1, 3);
+            let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+            let mut e = Engine::new(
+                EngineConfig { threads, record_every: 7, scheduler, ..Default::default() },
+                mix,
+                Box::new(p),
+            );
+            let comp: Box<dyn crate::compress::Compressor> = if topk {
+                Box::new(TopK::new(10))
+            } else {
+                Box::new(QuantizeP::new(2, crate::compress::quantize::PNorm::Inf, 64))
+            };
+            e.run(Box::new(Lead::paper_default()), Some(comp), 50)
+        };
+        for topk in [false, true] {
+            for threads in [1usize, 3] {
+                let old = run(Scheduler::SpawnPerPhase, topk, threads);
+                let new = run(Scheduler::Persistent, topk, threads);
+                assert_eq!(old.series.len(), new.series.len());
+                for (a, b) in old.series.iter().zip(&new.series) {
+                    assert_eq!(a.dist_opt.to_bits(), b.dist_opt.to_bits(), "round {}", a.round);
+                    assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
+                    assert_eq!(a.comp_err.to_bits(), b.comp_err.to_bits(), "round {}", a.round);
+                    assert_eq!(a.bits_per_agent, b.bits_per_agent);
+                }
+            }
+        }
+    }
+
+    /// Regression (comp_err bugfix): the recorded compression error must
+    /// be the error of the observed round itself — a run that skips
+    /// observations must report exactly what a record-every-round run
+    /// reports at the same rounds, including the final partial round
+    /// (rounds % record_every != 0).
+    #[test]
+    fn comp_err_is_per_observed_round() {
+        let run = |record_every: usize| {
+            let p = LinReg::synthetic(8, 30, 0.1, 3);
+            let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+            let mut e = Engine::new(
+                EngineConfig { record_every, ..Default::default() },
+                mix,
+                Box::new(p),
+            );
+            e.run(
+                Box::new(Lead::paper_default()),
+                Some(Box::new(QuantizeP::new(2, crate::compress::quantize::PNorm::Inf, 64))),
+                10,
+            )
+        };
+        let every = run(1);
+        let sparse_obs = run(4); // observes rounds 4, 8 and the partial 10
+        for m in &sparse_obs.series {
+            let reference = every
+                .series
+                .iter()
+                .find(|r| r.round == m.round)
+                .expect("observed round missing from the every-round run");
+            assert_eq!(
+                m.comp_err.to_bits(),
+                reference.comp_err.to_bits(),
+                "round {}: comp_err {} != per-round reference {}",
+                m.round,
+                m.comp_err,
+                reference.comp_err
+            );
+            assert!(m.comp_err > 0.0, "round {}: quantization error cannot be zero", m.round);
+        }
+        assert_eq!(sparse_obs.series.last().unwrap().round, 10);
+    }
+
     /// The chunked fan-out itself: mixing through par_chunks at several
-    /// thread counts must be bitwise-equal to the inline loop (the engine
-    /// tests above run small problems, which phase_threads keeps inline —
-    /// this pins the parallel path directly).
+    /// thread counts and on both backends must be bitwise-equal to the
+    /// inline loop (the engine tests above run small problems, which
+    /// phase_threads keeps inline — this pins the parallel path directly).
     #[test]
     fn par_chunks_mix_equals_inline() {
         let n = 8;
@@ -514,11 +698,14 @@ mod tests {
             mix_msgs(&mix, i, &msgs, out);
         }
         for threads in [2usize, 3, 8] {
-            let mut par = vec![vec![0.0f64; d]; n];
-            par_chunks(threads, &mut par, |i, out| mix_msgs(&mix, i, &msgs, out));
-            for (a, b) in inline.iter().zip(&par) {
-                for (u, v) in a.iter().zip(b) {
-                    assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            let pool = WorkerPool::new(threads);
+            for exec in [Exec::pool(&pool), Exec::spawn(threads)] {
+                let mut par = vec![vec![0.0f64; d]; n];
+                par_chunks(exec, &mut par, |i, out| mix_msgs(&mix, i, &msgs, out));
+                for (a, b) in inline.iter().zip(&par) {
+                    for (u, v) in a.iter().zip(b) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+                    }
                 }
             }
         }

@@ -23,6 +23,48 @@ pub struct RoundMetrics {
     pub sim_time: f64,
 }
 
+/// Wall-clock totals per engine phase, accumulated over a run (§Perf —
+/// the raw signal behind `benches/hotpath.rs`' per-phase breakdown and
+/// `BENCH_hotpath.json`).
+///
+/// With [`Scheduler::Persistent`] the gradient/send/compress work is one
+/// fused dispatch and lands in `produce`; the legacy
+/// [`Scheduler::SpawnPerPhase`] scheduler fills the `gradient`/`send`/
+/// `compress` buckets individually instead.
+///
+/// [`Scheduler::Persistent`]: crate::coordinator::engine::Scheduler::Persistent
+/// [`Scheduler::SpawnPerPhase`]: crate::coordinator::engine::Scheduler::SpawnPerPhase
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    /// Fused gradient+send+compress dispatch (persistent scheduler).
+    pub produce: f64,
+    pub gradient: f64,
+    pub send: f64,
+    pub compress: f64,
+    pub mix: f64,
+    pub apply: f64,
+    /// Metric observation (loss/consensus passes on recorded rounds).
+    pub observe: f64,
+}
+
+impl PhaseTimes {
+    /// Render as a compact JSON object (for `BENCH_hotpath.json`). Routes
+    /// numbers through the same non-finite-to-null mapping as
+    /// [`RunRecord::to_json`] so the emitted file always parses.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"produce\":{},\"gradient\":{},\"send\":{},\"compress\":{},\"mix\":{},\"apply\":{},\"observe\":{}}}",
+            fin(self.produce),
+            fin(self.gradient),
+            fin(self.send),
+            fin(self.compress),
+            fin(self.mix),
+            fin(self.apply),
+            fin(self.observe)
+        )
+    }
+}
+
 /// A full run: per-round series plus identification.
 #[derive(Clone, Debug)]
 pub struct RunRecord {
@@ -31,6 +73,8 @@ pub struct RunRecord {
     pub compressor: String,
     pub series: Vec<RoundMetrics>,
     pub wall_secs: f64,
+    /// Per-phase wall-clock totals for this run.
+    pub phases: PhaseTimes,
 }
 
 impl RunRecord {
@@ -147,6 +191,7 @@ mod tests {
             problem: "p".into(),
             compressor: "none".into(),
             wall_secs: 0.1,
+            phases: PhaseTimes::default(),
             series: dists
                 .iter()
                 .enumerate()

@@ -6,9 +6,10 @@
 //!
 //! - **L3 (this crate)**: decentralized-training runtime — communication
 //!   topologies and mixing matrices, compression codecs with exact wire-bit
-//!   accounting, the LEAD algorithm plus eight baselines, sequential and
-//!   thread-parallel coordinator engines, experiment drivers for every
-//!   figure in the paper, metrics, and a CLI.
+//!   accounting, the LEAD algorithm plus eight baselines, a coordinator
+//!   engine driven by a persistent worker pool ([`pool`]) with a
+//!   steady-state allocation-free round loop, experiment drivers for
+//!   every figure in the paper, metrics, and a CLI.
 //! - **L2 (python/compile)**: JAX compute graphs (linear/logistic
 //!   regression, MLP, transformer LM forward+backward) lowered once to HLO
 //!   text artifacts.
@@ -37,6 +38,7 @@ pub mod coordinator;
 pub mod error;
 pub mod experiments;
 pub mod linalg;
+pub mod pool;
 pub mod problems;
 pub mod prop;
 pub mod rng;
@@ -61,8 +63,9 @@ pub mod prelude {
     pub use crate::compress::{
         identity::Identity, quantize::{PNorm, QuantizeP}, randk::RandK, topk::TopK, Compressor,
     };
-    pub use crate::coordinator::engine::{Engine, EngineConfig, Schedule};
-    pub use crate::coordinator::metrics::{RoundMetrics, RunRecord};
+    pub use crate::coordinator::engine::{Engine, EngineConfig, Schedule, Scheduler};
+    pub use crate::coordinator::metrics::{PhaseTimes, RoundMetrics, RunRecord};
+    pub use crate::pool::{Exec, WorkerPool};
     pub use crate::problems::{linreg::LinReg, logreg::LogReg, DataSplit, Problem};
     pub use crate::rng::Rng;
     pub use crate::topology::{MixingMatrix, MixingRule, Topology};

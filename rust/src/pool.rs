@@ -1,0 +1,580 @@
+//! Persistent worker pool and the engine's parallel-dispatch primitives.
+//!
+//! # Why a pool
+//!
+//! The coordinator runs three to five parallel phases *per round*, for
+//! thousands of rounds. `std::thread::scope` re-spawns OS threads on every
+//! phase, which costs tens of microseconds per thread — at n = 32 agents
+//! and d ≈ 10⁴ the spawns dominate the actual FLOPs. [`WorkerPool`] spawns
+//! its workers once; each phase dispatch is then two condvar hops (wake +
+//! join) and zero heap allocations, which is what makes the engine's
+//! steady-state round loop allocation-free (see
+//! `coordinator::engine` §Perf).
+//!
+//! # Scheduling contract
+//!
+//! All dispatch primitives ([`par_chunks`], [`par_agents`],
+//! [`par_agents2`]) partition `n` items into `ceil(n / t)`-sized
+//! contiguous chunks, one chunk per worker index — the same chunking the
+//! old scoped-spawn helpers used. The per-item closure must be
+//! independent across items (no cross-item data flow, no shared RNG), so
+//! the assignment of items to workers can never affect results: thread
+//! count and backend are pure performance knobs, pinned bitwise by the
+//! `parallel_equals_sequential*` tests.
+//!
+//! A dispatch blocks the caller until every worker has finished its chunk
+//! (barrier semantics). Worker panics are captured and re-raised on the
+//! caller. Nested dispatches (a job that itself dispatches) degrade to
+//! inline execution rather than deadlocking.
+//!
+//! # Backends
+//!
+//! [`Exec`] is a copyable handle selecting the backend per call site:
+//!
+//! * `Exec::seq()` — inline, single-threaded;
+//! * `Exec::spawn(t)` — scoped `std::thread` spawn per dispatch (the
+//!   pre-pool behavior, kept as the A/B baseline for `benches/hotpath.rs`
+//!   and [`crate::coordinator::engine::Scheduler::SpawnPerPhase`]);
+//! * `Exec::pool(&pool)` — the persistent pool.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::linalg::Mat;
+
+/// Maximum number of state matrices a single [`par_agents`] /
+/// [`par_agents2`] dispatch can carry. Bounded so per-agent row bundles
+/// live on the stack (no per-round heap allocation); the largest in-tree
+/// user (LEAD) needs 4.
+pub const MAX_MATS: usize = 8;
+
+/// Raw-pointer wrapper that lets dispatch closures hand each worker the
+/// disjoint per-item `&mut` it owns. Safety rests on the chunking
+/// contract: no two workers ever receive the same index.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Type-erased job pointer parked in the pool's dispatch slot. The
+/// lifetime erasure is sound because [`WorkerPool::run`] does not return
+/// until every worker has acknowledged the dispatch.
+#[derive(Clone, Copy)]
+struct RawJob(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for RawJob {}
+
+struct JobSlot {
+    /// Dispatch generation; workers run one job per increment.
+    epoch: u64,
+    /// Worker indices `< bound` execute the job; the rest just ack.
+    bound: usize,
+    job: Option<RawJob>,
+    shutdown: bool,
+}
+
+struct DoneState {
+    acked: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    start: Condvar,
+    done: Mutex<DoneState>,
+    finish: Condvar,
+}
+
+/// Long-lived worker threads with barrier-synchronized phase dispatch.
+///
+/// The pool represents `threads` units of parallelism: the caller of
+/// [`WorkerPool::run`] participates as worker 0 and `threads − 1` spawned
+/// threads serve indices `1..threads`. Workers sleep on a condvar between
+/// dispatches; a dispatch publishes a borrowed job closure, wakes
+/// everyone, runs the caller's own share, and blocks until all spawned
+/// workers acknowledge — so the borrowed closure provably outlives every
+/// use, and per-dispatch cost is two condvar hops with no allocation.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+    /// Guards against nested dispatch (a job dispatching on the same
+    /// pool): the inner call runs inline instead of deadlocking.
+    busy: AtomicBool,
+}
+
+impl WorkerPool {
+    /// Create a pool representing `threads` total units of parallelism
+    /// (spawns `threads − 1` OS threads; the dispatching thread is
+    /// worker 0).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(JobSlot { epoch: 0, bound: 0, job: None, shutdown: false }),
+            start: Condvar::new(),
+            done: Mutex::new(DoneState { acked: 0, panic: None }),
+            finish: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("lead-pool-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("WorkerPool: failed to spawn worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, threads, busy: AtomicBool::new(false) }
+    }
+
+    /// Total units of parallelism (spawned workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `job(w)` for every worker index `w in 0..workers`, distributed
+    /// over the pool, and return once all have finished. The caller
+    /// executes `job(0)`; spawned workers whose index is `>= workers`
+    /// idle-ack. Panics inside `job` propagate to the caller after all
+    /// workers have stopped touching it.
+    pub fn run(&self, workers: usize, job: &(dyn Fn(usize) + Sync)) {
+        let workers = workers.clamp(1, self.threads);
+        if workers == 1 || self.handles.is_empty() {
+            for w in 0..workers {
+                job(w);
+            }
+            return;
+        }
+        if self.busy.swap(true, Ordering::Acquire) {
+            // Nested dispatch from inside a running job: run inline.
+            for w in 0..workers {
+                job(w);
+            }
+            return;
+        }
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.epoch += 1;
+            slot.bound = workers;
+            // Lifetime erasure — sound because the JoinGuard below blocks
+            // until every spawned worker acknowledged this epoch.
+            let raw = job as *const (dyn Fn(usize) + Sync);
+            slot.job = Some(RawJob(unsafe { std::mem::transmute(raw) }));
+        }
+        self.shared.start.notify_all();
+        // Even if the caller's own share panics, the guard still waits for
+        // the workers before unwinding past the job's borrow.
+        let guard = JoinGuard { pool: self };
+        job(0);
+        drop(guard);
+    }
+}
+
+struct JoinGuard<'a> {
+    pool: &'a WorkerPool,
+}
+
+impl Drop for JoinGuard<'_> {
+    fn drop(&mut self) {
+        let shared = &self.pool.shared;
+        let spawned = self.pool.handles.len();
+        let panic = {
+            let mut done = shared.done.lock().unwrap();
+            while done.acked < spawned {
+                done = shared.finish.wait(done).unwrap();
+            }
+            done.acked = 0;
+            done.panic.take()
+        };
+        shared.slot.lock().unwrap().job = None;
+        self.pool.busy.store(false, Ordering::Release);
+        if let Some(p) = panic {
+            if !std::thread::panicking() {
+                resume_unwind(p);
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.slot.lock().unwrap().shutdown = true;
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, w: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, bound) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen {
+                    break;
+                }
+                slot = shared.start.wait(slot).unwrap();
+            }
+            seen = slot.epoch;
+            (slot.job.expect("dispatch without job"), slot.bound)
+        };
+        if w < bound {
+            // SAFETY: the dispatcher blocks until this worker acks below,
+            // so the borrowed closure is still alive.
+            let f = unsafe { &*job.0 };
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(w))) {
+                let mut done = shared.done.lock().unwrap();
+                done.panic.get_or_insert(p);
+            }
+        }
+        let mut done = shared.done.lock().unwrap();
+        done.acked += 1;
+        drop(done);
+        shared.finish.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exec: per-call-site backend handle
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Backend<'a> {
+    Seq,
+    Spawn,
+    Pool(&'a WorkerPool),
+}
+
+/// Copyable execution handle passed down to every parallel phase: which
+/// backend to dispatch on and how many units of parallelism to use.
+/// Trajectories never depend on it (see module docs).
+#[derive(Clone, Copy)]
+pub struct Exec<'a> {
+    backend: Backend<'a>,
+    threads: usize,
+}
+
+impl<'a> Exec<'a> {
+    /// Inline execution (no parallelism).
+    pub fn seq() -> Exec<'static> {
+        Exec { backend: Backend::Seq, threads: 1 }
+    }
+
+    /// Scoped-spawn backend: every dispatch spawns `threads` OS threads
+    /// (the pre-pool behavior; kept for A/B benchmarking).
+    pub fn spawn(threads: usize) -> Exec<'static> {
+        Exec { backend: Backend::Spawn, threads: threads.max(1) }
+    }
+
+    /// Persistent-pool backend.
+    pub fn pool(pool: &'a WorkerPool) -> Exec<'a> {
+        Exec { backend: Backend::Pool(pool), threads: pool.threads() }
+    }
+
+    /// Units of parallelism this handle will use.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Same backend, gated to at most `threads` units (phase-size gating;
+    /// never below 1, never above the backend's configured capacity).
+    pub fn with_threads(self, threads: usize) -> Exec<'a> {
+        let cap = match self.backend {
+            Backend::Seq => 1,
+            Backend::Spawn => self.threads,
+            Backend::Pool(p) => p.threads(),
+        };
+        Exec { backend: self.backend, threads: threads.clamp(1, cap.max(1)) }
+    }
+
+    /// Dispatch primitive: run `job(w)` for `w in 0..workers` across the
+    /// backend and return when all are done.
+    pub fn run_workers(&self, workers: usize, job: &(dyn Fn(usize) + Sync)) {
+        let workers = workers.clamp(1, self.threads);
+        match self.backend {
+            _ if workers == 1 => job(0),
+            Backend::Seq => job(0),
+            Backend::Spawn => {
+                std::thread::scope(|s| {
+                    for w in 0..workers {
+                        let job = &job;
+                        s.spawn(move || job(w));
+                    }
+                });
+            }
+            Backend::Pool(p) => p.run(workers, job),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch helpers (the chunking contract lives here)
+// ---------------------------------------------------------------------------
+
+/// Run `f(i, &mut items[i])` for every item, chunked contiguously across
+/// the backend. `f` must be independent per item for the schedule to be
+/// trajectory-invariant. Allocation-free for any backend.
+pub fn par_chunks<T, F>(exec: Exec<'_>, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let t = exec.threads().min(n).max(1);
+    if t == 1 {
+        for (i, it) in items.iter_mut().enumerate() {
+            f(i, it);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(t);
+    let base = SendPtr(items.as_mut_ptr());
+    exec.run_workers(t, &|w| {
+        let start = w * chunk;
+        let end = (start + chunk).min(n);
+        for i in start..end {
+            // SAFETY: workers cover disjoint contiguous index ranges.
+            f(i, unsafe { &mut *base.0.add(i) });
+        }
+    });
+}
+
+/// Collect `(base pointer, cols)` for each state mat onto the stack.
+fn mat_bases(mats: &mut [&mut Mat], n: usize) -> [(SendPtr<f64>, usize); MAX_MATS] {
+    assert!(mats.len() <= MAX_MATS, "par_agents: too many state mats ({} > {MAX_MATS})", mats.len());
+    // Hard assert (once per dispatch): a row-count mismatch would turn the
+    // raw-pointer row slicing below into out-of-bounds access in release
+    // builds, not just wrong results.
+    assert!(mats.iter().all(|mm| mm.rows == n), "par_agents: agent-count mismatch");
+    let mut bases = [(SendPtr(std::ptr::null_mut::<f64>()), 0usize); MAX_MATS];
+    for (slot, mm) in bases.iter_mut().zip(mats.iter_mut()) {
+        *slot = (SendPtr(mm.data.as_mut_ptr()), mm.cols);
+    }
+    bases
+}
+
+/// Run `f(i, rows)` for every agent i, where `rows[m]` is agent i's row
+/// of `mats[m]` — the apply-phase fan-out. Rows of distinct agents are
+/// disjoint, so workers never alias state; combined with the no-RNG
+/// contract of [`crate::algorithms::Algorithm::recv_all`], the parallel
+/// schedule is bitwise-equal to the sequential one. Row bundles live on
+/// the stack (≤ [`MAX_MATS`] mats): no allocation per call.
+pub fn par_agents<F>(exec: Exec<'_>, mats: &mut [&mut Mat], f: F)
+where
+    F: Fn(usize, &mut [&mut [f64]]) + Sync,
+{
+    let n = mats.first().map_or(0, |m| m.rows);
+    if n == 0 {
+        return;
+    }
+    let m = mats.len();
+    let bases = mat_bases(mats, n);
+    let t = exec.threads().min(n).max(1);
+    let chunk = n.div_ceil(t);
+    exec.run_workers(t, &|w| {
+        let start = w * chunk;
+        let end = (start + chunk).min(n);
+        // Stack storage for the row bundle (`&mut []` needs no backing
+        // memory): allocation-free, lifetime inferred locally.
+        let mut rows: [&mut [f64]; MAX_MATS] =
+            [&mut [], &mut [], &mut [], &mut [], &mut [], &mut [], &mut [], &mut []];
+        for i in start..end {
+            for (slot, &(ptr, cols)) in rows[..m].iter_mut().zip(&bases[..m]) {
+                // SAFETY: agent i's row of each mat; disjoint across
+                // workers by the chunking contract.
+                *slot = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * cols), cols) };
+            }
+            f(i, &mut rows[..m]);
+        }
+    });
+}
+
+/// [`par_agents`] with two extra per-agent values zipped in: `f(i, rows,
+/// &mut a[i], &mut b[i])`. This is what lets an algorithm's fused
+/// [`crate::algorithms::Algorithm::produce_all`] hand each agent its
+/// gradient buffer and payload alongside its state rows in one dispatch.
+/// The agent count is `a.len()`; `b` and every mat must match it (`mats`
+/// may be empty for algorithms whose send path mutates no state).
+pub fn par_agents2<A, B, F>(exec: Exec<'_>, mats: &mut [&mut Mat], a: &mut [A], b: &mut [B], f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [&mut [f64]], &mut A, &mut B) + Sync,
+{
+    let n = a.len();
+    assert_eq!(b.len(), n, "par_agents2: extra-slice length mismatch");
+    if n == 0 {
+        return;
+    }
+    let m = mats.len();
+    let bases = mat_bases(mats, n);
+    let (ap, bp) = (SendPtr(a.as_mut_ptr()), SendPtr(b.as_mut_ptr()));
+    let t = exec.threads().min(n).max(1);
+    let chunk = n.div_ceil(t);
+    exec.run_workers(t, &|w| {
+        let start = w * chunk;
+        let end = (start + chunk).min(n);
+        // Stack storage for the row bundle (`&mut []` needs no backing
+        // memory): allocation-free, lifetime inferred locally.
+        let mut rows: [&mut [f64]; MAX_MATS] =
+            [&mut [], &mut [], &mut [], &mut [], &mut [], &mut [], &mut [], &mut []];
+        for i in start..end {
+            for (slot, &(ptr, cols)) in rows[..m].iter_mut().zip(&bases[..m]) {
+                // SAFETY: agent i's row of each mat; disjoint across
+                // workers by the chunking contract.
+                *slot = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * cols), cols) };
+            }
+            // SAFETY: per-agent extras; same disjointness argument.
+            let (ai, bi) = unsafe { (&mut *ap.0.add(i), &mut *bp.0.add(i)) };
+            f(i, &mut rows[..m], ai, bi);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_every_worker_index_once() {
+        let pool = WorkerPool::new(4);
+        for bound in [1usize, 2, 3, 4, 7] {
+            let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+            let h = &hits;
+            pool.run(bound, &|w| {
+                h[w].fetch_add(1, Ordering::Relaxed);
+            });
+            let expect = bound.min(4);
+            for (w, c) in hits.iter().enumerate() {
+                let want = usize::from(w < expect);
+                assert_eq!(c.load(Ordering::Relaxed), want, "bound={bound} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reused_across_many_dispatches() {
+        // The point of the pool: thousands of dispatches on the same
+        // workers. Sum 0..n once per dispatch and check the total.
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..2000 {
+            let t = &total;
+            pool.run(3, &|w| {
+                t.fetch_add(w + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 2000 * 6);
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        let c = &count;
+        let p = &pool;
+        pool.run(2, &|_w| {
+            // Nested dispatch must not deadlock; it degrades to inline.
+            p.run(2, &|_| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, &|w| {
+                if w == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must reach the caller");
+        // The pool must still be usable afterwards.
+        let ok = AtomicUsize::new(0);
+        let o = &ok;
+        pool.run(2, &|_| {
+            o.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn par_chunks_matches_inline_on_all_backends() {
+        let n = 257usize;
+        let mut want: Vec<f64> = (0..n).map(|i| (i * 3 + 1) as f64).collect();
+        for v in want.iter_mut() {
+            *v = v.sin();
+        }
+        let compute = |exec: Exec<'_>| {
+            let mut xs: Vec<f64> = (0..n).map(|i| (i * 3 + 1) as f64).collect();
+            par_chunks(exec, &mut xs, |_i, x| *x = x.sin());
+            xs
+        };
+        let pool = WorkerPool::new(5);
+        for exec in [Exec::seq(), Exec::spawn(3), Exec::pool(&pool), Exec::pool(&pool).with_threads(2)] {
+            let got = compute(exec);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn par_agents2_zips_state_and_extras() {
+        let pool = WorkerPool::new(4);
+        for n in [1usize, 5, 8] {
+            let mut m1 = Mat::zeros(n, 3);
+            let mut m2 = Mat::zeros(n, 2);
+            let mut extra_a: Vec<f64> = vec![0.0; n];
+            let mut extra_b: Vec<usize> = vec![0; n];
+            par_agents2(
+                Exec::pool(&pool),
+                &mut [&mut m1, &mut m2],
+                &mut extra_a,
+                &mut extra_b,
+                |i, rows, a, b| match rows {
+                    [r1, r2] => {
+                        for v in r1.iter_mut() {
+                            *v = i as f64;
+                        }
+                        for v in r2.iter_mut() {
+                            *v = 2.0 * i as f64;
+                        }
+                        *a = i as f64 + 0.5;
+                        *b = i * 10;
+                    }
+                    _ => unreachable!(),
+                },
+            );
+            for i in 0..n {
+                assert!(m1.row(i).iter().all(|&v| v == i as f64));
+                assert!(m2.row(i).iter().all(|&v| v == 2.0 * i as f64));
+                assert_eq!(extra_a[i], i as f64 + 0.5);
+                assert_eq!(extra_b[i], i * 10);
+            }
+        }
+    }
+
+    #[test]
+    fn exec_with_threads_gates() {
+        let pool = WorkerPool::new(8);
+        assert_eq!(Exec::pool(&pool).threads(), 8);
+        assert_eq!(Exec::pool(&pool).with_threads(3).threads(), 3);
+        assert_eq!(Exec::pool(&pool).with_threads(100).threads(), 8);
+        assert_eq!(Exec::seq().with_threads(4).threads(), 1);
+        assert_eq!(Exec::spawn(4).threads(), 4);
+        // Gating can never raise parallelism above the configured budget.
+        assert_eq!(Exec::spawn(2).with_threads(8).threads(), 2);
+        assert_eq!(Exec::spawn(4).with_threads(3).threads(), 3);
+    }
+}

@@ -13,6 +13,7 @@ pub mod lbfgs;
 pub mod linreg;
 pub mod logreg;
 pub mod neural;
+pub mod quad;
 
 /// How data is partitioned across agents (paper §5, logistic regression).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

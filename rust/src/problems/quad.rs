@@ -1,0 +1,85 @@
+//! Separable quadratic `f_i(x) = ½‖x − b_i‖²` with random targets.
+//!
+//! The cheapest possible heterogeneous problem: the gradient oracle is a
+//! single allocation-free O(d) pass, so harnesses that time or audit the
+//! *engine* (the hotpath bench's scheduler A/B, the steady-state
+//! zero-allocation test) see the communication path, not the problem.
+//! The global optimum is the mean of the targets, but it is deliberately
+//! not exposed (`optimum() = None`) to keep metric passes O(n·d) with no
+//! setup-time solve.
+
+use super::Problem;
+use crate::rng::Rng;
+
+pub struct Quad {
+    n: usize,
+    d: usize,
+    targets: Vec<Vec<f64>>,
+}
+
+impl Quad {
+    /// `n` agents, dimension `d`, targets drawn i.i.d. N(0, 1) from `seed`.
+    pub fn new(n: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let targets = (0..n)
+            .map(|_| {
+                let mut b = vec![0.0f64; d];
+                rng.fill_normal(&mut b, 1.0);
+                b
+            })
+            .collect();
+        Quad { n, d, targets }
+    }
+}
+
+impl Problem for Quad {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_agents(&self) -> usize {
+        self.n
+    }
+
+    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
+        let b = &self.targets[agent];
+        for t in 0..x.len() {
+            out[t] = x[t] - b[t];
+        }
+    }
+
+    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
+        0.5 * crate::linalg::dist_sq(x, &self.targets[agent])
+    }
+
+    fn optimum(&self) -> Option<&[f64]> {
+        None
+    }
+
+    fn name(&self) -> String {
+        format!("quad(n={}, d={})", self.n, self.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_and_loss_are_consistent() {
+        let p = Quad::new(3, 16, 9);
+        let mut x = vec![0.0f64; 16];
+        Rng::new(1).fill_normal(&mut x, 1.0);
+        let mut g = vec![0.0f64; 16];
+        p.grad_full(1, &x, &mut g);
+        // f(x) − f(x − εg) ≈ ε‖g‖² for the quadratic.
+        let eps = 1e-6;
+        let stepped: Vec<f64> = x.iter().zip(&g).map(|(xi, gi)| xi - eps * gi).collect();
+        let drop = p.loss(1, &x) - p.loss(1, &stepped);
+        let expect = eps * crate::linalg::norm2_sq(&g);
+        assert!((drop - expect).abs() < 1e-9, "drop {drop} vs {expect}");
+        // At the target the gradient vanishes.
+        p.grad_full(1, &p.targets[1].clone(), &mut g);
+        assert!(g.iter().all(|&v| v == 0.0));
+    }
+}

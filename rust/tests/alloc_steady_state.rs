@@ -1,0 +1,105 @@
+//! §Perf regression: the engine's round loop performs ZERO heap
+//! allocations in steady state, on both the dense (quantize) and sparse
+//! (top-k) paths.
+//!
+//! Methodology: a counting global allocator tallies every `alloc` /
+//! `realloc`. Two runs that differ only in round count must allocate the
+//! *same* total — setup, warm-up (lazy buffer growth in the first
+//! round(s)), and the two metric observations (round 0 + final) are
+//! identical between them, so any difference is per-round allocation:
+//!
+//! `allocs(R2 rounds) − allocs(R1 rounds) = (R2 − R1) · per_round = 0`.
+//!
+//! This covers the whole loop — mini-batch draws, the fused
+//! gradient→send→compress produce phase (pool dispatch included),
+//! sparse-aware mixing, and the parallel apply — with `record_every`
+//! large so no observation lands in the differential window (observed
+//! rounds are a documented exception: metric passes allocate scratch).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use lead::algorithms::lead::Lead;
+use lead::compress::quantize::{PNorm, QuantizeP};
+use lead::compress::topk::TopK;
+use lead::compress::Compressor;
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::problems::quad::Quad;
+use lead::topology::{MixingRule, Topology};
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct Counting;
+
+// SAFETY: delegates everything to `System`; only adds a counter.
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: Counting = Counting;
+
+fn allocs_for(rounds: usize, threads: usize, comp: Box<dyn Compressor>) -> usize {
+    let n = 8;
+    let d = 96;
+    let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+    let mut e = Engine::new(
+        EngineConfig {
+            eta: 0.05,
+            threads,
+            // No observation falls inside the differential window.
+            record_every: usize::MAX / 2,
+            ..Default::default()
+        },
+        mix,
+        Box::new(Quad::new(n, d, 7)),
+    );
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let rec = e.run(Box::new(Lead::paper_default()), Some(comp), rounds);
+    let total = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(rec.series.len(), 2, "only round 0 and the final round observed");
+    total
+}
+
+fn assert_zero_steady_state(name: &str, make: fn() -> Box<dyn Compressor>) {
+    for threads in [1usize, 2] {
+        // Throwaway run first so whole-process lazy init (thread-local
+        // setup, allocator internals) cannot skew the differential.
+        let _ = allocs_for(3, threads, make());
+        let short = allocs_for(5, threads, make());
+        let long = allocs_for(45, threads, make());
+        assert_eq!(
+            short, long,
+            "{name} path allocates in steady state (threads={threads}): \
+             {short} allocs for 5 rounds vs {long} for 45 — \
+             {} per extra round",
+            (long as f64 - short as f64) / 40.0
+        );
+    }
+}
+
+/// Dense path: 2-bit ∞-norm quantization. Every buffer (payload bits,
+/// decoded values, mixes, gradients) must be reused after warm-up.
+#[test]
+fn dense_quantize_path_is_zero_alloc_in_steady_state() {
+    assert_zero_steady_state("dense/quantize", || {
+        Box::new(QuantizeP::new(2, PNorm::Inf, 512))
+    });
+}
+
+/// Sparse path: top-k with the scratch-carrying `compress_into` fast path
+/// (index buffer reuse, lazy dense decode) plus sparse scatter mixing.
+#[test]
+fn sparse_topk_path_is_zero_alloc_in_steady_state() {
+    assert_zero_steady_state("sparse/top-k", || Box::new(TopK::new(9)));
+}
