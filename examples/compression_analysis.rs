@@ -4,6 +4,6 @@
 //!     cargo run --release --example compression_analysis
 fn main() {
     let out = Some(std::path::Path::new("results"));
-    lead::experiments::fig5(out);
-    lead::experiments::fig6(out);
+    lead::experiments::fig5(out).expect("fig5");
+    lead::experiments::fig6(out).expect("fig6");
 }

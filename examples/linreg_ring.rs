@@ -8,6 +8,6 @@ fn main() {
         .nth(1)
         .and_then(|r| r.parse().ok())
         .unwrap_or(1500);
-    lead::experiments::fig1(Some(std::path::Path::new("results")), rounds);
+    lead::experiments::fig1(Some(std::path::Path::new("results")), rounds).expect("fig1");
     println!("\nCSV series written to results/fig1_linreg_*.csv");
 }

@@ -7,7 +7,7 @@ use lead::problems::DataSplit;
 fn main() {
     let out = Some(std::path::Path::new("results"));
     println!("=== full-batch (Fig. 2) ===");
-    lead::experiments::fig_logreg(DataSplit::Heterogeneous, false, out, 400, 4000);
+    lead::experiments::fig_logreg(DataSplit::Heterogeneous, false, out, 400, 4000).expect("fig2");
     println!("\n=== mini-batch 512 (Fig. 3) ===");
-    lead::experiments::fig_logreg(DataSplit::Heterogeneous, true, out, 400, 4000);
+    lead::experiments::fig_logreg(DataSplit::Heterogeneous, true, out, 400, 4000).expect("fig3");
 }

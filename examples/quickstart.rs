@@ -18,7 +18,7 @@ fn main() {
     println!("topology: ring, β={:.3}, κ_g={:.2}", topo.beta(), topo.kappa_g());
 
     // The paper's linear-regression workload: A_i ∈ R^{200×200}, λ=0.1.
-    let make_problem = || Box::new(LinReg::synthetic(8, 200, 0.1, 42));
+    let make_problem = || std::sync::Arc::new(LinReg::synthetic(8, 200, 0.1, 42));
 
     // LEAD, paper defaults (η=0.1, γ=1.0, α=0.5), 2-bit q∞ / block 512.
     let mut engine = Engine::new(EngineConfig::default(), topo.clone(), make_problem());

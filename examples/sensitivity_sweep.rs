@@ -3,7 +3,7 @@
 //!
 //!     cargo run --release --example sensitivity_sweep
 fn main() {
-    let rows = lead::experiments::fig7(Some(std::path::Path::new("results")), 1500);
+    let rows = lead::experiments::fig7(Some(std::path::Path::new("results")), 1500).expect("fig7");
     let ok = rows.iter().filter(|r| r.2.is_some()).count();
     println!("\n{ok}/{} (α, γ) cells converged to 1e-6", rows.len());
 }

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         },
         mix,
-        Box::new(problem),
+        std::sync::Arc::new(problem),
     );
     let t = std::time::Instant::now();
     let rec = engine.run(

@@ -2,7 +2,7 @@
 //! `cargo bench --bench fig1_linreg`
 fn main() {
     let t = std::time::Instant::now();
-    let recs = lead::experiments::fig1(Some(std::path::Path::new("results")), 1500);
+    let recs = lead::experiments::fig1(Some(std::path::Path::new("results")), 1500).expect("fig1");
     // Paper-shape assertions: LEAD exact, ~10x bit saving vs NIDS.
     let lead_rec = recs.iter().find(|r| r.algo.starts_with("LEAD")).unwrap();
     let nids = recs.iter().find(|r| r.algo == "NIDS").unwrap();

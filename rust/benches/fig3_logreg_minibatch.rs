@@ -4,6 +4,7 @@ use lead::problems::DataSplit;
 fn main() {
     let t = std::time::Instant::now();
     lead::experiments::fig_logreg(DataSplit::Heterogeneous, true,
-        Some(std::path::Path::new("results")), 400, 4000);
+        Some(std::path::Path::new("results")), 400, 4000)
+        .expect("fig3");
     println!("fig3 total: {:.1}s", t.elapsed().as_secs_f64());
 }

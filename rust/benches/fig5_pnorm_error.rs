@@ -1,7 +1,7 @@
 //! Bench: regenerate Fig. 5 — p-norm b-bit quantization error.
 fn main() {
     let t = std::time::Instant::now();
-    let rows = lead::experiments::fig5(Some(std::path::Path::new("results")));
+    let rows = lead::experiments::fig5(Some(std::path::Path::new("results"))).expect("fig5");
     // Shape assertion: inf-norm strictly dominates p=1 at every bit width.
     for bits in [2u32, 4, 6, 8] {
         let p1 = rows.iter().find(|(l, b, _)| l == "p=1" && *b == bits).unwrap().2;

@@ -1,7 +1,7 @@
 //! Bench: regenerate Fig. 6 — q∞ vs top-k vs random-k error per bit.
 fn main() {
     let t = std::time::Instant::now();
-    let rows = lead::experiments::fig6(Some(std::path::Path::new("results")));
+    let rows = lead::experiments::fig6(Some(std::path::Path::new("results"))).expect("fig6");
     // Shape assertion: at ~3 bits/elem, q∞ beats both sparsifiers at
     // comparable budgets (the paper's Fig. 6 conclusion).
     let q2 = rows.iter().find(|(n, _, _)| n.contains("2bit")).unwrap();

@@ -1,7 +1,7 @@
 //! Bench: regenerate Fig. 7 — LEAD (α, γ) sensitivity grid.
 fn main() {
     let t = std::time::Instant::now();
-    let rows = lead::experiments::fig7(Some(std::path::Path::new("results")), 1200);
+    let rows = lead::experiments::fig7(Some(std::path::Path::new("results")), 1200).expect("fig7");
     let ok = rows.iter().filter(|r| r.2.is_some()).count();
     println!("\nconverged cells: {ok}/{}", rows.len());
     println!("fig7 total: {:.1}s", t.elapsed().as_secs_f64());

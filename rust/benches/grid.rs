@@ -1,0 +1,148 @@
+//! Grid-throughput A/B (§Perf): the fig7 25-cell (α, γ) sensitivity
+//! sweep executed by the serial per-cell baseline vs the sharded
+//! scenario [`Driver`] on a shared worker pool.
+//!
+//! Every fig7 cell is a *small* run (n = 8, d = 200 — far below the
+//! engine's inner fan-out threshold), so the serial baseline cannot use
+//! any parallelism; the driver shards whole runs across pool workers
+//! instead. Trajectories are bitwise-identical by construction (pinned by
+//! `scenarios::tests::sharded_grid_bitwise_equals_serial` and re-checked
+//! here), so the A/B measures scheduling alone. Acceptance target:
+//! ≥ 2× wall-clock at 8 threads.
+//!
+//! Writes the machine-readable `BENCH_grid.json` at the repo root (the
+//! committed perf-trajectory baseline for `lead bench-diff`); smoke runs
+//! (`-- --smoke`, wired into CI) write a throwaway
+//! `BENCH_grid_smoke.json` so they can never clobber the baseline.
+
+use lead::coordinator::metrics::RunRecord;
+use lead::experiments::fig7_grid;
+use lead::scenarios::{Driver, RunSpec};
+
+fn run_grid(specs: &[RunSpec], threads: usize) -> (f64, Vec<RunRecord>) {
+    let t = std::time::Instant::now();
+    let recs = Driver::new(threads).run("fig7_bench", specs).expect("grid run failed");
+    (t.elapsed().as_secs_f64(), recs)
+}
+
+fn bitwise_identical(a: &[RunRecord], b: &[RunRecord]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(ra, rb)| {
+            ra.series.len() == rb.series.len()
+                && ra.series.iter().zip(&rb.series).all(|(ma, mb)| {
+                    ma.dist_opt.to_bits() == mb.dist_opt.to_bits()
+                        && ma.consensus.to_bits() == mb.consensus.to_bits()
+                        && ma.bits_per_agent == mb.bits_per_agent
+                })
+        })
+}
+
+struct GridAb {
+    name: String,
+    threads: usize,
+    cells: usize,
+    rounds: usize,
+    serial_s: f64,
+    sharded_s: f64,
+    identical: bool,
+}
+
+impl GridAb {
+    fn speedup(&self) -> f64 {
+        self.serial_s / self.sharded_s
+    }
+
+    fn to_json(&self) -> String {
+        let fin = |x: f64| if x.is_finite() { format!("{x:.3}") } else { "null".into() };
+        format!(
+            "{{\"name\":\"{}\",\"threads\":{},\"cells\":{},\"rounds\":{},\
+             \"serial_s\":{},\"sharded_s\":{},\"speedup\":{},\"identical\":{}}}",
+            self.name,
+            self.threads,
+            self.cells,
+            self.rounds,
+            fin(self.serial_s),
+            fin(self.sharded_s),
+            fin(self.speedup()),
+            self.identical
+        )
+    }
+}
+
+fn bench_fig7(rounds: usize, threads: usize) -> GridAb {
+    let specs = fig7_grid(rounds).expand().expect("fig7 grid");
+    // Warm (problem construction, page cache) outside the timed region:
+    // the driver builds/dedupes the shared problem inside run(), so time
+    // both sides the same way after one throwaway pass.
+    let _ = run_grid(&specs[..2.min(specs.len())], 1);
+    let (serial_s, serial) = run_grid(&specs, 1);
+    let (sharded_s, sharded) = run_grid(&specs, threads);
+    let r = GridAb {
+        name: format!("fig7-25cell r={rounds} t={threads}"),
+        threads,
+        cells: specs.len(),
+        rounds,
+        serial_s,
+        sharded_s,
+        identical: bitwise_identical(&serial, &sharded),
+    };
+    println!(
+        "grid A/B {:<28} serial {serial_s:7.2}s  sharded {sharded_s:7.2}s  speedup {:5.2}x  bitwise-identical: {}",
+        r.name,
+        r.speedup(),
+        r.identical
+    );
+    r
+}
+
+/// Write the bench record at the repository root (one level above the
+/// crate manifest) — same convention as `benches/hotpath.rs`.
+fn write_json(results: &[GridAb], smoke: bool) {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level below the repo root")
+        .to_path_buf();
+    let configs: Vec<String> = results.iter().map(|r| r.to_json()).collect();
+    let json = format!(
+        "{{\"schema\":1,\"bench\":\"grid\",\"smoke\":{},\"configs\":[{}]}}\n",
+        smoke,
+        configs.join(",")
+    );
+    let name = if smoke { "BENCH_grid_smoke.json" } else { "BENCH_grid.json" };
+    let path = root.join(name);
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => {
+            // A silently missing artifact would let the CI perf gate
+            // compare a stale baseline against its own copy — fail loud.
+            eprintln!("could not write {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        // CI smoke: a short sweep proving the sharded driver, the
+        // bitwise check, and the JSON emission work end to end.
+        let r = bench_fig7(40, 4);
+        assert!(r.identical, "sharded grid diverged from serial baseline");
+        write_json(&[r], true);
+        return;
+    }
+
+    let mut results = Vec::new();
+    for threads in [2usize, 4, 8] {
+        results.push(bench_fig7(800, threads));
+    }
+    for r in &results {
+        assert!(r.identical, "{}: sharded grid diverged from serial baseline", r.name);
+    }
+    write_json(&results, false);
+    let headline = results.iter().find(|r| r.threads == 8).unwrap();
+    println!(
+        "headline: fig7 25-cell sweep at 8 threads — {:.2}x (target >= 2x)",
+        headline.speedup()
+    );
+}

@@ -106,7 +106,7 @@ fn timed_run(
             ..Default::default()
         },
         mix,
-        Box::new(Quad::new(n, d, 3)),
+        std::sync::Arc::new(Quad::new(n, d, 3)),
     );
     let t = std::time::Instant::now();
     let rec = e.run(Box::new(Lead::paper_default()), Some(comp), rounds);
@@ -199,7 +199,7 @@ fn bench_engine_ab(
     r
 }
 
-fn bench(name: &str, problem: Box<dyn lead::problems::Problem>, threads: usize, rounds: usize) {
+fn bench(name: &str, problem: std::sync::Arc<dyn lead::problems::Problem>, threads: usize, rounds: usize) {
     let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
     let mut e = Engine::new(
         EngineConfig { threads, record_every: usize::MAX / 2, ..Default::default() },
@@ -240,7 +240,12 @@ fn write_json(results: &[AbResult], smoke: bool) {
     let path = root.join(name);
     match std::fs::write(&path, &json) {
         Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+        Err(e) => {
+            // A silently missing artifact would let the CI perf gate
+            // compare a stale baseline against its own copy — fail loud.
+            eprintln!("could not write {}: {e}", path.display());
+            std::process::exit(1);
+        }
     }
 }
 
@@ -291,7 +296,7 @@ fn main() {
     for threads in [1usize, 4, 8] {
         bench(
             "linreg d=200 (fig1 shape)",
-            Box::new(LinReg::synthetic(8, 200, 0.1, 1)),
+            std::sync::Arc::new(LinReg::synthetic(8, 200, 0.1, 1)),
             threads,
             400,
         );
@@ -299,7 +304,7 @@ fn main() {
     for threads in [1usize, 4, 8] {
         bench(
             "logreg d=7850 full-batch (fig2 shape)",
-            Box::new(LogReg::synthetic(8, 4000, 784, 10, 1e-4, DataSplit::Heterogeneous, 1, false)),
+            std::sync::Arc::new(LogReg::synthetic(8, 4000, 784, 10, 1e-4, DataSplit::Heterogeneous, 1, false)),
             threads,
             60,
         );

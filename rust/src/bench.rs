@@ -1,0 +1,162 @@
+//! Bench-trajectory tooling: compare a freshly produced `BENCH_*.json`
+//! (written by `benches/hotpath.rs` / `benches/grid.rs`) against a
+//! committed baseline so perf regressions fail loudly in CI
+//! (`lead bench-diff <new.json> <baseline.json> [--tol X]`).
+//!
+//! Comparison model: every bench artifact carries a `configs` array of
+//! objects with a `name` and a `speedup` (a *ratio* — old vs new
+//! scheduler, serial vs sharded driver — which is far more stable across
+//! machines than absolute throughput). Configs are matched by name;
+//! matched configs whose speedup dropped by more than `tol` (relative)
+//! are **regressions**. Absolute-throughput drift (`new_rounds_per_s`)
+//! is machine-dependent and therefore reported as a note, never a
+//! failure. Unmatched configs are notes too, so renaming a config can't
+//! silently disarm the gate without a visible trace.
+
+use crate::error::{err, Result};
+use crate::serialize::json::{self, Json};
+
+/// Outcome of one baseline comparison.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    /// Hard failures: matched configs whose speedup regressed beyond tol.
+    pub regressions: Vec<String>,
+    /// Informational: unmatched configs, throughput drift, missing fields.
+    pub notes: Vec<String>,
+    /// Number of configs matched by name and compared.
+    pub compared: usize,
+}
+
+impl DiffReport {
+    pub fn ok(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+fn configs(doc: &Json, which: &str) -> Result<Vec<(String, Json)>> {
+    let arr = doc
+        .get("configs")
+        .and_then(|c| c.as_arr())
+        .ok_or_else(|| err(format!("{which}: no \"configs\" array — not a bench artifact")))?;
+    Ok(arr
+        .iter()
+        .filter_map(|c| {
+            c.get("name")
+                .and_then(|n| n.as_str())
+                .map(|n| (n.to_string(), c.clone()))
+        })
+        .collect())
+}
+
+/// Compare `new_src` against `baseline_src` with relative tolerance
+/// `tol` (e.g. 0.25 ⇒ a matched config may lose up to 25% of its
+/// baseline speedup before failing).
+pub fn diff(new_src: &str, baseline_src: &str, tol: f64) -> Result<DiffReport> {
+    let new_doc = json::parse(new_src).map_err(|e| err(format!("new artifact: {e}")))?;
+    let base_doc = json::parse(baseline_src).map_err(|e| err(format!("baseline: {e}")))?;
+    let new_cfgs = configs(&new_doc, "new artifact")?;
+    let base_cfgs = configs(&base_doc, "baseline")?;
+    let mut report = DiffReport::default();
+
+    for (name, cfg) in &new_cfgs {
+        let Some((_, base)) = base_cfgs.iter().find(|(b, _)| b == name) else {
+            report.notes.push(format!("{name}: not in baseline — skipped"));
+            continue;
+        };
+        let speed = cfg.get("speedup").and_then(|v| v.as_f64());
+        let base_speed = base.get("speedup").and_then(|v| v.as_f64());
+        match (speed, base_speed) {
+            (Some(s), Some(b)) if b.is_finite() && b > 0.0 => {
+                report.compared += 1;
+                if s < b * (1.0 - tol) {
+                    report.regressions.push(format!(
+                        "{name}: speedup {s:.2}x vs baseline {b:.2}x (dropped {:.0}%, tol {:.0}%)",
+                        (1.0 - s / b) * 100.0,
+                        tol * 100.0
+                    ));
+                } else if s > b * (1.0 + tol) {
+                    report
+                        .notes
+                        .push(format!("{name}: speedup improved {b:.2}x -> {s:.2}x"));
+                }
+            }
+            _ => report
+                .notes
+                .push(format!("{name}: no finite speedup on both sides — skipped")),
+        }
+        // Absolute throughput: machine-dependent, note-only.
+        if let (Some(s), Some(b)) = (
+            cfg.get("new_rounds_per_s").and_then(|v| v.as_f64()),
+            base.get("new_rounds_per_s").and_then(|v| v.as_f64()),
+        ) {
+            if b > 0.0 && (s / b - 1.0).abs() > tol {
+                report.notes.push(format!(
+                    "{name}: throughput {s:.1} r/s vs baseline {b:.1} r/s ({:+.0}%, note only)",
+                    (s / b - 1.0) * 100.0
+                ));
+            }
+        }
+    }
+    for (name, _) in &base_cfgs {
+        if !new_cfgs.iter().any(|(n, _)| n == name) {
+            report.notes.push(format!("baseline config {name} missing from new run"));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(name: &str, speedup: f64, rps: f64) -> String {
+        format!(
+            "{{\"schema\":1,\"bench\":\"hotpath\",\"configs\":[{{\"name\":\"{name}\",\
+             \"speedup\":{speedup},\"new_rounds_per_s\":{rps}}}]}}"
+        )
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let r = diff(&artifact("a", 1.9, 100.0), &artifact("a", 2.0, 100.0), 0.25).unwrap();
+        assert!(r.ok(), "{:?}", r.regressions);
+        assert_eq!(r.compared, 1);
+    }
+
+    #[test]
+    fn regression_fails() {
+        let r = diff(&artifact("a", 1.0, 100.0), &artifact("a", 2.0, 100.0), 0.25).unwrap();
+        assert!(!r.ok());
+        assert!(r.regressions[0].contains("speedup 1.00x vs baseline 2.00x"));
+    }
+
+    #[test]
+    fn throughput_drift_is_note_only() {
+        let r = diff(&artifact("a", 2.0, 50.0), &artifact("a", 2.0, 100.0), 0.25).unwrap();
+        assert!(r.ok());
+        assert!(r.notes.iter().any(|n| n.contains("throughput")));
+    }
+
+    #[test]
+    fn unmatched_configs_are_notes() {
+        let r = diff(&artifact("a", 2.0, 1.0), &artifact("b", 2.0, 1.0), 0.25).unwrap();
+        assert!(r.ok());
+        assert_eq!(r.compared, 0);
+        assert!(r.notes.iter().any(|n| n.contains("not in baseline")));
+        assert!(r.notes.iter().any(|n| n.contains("missing from new run")));
+    }
+
+    #[test]
+    fn null_speedup_skipped() {
+        let new = "{\"configs\":[{\"name\":\"a\",\"speedup\":null}]}";
+        let r = diff(new, &artifact("a", 2.0, 1.0), 0.25).unwrap();
+        assert!(r.ok());
+        assert_eq!(r.compared, 0);
+    }
+
+    #[test]
+    fn malformed_artifacts_error() {
+        assert!(diff("{}", &artifact("a", 1.0, 1.0), 0.25).is_err());
+        assert!(diff("not json", &artifact("a", 1.0, 1.0), 0.25).is_err());
+    }
+}

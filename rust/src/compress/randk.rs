@@ -8,7 +8,7 @@
 //! `E[Q(x)] = x` with variance constant `C = d/k − 1` (Assumption 2 holds).
 
 use super::wire::BitWriter;
-use super::{CompressedMsg, Compressor};
+use super::{CodecScratch, CompressedMsg, Compressor};
 use crate::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -23,6 +23,72 @@ impl RandK {
         assert!(k >= 1);
         RandK { k, unbiased }
     }
+
+    /// The single selection + wire-emission path behind both
+    /// [`Compressor::compress`] and [`Compressor::compress_into`], so the
+    /// two can never drift. Index draws and the shared seed consume the
+    /// RNG identically on both paths (`sample_indices_into` is
+    /// draw-for-draw the `sample_indices` stream), and the wire payload is
+    /// emitted in the same shuffled draw order — so eager and fast path
+    /// produce byte-identical messages and leave the dither stream in the
+    /// same state (scheduler A/B equivalence).
+    ///
+    /// * `eager_dense = true` (compress): materialize `values` and the
+    ///   canonical nonzero-only sparse list;
+    /// * `eager_dense = false` (compress_into): defer the O(d) dense fill
+    ///   (`dense_stale`) and record ALL selected entries — ±0.0 included —
+    ///   in ascending index order (the reused `idx` buffer is sorted in
+    ///   place; no `(index, value)` pair sort) so the lazy decode is
+    ///   bit-exact (see the `Compressor` docs).
+    fn sample_and_emit(
+        &self,
+        x: &[f64],
+        rng: &mut Rng,
+        out: &mut CompressedMsg,
+        idx: &mut Vec<usize>,
+        eager_dense: bool,
+    ) {
+        let d = x.len();
+        let k = if d == 0 { 0 } else { self.k.min(d) };
+        rng.sample_indices_into(d, k, idx);
+        let scale = if self.unbiased && k > 0 { d as f64 / k as f64 } else { 1.0 };
+
+        if eager_dense {
+            out.values.clear();
+        }
+        out.values.resize(d, 0.0); // lazy case: contents stale until ensure_dense
+        out.dense_stale = !eager_dense && d != 0;
+        let sp = out.sparse.get_or_insert_with(Vec::new);
+        sp.clear();
+        let mut w = BitWriter::new();
+        std::mem::swap(&mut w.bytes, &mut out.payload);
+        w.clear();
+        // Shared seed (64 bits) lets receivers regenerate `idx` locally.
+        w.push(rng.next_u64(), 64);
+        for &i in idx.iter() {
+            let wire = x[i] as f32; // f32 on the wire
+            w.push_f32(wire);
+            if eager_dense {
+                let v = wire as f64 * scale;
+                out.values[i] = v;
+                if v != 0.0 {
+                    sp.push((i as u32, v));
+                }
+            }
+        }
+        if eager_dense {
+            sp.sort_unstable_by_key(|&(i, _)| i); // canonical ascending order
+        } else {
+            // Ascending order comes from sorting the reused index buffer
+            // (in place, allocation-free) before emitting the pairs.
+            idx.sort_unstable();
+            for &i in idx.iter() {
+                sp.push((i as u32, (x[i] as f32) as f64 * scale));
+            }
+        }
+        out.wire_bits = w.bits;
+        out.payload = w.bytes;
+    }
 }
 
 impl Compressor for RandK {
@@ -31,33 +97,26 @@ impl Compressor for RandK {
     }
 
     fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
-        let d = x.len();
-        let k = if d == 0 { 0 } else { self.k.min(d) };
-        let idx = rng.sample_indices(d, k);
-        let scale = if self.unbiased && k > 0 { d as f64 / k as f64 } else { 1.0 };
+        let mut idx = Vec::new();
+        self.sample_and_emit(x, rng, out, &mut idx, true);
+    }
 
-        out.values.clear();
-        out.values.resize(d, 0.0);
-        out.dense_stale = false;
-        let sp = out.sparse.get_or_insert_with(Vec::new);
-        sp.clear();
-        let mut w = BitWriter::new();
-        std::mem::swap(&mut w.bytes, &mut out.payload);
-        w.clear();
-        // Shared seed (64 bits) lets receivers regenerate `idx` locally.
-        w.push(rng.next_u64(), 64);
-        for &i in &idx {
-            let wire = x[i] as f32; // f32 on the wire
-            w.push_f32(wire);
-            let v = wire as f64 * scale;
-            out.values[i] = v;
-            if v != 0.0 {
-                sp.push((i as u32, v));
-            }
-        }
-        sp.sort_unstable_by_key(|&(i, _)| i); // canonical ascending order
-        out.wire_bits = w.bits;
-        out.payload = w.bytes;
+    /// Hot-path variant (§Perf): reuses `scratch.idx` for the Floyd
+    /// index sample (the eager path allocates it per call) and skips the
+    /// O(d) dense fill — the sparse view carries **every** selected entry,
+    /// ±0.0 values included, so [`CompressedMsg::ensure_dense`] rebuilds
+    /// `values` bit-identically to the eager path on demand. Wire payload,
+    /// wire bits, selected set, and RNG consumption are identical to
+    /// [`RandK::compress`] by construction: both call the same
+    /// [`RandK::sample_and_emit`].
+    fn compress_into(
+        &self,
+        x: &[f64],
+        rng: &mut Rng,
+        out: &mut CompressedMsg,
+        scratch: &mut CodecScratch,
+    ) {
+        self.sample_and_emit(x, rng, out, &mut scratch.idx, false);
     }
 
     fn is_unbiased(&self) -> bool {
@@ -118,6 +177,66 @@ mod tests {
             (measured - expected).abs() / expected < 0.05,
             "measured {measured} vs expected {expected}"
         );
+    }
+
+    /// The scratch fast path must match the eager path exactly: same wire
+    /// payload/bits, same RNG consumption (so a mixed eager/lazy schedule
+    /// keeps the dither stream bitwise-reproducible), and a lazily-rebuilt
+    /// dense vector that is bit-identical — including ±0.0 selected
+    /// entries, which is why `compress_into` records zero-valued
+    /// selections explicitly.
+    #[test]
+    fn compress_into_matches_compress_bitwise() {
+        use crate::prop::forall;
+        use crate::prop_assert;
+        forall(60, 0x7A2D, |g| {
+            let mut x = g.vec_f64(1..=300, 4.0);
+            // Plant exact and negative zeros so the zero-valued-selection
+            // path is exercised.
+            if x.len() >= 3 {
+                x[0] = 0.0;
+                x[1] = -0.0;
+            }
+            let k = g.usize_in(1..=x.len());
+            let r = RandK::new(k, g.bool_with(0.5));
+            let mut rng_a = Rng::new(g.case_seed);
+            let mut rng_b = rng_a.clone();
+            let eager = r.compress_alloc(&x, &mut rng_a);
+            let mut scratch = CodecScratch::default();
+            let mut lazy = CompressedMsg::default();
+            r.compress_into(&x, &mut rng_b, &mut lazy, &mut scratch);
+            prop_assert!(lazy.payload == eager.payload, "wire payload drifted");
+            prop_assert!(lazy.wire_bits == eager.wire_bits, "wire bits drifted");
+            prop_assert!(rng_a.next_u64() == rng_b.next_u64(), "RNG stream drifted");
+            prop_assert!(x.is_empty() || lazy.dense_stale, "fast path should defer the dense fill");
+            lazy.ensure_dense();
+            prop_assert!(
+                lazy.values.len() == eager.values.len()
+                    && lazy
+                        .values
+                        .iter()
+                        .zip(&eager.values)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lazy dense decode != eager values"
+            );
+            // The fast-path sparse view holds every selected entry (zeros
+            // included) in ascending index order.
+            let sp = lazy.sparse.as_ref().unwrap();
+            prop_assert!(sp.len() == k.min(x.len()), "must record every selected entry");
+            prop_assert!(sp.windows(2).all(|w| w[0].0 < w[1].0), "ascending index order");
+            for &(i, v) in sp {
+                prop_assert!(
+                    v.to_bits() == eager.values[i as usize].to_bits(),
+                    "entry {i} mismatch"
+                );
+            }
+            // Scratch reuse across calls must not change results.
+            let mut rng_c = Rng::new(g.case_seed);
+            let mut again = CompressedMsg::default();
+            r.compress_into(&x, &mut rng_c, &mut again, &mut scratch);
+            prop_assert!(again.payload == eager.payload, "scratch reuse drifted");
+            Ok(())
+        });
     }
 
     #[test]

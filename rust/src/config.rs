@@ -145,6 +145,33 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Bridge to the scenario layer: a [`RunConfig`] is a one-cell grid.
+    /// `lead run` routes through the same [`crate::scenarios::Driver`]
+    /// path as `lead grid` / `lead exp`, so validation (topology,
+    /// algorithm, compressor strings) fails loudly instead of silently
+    /// degrading.
+    pub fn to_spec(&self) -> crate::scenarios::RunSpec {
+        crate::scenarios::RunSpec {
+            name: "run".into(),
+            // The historical `lead run` problem: the paper's synthetic
+            // linreg workload at the config's agent count and seed.
+            problem: crate::scenarios::ProblemSpec::LinReg { dim: 200, reg: 0.1, seed: self.seed },
+            topology: self.topology.clone(),
+            mixing: crate::topology::MixingRule::UniformNeighbors,
+            agents: self.agents,
+            algo: self.algo.clone(),
+            eta: self.eta,
+            gamma: self.gamma,
+            alpha: self.alpha,
+            compressor: self.compressor.clone(),
+            rounds: self.rounds,
+            batch_size: self.batch_size,
+            seed: self.seed,
+            record_every: (self.rounds / 100).max(1),
+            t0: None,
+        }
+    }
+
     pub fn from_toml(src: &str) -> Result<RunConfig, String> {
         let doc = toml_mini::parse(src)?;
         let top = doc.get("").ok_or("missing top-level section")?;
@@ -197,5 +224,23 @@ mod tests {
         assert_eq!(c.eta, 0.05);
         assert_eq!(c.batch_size, Some(64));
         assert!(RunConfig::from_toml("bogus_key = 1").is_err());
+    }
+
+    #[test]
+    fn run_config_bridges_to_run_spec() {
+        let c = RunConfig::from_toml(
+            "algo = \"choco\"\neta = 0.05\ngamma = 0.6\nrounds = 100\nseed = 9\n",
+        )
+        .unwrap();
+        let spec = c.to_spec();
+        assert_eq!(spec.algo, "choco");
+        assert_eq!(spec.eta, 0.05);
+        assert_eq!(spec.rounds, 100);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.record_every, 1);
+        // The spec builds: algorithm, topology, and compressor all valid.
+        assert!(spec.build_algo().is_ok());
+        assert!(spec.build_mix().is_ok());
+        assert!(spec.build_compressor().unwrap().is_some());
     }
 }

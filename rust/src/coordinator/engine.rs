@@ -55,8 +55,33 @@
 //! * pool dispatches and the [`par_agents`]-family row bundles are
 //!   allocation-free ([`crate::pool`] docs).
 //!
-//! Codecs outside the guarantee (rand-k's index sampling) and observed
-//! rounds (metrics passes allocate scratch) are documented exceptions.
+//! Observed rounds (metrics passes allocate scratch) are the one
+//! documented exception; every in-tree codec — quantizers, top-k, and
+//! rand-k — has a scratch-carrying `compress_into` fast path.
+//!
+//! # §Scheduling — outer vs. inner parallelism
+//!
+//! A single engine run parallelizes *inside* the round (per-agent tasks)
+//! — that is the **inner** level, driven by whatever [`Exec`] the caller
+//! hands to [`Engine::run_on`] ([`Engine::run`] stands up a private pool
+//! from `cfg.threads`). Batches of runs (scenario grids, see
+//! `crate::scenarios`) add an **outer** level: whole runs dispatched as
+//! single tasks across one shared [`WorkerPool`]
+//! ([`crate::pool::par_dynamic`]).
+//!
+//! The budget rule that keeps `threads` the total parallelism: a run is
+//! either *outer-sharded* — it occupies one pool worker and its inner
+//! dispatches run inline (the driver passes `Exec::seq()`; a nested
+//! dispatch on the same pool would degrade to inline anyway) — or
+//! *inner-parallel* — it executes on the dispatching thread with the full
+//! pool as its `Exec`, one run at a time. The driver picks per run:
+//! below the [`phase_threads`] work threshold (`n · channels · d <
+//! 32768` elements) inner fan-out loses to dispatch overhead, so small
+//! runs shard outward and large runs keep today's per-agent parallelism.
+//! Trajectories never depend on the choice: every stochastic draw derives
+//! from the run's own seed, so outer-sharded, inner-parallel, and fully
+//! serial execution are bitwise-identical (pinned by
+//! `scenarios::tests::sharded_grid_bitwise_equals_serial`).
 //!
 //! [`AlgoSpec::reads_own`]: crate::algorithms::AlgoSpec::reads_own
 //! [`CodecScratch`]: crate::compress::CodecScratch
@@ -71,6 +96,7 @@ use crate::pool::{par_chunks, Exec, SendPtr, WorkerPool};
 use crate::problems::Problem;
 use crate::rng::{streams, Rng};
 use crate::topology::MixingMatrix;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Stepsize schedule (Theorem 1 uses constant; Theorem 2 diminishing).
@@ -159,7 +185,8 @@ pub fn mix_msgs(mix: &MixingMatrix, i: usize, msgs: &[CompressedMsg], out: &mut 
 /// shape: n·d ≈ 1600), so below the threshold the phase runs inline.
 /// Thread count never affects trajectories (the
 /// `parallel_equals_sequential` tests), so this is purely a perf knob.
-fn phase_threads(threads: usize, n: usize, work_per_agent: usize) -> usize {
+/// Also the scenario driver's small/large run classifier (§Scheduling).
+pub(crate) fn phase_threads(threads: usize, n: usize, work_per_agent: usize) -> usize {
     const MIN_ELEMS: usize = 32_768;
     if n.saturating_mul(work_per_agent) < MIN_ELEMS {
         1
@@ -168,14 +195,19 @@ fn phase_threads(threads: usize, n: usize, work_per_agent: usize) -> usize {
     }
 }
 
+/// One engine instance owns the mixing matrix and a *shared* problem
+/// (`Arc` — grids run many engines over one expensive problem instance
+/// without re-solving reference optima), and drives the round loop on an
+/// execution backend supplied per run ([`Engine::run_on`]) or stood up
+/// internally from `cfg.threads` ([`Engine::run`]).
 pub struct Engine {
     pub cfg: EngineConfig,
     pub mix: MixingMatrix,
-    pub problem: Box<dyn Problem>,
+    pub problem: Arc<dyn Problem>,
 }
 
 impl Engine {
-    pub fn new(cfg: EngineConfig, mix: MixingMatrix, problem: Box<dyn Problem>) -> Self {
+    pub fn new(cfg: EngineConfig, mix: MixingMatrix, problem: Arc<dyn Problem>) -> Self {
         assert_eq!(mix.n, problem.n_agents(), "topology/problem agent mismatch");
         Engine { cfg, mix, problem }
     }
@@ -206,8 +238,40 @@ impl Engine {
     /// Run `algo` for `rounds` rounds. `compressor` applies to channel 0
     /// when the algorithm's spec opts in; other channels (and opted-out
     /// algorithms) are billed the raw 32 bits/element.
+    ///
+    /// Stands up a private execution backend from `cfg.threads` (a
+    /// [`WorkerPool`] whose workers live for exactly this run, or scoped
+    /// spawns under [`Scheduler::SpawnPerPhase`]) and delegates to
+    /// [`Engine::run_on`]. Batch drivers that reuse one pool across many
+    /// runs call `run_on` directly.
     pub fn run(
         &mut self,
+        algo: Box<dyn Algorithm>,
+        compressor: Option<Box<dyn Compressor>>,
+        rounds: usize,
+    ) -> RunRecord {
+        let legacy = self.cfg.scheduler == Scheduler::SpawnPerPhase;
+        // One pool per run: workers outlive every phase dispatch.
+        let pool = (!legacy && self.cfg.threads > 1).then(|| WorkerPool::new(self.cfg.threads));
+        let exec = match &pool {
+            Some(p) => Exec::pool(p),
+            None if legacy => Exec::spawn(self.cfg.threads),
+            None => Exec::seq(),
+        };
+        self.run_on(exec, algo, compressor, rounds)
+    }
+
+    /// [`Engine::run`] on a caller-supplied execution backend. The engine
+    /// does not own any threads here — `exec` carries the whole budget
+    /// (§Scheduling), so a shared pool can serve many sequential runs
+    /// without re-spawning workers, and an outer-sharded run passes
+    /// `Exec::seq()`. `cfg.threads` is ignored on this path. Trajectories
+    /// are independent of `exec` (module docs); engines are reusable —
+    /// every run re-derives all state from `cfg.seed`
+    /// (`engine_reuse_leaks_no_state`).
+    pub fn run_on(
+        &mut self,
+        exec: Exec<'_>,
         mut algo: Box<dyn Algorithm>,
         compressor: Option<Box<dyn Compressor>>,
         rounds: usize,
@@ -218,13 +282,6 @@ impl Engine {
         let spec = algo.spec();
         let use_comp = spec.compressed && compressor.is_some();
         let legacy = self.cfg.scheduler == Scheduler::SpawnPerPhase;
-        // One pool per run: workers outlive every phase dispatch.
-        let pool = (!legacy && self.cfg.threads > 1).then(|| WorkerPool::new(self.cfg.threads));
-        let exec = match &pool {
-            Some(p) => Exec::pool(p),
-            None if legacy => Exec::spawn(self.cfg.threads),
-            None => Exec::seq(),
-        };
         let root = Rng::new(self.cfg.seed);
         let mut dither_rngs: Vec<Rng> =
             (0..n).map(|i| root.derive(i as u64).derive(streams::DITHER)).collect();
@@ -380,7 +437,7 @@ impl Engine {
 
             // (2) mix (parallel over agents; sparse-aware on channel 0).
             let mix_apply_exec =
-                exec.with_threads(phase_threads(self.cfg.threads, n, spec.channels * d));
+                exec.with_threads(phase_threads(exec.threads(), n, spec.channels * d));
             let t = Instant::now();
             {
                 let mix = &self.mix;
@@ -508,7 +565,7 @@ mod tests {
         Engine::new(
             EngineConfig { threads, record_every: 5, ..Default::default() },
             mix,
-            Box::new(p),
+            std::sync::Arc::new(p),
         )
     }
 
@@ -598,37 +655,77 @@ mod tests {
     }
 
     /// The persistent pool scheduler must reproduce the legacy
-    /// spawn-per-phase loop bit-for-bit — metrics included — on both the
-    /// dense (quantize) and sparse (top-k) paths. This is the old-vs-new
-    /// scheduler A/B pinned as a correctness property.
+    /// spawn-per-phase loop bit-for-bit — metrics included — on the dense
+    /// (quantize) and both sparse (top-k, rand-k; rand-k also exercises
+    /// RNG-stream parity of its `compress_into` fast path) message paths.
+    /// This is the old-vs-new scheduler A/B pinned as a correctness
+    /// property.
     #[test]
     fn scheduler_modes_bitwise_identical() {
-        let run = |scheduler: Scheduler, topk: bool, threads: usize| {
+        let run = |scheduler: Scheduler, codec: usize, threads: usize| {
             let p = LinReg::synthetic(8, 30, 0.1, 3);
             let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
             let mut e = Engine::new(
                 EngineConfig { threads, record_every: 7, scheduler, ..Default::default() },
                 mix,
-                Box::new(p),
+                std::sync::Arc::new(p),
             );
-            let comp: Box<dyn crate::compress::Compressor> = if topk {
-                Box::new(TopK::new(10))
-            } else {
-                Box::new(QuantizeP::new(2, crate::compress::quantize::PNorm::Inf, 64))
+            let comp: Box<dyn crate::compress::Compressor> = match codec {
+                0 => Box::new(QuantizeP::new(2, crate::compress::quantize::PNorm::Inf, 64)),
+                1 => Box::new(TopK::new(10)),
+                _ => Box::new(crate::compress::randk::RandK::new(10, true)),
             };
             e.run(Box::new(Lead::paper_default()), Some(comp), 50)
         };
-        for topk in [false, true] {
+        for codec in 0..3 {
             for threads in [1usize, 3] {
-                let old = run(Scheduler::SpawnPerPhase, topk, threads);
-                let new = run(Scheduler::Persistent, topk, threads);
+                let old = run(Scheduler::SpawnPerPhase, codec, threads);
+                let new = run(Scheduler::Persistent, codec, threads);
                 assert_eq!(old.series.len(), new.series.len());
                 for (a, b) in old.series.iter().zip(&new.series) {
-                    assert_eq!(a.dist_opt.to_bits(), b.dist_opt.to_bits(), "round {}", a.round);
+                    assert_eq!(
+                        a.dist_opt.to_bits(),
+                        b.dist_opt.to_bits(),
+                        "codec {codec} round {}",
+                        a.round
+                    );
                     assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
                     assert_eq!(a.comp_err.to_bits(), b.comp_err.to_bits(), "round {}", a.round);
                     assert_eq!(a.bits_per_agent, b.bits_per_agent);
                 }
+            }
+        }
+    }
+
+    /// Engines are reusable: one engine (and, through `run_on`, one
+    /// shared pool) serving several sequential runs must leak no state
+    /// between them — the second run is bitwise-identical to the first
+    /// and to a fresh-engine run.
+    #[test]
+    fn engine_reuse_leaks_no_state() {
+        let make = || ring_engine(1);
+        let run = |e: &mut Engine, exec: Exec<'_>| {
+            e.run_on(
+                exec,
+                Box::new(Lead::paper_default()),
+                Some(Box::new(TopK::new(10))),
+                40,
+            )
+        };
+        let mut fresh = make();
+        let reference = run(&mut fresh, Exec::seq());
+
+        let mut reused = make();
+        let pool = WorkerPool::new(3);
+        let first = run(&mut reused, Exec::pool(&pool));
+        let second = run(&mut reused, Exec::pool(&pool));
+        for rec in [&first, &second] {
+            assert_eq!(rec.series.len(), reference.series.len());
+            for (a, b) in reference.series.iter().zip(&rec.series) {
+                assert_eq!(a.dist_opt.to_bits(), b.dist_opt.to_bits(), "round {}", a.round);
+                assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
+                assert_eq!(a.comp_err.to_bits(), b.comp_err.to_bits());
+                assert_eq!(a.bits_per_agent, b.bits_per_agent);
             }
         }
     }
@@ -646,7 +743,7 @@ mod tests {
             let mut e = Engine::new(
                 EngineConfig { record_every, ..Default::default() },
                 mix,
-                Box::new(p),
+                std::sync::Arc::new(p),
             );
             e.run(
                 Box::new(Lead::paper_default()),
@@ -772,7 +869,7 @@ mod tests {
                 ..Default::default()
             },
             mix,
-            Box::new(p),
+            std::sync::Arc::new(p),
         );
         let rec = e.run(
             Box::new(Lead::paper_default()),

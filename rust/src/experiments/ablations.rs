@@ -1,6 +1,9 @@
 //! Ablation studies over the design choices DESIGN.md §5 calls out —
 //! beyond the paper's own figures, these probe *why* LEAD behaves as it
-//! does:
+//! does. Each ablation is a declarative [`RunSpec`] batch through the
+//! sharded [`Driver`] (see `crate::scenarios`): one shared problem
+//! instance, whole-run outer parallelism, bitwise-identical to the
+//! historical serial loops.
 //!
 //! * **topology**: iteration complexity vs the graph condition number κ_g
 //!   (Corollary 1 predicts O(κ_f + κ_g) scaling at C ≈ 0);
@@ -11,80 +14,104 @@
 //! * **state momentum**: α-update (LEAD) vs raw integration (CHOCO-style
 //!   h ← h + q, i.e. α = 1) under aggressive compression (Remark 1).
 
-use crate::algorithms::lead::{Lead, LeadParams};
-use crate::compress::quantize::{PNorm, QuantizeP};
-use crate::coordinator::engine::{Engine, EngineConfig};
-use crate::problems::linreg::LinReg;
-use crate::topology::{MixingRule, Topology};
+use crate::coordinator::metrics::RunRecord;
+use crate::error::Result;
+use crate::scenarios::{Driver, ProblemSpec, RunSpec};
+use crate::topology::MixingRule;
 use std::path::Path;
 
-fn lead_run(
-    topo: &Topology,
-    n: usize,
-    comp: QuantizeP,
-    params: LeadParams,
-    rounds: usize,
-) -> crate::coordinator::metrics::RunRecord {
-    let p = LinReg::synthetic(n, 64, 0.1, 42);
-    let mix = topo.build(n, MixingRule::MetropolisHastings);
-    let mut e = Engine::new(
-        EngineConfig { record_every: 5, ..Default::default() },
-        mix,
-        Box::new(p),
-    );
-    e.run(Box::new(Lead::new(params)), Some(Box::new(comp)), rounds)
+/// Shared thread budget (matches `experiments::EXP_THREADS`).
+const ABL_THREADS: usize = 8;
+
+/// Common base cell for every ablation: LEAD with paper defaults on the
+/// synthetic d = 64 linear regression, Metropolis–Hastings mixing,
+/// metrics every 5 rounds (the historical `lead_run` harness).
+fn ablation_base(agents: usize, rounds: usize) -> RunSpec {
+    RunSpec {
+        problem: ProblemSpec::LinReg { dim: 64, reg: 0.1, seed: 42 },
+        mixing: MixingRule::MetropolisHastings,
+        agents,
+        rounds,
+        record_every: 5,
+        ..RunSpec::paper_default()
+    }
+}
+
+fn run_batch(tag: &str, specs: &[RunSpec], out: Option<&Path>) -> Result<Vec<RunRecord>> {
+    Driver::new(ABL_THREADS).with_out(out).run(tag, specs)
+}
+
+fn write_csv(out: Option<&Path>, name: &str, csv: String) -> Result<()> {
+    if let Some(dir) = out {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(name), csv)?;
+    }
+    Ok(())
 }
 
 /// Topology ablation: rounds-to-1e-8 vs κ_g across graph families.
-pub fn topology(out: Option<&Path>) -> Vec<(String, f64, Option<usize>)> {
+pub fn topology(out: Option<&Path>) -> Result<Vec<(String, f64, Option<usize>)>> {
+    // "er:0.4:3" pins the sampled graph to the historical seed 3
+    // regardless of the spec's engine seed.
+    let topos = ["full", "grid", "er:0.4:3", "star", "ring", "path"];
+    let specs: Vec<RunSpec> = topos
+        .iter()
+        .map(|t| {
+            let mut s = ablation_base(16, 4000);
+            s.topology = (*t).into();
+            s.name = format!("ablation_topology_{}", t.replace(':', "_"));
+            s
+        })
+        .collect();
+    let recs = run_batch("ablation_topology", &specs, out)?;
     println!("\n== ablation: topology (LEAD 2-bit, n=16) ==");
     println!("{:<12} {:>8} {:>8} {:>16}", "graph", "κ_g", "β", "rounds→1e-8");
     let mut rows = Vec::new();
     let mut csv = String::from("graph,kappa_g,beta,rounds\n");
-    for (name, topo) in [
-        ("full", Topology::FullyConnected),
-        ("grid", Topology::Grid2D),
-        ("er:0.4", Topology::ErdosRenyi { p: 0.4, seed: 3 }),
-        ("star", Topology::Star),
-        ("ring", Topology::Ring),
-        ("path", Topology::Path),
-    ] {
-        let mix = topo.build(16, MixingRule::MetropolisHastings);
-        let rec = lead_run(&topo, 16, QuantizeP::paper_default(), LeadParams::default(), 4000);
+    for (spec, rec) in specs.iter().zip(&recs) {
+        let mix = spec.build_mix()?;
         let hit = rec.rounds_to_tol(1e-8);
+        let name = &spec.topology;
         println!(
             "{name:<12} {:>8.2} {:>8.3} {:>16}",
             mix.kappa_g(),
             mix.beta(),
             hit.map_or("-".into(), |r| r.to_string())
         );
-        csv.push_str(&format!("{name},{},{},{}\n", mix.kappa_g(), mix.beta(), hit.map_or(-1, |r| r as i64)));
-        rows.push((name.to_string(), mix.kappa_g(), hit));
+        csv.push_str(&format!(
+            "{name},{},{},{}\n",
+            mix.kappa_g(),
+            mix.beta(),
+            hit.map_or(-1, |r| r as i64)
+        ));
+        rows.push((name.clone(), mix.kappa_g(), hit));
     }
-    if let Some(dir) = out {
-        std::fs::create_dir_all(dir).ok();
-        std::fs::write(dir.join("ablation_topology.csv"), csv).ok();
-    }
-    rows
+    write_csv(out, "ablation_topology.csv", csv)?;
+    Ok(rows)
 }
 
 /// Bit-width ablation: total bits to reach 1e-8 as a function of b —
-/// reveals the communication-optimal quantization level.
-pub fn bits(out: Option<&Path>) -> Vec<(u32, Option<f64>)> {
+/// reveals the communication-optimal quantization level. γ moves jointly
+/// with b (shrinks with compression error per Eq. (9)), so this is a
+/// tuple batch rather than a cartesian axis.
+pub fn bits(out: Option<&Path>) -> Result<Vec<(u32, Option<f64>)>> {
+    let widths = [1u32, 2, 3, 4, 6, 8, 12];
+    let specs: Vec<RunSpec> = widths
+        .iter()
+        .map(|&b| {
+            let mut s = ablation_base(8, 6000);
+            s.compressor = format!("qinf:{b}:512");
+            s.gamma = if b == 1 { 0.6 } else { 1.0 };
+            s.name = format!("ablation_bits_{b}");
+            s
+        })
+        .collect();
+    let recs = run_batch("ablation_bits", &specs, out)?;
     println!("\n== ablation: quantization bit width (LEAD, ring n=8) ==");
     println!("{:<6} {:>16} {:>18}", "bits", "rounds→1e-8", "bits/agent→1e-8");
     let mut rows = Vec::new();
     let mut csv = String::from("bits,rounds,bits_per_agent\n");
-    for b in [1u32, 2, 3, 4, 6, 8, 12] {
-        // γ shrinks with compression error per Eq. (9).
-        let gamma = if b == 1 { 0.6 } else { 1.0 };
-        let rec = lead_run(
-            &Topology::Ring,
-            8,
-            QuantizeP::new(b, PNorm::Inf, 512),
-            LeadParams { gamma, alpha: 0.5 },
-            6000,
-        );
+    for (&b, rec) in widths.iter().zip(&recs) {
         let r = rec.rounds_to_tol(1e-8);
         let bits = rec.bits_to_tol(1e-8);
         println!(
@@ -95,65 +122,66 @@ pub fn bits(out: Option<&Path>) -> Vec<(u32, Option<f64>)> {
         csv.push_str(&format!("{b},{},{}\n", r.map_or(-1, |x| x as i64), bits.unwrap_or(-1.0)));
         rows.push((b, bits));
     }
-    if let Some(dir) = out {
-        std::fs::create_dir_all(dir).ok();
-        std::fs::write(dir.join("ablation_bits.csv"), csv).ok();
-    }
-    rows
+    write_csv(out, "ablation_bits.csv", csv)?;
+    Ok(rows)
 }
 
 /// Block-size ablation for the blockwise norm (paper uses 512).
-pub fn block_size(out: Option<&Path>) -> Vec<(usize, Option<usize>)> {
+pub fn block_size(out: Option<&Path>) -> Result<Vec<(usize, Option<usize>)>> {
+    let blocks = [8usize, 16, 32, 64, 512];
+    let specs: Vec<RunSpec> = blocks
+        .iter()
+        .map(|&block| {
+            let mut s = ablation_base(8, 4000);
+            s.compressor = format!("qinf:2:{block}");
+            s.name = format!("ablation_block_{block}");
+            s
+        })
+        .collect();
+    let recs = run_batch("ablation_block", &specs, out)?;
     println!("\n== ablation: quantization block size (LEAD 2-bit, ring n=8, d=64) ==");
     println!("{:<8} {:>16}", "block", "rounds→1e-8");
     let mut rows = Vec::new();
     let mut csv = String::from("block,rounds\n");
-    for block in [8usize, 16, 32, 64, 512] {
-        let rec = lead_run(
-            &Topology::Ring,
-            8,
-            QuantizeP::new(2, PNorm::Inf, block),
-            LeadParams::default(),
-            4000,
-        );
+    for (&block, rec) in blocks.iter().zip(&recs) {
         let r = rec.rounds_to_tol(1e-8);
         println!("{block:<8} {:>16}", r.map_or("-".into(), |x| x.to_string()));
         csv.push_str(&format!("{block},{}\n", r.map_or(-1, |x| x as i64)));
         rows.push((block, r));
     }
-    if let Some(dir) = out {
-        std::fs::create_dir_all(dir).ok();
-        std::fs::write(dir.join("ablation_block.csv"), csv).ok();
-    }
-    rows
+    write_csv(out, "ablation_block.csv", csv)?;
+    Ok(rows)
 }
 
 /// Momentum-state ablation (Remark 1): LEAD's α-damped state update vs
 /// the CHOCO-style raw integration (α = 1) under aggressive 1-bit
 /// compression — the damped update should stay stable further.
-pub fn momentum(out: Option<&Path>) -> Vec<(f64, f64)> {
+pub fn momentum(out: Option<&Path>) -> Result<Vec<(f64, f64)>> {
+    let alphas = [0.25, 0.5, 0.75, 1.0];
+    let specs: Vec<RunSpec> = alphas
+        .iter()
+        .map(|&alpha| {
+            let mut s = ablation_base(8, 2000);
+            s.compressor = "qinf:1:64".into();
+            s.gamma = 0.6;
+            s.alpha = alpha;
+            s.name = format!("ablation_momentum_{alpha}");
+            s
+        })
+        .collect();
+    let recs = run_batch("ablation_momentum", &specs, out)?;
     println!("\n== ablation: H-update momentum α under 1-bit compression ==");
     println!("{:<8} {:>14}", "α", "final dist");
     let mut rows = Vec::new();
     let mut csv = String::from("alpha,final_dist\n");
-    for alpha in [0.25, 0.5, 0.75, 1.0] {
-        let rec = lead_run(
-            &Topology::Ring,
-            8,
-            QuantizeP::new(1, PNorm::Inf, 64),
-            LeadParams { gamma: 0.6, alpha },
-            2000,
-        );
+    for (&alpha, rec) in alphas.iter().zip(&recs) {
         let dist = rec.last().dist_opt;
         println!("{alpha:<8} {:>14.3e}", dist);
         csv.push_str(&format!("{alpha},{dist:e}\n"));
         rows.push((alpha, dist));
     }
-    if let Some(dir) = out {
-        std::fs::create_dir_all(dir).ok();
-        std::fs::write(dir.join("ablation_momentum.csv"), csv).ok();
-    }
-    rows
+    write_csv(out, "ablation_momentum.csv", csv)?;
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -162,7 +190,7 @@ mod tests {
 
     #[test]
     fn topology_complexity_tracks_kappa_g() {
-        let rows = topology(None);
+        let rows = topology(None).unwrap();
         // Corollary 1: better-conditioned graphs need no more rounds.
         let full = rows.iter().find(|r| r.0 == "full").unwrap();
         let path = rows.iter().find(|r| r.0 == "path").unwrap();
@@ -177,7 +205,7 @@ mod tests {
     fn two_bits_nearly_optimal_total_communication() {
         // The paper's 2-bit choice: within the bit-width sweep, very low
         // bit widths minimize the total bits to accuracy.
-        let rows = bits(None);
+        let rows = bits(None).unwrap();
         let best = rows
             .iter()
             .filter_map(|(b, bits)| bits.map(|x| (*b, x)))

@@ -1,57 +1,81 @@
 //! Experiment drivers — one per figure/table in the paper's evaluation
-//! (see DESIGN.md §5 for the index). Every driver prints the paper-style
-//! series/rows to stdout and, given an output directory, writes one CSV
-//! per curve so the figures can be re-plotted.
+//! (see DESIGN.md §5 for the index). Every engine-driven figure is
+//! expressed as a batch of [`RunSpec`]s (a *grid*) executed by the
+//! sharded [`Driver`] under one shared thread budget
+//! (`crate::scenarios`); drivers print the paper-style series/rows to
+//! stdout and, given an output directory, the driver writes one CSV per
+//! cell plus a unified `<grid>.json` artifact, and the figure adds its
+//! aggregate CSV.
+//!
+//! # RunSpec / Grid in brief
+//!
+//! A [`RunSpec`] is one cell as plain data — problem, topology + mixing
+//! rule + agent count, algorithm setup (name, η, γ, α), compressor spec
+//! string, rounds, stepsize schedule, seed. Batches come from preset
+//! tables ([`crate::scenarios::specs_from_setups`] — rows applied
+//! jointly) or cartesian [`Grid`] axes; the same machinery backs
+//! `lead grid <spec.toml>`:
+//!
+//! ```toml
+//! [grid]
+//! name = "sweep"
+//! rounds = 800
+//! compressor = "qinf:2:512"
+//!
+//! [problem]
+//! kind = "linreg"
+//! dim = 200
+//!
+//! [axes]
+//! alpha = [0.1, 0.3, 0.5, 0.7, 0.9]
+//! gamma = [0.2, 0.5, 1.0, 1.5, 2.0]
+//! ```
+//!
+//! Determinism: grids are bitwise-identical at any thread count (every
+//! run derives its randomness from its own seed), so these drivers
+//! reproduce the exact trajectories of the historical serial loops.
 
 pub mod ablations;
 
 use crate::compress::quantize::{PNorm, QuantizeP};
 use crate::compress::{randk::RandK, topk::TopK, Compressor};
 use crate::config::{self, AlgoSetup};
-use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::metrics::RunRecord;
-use crate::problems::{linreg::LinReg, logreg::LogReg, DataSplit, Problem};
+use crate::error::Result;
+use crate::problems::DataSplit;
 use crate::rng::Rng;
-use crate::topology::{MixingRule, Topology};
+use crate::scenarios::{specs_from_setups, Driver, Grid, ProblemSpec, RunSpec};
+use crate::serialize::toml_mini::Value;
 use std::path::Path;
 
-/// The paper's compressor: 2-bit q∞, block 512.
-fn paper_compressor() -> Box<dyn Compressor> {
-    Box::new(QuantizeP::paper_default())
-}
+/// Shared thread budget for the experiment drivers (historically the
+/// per-engine gradient pool size; now the grid driver's outer+inner
+/// budget).
+const EXP_THREADS: usize = 8;
 
 fn run_table(
-    problem_factory: &dyn Fn() -> Box<dyn Problem>,
+    problem: ProblemSpec,
     setups: &[AlgoSetup],
     rounds: usize,
     batch: Option<usize>,
     out: Option<&Path>,
     tag: &str,
-) -> Vec<RunRecord> {
-    let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
-    // Problem construction can be expensive (L-BFGS reference optimum);
-    // build once and share it across the per-algorithm engine runs.
-    let shared: std::sync::Arc<dyn Problem> = std::sync::Arc::from(problem_factory());
+) -> Result<Vec<RunRecord>> {
+    let base = RunSpec {
+        problem,
+        rounds,
+        batch_size: batch,
+        record_every: (rounds / 100).max(1),
+        ..RunSpec::paper_default()
+    };
+    let specs = specs_from_setups(tag, &base, setups);
+    let records = Driver::new(EXP_THREADS).with_out(out).run(tag, &specs)?;
     println!("\n== {tag} ==");
     println!(
         "{:<22} {:>12} {:>12} {:>12} {:>14} {:>10}",
         "algorithm", "dist(x*)", "consensus", "comp err", "bits/agent", "secs"
     );
-    let mut records = Vec::new();
-    for s in setups {
-        let mut engine = Engine::new(
-            EngineConfig {
-                eta: s.eta,
-                batch_size: batch,
-                record_every: (rounds / 100).max(1),
-                threads: 8, // leader/worker gradient pool
-                ..Default::default()
-            },
-            mix.clone(),
-            Box::new(shared.clone()),
-        );
-        let comp = if s.compressed { Some(paper_compressor()) } else { None };
-        let rec = engine.run(s.build(), comp, rounds);
+    for rec in &records {
         let m = rec.last();
         let diverged = !m.dist_opt.is_finite() && !m.loss.is_finite();
         println!(
@@ -64,13 +88,8 @@ fn run_table(
             rec.wall_secs,
             if diverged { "  *diverged*" } else { "" }
         );
-        if let Some(dir) = out {
-            let fname = format!("{tag}_{}", s.algo);
-            rec.write_csv(dir, &fname).expect("write csv");
-        }
-        records.push(rec);
     }
-    records
+    Ok(records)
 }
 
 fn fmt(x: f64) -> String {
@@ -82,15 +101,15 @@ fn fmt(x: f64) -> String {
 }
 
 /// Fig. 1 (a–d): linear regression on the 8-ring, full gradient, 2-bit q∞.
-pub fn fig1(out: Option<&Path>, rounds: usize) -> Vec<RunRecord> {
+pub fn fig1(out: Option<&Path>, rounds: usize) -> Result<Vec<RunRecord>> {
     let recs = run_table(
-        &|| Box::new(LinReg::synthetic(8, 200, 0.1, 42)) as Box<dyn Problem>,
+        ProblemSpec::LinReg { dim: 200, reg: 0.1, seed: 42 },
         &config::table1_linreg(),
         rounds,
         None,
         out,
         "fig1_linreg",
-    );
+    )?;
     // Fig. 1b companion: bits to reach 1e-6.
     println!("-- bits/agent to reach dist 1e-6 (Fig. 1b) --");
     for r in &recs {
@@ -99,7 +118,7 @@ pub fn fig1(out: Option<&Path>, rounds: usize) -> Vec<RunRecord> {
             None => println!("{:<22} not reached", r.algo),
         }
     }
-    recs
+    Ok(recs)
 }
 
 /// Figs. 2/8 (full-batch) and 3/9 (mini-batch 512) — logistic regression.
@@ -109,7 +128,7 @@ pub fn fig_logreg(
     out: Option<&Path>,
     rounds: usize,
     n_total: usize,
-) -> Vec<RunRecord> {
+) -> Result<Vec<RunRecord>> {
     let setups = if minibatch {
         config::table3_logreg_minibatch()
     } else {
@@ -121,7 +140,7 @@ pub fn fig_logreg(
         if minibatch { "minibatch" } else { "full" }
     );
     run_table(
-        &|| Box::new(LogReg::paper_shaped(n_total, split, 42)) as Box<dyn Problem>,
+        ProblemSpec::LogReg { n_total, split, seed: 42 },
         &setups,
         rounds,
         if minibatch { Some(512) } else { None },
@@ -132,32 +151,29 @@ pub fn fig_logreg(
 
 /// Fig. 4: "deep net" (MLP on synthetic CIFAR-shaped data via PJRT).
 /// Reports loss trajectories; divergence shows up as NaN (the paper's *).
-pub fn fig4(split: DataSplit, out: Option<&Path>, rounds: usize) -> crate::error::Result<Vec<RunRecord>> {
+/// The PJRT problem is not plain data, so it rides the grid as a
+/// [`ProblemSpec::Shared`] instance (built once, shared across setups).
+pub fn fig4(split: DataSplit, out: Option<&Path>, rounds: usize) -> Result<Vec<RunRecord>> {
     use crate::problems::neural::MlpProblem;
     let manifest = crate::runtime::Manifest::load("artifacts")?;
     let setups = config::table4_dnn(split == DataSplit::Heterogeneous);
-    let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
     let tag = format!(
         "fig4_dnn_{}",
         if split == DataSplit::Heterogeneous { "hetero" } else { "homo" }
     );
+    let problem = std::sync::Arc::new(MlpProblem::new(&manifest, 8, 256, split, 42)?);
+    let base = RunSpec {
+        problem: ProblemSpec::Shared(problem),
+        rounds,
+        batch_size: Some(64),
+        record_every: (rounds / 20).max(1),
+        ..RunSpec::paper_default()
+    };
+    let specs = specs_from_setups(&tag, &base, &setups);
+    let records = Driver::new(EXP_THREADS).with_out(out).run(&tag, &specs)?;
     println!("\n== {tag} ==");
     println!("{:<22} {:>12} {:>12} {:>14}", "algorithm", "loss", "consensus", "bits/agent");
-    let mut records = Vec::new();
-    for s in &setups {
-        let p = MlpProblem::new(&manifest, 8, 256, split, 42)?;
-        let mut engine = Engine::new(
-            EngineConfig {
-                eta: s.eta,
-                batch_size: Some(64),
-                record_every: (rounds / 20).max(1),
-                ..Default::default()
-            },
-            mix.clone(),
-            Box::new(p),
-        );
-        let comp = if s.compressed { Some(paper_compressor()) } else { None };
-        let rec = engine.run(s.build(), comp, rounds);
+    for rec in &records {
         let m = rec.last();
         let diverged = !m.loss.is_finite() || m.loss > 50.0;
         println!(
@@ -168,17 +184,14 @@ pub fn fig4(split: DataSplit, out: Option<&Path>, rounds: usize) -> crate::error
             m.bits_per_agent,
             if diverged { "  *diverged*" } else { "" }
         );
-        if let Some(dir) = out {
-            rec.write_csv(dir, &format!("{tag}_{}", s.algo)).expect("write csv");
-        }
-        records.push(rec);
     }
     Ok(records)
 }
 
 /// Fig. 5: relative compression error of p-norm b-bit quantization,
 /// p ∈ {1, 2, 3, …, 6, ∞}, averaged over 100 random vectors in R^10000.
-pub fn fig5(out: Option<&Path>) -> Vec<(String, u32, f64)> {
+/// (Pure codec evaluation — no engine runs, so no grid.)
+pub fn fig5(out: Option<&Path>) -> Result<Vec<(String, u32, f64)>> {
     let d = 10_000;
     let trials = 100;
     let mut rng = Rng::new(7);
@@ -215,15 +228,15 @@ pub fn fig5(out: Option<&Path>) -> Vec<(String, u32, f64)> {
         }
     }
     if let Some(dir) = out {
-        std::fs::create_dir_all(dir).ok();
-        std::fs::write(dir.join("fig5_pnorm_error.csv"), csv).ok();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("fig5_pnorm_error.csv"), csv)?;
     }
-    rows
+    Ok(rows)
 }
 
 /// Fig. 6: error-per-bit across compression families (q∞ vs top-k vs
-/// random-k), same random vectors as Fig. 5.
-pub fn fig6(out: Option<&Path>) -> Vec<(String, f64, f64)> {
+/// random-k), same random vectors as Fig. 5. (Pure codec evaluation.)
+pub fn fig6(out: Option<&Path>) -> Result<Vec<(String, f64, f64)>> {
     let d = 10_000;
     let trials = 40;
     let mut rng = Rng::new(7);
@@ -262,58 +275,78 @@ pub fn fig6(out: Option<&Path>) -> Vec<(String, f64, f64)> {
     for k in [100usize, 400, 1000, 2500] {
         eval(Box::new(RandK::new(k, false)));
     }
+    drop(eval);
     if let Some(dir) = out {
-        std::fs::create_dir_all(dir).ok();
-        std::fs::write(dir.join("fig6_methods.csv"), csv).ok();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("fig6_methods.csv"), csv)?;
     }
-    rows
+    Ok(rows)
+}
+
+/// The fig7 sensitivity sweep as a declarative grid: LEAD over the paper's
+/// (α, γ) cartesian product on the Fig. 1 workload. Shared by the driver
+/// below, the determinism pin (`scenarios::tests`), and
+/// `benches/grid.rs`.
+pub fn fig7_grid(rounds: usize) -> Grid {
+    Grid {
+        name: "fig7".into(),
+        base: RunSpec {
+            rounds,
+            // Engine defaults of the historical driver: η=0.1, seed 42,
+            // record every 10 rounds.
+            ..RunSpec::paper_default()
+        },
+        axes: vec![
+            (
+                "alpha".into(),
+                [0.1, 0.3, 0.5, 0.7, 0.9].iter().map(|&v| Value::Float(v)).collect(),
+            ),
+            (
+                "gamma".into(),
+                [0.2, 0.5, 1.0, 1.5, 2.0].iter().map(|&v| Value::Float(v)).collect(),
+            ),
+        ],
+    }
 }
 
 /// Fig. 7: LEAD sensitivity over the (α, γ) grid on linear regression;
 /// the paper's claim is that nearly every cell converges.
-pub fn fig7(out: Option<&Path>, rounds: usize) -> Vec<(f64, f64, Option<usize>)> {
-    let alphas = [0.1, 0.3, 0.5, 0.7, 0.9];
-    let gammas = [0.2, 0.5, 1.0, 1.5, 2.0];
+pub fn fig7(out: Option<&Path>, rounds: usize) -> Result<Vec<(f64, f64, Option<usize>)>> {
+    let grid = fig7_grid(rounds);
+    let specs = grid.expand()?;
+    let records = Driver::new(EXP_THREADS).with_out(out).run(&grid.name, &specs)?;
+    // Table shape follows the grid: the innermost (gamma) axis is one
+    // printed row, so header and row stride are derived rather than
+    // duplicating fig7_grid's axis values here.
+    let stride = grid.axes.last().map_or(1, |(_, v)| v.len()).max(1);
     println!("\n== fig7: LEAD (α, γ) sensitivity — rounds to dist 1e-6 ==");
     print!("{:>6}", "α\\γ");
-    for g in gammas {
-        print!("{g:>9}");
+    for s in &specs[..stride.min(specs.len())] {
+        print!("{:>9}", s.gamma);
     }
     println!();
     let mut rows = Vec::new();
     let mut csv = String::from("alpha,gamma,rounds_to_1e6\n");
-    for a in alphas {
-        print!("{a:>6}");
-        for g in gammas {
-            let p = LinReg::synthetic(8, 200, 0.1, 42);
-            let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
-            let mut e = Engine::new(
-                EngineConfig { eta: 0.1, record_every: 10, ..Default::default() },
-                mix,
-                Box::new(p),
-            );
-            let rec = e.run(
-                Box::new(crate::algorithms::lead::Lead::new(
-                    crate::algorithms::lead::LeadParams { gamma: g, alpha: a },
-                )),
-                Some(paper_compressor()),
-                rounds,
-            );
-            let hit = rec.rounds_to_tol(1e-6);
-            match hit {
-                Some(r) => print!("{r:>9}"),
-                None => print!("{:>9}", "-"),
-            }
-            csv.push_str(&format!("{a},{g},{}\n", hit.map_or(-1i64, |r| r as i64)));
-            rows.push((a, g, hit));
+    for (s, rec) in specs.iter().zip(&records) {
+        if rows.len() % stride == 0 {
+            print!("{:>6}", s.alpha);
         }
-        println!();
+        let hit = rec.rounds_to_tol(1e-6);
+        match hit {
+            Some(r) => print!("{r:>9}"),
+            None => print!("{:>9}", "-"),
+        }
+        if rows.len() % stride == stride - 1 {
+            println!();
+        }
+        csv.push_str(&format!("{},{},{}\n", s.alpha, s.gamma, hit.map_or(-1i64, |r| r as i64)));
+        rows.push((s.alpha, s.gamma, hit));
     }
     if let Some(dir) = out {
-        std::fs::create_dir_all(dir).ok();
-        std::fs::write(dir.join("fig7_sensitivity.csv"), csv).ok();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("fig7_sensitivity.csv"), csv)?;
     }
-    rows
+    Ok(rows)
 }
 
 /// Print the paper's parameter tables (Appendix D.3) as configured here.
@@ -347,7 +380,7 @@ mod tests {
     fn fig5_ordering_matches_paper() {
         // Short version of the Fig. 5 claim: at every bit width, larger p
         // compresses better, ∞ best.
-        let rows = fig5(None);
+        let rows = fig5(None).unwrap();
         for bits in [2u32, 4, 6, 8] {
             let get = |label: &str| {
                 rows.iter().find(|(l, b, _)| l == label && *b == bits).unwrap().2
@@ -360,7 +393,7 @@ mod tests {
 
     #[test]
     fn fig7_paper_default_cell_converges() {
-        let rows = fig7(None, 800);
+        let rows = fig7(None, 800).unwrap();
         let cell = rows
             .iter()
             .find(|(a, g, _)| (*a - 0.5).abs() < 1e-9 && (*g - 1.0).abs() < 1e-9)

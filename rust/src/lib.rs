@@ -8,8 +8,9 @@
 //!   topologies and mixing matrices, compression codecs with exact wire-bit
 //!   accounting, the LEAD algorithm plus eight baselines, a coordinator
 //!   engine driven by a persistent worker pool ([`pool`]) with a
-//!   steady-state allocation-free round loop, experiment drivers for
-//!   every figure in the paper, metrics, and a CLI.
+//!   steady-state allocation-free round loop, declarative scenario grids
+//!   with a sharded multi-run executor ([`scenarios`]), experiment
+//!   drivers for every figure in the paper, metrics, and a CLI.
 //! - **L2 (python/compile)**: JAX compute graphs (linear/logistic
 //!   regression, MLP, transformer LM forward+backward) lowered once to HLO
 //!   text artifacts.
@@ -22,16 +23,26 @@
 //! Quickstart (see also `examples/quickstart.rs`):
 //! ```no_run
 //! use lead::prelude::*;
+//! use std::sync::Arc;
 //! let topo = Topology::Ring.build(8, MixingRule::UniformNeighbors);
 //! let problem = LinReg::synthetic(8, 200, 0.1, 42);
 //! let algo = Lead::new(LeadParams { gamma: 1.0, alpha: 0.5 });
 //! let compressor = QuantizeP::new(2, PNorm::Inf, 512);
-//! let mut engine = Engine::new(EngineConfig::default(), topo, Box::new(problem));
+//! let mut engine = Engine::new(EngineConfig::default(), topo, Arc::new(problem));
 //! let record = engine.run(Box::new(algo), Some(Box::new(compressor)), 300);
 //! println!("final distance to x*: {:.3e}", record.last().dist_opt);
 //! ```
+//!
+//! Scenario grids (declarative batches over a shared worker pool):
+//! ```no_run
+//! use lead::scenarios::{Driver, Grid};
+//! let grid = Grid::from_toml("[axes]\nalpha = [0.1, 0.5, 0.9]\n").unwrap();
+//! let specs = grid.expand().unwrap();
+//! let records = Driver::new(8).run(&grid.name, &specs).unwrap();
+//! ```
 
 pub mod algorithms;
+pub mod bench;
 pub mod compress;
 pub mod config;
 pub mod coordinator;
@@ -43,6 +54,7 @@ pub mod problems;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod scenarios;
 pub mod serialize;
 pub mod topology;
 
@@ -67,6 +79,7 @@ pub mod prelude {
     pub use crate::coordinator::metrics::{PhaseTimes, RoundMetrics, RunRecord};
     pub use crate::pool::{Exec, WorkerPool};
     pub use crate::problems::{linreg::LinReg, logreg::LogReg, DataSplit, Problem};
+    pub use crate::scenarios::{Driver, Grid, ProblemSpec, RunSpec};
     pub use crate::rng::Rng;
     pub use crate::topology::{MixingMatrix, MixingRule, Topology};
 }

@@ -2,15 +2,22 @@
 //!
 //! ```text
 //! lead exp <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tables|all> [--out DIR] [--rounds N]
-//! lead run <config.toml> [--out DIR]        # custom single run
-//! lead info                                 # topology/spectral summary
+//! lead grid <spec.toml> [--out DIR] [--threads N]   # declarative scenario grid
+//! lead run <config.toml> [--out DIR]                # custom single run
+//! lead bench-diff <new.json> <baseline.json> [--tol X]  # perf gate
+//! lead info                                         # topology/spectral summary
 //! ```
 //! (clap is not in the offline vendor set; flags are parsed by hand.)
+//!
+//! `exp`, `grid`, and `run` all execute through the same scenario layer
+//! (`lead::scenarios`): specs expand to a batch, the sharded driver runs
+//! the batch on one shared worker pool, and artifacts (per-cell CSVs +
+//! the unified `<grid>.json`) land in `--out`.
 
-use lead::coordinator::engine::{Engine, EngineConfig};
 use lead::error::err;
 use lead::experiments;
 use lead::problems::DataSplit;
+use lead::scenarios::{Driver, Grid};
 use lead::topology::{MixingRule, Topology};
 use std::path::PathBuf;
 
@@ -29,35 +36,35 @@ fn main() -> lead::error::Result<()> {
             let which = args.get(1).map(String::as_str).unwrap_or("all");
             let r = |default| rounds.unwrap_or(default);
             match which {
-                "fig1" => drop(experiments::fig1(out_ref, r(1500))),
-                "fig2" => drop(experiments::fig_logreg(DataSplit::Heterogeneous, false, out_ref, r(600), 8000)),
-                "fig3" => drop(experiments::fig_logreg(DataSplit::Heterogeneous, true, out_ref, r(600), 8000)),
+                "fig1" => drop(experiments::fig1(out_ref, r(1500))?),
+                "fig2" => drop(experiments::fig_logreg(DataSplit::Heterogeneous, false, out_ref, r(600), 8000)?),
+                "fig3" => drop(experiments::fig_logreg(DataSplit::Heterogeneous, true, out_ref, r(600), 8000)?),
                 "fig4" => {
                     experiments::fig4(DataSplit::Homogeneous, out_ref, r(150))?;
                     experiments::fig4(DataSplit::Heterogeneous, out_ref, r(150))?;
                 }
-                "fig5" => drop(experiments::fig5(out_ref)),
-                "fig6" => drop(experiments::fig6(out_ref)),
-                "fig7" => drop(experiments::fig7(out_ref, r(1200))),
-                "fig8" => drop(experiments::fig_logreg(DataSplit::Homogeneous, false, out_ref, r(600), 8000)),
-                "fig9" => drop(experiments::fig_logreg(DataSplit::Homogeneous, true, out_ref, r(600), 8000)),
+                "fig5" => drop(experiments::fig5(out_ref)?),
+                "fig6" => drop(experiments::fig6(out_ref)?),
+                "fig7" => drop(experiments::fig7(out_ref, r(1200))?),
+                "fig8" => drop(experiments::fig_logreg(DataSplit::Homogeneous, false, out_ref, r(600), 8000)?),
+                "fig9" => drop(experiments::fig_logreg(DataSplit::Homogeneous, true, out_ref, r(600), 8000)?),
                 "tables" => experiments::tables(),
                 "ablations" => {
-                    experiments::ablations::topology(out_ref);
-                    experiments::ablations::bits(out_ref);
-                    experiments::ablations::block_size(out_ref);
-                    experiments::ablations::momentum(out_ref);
+                    experiments::ablations::topology(out_ref)?;
+                    experiments::ablations::bits(out_ref)?;
+                    experiments::ablations::block_size(out_ref)?;
+                    experiments::ablations::momentum(out_ref)?;
                 }
                 "all" => {
                     experiments::tables();
-                    experiments::fig1(out_ref, rounds.unwrap_or(1500));
-                    experiments::fig_logreg(DataSplit::Heterogeneous, false, out_ref, rounds.unwrap_or(600), 8000);
-                    experiments::fig_logreg(DataSplit::Heterogeneous, true, out_ref, rounds.unwrap_or(600), 8000);
-                    experiments::fig_logreg(DataSplit::Homogeneous, false, out_ref, rounds.unwrap_or(600), 8000);
-                    experiments::fig_logreg(DataSplit::Homogeneous, true, out_ref, rounds.unwrap_or(600), 8000);
-                    experiments::fig5(out_ref);
-                    experiments::fig6(out_ref);
-                    experiments::fig7(out_ref, rounds.unwrap_or(1200));
+                    experiments::fig1(out_ref, rounds.unwrap_or(1500))?;
+                    experiments::fig_logreg(DataSplit::Heterogeneous, false, out_ref, rounds.unwrap_or(600), 8000)?;
+                    experiments::fig_logreg(DataSplit::Heterogeneous, true, out_ref, rounds.unwrap_or(600), 8000)?;
+                    experiments::fig_logreg(DataSplit::Homogeneous, false, out_ref, rounds.unwrap_or(600), 8000)?;
+                    experiments::fig_logreg(DataSplit::Homogeneous, true, out_ref, rounds.unwrap_or(600), 8000)?;
+                    experiments::fig5(out_ref)?;
+                    experiments::fig6(out_ref)?;
+                    experiments::fig7(out_ref, rounds.unwrap_or(1200))?;
                     if let Err(e) = experiments::fig4(DataSplit::Homogeneous, out_ref, rounds.unwrap_or(150))
                         .and_then(|_| experiments::fig4(DataSplit::Heterogeneous, out_ref, rounds.unwrap_or(150)))
                     {
@@ -67,34 +74,50 @@ fn main() -> lead::error::Result<()> {
                 other => return Err(err(format!("unknown experiment {other:?}"))),
             }
         }
+        Some("grid") => {
+            let path = args.get(1).ok_or_else(|| {
+                err("usage: lead grid <spec.toml> [--out DIR] [--threads N]")
+            })?;
+            let src = std::fs::read_to_string(path)?;
+            let grid = Grid::from_toml(&src)?;
+            let specs = grid.expand()?;
+            let threads = flag(&args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(8);
+            eprintln!(
+                "grid {:?}: {} cells, {} threads{}",
+                grid.name,
+                specs.len(),
+                threads,
+                out_ref.map_or(String::new(), |d| format!(", artifacts -> {}", d.display()))
+            );
+            let records = Driver::new(threads).with_out(out_ref).run(&grid.name, &specs)?;
+            println!(
+                "{:<40} {:<16} {:>12} {:>12} {:>14} {:>8}",
+                "cell", "algorithm", "dist(x*)", "consensus", "bits/agent", "secs"
+            );
+            for (s, rec) in specs.iter().zip(&records) {
+                let m = rec.last();
+                let show = |x: f64| {
+                    if x.is_finite() { format!("{x:.3e}") } else { "nan/div".into() }
+                };
+                println!(
+                    "{:<40} {:<16} {:>12} {:>12} {:>14.3e} {:>8.2}",
+                    s.name,
+                    rec.algo,
+                    show(m.dist_opt),
+                    show(m.consensus),
+                    m.bits_per_agent,
+                    rec.wall_secs
+                );
+            }
+        }
         Some("run") => {
             let path = args.get(1).ok_or_else(|| err("usage: lead run <config.toml>"))?;
             let src = std::fs::read_to_string(path)?;
             let cfg = lead::config::RunConfig::from_toml(&src).map_err(err)?;
-            let topo = Topology::parse(&cfg.topology, cfg.seed)
-                .ok_or_else(|| err(format!("bad topology {:?}", cfg.topology)))?;
-            let mix = topo.build(cfg.agents, MixingRule::UniformNeighbors);
-            let problem =
-                Box::new(lead::problems::linreg::LinReg::synthetic(cfg.agents, 200, 0.1, cfg.seed));
-            let algo = lead::config::build_algo(&cfg.algo, cfg.gamma, cfg.alpha)
-                .ok_or_else(|| err(format!("unknown algo {:?}", cfg.algo)))?;
-            let comp = lead::compress::parse(&cfg.compressor);
-            let mut engine = Engine::new(
-                EngineConfig {
-                    eta: cfg.eta,
-                    batch_size: cfg.batch_size,
-                    seed: cfg.seed,
-                    record_every: (cfg.rounds / 100).max(1),
-                    ..Default::default()
-                },
-                mix,
-                problem,
-            );
-            let rec = engine.run(algo, comp, cfg.rounds);
+            let spec = cfg.to_spec();
+            let records = Driver::new(1).with_out(out_ref).run("run", &[spec])?;
+            let rec = &records[0];
             println!("{}", rec.to_csv());
-            if let Some(dir) = out_ref {
-                rec.write_csv(dir, "run")?;
-            }
             eprintln!(
                 "final: dist={:.3e} consensus={:.3e} bits/agent={:.3e} ({:.2}s)",
                 rec.last().dist_opt,
@@ -102,6 +125,41 @@ fn main() -> lead::error::Result<()> {
                 rec.last().bits_per_agent,
                 rec.wall_secs
             );
+        }
+        Some("bench-diff") => {
+            let (Some(new_p), Some(base_p)) = (args.get(1), args.get(2)) else {
+                return Err(err("usage: lead bench-diff <new.json> <baseline.json> [--tol X]"));
+            };
+            let tol = flag(&args, "--tol").and_then(|t| t.parse().ok()).unwrap_or(0.25);
+            if !std::path::Path::new(base_p).exists() {
+                eprintln!(
+                    "bench-diff: baseline {base_p} not found — nothing to compare \
+                     (commit one to arm the perf gate)"
+                );
+                return Ok(());
+            }
+            let report = lead::bench::diff(
+                &std::fs::read_to_string(new_p)?,
+                &std::fs::read_to_string(base_p)?,
+                tol,
+            )?;
+            for n in &report.notes {
+                println!("note: {n}");
+            }
+            if report.ok() {
+                println!(
+                    "bench-diff: OK — {} config(s) within tolerance {tol}",
+                    report.compared
+                );
+            } else {
+                for r in &report.regressions {
+                    eprintln!("REGRESSION: {r}");
+                }
+                return Err(err(format!(
+                    "bench-diff: {} perf regression(s) beyond tolerance {tol}",
+                    report.regressions.len()
+                )));
+            }
         }
         Some("info") => {
             for name in ["ring", "full", "star", "path"] {
@@ -117,7 +175,7 @@ fn main() -> lead::error::Result<()> {
             }
         }
         _ => {
-            eprintln!("usage: lead <exp|run|info> ... (see README)");
+            eprintln!("usage: lead <exp|grid|run|bench-diff|info> ... (see README)");
         }
     }
     Ok(())

@@ -27,6 +27,27 @@
 //! caller. Nested dispatches (a job that itself dispatches) degrade to
 //! inline execution rather than deadlocking.
 //!
+//! # Run-level dispatch and the nested-budget rule
+//!
+//! [`par_dynamic`] is the *outer* (run-level) dispatch mode used by the
+//! scenario driver (`crate::scenarios`): `count` coarse, independent,
+//! variable-duration tasks — whole engine runs — are handed out by an
+//! atomic work counter instead of static chunking, so a worker that
+//! finishes a fast run immediately picks up the next one. Item-to-worker
+//! assignment is therefore *not* deterministic, which is only sound for
+//! tasks that are fully independent and write results through disjoint
+//! per-index slots; each task must derive all randomness from its own
+//! seed (every engine run does), so the *results* remain bitwise
+//! deterministic even though the schedule is not.
+//!
+//! The thread budget is shared between the two levels by construction: an
+//! outer task occupies exactly one pool worker, and any inner dispatch it
+//! issues on the same pool hits the nested-dispatch guard and runs inline
+//! (an inner budget of 1). Callers that want *inner* parallelism for a
+//! run instead execute it on the dispatching thread with the full pool
+//! budget — never both at once, so `threads` total units of parallelism
+//! are never exceeded.
+//!
 //! # Backends
 //!
 //! [`Exec`] is a copyable handle selecting the backend per call site:
@@ -344,6 +365,35 @@ where
     });
 }
 
+/// Run-level dispatch: execute `f(i)` for every `i in 0..count` across
+/// the backend with *dynamic* assignment — workers pull the next index
+/// from a shared atomic counter, so long and short tasks pack tightly
+/// (see the module docs, "Run-level dispatch and the nested-budget
+/// rule"). `f` must be independent across indices; each index is claimed
+/// by exactly one worker. Inner dispatches issued from inside `f` on the
+/// same pool degrade to inline execution (nested-dispatch guard), which
+/// is what keeps the total thread budget bounded.
+pub fn par_dynamic<F>(exec: Exec<'_>, count: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let t = exec.threads().min(count).max(1);
+    if t == 1 {
+        for i in 0..count {
+            f(i);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    exec.run_workers(t, &|_w| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= count {
+            break;
+        }
+        f(i);
+    });
+}
+
 /// Collect `(base pointer, cols)` for each state mat onto the stack.
 fn mat_bases(mats: &mut [&mut Mat], n: usize) -> [(SendPtr<f64>, usize); MAX_MATS] {
     assert!(mats.len() <= MAX_MATS, "par_agents: too many state mats ({} > {MAX_MATS})", mats.len());
@@ -563,6 +613,43 @@ mod tests {
                 assert_eq!(extra_b[i], i * 10);
             }
         }
+    }
+
+    #[test]
+    fn par_dynamic_claims_every_index_once() {
+        let pool = WorkerPool::new(4);
+        for count in [0usize, 1, 3, 17, 100] {
+            let hits: Vec<AtomicUsize> = (0..count).map(|_| AtomicUsize::new(0)).collect();
+            let h = &hits;
+            for exec in [Exec::seq(), Exec::spawn(3), Exec::pool(&pool)] {
+                for a in h.iter() {
+                    a.store(0, Ordering::Relaxed);
+                }
+                par_dynamic(exec, count, |i| {
+                    h[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, c) in h.iter().enumerate() {
+                    assert_eq!(c.load(Ordering::Relaxed), 1, "count={count} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_dynamic_nested_inner_dispatch_runs_inline() {
+        // An outer run-level task that itself dispatches on the same pool
+        // must not deadlock and must still cover all inner items (the
+        // nested-budget rule: inner budget degrades to 1).
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        let t = &total;
+        let p = &pool;
+        par_dynamic(Exec::pool(&pool), 5, |_run| {
+            let mut xs = [0u8; 7];
+            par_chunks(Exec::pool(p), &mut xs, |_, x| *x += 1);
+            t.fetch_add(xs.iter().map(|&x| x as usize).sum(), Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 35);
     }
 
     #[test]

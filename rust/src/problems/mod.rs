@@ -100,48 +100,6 @@ pub trait Problem: Send + Sync {
     fn name(&self) -> String;
 }
 
-/// Blanket impl so a single expensive problem instance (e.g. one whose
-/// construction solves for x* with L-BFGS) can be shared across several
-/// engine runs: `Box::new(shared.clone())` where `shared: Arc<dyn Problem>`.
-impl Problem for std::sync::Arc<dyn Problem> {
-    fn dim(&self) -> usize {
-        (**self).dim()
-    }
-    fn n_agents(&self) -> usize {
-        (**self).n_agents()
-    }
-    fn grad_full(&self, agent: usize, x: &[f64], out: &mut [f64]) {
-        (**self).grad_full(agent, x, out)
-    }
-    fn grad_batch(&self, agent: usize, x: &[f64], idx: &[usize], out: &mut [f64]) {
-        (**self).grad_batch(agent, x, idx, out)
-    }
-    fn n_samples(&self, agent: usize) -> usize {
-        (**self).n_samples(agent)
-    }
-    fn loss(&self, agent: usize, x: &[f64]) -> f64 {
-        (**self).loss(agent, x)
-    }
-    fn global_loss(&self, x: &[f64]) -> f64 {
-        (**self).global_loss(x)
-    }
-    fn global_grad(&self, x: &[f64], out: &mut [f64]) {
-        (**self).global_grad(x, out)
-    }
-    fn optimum(&self) -> Option<&[f64]> {
-        (**self).optimum()
-    }
-    fn initial_point(&self) -> Option<Vec<f64>> {
-        (**self).initial_point()
-    }
-    fn mu_l(&self) -> Option<(f64, f64)> {
-        (**self).mu_l()
-    }
-    fn name(&self) -> String {
-        (**self).name()
-    }
-}
-
 /// Heterogeneity diagnostic: `(1/n) Σ_i ‖∇f_i(x*) − ∇f(x*)‖²`. Zero for
 /// homogeneous objectives; strictly positive in the paper's heterogeneous
 /// settings (§3.1: some `∇f_i(x*) ≠ 0` even at the optimum).

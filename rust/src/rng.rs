@@ -139,19 +139,29 @@ impl Rng {
     /// Sample `k` distinct indices from [0, n) (Floyd's algorithm, then
     /// shuffled so order is also random). Requires k <= n.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
-        assert!(k <= n, "sample_indices: k={k} > n={n}");
         let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        self.sample_indices_into(n, k, &mut chosen);
+        chosen
+    }
+
+    /// [`Rng::sample_indices`] into a caller-owned buffer (§Perf: the
+    /// engine's steady-state loop reuses codec scratch instead of
+    /// allocating per call). Draw-for-draw identical to
+    /// [`Rng::sample_indices`] — same Floyd selection, same shuffle — so
+    /// the two paths consume the stream identically and any mix of them
+    /// stays bitwise-reproducible.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        out.clear();
         for j in (n - k)..n {
             let t = self.below(j + 1);
-            if let Some(pos) = chosen.iter().position(|&c| c == t) {
-                let _ = pos;
-                chosen.push(j);
+            if out.contains(&t) {
+                out.push(j);
             } else {
-                chosen.push(t);
+                out.push(t);
             }
         }
-        self.shuffle(&mut chosen);
-        chosen
+        self.shuffle(out);
     }
 }
 
@@ -251,6 +261,21 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_into_matches_alloc_path() {
+        // Same seed ⇒ same draws, same output, same post-call stream; the
+        // buffer variant must be a pure allocation change.
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        let mut buf = Vec::new();
+        for (n, k) in [(10usize, 3usize), (100, 100), (7, 1), (50, 49)] {
+            let alloc = a.sample_indices(n, k);
+            b.sample_indices_into(n, k, &mut buf);
+            assert_eq!(alloc, buf, "n={n} k={k}");
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "streams diverged");
     }
 
     #[test]

@@ -1,0 +1,824 @@
+//! Declarative scenario grids and the sharded multi-run executor.
+//!
+//! The paper's evaluation is a *grid* — algorithms × topologies ×
+//! compressors × seeds (Figs. 1–9, the (α, γ) sensitivity sweep, the
+//! ablations) — so "what to run" is separated from "how to run it":
+//!
+//! * [`RunSpec`] — one cell as plain data: problem, topology + mixing
+//!   rule + agent count, algorithm setup, compressor, rounds, stepsize
+//!   schedule, seed. Buildable from presets ([`specs_from_setups`]) or
+//!   parsed from the `toml_mini` config format ([`Grid::from_toml`]).
+//! * [`Grid`] — a base spec plus axes (cartesian products over any scalar
+//!   field), expanded to a deterministic batch of specs.
+//! * [`Driver`] — executes a batch under one shared thread budget with
+//!   *outer* parallelism: runs below the engine's inner fan-out threshold
+//!   (`coordinator::engine` §Scheduling) are sharded across the pool as
+//!   whole-run tasks ([`crate::pool::par_dynamic`]); larger runs execute
+//!   one at a time with the full pool as their inner [`Exec`]. Identical
+//!   problems (compared as specs) are built once and shared as
+//!   `Arc<dyn Problem>` across all their runs.
+//!
+//! Determinism: every run derives all randomness from its own seed, so a
+//! grid executed with any outer thread count is **bitwise-identical** to
+//! serial execution (pinned by `sharded_grid_bitwise_equals_serial`).
+//!
+//! # TOML grid format
+//!
+//! ```toml
+//! [grid]                       # scalar base spec (all keys optional)
+//! name = "sweep"
+//! algo = "lead"                # config::build_algo name
+//! eta = 0.1
+//! gamma = 1.0
+//! alpha = 0.5
+//! compressor = "qinf:2:512"    # compress::parse spec; "raw" = none
+//! topology = "ring"            # Topology::parse; e.g. "er:0.4:3"
+//! mixing = "uniform"           # uniform | metropolis | lazy
+//! agents = 8
+//! rounds = 800
+//! seed = 42
+//! record_every = 10
+//! # batch_size = 512           # omit for full gradient
+//! # t0 = 200.0                 # diminishing stepsize η·t0/(t0+k)
+//!
+//! [problem]                    # omit for the paper's linreg workload
+//! kind = "linreg"              # linreg | logreg | quad
+//! dim = 200
+//! reg = 0.1
+//! seed = 42
+//!
+//! [axes]                       # arrays expand as a cartesian product,
+//! alpha = [0.1, 0.3, 0.5]      # in alphabetical key order (first key
+//! gamma = [0.5, 1.0]           # outermost); any [grid] scalar key works
+//! ```
+
+use crate::compress::Compressor;
+use crate::config::{self, AlgoSetup};
+use crate::coordinator::engine::{phase_threads, Engine, EngineConfig, Schedule};
+use crate::coordinator::metrics::RunRecord;
+use crate::error::{err, Result};
+use crate::pool::{par_dynamic, Exec, SendPtr, WorkerPool};
+use crate::problems::{linreg::LinReg, logreg::LogReg, quad::Quad, DataSplit, Problem};
+use crate::serialize::{json, toml_mini};
+use crate::topology::{MixingMatrix, MixingRule, Topology};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Plain-data description of a problem instance. Plain variants are
+/// parseable from TOML and compared structurally so the driver can build
+/// each distinct problem exactly once per grid (reference-optimum solves
+/// are the expensive part); [`ProblemSpec::Shared`] is the escape hatch
+/// for problems that are not plain data (e.g. the PJRT-backed MLP),
+/// compared by pointer identity.
+#[derive(Clone)]
+pub enum ProblemSpec {
+    /// `LinReg::synthetic(agents, dim, reg, seed)`.
+    LinReg { dim: usize, reg: f64, seed: u64 },
+    /// `LogReg::paper_shaped(n_total, split, seed)` (8 agents).
+    LogReg { n_total: usize, split: DataSplit, seed: u64 },
+    /// `Quad::new(agents, dim, seed)` — the engine-audit workload.
+    Quad { dim: usize, seed: u64 },
+    /// A pre-built shared problem.
+    Shared(Arc<dyn Problem>),
+}
+
+impl ProblemSpec {
+    /// Build the problem for `agents` agents.
+    pub fn build(&self, agents: usize) -> Arc<dyn Problem> {
+        match self {
+            ProblemSpec::LinReg { dim, reg, seed } => {
+                Arc::new(LinReg::synthetic(agents, *dim, *reg, *seed))
+            }
+            ProblemSpec::LogReg { n_total, split, seed } => {
+                Arc::new(LogReg::paper_shaped(*n_total, *split, *seed))
+            }
+            ProblemSpec::Quad { dim, seed } => Arc::new(Quad::new(agents, *dim, *seed)),
+            ProblemSpec::Shared(p) => Arc::clone(p),
+        }
+    }
+
+    /// Structural equality (pointer identity for [`ProblemSpec::Shared`]):
+    /// the driver's dedupe key, together with the agent count.
+    pub fn same(&self, other: &ProblemSpec) -> bool {
+        match (self, other) {
+            (
+                ProblemSpec::LinReg { dim: a, reg: b, seed: c },
+                ProblemSpec::LinReg { dim: x, reg: y, seed: z },
+            ) => a == x && b == y && c == z,
+            (
+                ProblemSpec::LogReg { n_total: a, split: b, seed: c },
+                ProblemSpec::LogReg { n_total: x, split: y, seed: z },
+            ) => a == x && b == y && c == z,
+            (ProblemSpec::Quad { dim: a, seed: b }, ProblemSpec::Quad { dim: x, seed: y }) => {
+                a == x && b == y
+            }
+            (ProblemSpec::Shared(a), ProblemSpec::Shared(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// Short human/JSON label.
+    pub fn label(&self) -> String {
+        match self {
+            ProblemSpec::LinReg { dim, reg, seed } => format!("linreg(d={dim},reg={reg},seed={seed})"),
+            ProblemSpec::LogReg { n_total, split, seed } => format!(
+                "logreg(n={n_total},{},seed={seed})",
+                if *split == DataSplit::Heterogeneous { "hetero" } else { "homo" }
+            ),
+            ProblemSpec::Quad { dim, seed } => format!("quad(d={dim},seed={seed})"),
+            ProblemSpec::Shared(p) => format!("shared({})", p.name()),
+        }
+    }
+
+    /// Parse a `[problem]` TOML section.
+    pub fn from_doc(sec: &std::collections::BTreeMap<String, toml_mini::Value>) -> Result<ProblemSpec> {
+        let get_usize = |k: &str, default: usize| -> Result<usize> {
+            match sec.get(k) {
+                Some(v) => Ok(v.as_i64().ok_or_else(|| err(format!("problem.{k}: int expected")))?
+                    as usize),
+                None => Ok(default),
+            }
+        };
+        let get_f64 = |k: &str, default: f64| -> Result<f64> {
+            match sec.get(k) {
+                Some(v) => v.as_f64().ok_or_else(|| err(format!("problem.{k}: number expected"))),
+                None => Ok(default),
+            }
+        };
+        let get_u64 = |k: &str, default: u64| -> Result<u64> {
+            match sec.get(k) {
+                Some(v) => Ok(v.as_i64().ok_or_else(|| err(format!("problem.{k}: int expected")))?
+                    as u64),
+                None => Ok(default),
+            }
+        };
+        let kind = sec
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err("problem.kind: \"linreg\" | \"logreg\" | \"quad\" expected"))?;
+        match kind {
+            "linreg" => Ok(ProblemSpec::LinReg {
+                dim: get_usize("dim", 200)?,
+                reg: get_f64("reg", 0.1)?,
+                seed: get_u64("seed", 42)?,
+            }),
+            "logreg" => {
+                let split = match sec.get("split").and_then(|v| v.as_str()) {
+                    None => DataSplit::Heterogeneous,
+                    Some(s) => DataSplit::parse(s)
+                        .ok_or_else(|| err(format!("problem.split: bad value {s:?}")))?,
+                };
+                Ok(ProblemSpec::LogReg {
+                    n_total: get_usize("n_total", 8000)?,
+                    split,
+                    seed: get_u64("seed", 42)?,
+                })
+            }
+            "quad" => Ok(ProblemSpec::Quad { dim: get_usize("dim", 1000)?, seed: get_u64("seed", 42)? }),
+            other => Err(err(format!("problem.kind: unknown kind {other:?}"))),
+        }
+    }
+}
+
+/// One run of the coordinator engine as plain data — "what to run",
+/// fully decoupled from "how" (threads, scheduling, artifacts), which is
+/// the [`Driver`]'s business.
+#[derive(Clone)]
+pub struct RunSpec {
+    /// Cell label; also the CSV/JSON artifact stem.
+    pub name: String,
+    pub problem: ProblemSpec,
+    /// [`Topology::parse`] string (seeded with `seed` unless the string
+    /// carries its own, e.g. `er:0.4:3`).
+    pub topology: String,
+    pub mixing: MixingRule,
+    pub agents: usize,
+    /// [`config::build_algo`] name.
+    pub algo: String,
+    pub eta: f64,
+    pub gamma: f64,
+    pub alpha: f64,
+    /// [`crate::compress::parse`] spec; `"raw"` (or empty) disables the
+    /// compressor entirely. Whether it applies is the algorithm's call
+    /// (`AlgoSpec::compressed`), exactly as in the engine.
+    pub compressor: String,
+    pub rounds: usize,
+    pub batch_size: Option<usize>,
+    /// Engine seed: the root of every RNG stream of the run.
+    pub seed: u64,
+    pub record_every: usize,
+    /// `Some(t0)` ⇒ diminishing stepsize η·t0/(t0+k) (Theorem 2).
+    pub t0: Option<f64>,
+}
+
+impl RunSpec {
+    /// The paper's baseline cell: LEAD (γ=1, α=0.5) + 2-bit q∞ on the
+    /// 8-agent uniform ring over the Fig. 1 linear-regression workload.
+    pub fn paper_default() -> RunSpec {
+        RunSpec {
+            name: "run".into(),
+            problem: ProblemSpec::LinReg { dim: 200, reg: 0.1, seed: 42 },
+            topology: "ring".into(),
+            mixing: MixingRule::UniformNeighbors,
+            agents: 8,
+            algo: "lead".into(),
+            eta: 0.1,
+            gamma: 1.0,
+            alpha: 0.5,
+            compressor: "qinf:2:512".into(),
+            rounds: 500,
+            batch_size: None,
+            seed: 42,
+            record_every: 10,
+            t0: None,
+        }
+    }
+
+    /// This spec with one preset table row applied (algorithm name, η, γ,
+    /// α — compression participation is the algorithm's own
+    /// `AlgoSpec::compressed`, which the preset tables mirror).
+    pub fn with_setup(&self, s: &AlgoSetup) -> RunSpec {
+        let mut spec = self.clone();
+        spec.algo = s.algo.clone();
+        spec.eta = s.eta;
+        spec.gamma = s.gamma;
+        spec.alpha = s.alpha;
+        spec
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        match self.t0 {
+            Some(t0) => Schedule::Diminishing { t0 },
+            None => Schedule::Constant,
+        }
+    }
+
+    /// Engine configuration for this spec. `threads` stays at 1: the
+    /// [`Driver`] supplies the execution backend via [`Engine::run_on`].
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            eta: self.eta,
+            schedule: self.schedule(),
+            batch_size: self.batch_size,
+            seed: self.seed,
+            record_every: self.record_every.max(1),
+            ..EngineConfig::default()
+        }
+    }
+
+    pub fn build_mix(&self) -> Result<MixingMatrix> {
+        let topo = Topology::parse(&self.topology, self.seed)
+            .ok_or_else(|| err(format!("{}: bad topology {:?}", self.name, self.topology)))?;
+        Ok(topo.build(self.agents, self.mixing))
+    }
+
+    pub fn build_algo(&self) -> Result<Box<dyn crate::algorithms::Algorithm>> {
+        config::build_algo(&self.algo, self.gamma, self.alpha)
+            .ok_or_else(|| err(format!("{}: unknown algorithm {:?}", self.name, self.algo)))
+    }
+
+    pub fn build_compressor(&self) -> Result<Option<Box<dyn Compressor>>> {
+        if self.compressor.is_empty() || self.compressor == "raw" {
+            return Ok(None);
+        }
+        crate::compress::parse(&self.compressor)
+            .map(Some)
+            .ok_or_else(|| err(format!("{}: bad compressor spec {:?}", self.name, self.compressor)))
+    }
+
+    /// Set one scalar field by its TOML key (axis application).
+    pub fn apply_axis(&mut self, key: &str, v: &toml_mini::Value) -> Result<()> {
+        let want_f64 =
+            || v.as_f64().ok_or_else(|| err(format!("axis {key:?}: number expected")));
+        let want_int = || v.as_i64().ok_or_else(|| err(format!("axis {key:?}: int expected")));
+        let want_str =
+            || v.as_str().map(String::from).ok_or_else(|| err(format!("axis {key:?}: string expected")));
+        match key {
+            "eta" => self.eta = want_f64()?,
+            "gamma" => self.gamma = want_f64()?,
+            "alpha" => self.alpha = want_f64()?,
+            "t0" => self.t0 = Some(want_f64()?),
+            "rounds" => self.rounds = want_int()? as usize,
+            "agents" => self.agents = want_int()? as usize,
+            "seed" => self.seed = want_int()? as u64,
+            "record_every" => self.record_every = want_int()? as usize,
+            "batch_size" => self.batch_size = Some(want_int()? as usize),
+            "algo" => self.algo = want_str()?,
+            "topology" => self.topology = want_str()?,
+            "compressor" => self.compressor = want_str()?,
+            "mixing" => {
+                let s = want_str()?;
+                self.mixing = MixingRule::parse(&s)
+                    .ok_or_else(|| err(format!("axis mixing: bad rule {s:?}")))?;
+            }
+            other => return Err(err(format!("unknown spec key {other:?}"))),
+        }
+        Ok(())
+    }
+
+    /// Compact JSON description (for the per-grid artifact).
+    fn spec_json(&self) -> String {
+        let mut o = String::from("{");
+        let kv_str = |out: &mut String, k: &str, v: &str, comma: bool| {
+            if comma {
+                out.push(',');
+            }
+            json::write_str(out, k);
+            out.push(':');
+            json::write_str(out, v);
+        };
+        kv_str(&mut o, "algo", &self.algo, false);
+        kv_str(&mut o, "problem", &self.problem.label(), true);
+        kv_str(&mut o, "topology", &self.topology, true);
+        kv_str(&mut o, "compressor", &self.compressor, true);
+        for (k, v) in [("eta", self.eta), ("gamma", self.gamma), ("alpha", self.alpha)] {
+            o.push(',');
+            json::write_str(&mut o, k);
+            o.push(':');
+            json::write_num(&mut o, v);
+        }
+        // Integer fields are emitted directly: routing u64 seeds through
+        // f64 would silently round values above 2^53, and the artifact
+        // must describe the run exactly (spec JSON round-trips).
+        o.push_str(&format!(
+            ",\"agents\":{},\"rounds\":{},\"seed\":{},\"record_every\":{}",
+            self.agents, self.rounds, self.seed, self.record_every
+        ));
+        o.push(',');
+        json::write_str(&mut o, "batch_size");
+        o.push(':');
+        match self.batch_size {
+            Some(b) => o.push_str(&b.to_string()),
+            None => o.push_str("null"),
+        }
+        o.push('}');
+        o
+    }
+}
+
+/// Expand preset table rows over a base spec — the shape of the paper's
+/// per-figure comparison tables (one row per algorithm, applied jointly:
+/// name, η, γ, α move together, so this is a *tuple* axis rather than a
+/// cartesian one). Cell names follow the historical CSV naming,
+/// `<tag>_<algo>`.
+pub fn specs_from_setups(tag: &str, base: &RunSpec, setups: &[AlgoSetup]) -> Vec<RunSpec> {
+    setups
+        .iter()
+        .map(|s| {
+            let mut spec = base.with_setup(s);
+            spec.name = format!("{tag}_{}", s.algo);
+            spec
+        })
+        .collect()
+}
+
+/// A base spec plus cartesian axes over scalar spec keys.
+pub struct Grid {
+    pub name: String,
+    pub base: RunSpec,
+    /// `(key, values)` — first axis outermost. Keys are the
+    /// [`RunSpec::apply_axis`] scalar keys.
+    pub axes: Vec<(String, Vec<toml_mini::Value>)>,
+}
+
+impl Grid {
+    /// Expand to the full cartesian batch, first axis outermost. Cell
+    /// names are `<grid>_<key><value>_…`, deterministic in expansion
+    /// order.
+    pub fn expand(&self) -> Result<Vec<RunSpec>> {
+        for (k, vals) in &self.axes {
+            if vals.is_empty() {
+                return Err(err(format!("grid {}: axis {k:?} is empty", self.name)));
+            }
+        }
+        let total: usize = self.axes.iter().map(|(_, v)| v.len()).product();
+        let mut specs = Vec::with_capacity(total);
+        for flat in 0..total {
+            let mut spec = self.base.clone();
+            let mut name = self.name.clone();
+            // Row-major odometer: decode indices innermost-last.
+            let mut rem = flat;
+            let mut idxs = vec![0usize; self.axes.len()];
+            for ax in (0..self.axes.len()).rev() {
+                let len = self.axes[ax].1.len();
+                idxs[ax] = rem % len;
+                rem /= len;
+            }
+            for (ax, (key, vals)) in self.axes.iter().enumerate() {
+                let v = &vals[idxs[ax]];
+                spec.apply_axis(key, v)?;
+                name.push('_');
+                name.push_str(key);
+                name.push_str(&fmt_value(v));
+            }
+            spec.name = name;
+            specs.push(spec);
+        }
+        Ok(specs)
+    }
+
+    /// Parse the TOML grid format (module docs): scalar base keys in
+    /// `[grid]` (or at top level), an optional `[problem]` section, and
+    /// `[axes]` arrays expanded in alphabetical key order.
+    pub fn from_toml(src: &str) -> Result<Grid> {
+        let doc = toml_mini::parse(src).map_err(err)?;
+        let mut base = RunSpec::paper_default();
+        let mut name = String::from("grid");
+        for section in ["", "grid"] {
+            let Some(sec) = doc.get(section) else { continue };
+            for (k, v) in sec {
+                match k.as_str() {
+                    "name" => {
+                        name = v
+                            .as_str()
+                            .ok_or_else(|| err("grid.name: string expected"))?
+                            .to_string()
+                    }
+                    other => base
+                        .apply_axis(other, v)
+                        .map_err(|e| err(format!("grid.{other}: {e}")))?,
+                }
+            }
+        }
+        if let Some(sec) = doc.get("problem") {
+            base.problem = ProblemSpec::from_doc(sec)?;
+        }
+        let axes = match doc.get("axes") {
+            None => Vec::new(),
+            Some(sec) => sec
+                .iter()
+                .map(|(k, v)| {
+                    let vals = v
+                        .as_arr()
+                        .ok_or_else(|| err(format!("axes.{k}: array expected")))?
+                        .to_vec();
+                    Ok((k.clone(), vals))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        base.name = name.clone();
+        Ok(Grid { name, base, axes })
+    }
+}
+
+fn fmt_value(v: &toml_mini::Value) -> String {
+    match v {
+        toml_mini::Value::Str(s) => s.clone(),
+        toml_mini::Value::Bool(b) => b.to_string(),
+        toml_mini::Value::Int(i) => i.to_string(),
+        toml_mini::Value::Float(f) => format!("{f}"),
+        toml_mini::Value::Arr(_) => "[..]".into(),
+    }
+}
+
+/// Executes batches of [`RunSpec`]s under one shared thread budget — see
+/// the module docs and `coordinator::engine` §Scheduling for the
+/// outer/inner rule.
+pub struct Driver {
+    threads: usize,
+    out: Option<PathBuf>,
+}
+
+/// Everything a single run needs, prebuilt and prevalidated so the
+/// parallel section is infallible.
+struct Prepared {
+    problem: Arc<dyn Problem>,
+    /// Whether inner (per-agent) parallelism would actually engage for
+    /// this run — the small/large classifier.
+    inner_useful: bool,
+}
+
+impl Driver {
+    pub fn new(threads: usize) -> Driver {
+        Driver { threads: threads.max(1), out: None }
+    }
+
+    /// Write one CSV per run plus the unified `<grid>.json` artifact into
+    /// `dir` (no artifacts when `None`).
+    pub fn with_out(mut self, dir: Option<&Path>) -> Driver {
+        self.out = dir.map(Path::to_path_buf);
+        self
+    }
+
+    /// Run every spec and return the records, index-aligned with `specs`.
+    ///
+    /// The cheap string-level validation (topology/algorithm/compressor
+    /// specs) happens before any problem is built, so a typo'd cell can
+    /// never cost a reference-optimum solve first; identical problems are
+    /// then built once and shared, and agent counts checked. Results are
+    /// bitwise-independent of `threads`.
+    pub fn run(&self, grid_name: &str, specs: &[RunSpec]) -> Result<Vec<RunRecord>> {
+        // Cheap validation first: parse/build every spec's strings before
+        // paying for any problem construction.
+        let mut channels = Vec::with_capacity(specs.len());
+        for s in specs {
+            s.build_mix()?;
+            let algo = s.build_algo()?;
+            s.build_compressor()?;
+            channels.push(algo.spec().channels);
+        }
+        // Resolve problems with structural dedupe, check agent counts,
+        // and classify small vs large.
+        let mut problems: Vec<Arc<dyn Problem>> = Vec::with_capacity(specs.len());
+        for (i, s) in specs.iter().enumerate() {
+            let found = specs[..i]
+                .iter()
+                .position(|t| t.problem.same(&s.problem) && t.agents == s.agents);
+            match found {
+                Some(j) => problems.push(Arc::clone(&problems[j])),
+                None => problems.push(s.problem.build(s.agents)),
+            }
+        }
+        let mut prepared = Vec::with_capacity(specs.len());
+        for ((s, p), &ch) in specs.iter().zip(&problems).zip(&channels) {
+            if p.n_agents() != s.agents {
+                return Err(err(format!(
+                    "{}: problem has {} agents but spec says {}",
+                    s.name,
+                    p.n_agents(),
+                    s.agents
+                )));
+            }
+            let inner_useful = phase_threads(self.threads, s.agents, ch * p.dim()) > 1;
+            prepared.push(Prepared { problem: Arc::clone(p), inner_useful });
+        }
+
+        let run_one = |i: usize, exec: Exec<'_>| -> RunRecord {
+            let s = &specs[i];
+            let mix = s.build_mix().expect("prevalidated");
+            let algo = s.build_algo().expect("prevalidated");
+            let comp = s.build_compressor().expect("prevalidated");
+            let mut engine = Engine::new(s.engine_config(), mix, Arc::clone(&prepared[i].problem));
+            engine.run_on(exec, algo, comp, s.rounds)
+        };
+
+        let mut results: Vec<Option<RunRecord>> = (0..specs.len()).map(|_| None).collect();
+        let pool = (self.threads > 1).then(|| WorkerPool::new(self.threads));
+        let small: Vec<usize> =
+            (0..specs.len()).filter(|&i| !prepared[i].inner_useful).collect();
+        // Large runs: one at a time on the calling thread, full inner
+        // budget (§Scheduling).
+        let inner_exec = match &pool {
+            Some(p) => Exec::pool(p),
+            None => Exec::seq(),
+        };
+        for i in 0..specs.len() {
+            if prepared[i].inner_useful {
+                results[i] = Some(run_one(i, inner_exec));
+            }
+        }
+        // Small runs: outer-sharded as whole-run tasks. Each index is
+        // claimed by exactly one worker (par_dynamic), so the per-slot
+        // writes below are never aliased; runs inside a pool worker use
+        // Exec::seq() (nested-budget rule).
+        match &pool {
+            Some(p) if small.len() > 1 => {
+                let res_ptr = SendPtr(results.as_mut_ptr());
+                let small_ref = &small;
+                par_dynamic(Exec::pool(p), small.len(), |q| {
+                    let i = small_ref[q];
+                    let rec = run_one(i, Exec::seq());
+                    // SAFETY: distinct q ⇒ distinct i (small holds unique
+                    // indices); the dispatch barrier orders these writes
+                    // before the caller reads them.
+                    unsafe {
+                        *res_ptr.0.add(i) = Some(rec);
+                    }
+                });
+            }
+            _ => {
+                for &i in &small {
+                    results[i] = Some(run_one(i, Exec::seq()));
+                }
+            }
+        }
+        let records: Vec<RunRecord> =
+            results.into_iter().map(|r| r.expect("every spec ran")).collect();
+
+        if let Some(dir) = &self.out {
+            std::fs::create_dir_all(dir)?;
+            for (s, rec) in specs.iter().zip(&records) {
+                rec.write_csv(dir, &s.name)?;
+            }
+            std::fs::write(
+                dir.join(format!("{grid_name}.json")),
+                grid_json(grid_name, self.threads, specs, &records),
+            )?;
+        }
+        Ok(records)
+    }
+}
+
+/// The unified per-grid JSON artifact: spec + full record per run.
+fn grid_json(grid_name: &str, threads: usize, specs: &[RunSpec], records: &[RunRecord]) -> String {
+    let mut out = String::from("{\"schema\":1,\"grid\":");
+    json::write_str(&mut out, grid_name);
+    out.push_str(&format!(",\"threads\":{threads},\"runs\":["));
+    for (i, (s, rec)) in specs.iter().zip(records).enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"name\":");
+        json::write_str(&mut out, &s.name);
+        out.push_str(",\"spec\":");
+        out.push_str(&s.spec_json());
+        out.push_str(",\"record\":");
+        out.push_str(&rec.to_json());
+        out.push('}');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments;
+
+    #[test]
+    fn grid_expands_cartesian_first_axis_outermost() {
+        let grid = Grid {
+            name: "t".into(),
+            base: RunSpec::paper_default(),
+            axes: vec![
+                ("alpha".into(), vec![toml_mini::Value::Float(0.1), toml_mini::Value::Float(0.9)]),
+                (
+                    "gamma".into(),
+                    vec![
+                        toml_mini::Value::Float(0.5),
+                        toml_mini::Value::Int(1),
+                        toml_mini::Value::Float(2.0),
+                    ],
+                ),
+            ],
+        };
+        let specs = grid.expand().unwrap();
+        assert_eq!(specs.len(), 6);
+        assert_eq!(specs[0].alpha, 0.1);
+        assert_eq!(specs[0].gamma, 0.5);
+        assert_eq!(specs[1].gamma, 1.0, "ints coerce on numeric axes");
+        assert_eq!(specs[3].alpha, 0.9, "first axis is outermost");
+        assert_eq!(specs[0].name, "t_alpha0.1_gamma0.5");
+        let mut names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 6, "cell names must be unique");
+    }
+
+    #[test]
+    fn grid_from_toml_parses_and_rejects() {
+        let src = r#"
+[grid]
+name = "sweep"
+rounds = 120
+compressor = "topk:10"
+mixing = "metropolis"
+
+[problem]
+kind = "quad"
+dim = 64
+seed = 7
+
+[axes]
+alpha = [0.1, 0.5]
+seed = [1, 2, 3]
+"#;
+        let g = Grid::from_toml(src).unwrap();
+        assert_eq!(g.name, "sweep");
+        assert_eq!(g.base.rounds, 120);
+        assert_eq!(g.base.mixing, MixingRule::MetropolisHastings);
+        assert!(matches!(g.base.problem, ProblemSpec::Quad { dim: 64, seed: 7 }));
+        let specs = g.expand().unwrap();
+        assert_eq!(specs.len(), 6);
+        // Axes expand in alphabetical key order: alpha outermost.
+        assert_eq!(specs[0].seed, 1);
+        assert_eq!(specs[2].seed, 3);
+        assert_eq!(specs[3].alpha, 0.5);
+
+        assert!(Grid::from_toml("bogus_key = 1").is_err(), "unknown keys fail loudly");
+        assert!(
+            Grid::from_toml("[problem]\nkind = \"wat\"").is_err(),
+            "unknown problem kind fails"
+        );
+        assert!(
+            Grid::from_toml("[axes]\nalpha = 0.1").is_err(),
+            "non-array axis fails"
+        );
+    }
+
+    #[test]
+    fn driver_validates_before_running() {
+        let mut bad = RunSpec::paper_default();
+        bad.rounds = 5;
+        bad.topology = "er:1.5".into();
+        assert!(Driver::new(1).run("t", &[bad]).is_err());
+        let mut bad = RunSpec::paper_default();
+        bad.rounds = 5;
+        bad.algo = "nope".into();
+        assert!(Driver::new(1).run("t", &[bad]).is_err());
+        let mut bad = RunSpec::paper_default();
+        bad.rounds = 5;
+        bad.compressor = "q9000".into();
+        assert!(Driver::new(1).run("t", &[bad]).is_err());
+    }
+
+    /// The acceptance pin: the fig7 25-cell (α, γ) sweep through the
+    /// sharded driver is bitwise-identical to serial execution — both the
+    /// driver at threads = 1 and a hand-rolled per-cell engine loop (the
+    /// pre-grid drivers' shape).
+    #[test]
+    fn sharded_grid_bitwise_equals_serial() {
+        let grid = experiments::fig7_grid(40);
+        let specs = grid.expand().unwrap();
+        assert_eq!(specs.len(), 25);
+
+        // Hand-rolled serial baseline: fresh engine per cell, in order.
+        let baseline: Vec<RunRecord> = specs
+            .iter()
+            .map(|s| {
+                let mut e = Engine::new(
+                    s.engine_config(),
+                    s.build_mix().unwrap(),
+                    s.problem.build(s.agents),
+                );
+                e.run(s.build_algo().unwrap(), s.build_compressor().unwrap(), s.rounds)
+            })
+            .collect();
+
+        let serial = Driver::new(1).run("fig7", &specs).unwrap();
+        let sharded = Driver::new(8).run("fig7", &specs).unwrap();
+        for ((a, b), c) in baseline.iter().zip(&serial).zip(&sharded) {
+            assert_eq!(a.series.len(), b.series.len());
+            assert_eq!(a.series.len(), c.series.len());
+            for ((ma, mb), mc) in a.series.iter().zip(&b.series).zip(&c.series) {
+                assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits(), "round {}", ma.round);
+                assert_eq!(ma.dist_opt.to_bits(), mc.dist_opt.to_bits(), "round {}", ma.round);
+                assert_eq!(ma.consensus.to_bits(), mc.consensus.to_bits());
+                assert_eq!(ma.comp_err.to_bits(), mc.comp_err.to_bits());
+                assert_eq!(ma.bits_per_agent, mc.bits_per_agent);
+            }
+        }
+    }
+
+    /// Mixed batches — small (outer-sharded) and large (inner-parallel)
+    /// runs in one grid — still reproduce serial results bitwise, and
+    /// problem dedupe shares one instance across equal specs.
+    #[test]
+    fn mixed_small_large_batch_matches_serial() {
+        let mut small = RunSpec::paper_default();
+        small.name = "small".into();
+        small.problem = ProblemSpec::Quad { dim: 64, seed: 7 };
+        small.rounds = 30;
+        small.record_every = 10;
+        // n·d = 8·6000 ≥ 32768 ⇒ classified large (inner-parallel).
+        let mut large = RunSpec::paper_default();
+        large.name = "large".into();
+        large.problem = ProblemSpec::Quad { dim: 6000, seed: 7 };
+        large.rounds = 10;
+        large.record_every = 5;
+        let mut small2 = small.clone();
+        small2.name = "small2".into();
+        small2.seed = 43;
+        let specs = vec![small, large, small2];
+        let serial = Driver::new(1).run("mix", &specs).unwrap();
+        let sharded = Driver::new(4).run("mix", &specs).unwrap();
+        for (a, b) in serial.iter().zip(&sharded) {
+            for (ma, mb) in a.series.iter().zip(&b.series) {
+                assert_eq!(ma.consensus.to_bits(), mb.consensus.to_bits(), "round {}", ma.round);
+                assert_eq!(ma.loss.to_bits(), mb.loss.to_bits());
+                assert_eq!(ma.bits_per_agent, mb.bits_per_agent);
+            }
+        }
+        // Different seeds on the same problem spec still share the data.
+        assert_eq!(serial[0].problem, serial[2].problem);
+        assert!(
+            serial[0].series.last().unwrap().consensus.to_bits()
+                != serial[2].series.last().unwrap().consensus.to_bits(),
+            "different engine seeds must differ"
+        );
+    }
+
+    #[test]
+    fn grid_artifacts_written() {
+        let dir = std::env::temp_dir().join(format!("lead_grid_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = RunSpec::paper_default();
+        spec.name = "cell_a".into();
+        spec.problem = ProblemSpec::Quad { dim: 32, seed: 3 };
+        spec.rounds = 10;
+        spec.record_every = 5;
+        let recs =
+            Driver::new(2).with_out(Some(dir.as_path())).run("artifact_grid", &[spec]).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(dir.join("cell_a.csv").is_file());
+        let js = std::fs::read_to_string(dir.join("artifact_grid.json")).unwrap();
+        let parsed = json::parse(&js).unwrap();
+        assert_eq!(parsed.get("grid").unwrap().as_str(), Some("artifact_grid"));
+        let runs = parsed.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].get("name").unwrap().as_str(), Some("cell_a"));
+        assert!(runs[0].get("spec").unwrap().get("algo").is_some());
+        assert!(runs[0].get("record").unwrap().get("series").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

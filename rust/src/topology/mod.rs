@@ -139,7 +139,13 @@ impl Topology {
         adj
     }
 
-    /// Parse from a CLI/config string, e.g. "ring", "full", "er:0.3".
+    /// Parse from a CLI/config string, e.g. "ring", "full", "er:0.3", or
+    /// "er:0.3:7" (explicit graph seed; otherwise `seed` is used).
+    ///
+    /// Invalid Erdős–Rényi probabilities are rejected *here* rather than
+    /// panicking later in [`Topology::build`]: `p` must be a finite
+    /// number in (0, 1] (p = 0 can never be connected; p > 1 or NaN is a
+    /// config typo).
     pub fn parse(s: &str, seed: u64) -> Option<Topology> {
         match s {
             "ring" => Some(Topology::Ring),
@@ -148,9 +154,29 @@ impl Topology {
             "path" | "line" => Some(Topology::Path),
             "grid" => Some(Topology::Grid2D),
             _ => {
-                let p = s.strip_prefix("er:")?.parse::<f64>().ok()?;
+                let rest = s.strip_prefix("er:")?;
+                let (p_str, seed) = match rest.split_once(':') {
+                    Some((p, s)) => (p, s.parse::<u64>().ok()?),
+                    None => (rest, seed),
+                };
+                let p = p_str.parse::<f64>().ok()?;
+                if !p.is_finite() || p <= 0.0 || p > 1.0 {
+                    return None;
+                }
                 Some(Topology::ErdosRenyi { p, seed })
             }
+        }
+    }
+}
+
+impl MixingRule {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<MixingRule> {
+        match s {
+            "uniform" | "uniform-neighbors" => Some(MixingRule::UniformNeighbors),
+            "metropolis" | "mh" | "metropolis-hastings" => Some(MixingRule::MetropolisHastings),
+            "lazy" | "lazy-metropolis" => Some(MixingRule::LazyMetropolis),
+            _ => None,
         }
     }
 }
@@ -393,5 +419,40 @@ mod tests {
         assert_eq!(Topology::parse("full", 0), Some(Topology::FullyConnected));
         assert!(matches!(Topology::parse("er:0.4", 7), Some(Topology::ErdosRenyi { .. })));
         assert_eq!(Topology::parse("bogus", 0), None);
+    }
+
+    /// Erdős–Rényi parsing rejects what `build` would otherwise panic on
+    /// (or sample forever): malformed, out-of-range, and degenerate p.
+    #[test]
+    fn parse_rejects_bad_erdos_renyi() {
+        assert_eq!(Topology::parse("", 0), None);
+        assert_eq!(Topology::parse("er:", 0), None);
+        assert_eq!(Topology::parse("er:1.5", 0), None, "p > 1 is a typo, not a graph");
+        assert_eq!(Topology::parse("er:0", 0), None, "p = 0 can never be connected");
+        assert_eq!(Topology::parse("er:-0.2", 0), None);
+        assert_eq!(Topology::parse("er:nan", 0), None);
+        assert_eq!(Topology::parse("er:abc", 0), None);
+        assert_eq!(Topology::parse("er:0.4:xyz", 0), None, "bad explicit seed");
+        // p = 1 is the complete graph — valid.
+        assert!(matches!(Topology::parse("er:1.0", 0), Some(Topology::ErdosRenyi { .. })));
+    }
+
+    /// The explicit-seed form pins the sampled graph regardless of the
+    /// fallback seed argument.
+    #[test]
+    fn parse_explicit_er_seed_overrides() {
+        let a = Topology::parse("er:0.4:3", 42).unwrap();
+        assert_eq!(a, Topology::ErdosRenyi { p: 0.4, seed: 3 });
+        let b = Topology::parse("er:0.4", 42).unwrap();
+        assert_eq!(b, Topology::ErdosRenyi { p: 0.4, seed: 42 });
+    }
+
+    #[test]
+    fn mixing_rule_parse() {
+        assert_eq!(MixingRule::parse("uniform"), Some(MixingRule::UniformNeighbors));
+        assert_eq!(MixingRule::parse("mh"), Some(MixingRule::MetropolisHastings));
+        assert_eq!(MixingRule::parse("metropolis"), Some(MixingRule::MetropolisHastings));
+        assert_eq!(MixingRule::parse("lazy"), Some(MixingRule::LazyMetropolis));
+        assert_eq!(MixingRule::parse("wat"), None);
     }
 }

@@ -1,6 +1,6 @@
 //! §Perf regression: the engine's round loop performs ZERO heap
-//! allocations in steady state, on both the dense (quantize) and sparse
-//! (top-k) paths.
+//! allocations in steady state, on the dense (quantize) and both sparse
+//! (top-k, rand-k) paths.
 //!
 //! Methodology: a counting global allocator tallies every `alloc` /
 //! `realloc`. Two runs that differ only in round count must allocate the
@@ -62,7 +62,7 @@ fn allocs_for(rounds: usize, threads: usize, comp: Box<dyn Compressor>) -> usize
             ..Default::default()
         },
         mix,
-        Box::new(Quad::new(n, d, 7)),
+        std::sync::Arc::new(Quad::new(n, d, 7)),
     );
     let before = ALLOCS.load(Ordering::SeqCst);
     let rec = e.run(Box::new(Lead::paper_default()), Some(comp), rounds);
@@ -102,4 +102,15 @@ fn dense_quantize_path_is_zero_alloc_in_steady_state() {
 #[test]
 fn sparse_topk_path_is_zero_alloc_in_steady_state() {
     assert_zero_steady_state("sparse/top-k", || Box::new(TopK::new(9)));
+}
+
+/// Sparse path: rand-k. Its `compress_into` reuses the `CodecScratch`
+/// index buffer for the Floyd sample (`Rng::sample_indices_into`) and
+/// sorts indices in place instead of re-sorting the sparse pair list, so
+/// the zero-alloc guarantee covers all sparsifiers.
+#[test]
+fn sparse_randk_path_is_zero_alloc_in_steady_state() {
+    assert_zero_steady_state("sparse/rand-k", || {
+        Box::new(lead::compress::randk::RandK::new(9, true))
+    });
 }

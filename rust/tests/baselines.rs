@@ -17,7 +17,7 @@ fn run(algo: Box<dyn Algorithm>, compressed: bool, rounds: usize, eta: f64) -> l
     let mut e = Engine::new(
         EngineConfig { eta, record_every: 20, ..Default::default() },
         mix,
-        Box::new(p),
+        std::sync::Arc::new(p),
     );
     let comp: Option<Box<dyn lead::compress::Compressor>> = if compressed {
         Some(Box::new(QuantizeP::new(2, PNorm::Inf, 512)))

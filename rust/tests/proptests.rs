@@ -245,7 +245,7 @@ fn engine_seed_determinism() {
         let mut e = Engine::new(
             EngineConfig { seed, record_every: 10, ..Default::default() },
             mix,
-            Box::new(p),
+            std::sync::Arc::new(p),
         );
         e.run(
             Box::new(Lead::paper_default()),

@@ -171,7 +171,7 @@ fn pjrt_engine_run_converges() {
     let mut e = Engine::new(
         EngineConfig { record_every: 20, ..Default::default() },
         mix,
-        Box::new(pjrt),
+        std::sync::Arc::new(pjrt),
     );
     let rec = e.run(
         Box::new(Lead::paper_default()),
@@ -197,7 +197,7 @@ fn mlp_problem_trains() {
     let mut e = Engine::new(
         EngineConfig { eta: 0.05, batch_size: Some(64), record_every: 5, ..Default::default() },
         mix,
-        Box::new(p),
+        std::sync::Arc::new(p),
     );
     let rec = e.run(
         Box::new(Lead::paper_default()),

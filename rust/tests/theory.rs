@@ -15,7 +15,7 @@ use lead::topology::{spectral, MixingRule, Topology};
 fn engine(n: usize, d: usize, seed: u64, topo: Topology) -> Engine {
     let p = LinReg::synthetic(n, d, 0.1, seed);
     let mix = topo.build(n, MixingRule::UniformNeighbors);
-    Engine::new(EngineConfig { record_every: 10, ..Default::default() }, mix, Box::new(p))
+    Engine::new(EngineConfig { record_every: 10, ..Default::default() }, mix, std::sync::Arc::new(p))
 }
 
 /// Theorem 1 headline: linear convergence under compression, for several
@@ -219,7 +219,7 @@ fn theorem1_parameter_recipe_converges() {
     let mut e = Engine::new(
         EngineConfig { eta, record_every: 10, ..Default::default() },
         mix,
-        Box::new(p),
+        std::sync::Arc::new(p),
     );
     let rec = e.run(
         Box::new(Lead::new(LeadParams { gamma: gamma as f64, alpha: alpha as f64 })),
@@ -253,7 +253,7 @@ fn schedules() {
             ..Default::default()
         },
         mix,
-        Box::new(p),
+        std::sync::Arc::new(p),
     );
     let rec = e.run(Box::new(Lead::paper_default()), Some(Box::new(Identity)), 4000);
     assert!(rec.last().dist_opt < 1e-5, "diminishing: {}", rec.last().dist_opt);
@@ -267,7 +267,7 @@ fn lead_nids_equivalence_on_logreg() {
     let build = || {
         let p = LogReg::synthetic(4, 160, 10, 4, 1e-3, DataSplit::Heterogeneous, 41, true);
         let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
-        Engine::new(EngineConfig { record_every: 20, ..Default::default() }, mix, Box::new(p))
+        Engine::new(EngineConfig { record_every: 20, ..Default::default() }, mix, std::sync::Arc::new(p))
     };
     let rec_lead = build().run(
         Box::new(Lead::new(LeadParams { gamma: 1.0, alpha: 0.5 })),
