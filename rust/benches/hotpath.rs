@@ -19,6 +19,20 @@
 //! (`scheduler_modes_bitwise_identical` in the engine tests), so the A/B
 //! measures scheduling alone.
 //!
+//! Part 3 — sparse-own own-decode A/B (both runs on the persistent
+//! scheduler): `EagerDense`-wrapped top-k decodes every agent's own
+//! message to a dense d-vector each round (the pre-sparse-own engine
+//! behavior) vs the sparse-own apply path consuming the k published
+//! entries directly through `Inbox::own_view`. Trajectories are
+//! bitwise-identical (asserted here on a short config and pinned by
+//! `rust/tests/sparse_own.rs`), so the A/B isolates the own-decode cost:
+//! the decode itself drops from O(d) to O(k) per agent, but the apply
+//! kernel still sweeps all d coordinates, so the end-to-end win is a
+//! modest constant factor (one fewer O(n·d) fill+scatter pass and one
+//! fewer d-length stream per agent), NOT ~d/k. The result ships in
+//! `BENCH_hotpath.json` as the `sparse-own` config so `lead bench-diff`
+//! gates regressions on it.
+//!
 //! Run `cargo bench --bench hotpath` (full) or
 //! `cargo bench --bench hotpath -- --smoke` (one short config; wired
 //! into CI so regressions in the harness itself are caught early).
@@ -26,7 +40,7 @@
 use lead::algorithms::lead::Lead;
 use lead::compress::quantize::QuantizeP;
 use lead::compress::topk::TopK;
-use lead::compress::{CompressedMsg, Compressor, StripSparse};
+use lead::compress::{CompressedMsg, Compressor, EagerDense, StripSparse};
 use lead::coordinator::engine::{mix_msgs, Engine, EngineConfig, Scheduler};
 use lead::coordinator::metrics::PhaseTimes;
 use lead::problems::{linreg::LinReg, logreg::LogReg, quad::Quad, DataSplit};
@@ -249,11 +263,34 @@ fn write_json(results: &[AbResult], smoke: bool) {
     }
 }
 
+/// Bitwise guard for the sparse-own A/B: the lazy sparse-own run and the
+/// eager dense-own run must report identical final metrics (release-mode
+/// counterpart of the `rust/tests/sparse_own.rs` harness — a drift here
+/// means the A/B below is comparing different computations).
+fn assert_sparse_own_bitwise() {
+    let final_bits = |comp: Box<dyn Compressor>| {
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut e = Engine::new(
+            EngineConfig { eta: 0.05, threads: 2, record_every: 11, ..Default::default() },
+            mix,
+            std::sync::Arc::new(Quad::new(8, 200, 3)),
+        );
+        let rec = e.run(Box::new(Lead::paper_default()), Some(comp), 60);
+        (rec.last().dist_opt.to_bits(), rec.last().consensus.to_bits())
+    };
+    let lazy = final_bits(Box::new(TopK::new(20)));
+    let eager = final_bits(Box::new(EagerDense(TopK::new(20))));
+    assert_eq!(lazy, eager, "sparse-own apply drifted from the dense own-decode path");
+    println!("sparse-own bitwise guard: lazy == eager dense own decode");
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
         // CI smoke: one short config proving the A/B harness, the phase
-        // breakdown, and the JSON emission all work end to end.
+        // breakdown, the JSON emission, and the sparse-own bitwise guard
+        // all work end to end.
+        assert_sparse_own_bitwise();
         let r = bench_engine_ab("smoke quad d=2e3 q∞-2bit", 16, 2_000, 10, 4, &|| {
             Box::new(QuantizeP::paper_default())
         });
@@ -290,6 +327,48 @@ fn main() {
             "engine     d=1e5 dense {dense_rps:8.2} r/s vs sparse {sparse_rps:8.2} r/s  ({:4.2}x from the sparse view)",
             sparse_rps / dense_rps
         );
+    }
+    // Part 3: sparse-own own-decode A/B — eager dense own decode every
+    // round (pre-sparse-own behavior) vs the OwnView sparse apply path.
+    // Both runs use the persistent scheduler and sparse mixing, so the
+    // delta is exactly the per-round O(n·d) own-decode pass the sparse
+    // contract eliminates — expect a modest constant-factor produce/apply
+    // win (the kernels still sweep all d coordinates), not ~d/k.
+    {
+        assert_sparse_own_bitwise();
+        let (n, d, k, rounds, threads) = (32, 100_000, 1000, 15, 8);
+        let _ = timed_run(n, d, rounds.min(5), threads, Scheduler::Persistent, Box::new(TopK::new(k)));
+        let (eager_rps, eager_phases) = timed_run(
+            n,
+            d,
+            rounds,
+            threads,
+            Scheduler::Persistent,
+            Box::new(EagerDense(TopK::new(k))),
+        );
+        let (lazy_rps, lazy_phases) =
+            timed_run(n, d, rounds, threads, Scheduler::Persistent, Box::new(TopK::new(k)));
+        let r = AbResult {
+            name: "sparse-own d=1e5 top-k k=1000".to_string(),
+            n,
+            d,
+            threads,
+            rounds,
+            old_rps: eager_rps,
+            new_rps: lazy_rps,
+            old_phases: eager_phases,
+            new_phases: lazy_phases,
+        };
+        println!(
+            "sparse-own A/B d={d} k={k}: eager dense own {eager_rps:8.2} r/s  sparse own {lazy_rps:8.2} r/s  speedup {:5.2}x",
+            r.speedup()
+        );
+        println!(
+            "           eager phases (s): produce {:.3}  mix {:.3}  apply {:.3}   |   sparse phases (s): produce {:.3}  mix {:.3}  apply {:.3}",
+            r.old_phases.produce, r.old_phases.mix, r.old_phases.apply,
+            r.new_phases.produce, r.new_phases.mix, r.new_phases.apply
+        );
+        results.push(r);
     }
     write_json(&results, false);
 

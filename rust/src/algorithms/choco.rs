@@ -18,7 +18,7 @@
 //! which is exactly the engine's mixed channel), so per-neighbor mirrors
 //! never need to be materialized.
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, OwnView, SinkFn};
 use crate::linalg::Mat;
 
 pub struct ChocoSgd {
@@ -44,22 +44,26 @@ fn send_agent(eta: f64, x: &[f64], xh: &[f64], g: &[f64], half: &mut [f64], out0
     }
 }
 
-/// Per-agent CHOCO apply step over disjoint state rows.
+/// Per-agent CHOCO apply step over disjoint state rows. `q_own` is an
+/// [`OwnView`]: the public copy integrates the own compressed difference
+/// (`x̂ += q`), so sparse messages are applied from their k published
+/// entries — unpublished coordinates add exactly `+0.0`, matching the
+/// dense decode bit-for-bit (±0.0 rule on [`OwnView`]).
 #[inline]
 fn apply_agent(
     gamma: f64,
-    q_own: &[f64],
+    q_own: OwnView<'_>,
     q_mix: &[f64],
     x: &mut [f64],
     xh: &mut [f64],
     s: &mut [f64],
     half: &mut [f64],
 ) {
-    for t in 0..x.len() {
-        xh[t] += q_own[t]; // x̂_i ← x̂_i + q_i
+    q_own.for_each(x.len(), |t, q| {
+        xh[t] += q; // x̂_i ← x̂_i + q_i
         s[t] += q_mix[t]; // s_i ← s_i + Σ w_ij q_j
         x[t] = half[t] + gamma * (s[t] - xh[t]);
-    }
+    });
 }
 
 impl ChocoSgd {
@@ -79,7 +83,7 @@ impl Algorithm for ChocoSgd {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: true, reads_own: true }
+        AlgoSpec { channels: 1, compressed: true, own: OwnAccess::Sparse }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -127,7 +131,7 @@ impl Algorithm for ChocoSgd {
     ) {
         apply_agent(
             self.gamma,
-            self_dec[0],
+            OwnView::Dense(self_dec[0]),
             mixed[0],
             self.x.row_mut(agent),
             self.xhat.row_mut(agent),
@@ -144,7 +148,7 @@ impl Algorithm for ChocoSgd {
             &mut [&mut self.x, &mut self.xhat, &mut self.s, &mut self.xhalf],
             |i, rows| match rows {
                 [x, xh, s, half] => {
-                    apply_agent(gamma, inbox.own(i, 0), inbox.mix(i, 0), x, xh, s, half)
+                    apply_agent(gamma, inbox.own_view(i, 0), inbox.mix(i, 0), x, xh, s, half)
                 }
                 _ => unreachable!(),
             },

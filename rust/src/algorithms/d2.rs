@@ -9,7 +9,7 @@
 //! gradients — implemented independently in its history form so the
 //! Prop. 1 equivalence can be *tested* rather than assumed.
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, OwnView, SinkFn};
 use crate::linalg::Mat;
 
 pub struct D2 {
@@ -26,21 +26,25 @@ fn send_agent(eta: f64, x: &[f64], xp: &[f64], gp: &[f64], g: &[f64], out0: &mut
     }
 }
 
-/// Per-agent D² apply step: x⁺ = (z + Wz)/2, history shifts.
+/// Per-agent D² apply step: x⁺ = (z + Wz)/2, history shifts. `z_own` is
+/// an [`OwnView`] so the kernel has a sparse overload like the compressed
+/// family (D² broadcasts uncompressed, so the engine always serves it the
+/// dense arm — the sparse arm is pinned at the unit level by
+/// `rust/tests/sparse_own.rs`).
 #[inline]
 fn apply_agent(
     g: &[f64],
-    z_own: &[f64],
+    z_own: OwnView<'_>,
     z_mix: &[f64],
     x: &mut [f64],
     xp: &mut [f64],
     gp: &mut [f64],
 ) {
-    for t in 0..x.len() {
-        let xnew = 0.5 * (z_own[t] + z_mix[t]);
+    z_own.for_each(x.len(), |t, z| {
+        let xnew = 0.5 * (z + z_mix[t]);
         xp[t] = x[t];
         x[t] = xnew;
-    }
+    });
     gp.copy_from_slice(g);
 }
 
@@ -62,7 +66,7 @@ impl Algorithm for D2 {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: false, reads_own: true }
+        AlgoSpec { channels: 1, compressed: false, own: OwnAccess::Sparse }
     }
 
     fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
@@ -108,7 +112,7 @@ impl Algorithm for D2 {
     fn recv(&mut self, _ctx: &Ctx, agent: usize, g: &[f64], self_dec: &[&[f64]], mixed: &[&[f64]]) {
         apply_agent(
             g,
-            self_dec[0],
+            OwnView::Dense(self_dec[0]),
             mixed[0],
             self.x.row_mut(agent),
             self.x_prev.row_mut(agent),
@@ -122,7 +126,7 @@ impl Algorithm for D2 {
             exec,
             &mut [&mut self.x, &mut self.x_prev, &mut self.g_prev],
             |i, rows| match rows {
-                [x, xp, gp] => apply_agent(&g[i], inbox.own(i, 0), inbox.mix(i, 0), x, xp, gp),
+                [x, xp, gp] => apply_agent(&g[i], inbox.own_view(i, 0), inbox.mix(i, 0), x, xp, gp),
                 _ => unreachable!(),
             },
         );

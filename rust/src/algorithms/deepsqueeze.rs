@@ -13,7 +13,7 @@
 //! before the next compression — and it still compresses a full-magnitude
 //! model vector, so its compression error does not vanish (Fig. 1d).
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, OwnView, SinkFn};
 use crate::linalg::Mat;
 
 pub struct DeepSqueeze {
@@ -33,24 +33,27 @@ fn send_agent(eta: f64, x: &[f64], e: &[f64], g: &[f64], out0: &mut [f64]) {
     }
 }
 
-/// Per-agent DeepSqueeze apply step over disjoint state rows.
+/// Per-agent DeepSqueeze apply step over disjoint state rows. `c_own` is
+/// an [`OwnView`]: the error memory and gossip base both consume the own
+/// compressed model, so sparse messages are applied from their published
+/// entries (unpublished coordinates read exactly `+0.0` — ±0.0 rule).
 #[inline]
 fn apply_agent(
     gamma: f64,
     eta: f64,
     g: &[f64],
-    c_own: &[f64],
+    c_own: OwnView<'_>,
     c_mix: &[f64],
     x: &mut [f64],
     e: &mut [f64],
 ) {
-    for t in 0..x.len() {
+    c_own.for_each(x.len(), |t, c| {
         // Error feedback: e ← (v + e) − c (v + e is what we sent).
         let sent = x[t] - eta * g[t] + e[t];
-        e[t] = sent - c_own[t];
+        e[t] = sent - c;
         // Gossip on the compressed models.
-        x[t] = c_own[t] + gamma * (c_mix[t] - c_own[t]);
-    }
+        x[t] = c + gamma * (c_mix[t] - c);
+    });
 }
 
 impl DeepSqueeze {
@@ -69,7 +72,7 @@ impl Algorithm for DeepSqueeze {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: true, reads_own: true }
+        AlgoSpec { channels: 1, compressed: true, own: OwnAccess::Sparse }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -104,7 +107,7 @@ impl Algorithm for DeepSqueeze {
             self.gamma,
             ctx.eta,
             g,
-            self_dec[0],
+            OwnView::Dense(self_dec[0]),
             mixed[0],
             self.x.row_mut(agent),
             self.e.row_mut(agent),
@@ -115,7 +118,7 @@ impl Algorithm for DeepSqueeze {
         let gamma = self.gamma;
         let eta = ctx.eta;
         super::par_agents(exec, &mut [&mut self.x, &mut self.e], |i, rows| match rows {
-            [x, e] => apply_agent(gamma, eta, &g[i], inbox.own(i, 0), inbox.mix(i, 0), x, e),
+            [x, e] => apply_agent(gamma, eta, &g[i], inbox.own_view(i, 0), inbox.mix(i, 0), x, e),
             _ => unreachable!(),
         });
     }

@@ -9,7 +9,7 @@
 //! x* under data heterogeneity (paper §3.1) — our integration tests check
 //! precisely that bias, which LEAD/NIDS eliminate.
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, SinkFn};
 use crate::linalg::Mat;
 
 pub struct Dgd {
@@ -42,7 +42,7 @@ impl Algorithm for Dgd {
 
     fn spec(&self) -> AlgoSpec {
         // recv uses only the mixed channel, never its own decoded payload.
-        AlgoSpec { channels: 1, compressed: false, reads_own: false }
+        AlgoSpec { channels: 1, compressed: false, own: OwnAccess::None }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {

@@ -15,7 +15,7 @@
 //! start of the next round; we therefore *complete* y lazily in `send`
 //! using the fresh gradient before broadcasting.
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, SinkFn};
 use crate::linalg::Mat;
 
 pub struct DiGing {
@@ -76,7 +76,7 @@ impl Algorithm for DiGing {
 
     fn spec(&self) -> AlgoSpec {
         // recv uses only the mixed channels, never its own payloads.
-        AlgoSpec { channels: 2, compressed: false, reads_own: false }
+        AlgoSpec { channels: 2, compressed: false, own: OwnAccess::None }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {

@@ -10,7 +10,7 @@
 //! Another member of the primal–dual family LEAD recovers (Remark 3 /
 //! Prop. 1, via A = (I+W)/2, M = ηI in Yuan et al. Eq. 97).
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, OwnView, SinkFn};
 use crate::linalg::Mat;
 
 pub struct ExactDiffusion {
@@ -29,12 +29,16 @@ fn send_agent(eta: f64, x: &[f64], g: &[f64], psi: &mut [f64], out0: &mut [f64])
     }
 }
 
-/// Per-agent combine step: x = (φ + Wφ)/2.
+/// Per-agent combine step: x = (φ + Wφ)/2. `phi_own` is an [`OwnView`]
+/// so the kernel has a sparse overload like the compressed family
+/// (Exact Diffusion broadcasts uncompressed, so the engine always serves
+/// it the dense arm — the sparse arm is pinned at the unit level by
+/// `rust/tests/sparse_own.rs`).
 #[inline]
-fn apply_agent(phi_own: &[f64], phi_mix: &[f64], x: &mut [f64]) {
-    for t in 0..x.len() {
-        x[t] = 0.5 * (phi_own[t] + phi_mix[t]);
-    }
+fn apply_agent(phi_own: OwnView<'_>, phi_mix: &[f64], x: &mut [f64]) {
+    phi_own.for_each(x.len(), |t, phi| {
+        x[t] = 0.5 * (phi + phi_mix[t]);
+    });
 }
 
 impl ExactDiffusion {
@@ -55,7 +59,7 @@ impl Algorithm for ExactDiffusion {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: false, reads_own: true }
+        AlgoSpec { channels: 1, compressed: false, own: OwnAccess::Sparse }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -99,13 +103,13 @@ impl Algorithm for ExactDiffusion {
         self_dec: &[&[f64]],
         mixed: &[&[f64]],
     ) {
-        apply_agent(self_dec[0], mixed[0], self.x.row_mut(agent));
+        apply_agent(OwnView::Dense(self_dec[0]), mixed[0], self.x.row_mut(agent));
     }
 
     fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let _ = (ctx, g);
         super::par_agents(exec, &mut [&mut self.x], |i, rows| match rows {
-            [x] => apply_agent(inbox.own(i, 0), inbox.mix(i, 0), x),
+            [x] => apply_agent(inbox.own_view(i, 0), inbox.mix(i, 0), x),
             _ => unreachable!(),
         });
     }

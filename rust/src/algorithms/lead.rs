@@ -20,7 +20,7 @@
 //!   `x̄^{k+1} = x̄^k − η ḡ^k` exact (paper Eq. 3);
 //! * with C = 0 and γ = 1, the trajectory equals NIDS / D² (Prop. 1).
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, OwnView, SinkFn};
 use crate::linalg::Mat;
 
 /// LEAD hyper-parameters. The paper fixes `α = 0.5, γ = 1.0` for every
@@ -67,13 +67,20 @@ fn send_agent(eta: f64, x: &[f64], d: &[f64], h: &[f64], g: &[f64], y: &mut [f64
 /// parallel `recv_all` paths. The flat argument list mirrors the state
 /// rows handed out by `par_agents`; bundling them would just move the
 /// unpacking into both callers.
+///
+/// `q_own` is an [`OwnView`]: LEAD only ever consumes the own broadcast
+/// as `ŷ = h + q` (line 10), so a sparse top-k/rand-k message is applied
+/// straight from its k published entries — every unpublished coordinate
+/// contributes exactly `h + 0.0`, which is what the dense decode would
+/// feed too (±0.0 rule on [`OwnView`]) — and no O(d) own-decode pass is
+/// needed.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn apply_agent(
     params: LeadParams,
     eta: f64,
     g: &[f64],
-    q_own: &[f64],
+    q_own: OwnView<'_>,
     q_mix: &[f64],
     x: &mut [f64],
     dvar: &mut [f64],
@@ -82,8 +89,8 @@ fn apply_agent(
 ) {
     let LeadParams { gamma, alpha } = params;
     let c = gamma / (2.0 * eta);
-    for t in 0..x.len() {
-        let yhat = h[t] + q_own[t]; // ŷ = h + q
+    q_own.for_each(x.len(), |t, q| {
+        let yhat = h[t] + q; // ŷ = h + q
         let yhat_w = hw[t] + q_mix[t]; // ŷw = hw + (Wq)
         // Inexact dual ascent (line 16).
         dvar[t] += c * (yhat - yhat_w);
@@ -92,7 +99,7 @@ fn apply_agent(
         hw[t] += alpha * (yhat_w - hw[t]);
         // Primal update with the SAME stochastic gradient (line 17).
         x[t] -= eta * (g[t] + dvar[t]);
-    }
+    });
 }
 
 impl Lead {
@@ -130,7 +137,7 @@ impl Algorithm for Lead {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: true, reads_own: true }
+        AlgoSpec { channels: 1, compressed: true, own: OwnAccess::Sparse }
     }
 
     fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
@@ -196,7 +203,7 @@ impl Algorithm for Lead {
             self.params,
             ctx.eta,
             g,
-            self_dec[0],
+            OwnView::Dense(self_dec[0]),
             mixed[0],
             self.x.row_mut(agent),
             self.d.row_mut(agent),
@@ -213,7 +220,7 @@ impl Algorithm for Lead {
             &mut [&mut self.x, &mut self.d, &mut self.h, &mut self.hw],
             |i, rows| match rows {
                 [x, dvar, h, hw] => {
-                    let (own, mixed) = (inbox.own(i, 0), inbox.mix(i, 0));
+                    let (own, mixed) = (inbox.own_view(i, 0), inbox.mix(i, 0));
                     apply_agent(params, eta, &g[i], own, mixed, x, dvar, h, hw)
                 }
                 _ => unreachable!(),

@@ -21,7 +21,10 @@
 //! 2. the engine forms the W-weighted mixes (sparse-aware on channel 0);
 //! 3. [`Algorithm::recv_all`] applies the local updates — in parallel over
 //!    agents, which is safe because per-agent state is disjoint (see
-//!    [`par_agents`]).
+//!    [`par_agents`]). Kernels consume the agent's own decoded broadcast
+//!    through [`Inbox::own_view`], so sparse messages (top-k / rand-k)
+//!    are applied straight from their k published entries and no dense
+//!    own-decode pass runs in the steady state ([`OwnAccess`]).
 //!
 //! The sequential [`Algorithm::send`] / [`Algorithm::recv`] pair is kept
 //! for harnesses that probe invariants between single-agent steps; each
@@ -63,12 +66,99 @@ pub struct AlgoSpec {
     /// Non-compressed baselines (DGD, NIDS, …) set this to false and are
     /// billed 32 bits/element.
     pub compressed: bool,
-    /// Whether the apply phase consults the agent's *own* decoded
-    /// channel-0 payload ([`Inbox::own`]). When false, the engine may
-    /// skip materializing the dense decoded vector of sparse messages
-    /// entirely (§Perf) — so this MUST be true for any algorithm whose
-    /// `recv`/`recv_all` reads `inbox.own(i, 0)`.
-    pub reads_own: bool,
+    /// How the apply phase consumes the agent's *own* decoded channel-0
+    /// broadcast — see [`OwnAccess`]. Declaring [`OwnAccess::Sparse`] is
+    /// what lets the engine skip the O(n·d) own-decode pass in the top-k
+    /// steady state (§Perf in `coordinator::engine`).
+    pub own: OwnAccess,
+}
+
+/// How an algorithm's apply phase consumes the agent's *own* decoded
+/// channel-0 payload. This replaces the old boolean `reads_own`
+/// dense-materialization contract: the engine uses it to decide whether
+/// sparse messages (top-k / rand-k) must be decoded to a dense d-vector
+/// before [`Algorithm::recv_all`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OwnAccess {
+    /// `recv`/`recv_all` never read the own decoded payload (DGD,
+    /// DIGing). The engine skips the dense decode of sparse messages
+    /// entirely.
+    None,
+    /// The apply kernels accept [`OwnView::Sparse`]: sparse messages are
+    /// consumed straight from their k published `(index, value)` entries
+    /// and the engine never materializes the dense decoded vector on the
+    /// hot path. Kernels must go through [`Inbox::own_view`] (not
+    /// [`Inbox::own`], which hard-asserts on a stale dense view).
+    Sparse,
+    /// The apply path requires a fully materialized dense vector
+    /// ([`Inbox::own`]); the engine eagerly decodes every sparse message
+    /// inside the produce phase — an O(d)-per-agent pass. Only declare
+    /// this when the kernels cannot be expressed over [`OwnView`]; the
+    /// trait-default `recv_all` (which funnels dense slices into `recv`)
+    /// also requires it.
+    Dense,
+}
+
+/// A borrowed view of one agent's own decoded channel-0 message, handed
+/// to the apply kernels by [`Inbox::own_view`].
+///
+/// # The ±0.0 bit-exactness rule
+///
+/// The `Sparse` arm carries the codec's published `(index, value)`
+/// entries (ascending, unique indices) — **all** selected entries,
+/// ±0.0-valued ones included (see `Compressor::compress_into`). The dense
+/// decode of such a message is `fill(0.0)` + scatter, so coordinate `t`
+/// decodes to the published value verbatim, or to exactly `+0.0` when
+/// unpublished. [`OwnView::for_each`] feeds kernels precisely those
+/// values, which makes a kernel driven through it bitwise-identical to
+/// the same kernel reading the materialized dense vector — not merely
+/// numerically close. The differential harness in
+/// `rust/tests/sparse_own.rs` pins this end to end.
+#[derive(Clone, Copy)]
+pub enum OwnView<'a> {
+    /// Fully materialized decoded vector (dense codecs, uncompressed
+    /// payloads, eagerly decoded messages, and the sequential `recv`
+    /// harness path).
+    Dense(&'a [f64]),
+    /// The k published `(index, value)` entries of a sparse message whose
+    /// dense vector was never materialized; every unlisted coordinate
+    /// decodes to exactly `+0.0`.
+    Sparse(&'a [(u32, f64)]),
+}
+
+impl OwnView<'_> {
+    /// Drive `body(t, q_t)` for every coordinate `t in 0..d`, where `q_t`
+    /// is the decoded own value at `t` (±0.0 rule above). This is the
+    /// single definition both arms share: per-agent apply kernels put
+    /// their per-coordinate update in `body` once, and the sparse arm is
+    /// then bitwise-equal to the dense arm by construction — the only
+    /// difference is an O(k) cursor walk instead of an O(d) memory
+    /// stream.
+    #[inline]
+    pub fn for_each(&self, d: usize, mut body: impl FnMut(usize, f64)) {
+        match *self {
+            OwnView::Dense(vals) => {
+                debug_assert_eq!(vals.len(), d, "own view length mismatch");
+                for (t, &q) in vals.iter().enumerate() {
+                    body(t, q);
+                }
+            }
+            OwnView::Sparse(entries) => {
+                let mut it = entries.iter();
+                let mut cur = it.next();
+                for t in 0..d {
+                    let q = match cur {
+                        Some(&(i, v)) if i as usize == t => {
+                            cur = it.next();
+                            v
+                        }
+                        _ => 0.0,
+                    };
+                    body(t, q);
+                }
+            }
+        }
+    }
 }
 
 /// Per-round immutable context handed to the algorithm.
@@ -105,8 +195,9 @@ impl<'a> Inbox<'a> {
     }
 
     /// Engine view: decoded channel-0 messages spliced in front of the
-    /// raw payloads. Messages must have a valid dense view whenever the
-    /// algorithm's spec sets [`AlgoSpec::reads_own`] (the engine
+    /// raw payloads. Messages may carry only a sparse view
+    /// (`dense_stale`); a valid dense vector is guaranteed only when the
+    /// algorithm's spec declares [`OwnAccess::Dense`] (the engine then
     /// materializes it inside the produce phase).
     pub fn with_decoded0(
         payload: &'a [Vec<Vec<f64>>],
@@ -116,24 +207,62 @@ impl<'a> Inbox<'a> {
         Inbox { payload, mixed, decoded0: Some(msgs) }
     }
 
-    /// Agent i's own decoded channel-c payload.
+    /// Agent i's own decoded channel-c payload as a *dense* slice.
+    ///
+    /// Prefer [`Inbox::own_view`] in apply kernels — it is what licenses
+    /// the engine to skip the O(d) own-decode of sparse messages. This
+    /// accessor exists for harnesses and for algorithms that declared
+    /// [`OwnAccess::Dense`].
     #[inline]
     pub fn own(&self, agent: usize, channel: usize) -> &'a [f64] {
         match self.decoded0 {
             Some(msgs) if channel == 0 => {
                 let m = &msgs[agent];
                 // Hard assert (one predictable branch per agent per round):
-                // a mis-declared `reads_own: false` would otherwise return
-                // a stale previous-round vector and silently corrupt the
-                // trajectory in release builds.
+                // under the sparse-own contract a mis-declared spec —
+                // `OwnAccess::None`, or `OwnAccess::Sparse` with a kernel
+                // that still calls the dense accessor — would otherwise
+                // return a stale previous-round vector and silently
+                // corrupt the trajectory in release builds.
                 assert!(
                     !m.dense_stale,
-                    "Inbox::own on a stale dense view — the algorithm must set \
-                     AlgoSpec::reads_own so the engine materializes it"
+                    "Inbox::own on a stale dense view — either declare \
+                     AlgoSpec::own = OwnAccess::Dense so the engine materializes it, \
+                     or consume the message through Inbox::own_view"
                 );
                 &m.values
             }
             _ => &self.payload[agent][channel],
+        }
+    }
+
+    /// Agent i's own decoded channel-c payload as an [`OwnView`] — the
+    /// sparse-own hot path. Messages whose dense vector was never
+    /// materialized (`dense_stale`, sparse codecs under
+    /// [`OwnAccess::Sparse`]) are served straight from their published
+    /// `(index, value)` entries; everything else (dense codecs,
+    /// uncompressed channels, eagerly decoded messages) comes back as a
+    /// dense slice. Consuming either arm through [`OwnView::for_each`]
+    /// yields bitwise-identical kernels (±0.0 rule on [`OwnView`]).
+    #[inline]
+    pub fn own_view(&self, agent: usize, channel: usize) -> OwnView<'a> {
+        match self.decoded0 {
+            Some(msgs) if channel == 0 => {
+                let m = &msgs[agent];
+                if m.dense_stale {
+                    // Contract on `Compressor::compress_into`: a codec
+                    // that defers the dense fill MUST publish the sparse
+                    // view — without it the message is unreadable.
+                    OwnView::Sparse(
+                        m.sparse
+                            .as_deref()
+                            .expect("stale dense view without a sparse view (codec bug)"),
+                    )
+                } else {
+                    OwnView::Dense(&m.values)
+                }
+            }
+            _ => OwnView::Dense(&self.payload[agent][channel]),
         }
     }
 
@@ -226,9 +355,12 @@ pub trait Algorithm: Send + Sync {
 
     /// Apply the received communication for ALL agents. Implementations
     /// override this with a [`par_agents`]-based version that updates
-    /// agents across `exec`'s workers; the default falls back to the
-    /// sequential per-agent [`recv`] (and, unlike the overrides, is not
-    /// allocation-free).
+    /// agents across `exec`'s workers and reads the own payload through
+    /// [`Inbox::own_view`]; the default falls back to the sequential
+    /// per-agent [`recv`] over *dense* slices (and, unlike the overrides,
+    /// is not allocation-free) — an algorithm relying on it must declare
+    /// [`OwnAccess::Dense`] (or [`OwnAccess::None`]), never
+    /// [`OwnAccess::Sparse`].
     ///
     /// Contract: the result must be bitwise-identical to calling `recv`
     /// for agents `0..n` in order (per-agent updates touch disjoint state

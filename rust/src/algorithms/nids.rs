@@ -10,7 +10,7 @@
 //! Cor. 3) — an equality our integration tests verify trajectory-for-
 //! trajectory against both [`super::lead::Lead`] and [`super::d2::D2`].
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, OwnView, SinkFn};
 use crate::linalg::Mat;
 
 pub struct Nids {
@@ -26,15 +26,19 @@ fn send_agent(eta: f64, x: &[f64], d: &[f64], g: &[f64], out0: &mut [f64]) {
     crate::linalg::axpy(-eta, d, out0);
 }
 
-/// Per-agent NIDS apply step over disjoint state rows.
+/// Per-agent NIDS apply step over disjoint state rows. `y_own` is an
+/// [`OwnView`] so the kernel has a sparse overload like the compressed
+/// family (NIDS itself broadcasts uncompressed, so the engine always
+/// serves it the dense arm — the sparse arm is pinned at the unit level
+/// by `rust/tests/sparse_own.rs`).
 #[inline]
-fn apply_agent(eta: f64, g: &[f64], y_own: &[f64], y_mix: &[f64], x: &mut [f64], d: &mut [f64]) {
+fn apply_agent(eta: f64, g: &[f64], y_own: OwnView<'_>, y_mix: &[f64], x: &mut [f64], d: &mut [f64]) {
     // (I−W) y = y_i − (Wy)_i = self − mixed.
     let c = 1.0 / (2.0 * eta);
-    for t in 0..x.len() {
-        d[t] += c * (y_own[t] - y_mix[t]);
+    y_own.for_each(x.len(), |t, y| {
+        d[t] += c * (y - y_mix[t]);
         x[t] -= eta * (g[t] + d[t]);
-    }
+    });
 }
 
 impl Nids {
@@ -59,7 +63,7 @@ impl Algorithm for Nids {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: false, reads_own: true }
+        AlgoSpec { channels: 1, compressed: false, own: OwnAccess::Sparse }
     }
 
     fn init(&mut self, ctx: &Ctx, x0: &[Vec<f64>], g0: &[Vec<f64>]) {
@@ -98,7 +102,7 @@ impl Algorithm for Nids {
         apply_agent(
             ctx.eta,
             g,
-            self_dec[0],
+            OwnView::Dense(self_dec[0]),
             mixed[0],
             self.x.row_mut(agent),
             self.d.row_mut(agent),
@@ -108,7 +112,7 @@ impl Algorithm for Nids {
     fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let eta = ctx.eta;
         super::par_agents(exec, &mut [&mut self.x, &mut self.d], |i, rows| match rows {
-            [x, d] => apply_agent(eta, &g[i], inbox.own(i, 0), inbox.mix(i, 0), x, d),
+            [x, d] => apply_agent(eta, &g[i], inbox.own_view(i, 0), inbox.mix(i, 0), x, d),
             _ => unreachable!(),
         });
     }

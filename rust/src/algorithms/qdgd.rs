@@ -12,7 +12,7 @@
 //! this is the Fig. 1d contrast with LEAD, and why QDGD needs a small
 //! effective stepsize to converge at all (§2).
 
-use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, SinkFn};
+use super::{AlgoSpec, Algorithm, Ctx, Exec, GradFn, Inbox, OwnAccess, OwnView, SinkFn};
 use crate::linalg::Mat;
 
 pub struct Qdgd {
@@ -23,21 +23,23 @@ pub struct Qdgd {
 
 /// Per-agent QDGD apply step. `wii` is the agent's self-weight: mixed
 /// includes w_ii·Q(x_i) but QDGD uses the *exact* own model, so the own
-/// term is swapped out: m = mixed + w_ii (x_i − Q(x_i)).
+/// term is swapped out: m = mixed + w_ii (x_i − Q(x_i)). `q_own` is an
+/// [`OwnView`]; a sparse Q(x_i) is consumed from its published entries
+/// (unpublished coordinates subtract exactly `+0.0` — ±0.0 rule).
 #[inline]
 fn apply_agent(
     gamma: f64,
     eta: f64,
     wii: f64,
     g: &[f64],
-    q_own: &[f64],
+    q_own: OwnView<'_>,
     q_mix: &[f64],
     x: &mut [f64],
 ) {
-    for t in 0..x.len() {
-        let m = q_mix[t] + wii * (x[t] - q_own[t]);
+    q_own.for_each(x.len(), |t, q| {
+        let m = q_mix[t] + wii * (x[t] - q);
         x[t] += gamma * (m - x[t]) - gamma * eta * g[t];
-    }
+    });
 }
 
 impl Qdgd {
@@ -52,7 +54,7 @@ impl Algorithm for Qdgd {
     }
 
     fn spec(&self) -> AlgoSpec {
-        AlgoSpec { channels: 1, compressed: true, reads_own: true }
+        AlgoSpec { channels: 1, compressed: true, own: OwnAccess::Sparse }
     }
 
     fn init(&mut self, _ctx: &Ctx, x0: &[Vec<f64>], _g0: &[Vec<f64>]) {
@@ -87,7 +89,7 @@ impl Algorithm for Qdgd {
             ctx.eta,
             ctx.mix.self_weight(agent),
             g,
-            self_dec[0],
+            OwnView::Dense(self_dec[0]),
             mixed[0],
             self.x.row_mut(agent),
         );
@@ -103,7 +105,7 @@ impl Algorithm for Qdgd {
                 eta,
                 mix.self_weight(i),
                 &g[i],
-                inbox.own(i, 0),
+                inbox.own_view(i, 0),
                 inbox.mix(i, 0),
                 x,
             ),

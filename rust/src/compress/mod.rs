@@ -26,6 +26,13 @@
 //! are −0.0, which a +0.0 start rules out. Dense codecs (quantizers,
 //! identity) leave `sparse` as `None` and mixing falls back to `axpy` over
 //! `values`.
+//!
+//! The sparse view has a second consumer besides mixing: the engine's
+//! apply phase serves each agent's *own* message to the algorithm as a
+//! `crate::algorithms::OwnView`, which for a stale sparse message is the
+//! `(index, value)` list itself — so in the top-k/rand-k steady state the
+//! dense vector is never rebuilt at all ([`CompressedMsg::ensure_dense`]
+//! only runs on observed rounds, for the compression-error metric).
 
 pub mod identity;
 pub mod quantize;
@@ -78,10 +85,19 @@ impl CompressedMsg {
     /// encoding bit-for-bit because `compress_into` records *every*
     /// selected entry (including ±0.0 values): `fill(0.0)` + scatter is
     /// exactly the eager clear + per-entry write.
+    ///
+    /// Under the sparse-own contract the engine's steady-state round loop
+    /// never triggers this rebuild (apply kernels consume
+    /// `Inbox::own_view` directly); the only remaining caller is the
+    /// observed-round compression-error pass. Debug builds count actual
+    /// rebuilds in [`CompressedMsg::dense_decode_count`] so tests can pin
+    /// that.
     pub fn ensure_dense(&mut self) {
         if !self.dense_stale {
             return;
         }
+        #[cfg(debug_assertions)]
+        DENSE_DECODES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.values.fill(0.0);
         if let Some(sp) = &self.sparse {
             for &(i, v) in sp {
@@ -90,7 +106,22 @@ impl CompressedMsg {
         }
         self.dense_stale = false;
     }
+
+    /// Debug-only instrumentation: process-wide count of
+    /// [`CompressedMsg::ensure_dense`] calls that actually rebuilt a stale
+    /// dense vector (no-op calls are not counted). Used by
+    /// `rust/tests/alloc_steady_state.rs` to prove the sparse-own steady
+    /// state performs no O(n·d) own-decode pass. Compiled out in release
+    /// builds.
+    #[cfg(debug_assertions)]
+    pub fn dense_decode_count() -> u64 {
+        DENSE_DECODES.load(std::sync::atomic::Ordering::Relaxed)
+    }
 }
+
+/// See [`CompressedMsg::dense_decode_count`].
+#[cfg(debug_assertions)]
+static DENSE_DECODES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 /// Reusable per-agent codec scratch (§Perf): buffers
 /// [`Compressor::compress_into`] implementations use to keep the engine's
@@ -175,6 +206,45 @@ impl<C: Compressor> Compressor for StripSparse<C> {
     fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
         self.0.compress(x, rng, out);
         out.sparse = None;
+    }
+
+    fn is_unbiased(&self) -> bool {
+        self.0.is_unbiased()
+    }
+
+    fn variance_constant(&self, d: usize) -> Option<f64> {
+        self.0.variance_constant(d)
+    }
+}
+
+/// Wrapper that delegates to the inner codec but eagerly materializes the
+/// dense decoded vector on the scratch-carrying hot path, while keeping
+/// the sparse view (so mixing stays sparse). This reproduces the
+/// pre-sparse-own engine behavior — one O(d) own-decode pass per agent
+/// per round — and is numerically a no-op: `ensure_dense` rebuilds the
+/// exact dense vector the eager path writes. Used by the sparse-own
+/// differential harness (`rust/tests/sparse_own.rs`) and the hotpath
+/// benchmark's own-decode A/B.
+pub struct EagerDense<C: Compressor>(pub C);
+
+impl<C: Compressor> Compressor for EagerDense<C> {
+    fn name(&self) -> String {
+        format!("eager-{}", self.0.name())
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng, out: &mut CompressedMsg) {
+        self.0.compress(x, rng, out);
+    }
+
+    fn compress_into(
+        &self,
+        x: &[f64],
+        rng: &mut Rng,
+        out: &mut CompressedMsg,
+        scratch: &mut CodecScratch,
+    ) {
+        self.0.compress_into(x, rng, out, scratch);
+        out.ensure_dense();
     }
 
     fn is_unbiased(&self) -> bool {

@@ -18,7 +18,9 @@
 //!    accumulated by scatter-add in O(deg·k) instead of O(deg·d) — see
 //!    [`mix_msgs`] for the bitwise-equality argument;
 //! 3. **apply** — [`Algorithm::recv_all`]: per-agent state is disjoint
-//!    row-major rows, so agents update independently.
+//!    row-major rows, so agents update independently; own messages are
+//!    consumed through the sparse-aware `Inbox::own_view` (no dense
+//!    own-decode in the sparse steady state).
 //!
 //! [`Scheduler::SpawnPerPhase`] preserves the pre-pool behavior (scoped
 //! thread spawns per phase, sequential send, separate compress dispatch,
@@ -47,11 +49,19 @@
 //!   ([`Compressor::compress_into`] + [`CodecScratch`]);
 //! * [`Inbox`] is a zero-copy *view* over those buffers, rebuilt each
 //!   round by copying three references;
-//! * sparse codecs may skip the O(d) dense decode; the engine
-//!   materializes it inside the produce task only when the algorithm's
-//!   [`AlgoSpec::reads_own`] demands it, and otherwise only on observed
+//! * sparse codecs may skip the O(d) dense decode entirely: the apply
+//!   phase hands each algorithm its own message as an
+//!   [`OwnView`](crate::algorithms::OwnView) (the k published entries for
+//!   a stale sparse message), so in the top-k/rand-k steady state **no
+//!   O(n·d) own-decode pass survives**. The engine materializes the dense
+//!   vector inside the produce task only when the algorithm opts out with
+//!   [`OwnAccess::Dense`] (or for codecs without a sparse view, where the
+//!   eager `compress` already fills it), and otherwise only on observed
 //!   rounds (`record_every`) for the compression-error metric — which is
-//!   the error of the *observed* round, computed on demand;
+//!   the error of the *observed* round, computed on demand. Sparse-own
+//!   apply is pinned bitwise-identical to the dense decode path and to
+//!   the legacy scheduler by `rust/tests/sparse_own.rs` (the ±0.0
+//!   bit-exactness rule lives on `OwnView`);
 //! * pool dispatches and the [`par_agents`]-family row bundles are
 //!   allocation-free ([`crate::pool`] docs).
 //!
@@ -83,14 +93,14 @@
 //! serial execution are bitwise-identical (pinned by
 //! `scenarios::tests::sharded_grid_bitwise_equals_serial`).
 //!
-//! [`AlgoSpec::reads_own`]: crate::algorithms::AlgoSpec::reads_own
+//! [`OwnAccess::Dense`]: crate::algorithms::OwnAccess::Dense
 //! [`CodecScratch`]: crate::compress::CodecScratch
 //! [`Compressor::compress_into`]: crate::compress::Compressor::compress_into
 //! [`par_agents`]: crate::pool::par_agents
 
 use super::metrics::{PhaseTimes, RoundMetrics, RunRecord};
 use super::network::{LinkModel, TrafficStats};
-use crate::algorithms::{Algorithm, Ctx, Inbox};
+use crate::algorithms::{Algorithm, Ctx, Inbox, OwnAccess};
 use crate::compress::{CodecScratch, CompressedMsg, Compressor};
 use crate::pool::{par_chunks, Exec, SendPtr, WorkerPool};
 use crate::problems::Problem;
@@ -321,9 +331,13 @@ impl Engine {
         let mut series = Vec::new();
         let mut round_bits = vec![0u64; n];
         let mut phases = PhaseTimes::default();
-        // Whether the apply phase needs each agent's own decoded dense
-        // vector (§Perf: sparse messages skip the O(d) decode otherwise).
-        let need_own_dense = spec.reads_own;
+        // Whether the apply phase needs each agent's own decoded DENSE
+        // vector. Under the sparse-own contract this only triggers when
+        // the algorithm explicitly opts out of `OwnView` consumption
+        // (`OwnAccess::Dense`); codecs without a sparse fast path leave
+        // the dense vector valid anyway, and `OwnAccess::{None, Sparse}`
+        // algorithms never need the O(n·d) decode pass (§Perf).
+        let need_own_dense = spec.own == OwnAccess::Dense;
         let raw_bits_all = (spec.channels as u64) * (d as u64) * 32;
         let extra_channel_bits = (spec.channels as u64 - 1) * (d as u64) * 32;
 
@@ -659,7 +673,12 @@ mod tests {
     /// (quantize) and both sparse (top-k, rand-k; rand-k also exercises
     /// RNG-stream parity of its `compress_into` fast path) message paths.
     /// This is the old-vs-new scheduler A/B pinned as a correctness
-    /// property.
+    /// property. The sparse codecs drive the persistent scheduler through
+    /// the sparse-own apply path (`Inbox::own_view` sparse arm) while the
+    /// legacy loop decodes eagerly, so the A/B also pins sparse-own apply
+    /// against the dense decode; codec 3 (`EagerDense`-wrapped top-k)
+    /// covers the persistent scheduler's *materialized-dense* own path
+    /// against the same legacy reference.
     #[test]
     fn scheduler_modes_bitwise_identical() {
         let run = |scheduler: Scheduler, codec: usize, threads: usize| {
@@ -673,11 +692,12 @@ mod tests {
             let comp: Box<dyn crate::compress::Compressor> = match codec {
                 0 => Box::new(QuantizeP::new(2, crate::compress::quantize::PNorm::Inf, 64)),
                 1 => Box::new(TopK::new(10)),
-                _ => Box::new(crate::compress::randk::RandK::new(10, true)),
+                2 => Box::new(crate::compress::randk::RandK::new(10, true)),
+                _ => Box::new(crate::compress::EagerDense(TopK::new(10))),
             };
             e.run(Box::new(Lead::paper_default()), Some(comp), 50)
         };
-        for codec in 0..3 {
+        for codec in 0..4 {
             for threads in [1usize, 3] {
                 let old = run(Scheduler::SpawnPerPhase, codec, threads);
                 let new = run(Scheduler::Persistent, codec, threads);

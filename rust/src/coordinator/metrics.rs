@@ -96,11 +96,22 @@ impl RunRecord {
     /// (least-squares slope of log dist_opt between the first round and the
     /// first round below `floor`).
     pub fn empirical_rho(&self, floor: f64) -> Option<f64> {
+        self.empirical_rho_of(|m| m.dist_opt, floor)
+    }
+
+    /// [`RunRecord::empirical_rho`] generalized to any recorded metric:
+    /// the per-round geometric contraction factor of `metric` fitted by
+    /// least squares on its log over the decay segment (observed points
+    /// with a finite value above `floor`). Used by the theory tests to
+    /// pin that e.g. LEAD's compression error decays geometrically
+    /// alongside the primal error.
+    pub fn empirical_rho_of(&self, metric: impl Fn(&RoundMetrics) -> f64, floor: f64) -> Option<f64> {
         let pts: Vec<(f64, f64)> = self
             .series
             .iter()
-            .filter(|m| m.dist_opt.is_finite() && m.dist_opt > floor)
-            .map(|m| (m.round as f64, m.dist_opt.ln()))
+            .map(|m| (m, metric(m)))
+            .filter(|(_, v)| v.is_finite() && *v > floor)
+            .map(|(m, v)| (m.round as f64, v.ln()))
             .collect();
         if pts.len() < 3 {
             return None;

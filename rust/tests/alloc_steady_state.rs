@@ -18,6 +18,7 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use lead::algorithms::lead::Lead;
 use lead::compress::quantize::{PNorm, QuantizeP};
@@ -28,6 +29,12 @@ use lead::problems::quad::Quad;
 use lead::topology::{MixingRule, Topology};
 
 static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+/// The allocation and decode counters are process-global, but the test
+/// runner executes the `#[test]` fns in this binary concurrently —
+/// serialize them so one test's differential window can never absorb
+/// another's allocations.
+static SERIAL: Mutex<()> = Mutex::new(());
 
 struct Counting;
 
@@ -49,10 +56,13 @@ unsafe impl GlobalAlloc for Counting {
 #[global_allocator]
 static GLOBAL: Counting = Counting;
 
-fn allocs_for(rounds: usize, threads: usize, comp: Box<dyn Compressor>) -> usize {
-    let n = 8;
+const N_AGENTS: usize = 8;
+
+/// Allocation count and (debug builds) dense-decode-rebuild count for one
+/// engine run of `rounds` rounds.
+fn counts_for(rounds: usize, threads: usize, comp: Box<dyn Compressor>) -> (usize, u64) {
     let d = 96;
-    let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+    let mix = Topology::Ring.build(N_AGENTS, MixingRule::UniformNeighbors);
     let mut e = Engine::new(
         EngineConfig {
             eta: 0.05,
@@ -62,22 +72,29 @@ fn allocs_for(rounds: usize, threads: usize, comp: Box<dyn Compressor>) -> usize
             ..Default::default()
         },
         mix,
-        std::sync::Arc::new(Quad::new(n, d, 7)),
+        std::sync::Arc::new(Quad::new(N_AGENTS, d, 7)),
     );
     let before = ALLOCS.load(Ordering::SeqCst);
+    #[cfg(debug_assertions)]
+    let decodes_before = lead::compress::CompressedMsg::dense_decode_count();
     let rec = e.run(Box::new(Lead::paper_default()), Some(comp), rounds);
     let total = ALLOCS.load(Ordering::SeqCst) - before;
+    #[cfg(debug_assertions)]
+    let decodes = lead::compress::CompressedMsg::dense_decode_count() - decodes_before;
+    #[cfg(not(debug_assertions))]
+    let decodes = 0u64;
     assert_eq!(rec.series.len(), 2, "only round 0 and the final round observed");
-    total
+    (total, decodes)
 }
 
 fn assert_zero_steady_state(name: &str, make: fn() -> Box<dyn Compressor>) {
+    let _serial = SERIAL.lock().unwrap();
     for threads in [1usize, 2] {
         // Throwaway run first so whole-process lazy init (thread-local
         // setup, allocator internals) cannot skew the differential.
-        let _ = allocs_for(3, threads, make());
-        let short = allocs_for(5, threads, make());
-        let long = allocs_for(45, threads, make());
+        let _ = counts_for(3, threads, make());
+        let (short, _) = counts_for(5, threads, make());
+        let (long, _) = counts_for(45, threads, make());
         assert_eq!(
             short, long,
             "{name} path allocates in steady state (threads={threads}): \
@@ -98,7 +115,8 @@ fn dense_quantize_path_is_zero_alloc_in_steady_state() {
 }
 
 /// Sparse path: top-k with the scratch-carrying `compress_into` fast path
-/// (index buffer reuse, lazy dense decode) plus sparse scatter mixing.
+/// (index buffer reuse, lazy dense decode) plus sparse scatter mixing and
+/// sparse-own apply.
 #[test]
 fn sparse_topk_path_is_zero_alloc_in_steady_state() {
     assert_zero_steady_state("sparse/top-k", || Box::new(TopK::new(9)));
@@ -113,4 +131,39 @@ fn sparse_randk_path_is_zero_alloc_in_steady_state() {
     assert_zero_steady_state("sparse/rand-k", || {
         Box::new(lead::compress::randk::RandK::new(9, true))
     });
+}
+
+/// Sparse-own contract (§Perf): the top-k/rand-k steady state never
+/// rebuilds a dense decoded vector — LEAD consumes its own message
+/// through `Inbox::own_view` straight from the sparse entries, so
+/// `ensure_dense` runs **only** for the observed-round compression-error
+/// pass. Here only the final round is observed, so a whole run rebuilds
+/// exactly `n` messages regardless of round count; the dense quantize
+/// path never has a stale message at all. Debug builds only (the counter
+/// is compiled out in release).
+#[cfg(debug_assertions)]
+#[test]
+fn sparse_own_steady_state_never_decodes_dense() {
+    let _serial = SERIAL.lock().unwrap();
+    let sparsifiers: [(&str, fn() -> Box<dyn Compressor>); 2] = [
+        ("top-k", || Box::new(TopK::new(9))),
+        ("rand-k", || Box::new(lead::compress::randk::RandK::new(9, true))),
+    ];
+    for (name, make) in sparsifiers {
+        for threads in [1usize, 2] {
+            let (_, short) = counts_for(5, threads, make());
+            let (_, long) = counts_for(45, threads, make());
+            assert_eq!(
+                short, long,
+                "{name} (threads={threads}): per-round dense own-decode detected"
+            );
+            assert_eq!(
+                long, N_AGENTS as u64,
+                "{name} (threads={threads}): expected exactly one decode per agent \
+                 (final observed round), got {long}"
+            );
+        }
+    }
+    let (_, dense_decodes) = counts_for(5, 1, Box::new(QuantizeP::new(2, PNorm::Inf, 512)));
+    assert_eq!(dense_decodes, 0, "dense codec messages are never stale");
 }

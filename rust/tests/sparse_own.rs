@@ -1,0 +1,246 @@
+//! Differential harness for the sparse-own apply path.
+//!
+//! The engine's apply phase serves each agent's *own* decoded channel-0
+//! message to the algorithm as an `OwnView` — the k published
+//! `(index, value)` entries when the codec skipped the dense fill, a
+//! dense slice otherwise. The contract (±0.0 rule on `OwnView`) says the
+//! two arms are **bitwise** interchangeable; these tests pin it from two
+//! directions:
+//!
+//! 1. end to end through the engine, for every compressed algorithm ×
+//!    {top-k, rand-k, ∞-norm quantize} × {ring, star, Erdős–Rényi} ×
+//!    thread counts: the sparse-own run must equal (a) the same run with
+//!    an eagerly materialized dense own decode (`EagerDense` — the
+//!    pre-sparse-own engine behavior), (b) the fully dense message path
+//!    (`StripSparse` — no sparse view at all), and (c) the pre-pool
+//!    `Scheduler::SpawnPerPhase` loop;
+//! 2. at the unit level through `Algorithm::recv_all` directly, covering
+//!    the uncompressed own-reading algorithms (NIDS, D², Exact Diffusion)
+//!    whose sparse kernel arms the engine never drives, and planting
+//!    ±0.0-valued selected entries to exercise the bit-exactness rule.
+
+use std::sync::Arc;
+
+use lead::algorithms::{
+    choco::ChocoSgd, d2::D2, deepsqueeze::DeepSqueeze, exact_diffusion::ExactDiffusion,
+    lead::Lead, nids::Nids, qdgd::Qdgd, Algorithm, Ctx, Exec, Inbox,
+};
+use lead::compress::quantize::{PNorm, QuantizeP};
+use lead::compress::randk::RandK;
+use lead::compress::topk::TopK;
+use lead::compress::{CodecScratch, CompressedMsg, Compressor, EagerDense, StripSparse};
+use lead::coordinator::engine::{Engine, EngineConfig, Scheduler};
+use lead::problems::linreg::LinReg;
+use lead::rng::Rng;
+use lead::topology::{MixingRule, Topology};
+
+#[derive(Clone, Copy)]
+enum Variant {
+    /// The codec as configured — sparsifiers take the sparse-own path.
+    Sparse,
+    /// `EagerDense`-wrapped: dense own decode materialized every round
+    /// (pre-sparse-own behavior), sparse mixing kept.
+    EagerOwn,
+    /// `StripSparse`-wrapped: no sparse view at all — dense mixing and
+    /// dense own consumption.
+    StripAll,
+}
+
+fn codec(name: &str, v: Variant) -> Box<dyn Compressor> {
+    match (name, v) {
+        ("topk", Variant::Sparse) => Box::new(TopK::new(5)),
+        ("topk", Variant::EagerOwn) => Box::new(EagerDense(TopK::new(5))),
+        ("topk", Variant::StripAll) => Box::new(StripSparse(TopK::new(5))),
+        ("randk", Variant::Sparse) => Box::new(RandK::new(5, true)),
+        ("randk", Variant::EagerOwn) => Box::new(EagerDense(RandK::new(5, true))),
+        ("randk", Variant::StripAll) => Box::new(StripSparse(RandK::new(5, true))),
+        ("qinf", Variant::Sparse) => Box::new(QuantizeP::new(2, PNorm::Inf, 16)),
+        ("qinf", Variant::EagerOwn) => Box::new(EagerDense(QuantizeP::new(2, PNorm::Inf, 16))),
+        ("qinf", Variant::StripAll) => Box::new(StripSparse(QuantizeP::new(2, PNorm::Inf, 16))),
+        _ => unreachable!("unknown codec {name}"),
+    }
+}
+
+fn algo(name: &str) -> Box<dyn Algorithm> {
+    match name {
+        "lead" => Box::new(Lead::paper_default()),
+        "choco" => Box::new(ChocoSgd::new(0.5)),
+        "qdgd" => Box::new(Qdgd::new(0.2)),
+        "deepsqueeze" => Box::new(DeepSqueeze::new(0.2)),
+        _ => unreachable!("unknown algorithm {name}"),
+    }
+}
+
+/// Engine-level differential: sparse-own apply is bitwise-identical to
+/// the dense decode path and to the pre-PR spawn-per-phase loop, across
+/// every compressed algorithm × codec × topology × thread count.
+#[test]
+fn sparse_own_apply_bitwise_equals_dense_and_legacy() {
+    let topologies = [
+        ("ring", Topology::Ring),
+        ("star", Topology::Star),
+        ("er", Topology::ErdosRenyi { p: 0.6, seed: 5 }),
+    ];
+    for (topo_name, topo) in &topologies {
+        for algo_name in ["lead", "choco", "qdgd", "deepsqueeze"] {
+            for codec_name in ["topk", "randk", "qinf"] {
+                for threads in [1usize, 3] {
+                    let run = |scheduler: Scheduler, v: Variant| {
+                        let n = 6;
+                        let p = LinReg::synthetic(n, 24, 0.1, 17);
+                        let mix = topo.build(n, MixingRule::MetropolisHastings);
+                        let mut e = Engine::new(
+                            EngineConfig {
+                                eta: 0.02,
+                                threads,
+                                record_every: 7,
+                                scheduler,
+                                ..Default::default()
+                            },
+                            mix,
+                            Arc::new(p),
+                        );
+                        e.run(algo(algo_name), Some(codec(codec_name, v)), 30)
+                    };
+                    let sparse = run(Scheduler::Persistent, Variant::Sparse);
+                    let references = [
+                        ("eager-own-dense", run(Scheduler::Persistent, Variant::EagerOwn)),
+                        ("strip-sparse", run(Scheduler::Persistent, Variant::StripAll)),
+                        ("legacy-scheduler", run(Scheduler::SpawnPerPhase, Variant::Sparse)),
+                    ];
+                    for (ref_name, reference) in &references {
+                        assert_eq!(sparse.series.len(), reference.series.len());
+                        for (a, b) in sparse.series.iter().zip(&reference.series) {
+                            let at = format!(
+                                "{topo_name}/{algo_name}/{codec_name} threads={threads} \
+                                 vs {ref_name}, round {}",
+                                a.round
+                            );
+                            assert_eq!(a.dist_opt.to_bits(), b.dist_opt.to_bits(), "dist {at}");
+                            assert_eq!(a.consensus.to_bits(), b.consensus.to_bits(), "cons {at}");
+                            assert_eq!(a.comp_err.to_bits(), b.comp_err.to_bits(), "cerr {at}");
+                            assert_eq!(a.bits_per_agent, b.bits_per_agent, "bits {at}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Unit-level differential through `Algorithm::recv_all` for every
+/// own-reading algorithm — including the uncompressed ones (NIDS, D²,
+/// Exact Diffusion) the engine never drives with sparse messages. Two
+/// copies of each algorithm receive the *same* round: one through stale
+/// sparse messages (`OwnView::Sparse` arm), one through the eagerly
+/// rebuilt dense vectors (`OwnView::Dense` arm). States must stay
+/// bitwise-identical. Payload coordinates 0/1 are forced to ±0.0 so the
+/// `k ≥ d` codec publishes explicitly zero-valued selected entries (the
+/// ±0.0 bit-exactness rule).
+#[test]
+fn own_view_sparse_arm_matches_dense_for_all_own_reading_algorithms() {
+    let n = 5usize;
+    let d = 37usize;
+    let builders: Vec<(&str, fn() -> Box<dyn Algorithm>)> = vec![
+        ("lead", || Box::new(Lead::paper_default())),
+        ("choco", || Box::new(ChocoSgd::new(0.5))),
+        ("qdgd", || Box::new(Qdgd::new(0.2))),
+        ("deepsqueeze", || Box::new(DeepSqueeze::new(0.2))),
+        ("nids", || Box::new(Nids::new())),
+        ("d2", || Box::new(D2::new())),
+        ("exact_diffusion", || Box::new(ExactDiffusion::new())),
+    ];
+    // k < d exercises the genuinely sparse regime; k ≥ d selects every
+    // coordinate, including the planted ±0.0 entries.
+    let codecs: Vec<Box<dyn Compressor>> =
+        vec![Box::new(TopK::new(7)), Box::new(TopK::new(d)), Box::new(RandK::new(7, true))];
+    let mix = Topology::Ring.build(n, MixingRule::MetropolisHastings);
+
+    for (name, build) in &builders {
+        for comp in &codecs {
+            let mut rng = Rng::new(0xA11CE ^ comp.name().len() as u64);
+            let mut a = build(); // sparse arm
+            let mut b = build(); // dense arm
+            let eta = 0.05;
+            let mut x0 = vec![vec![0.0f64; d]; n];
+            let mut g0 = vec![vec![0.0f64; d]; n];
+            for i in 0..n {
+                rng.fill_normal(&mut x0[i], 1.0);
+                rng.fill_normal(&mut g0[i], 1.0);
+            }
+            let ctx0 = Ctx { mix: &mix, round: 0, eta };
+            a.init(&ctx0, &x0, &g0);
+            b.init(&ctx0, &x0, &g0);
+            assert_eq!(a.spec().channels, 1, "{name}: harness assumes one channel");
+
+            let mut pay_a = vec![vec![vec![0.0f64; d]; 1]; n];
+            let mut pay_b = vec![vec![vec![0.0f64; d]; 1]; n];
+            let mut mixed = vec![vec![vec![0.0f64; d]; 1]; n];
+            let mut g = vec![vec![0.0f64; d]; n];
+            let mut scratch = CodecScratch::default();
+
+            for round in 1..=4usize {
+                let ctx = Ctx { mix: &mix, round, eta };
+                for gi in g.iter_mut() {
+                    rng.fill_normal(gi, 1.0);
+                }
+                for i in 0..n {
+                    a.send(&ctx, i, &g[i], &mut pay_a[i]);
+                    b.send(&ctx, i, &g[i], &mut pay_b[i]);
+                    // Identical state ⇒ identical payloads; drift here
+                    // means a previous round's apply already diverged.
+                    for (u, v) in pay_a[i][0].iter().zip(&pay_b[i][0]) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{name}/{}: send drift", comp.name());
+                    }
+                    // Plant exact and negative zeros (both copies see the
+                    // same wire, so the differential stays valid).
+                    pay_a[i][0][0] = 0.0;
+                    pay_a[i][0][1] = -0.0;
+                    pay_b[i][0][0] = 0.0;
+                    pay_b[i][0][1] = -0.0;
+                }
+                // One compression per agent; the sparse copy keeps the
+                // stale lazy message, the dense copy gets ensure_dense.
+                let msgs_sparse: Vec<CompressedMsg> = (0..n)
+                    .map(|i| {
+                        let mut m = CompressedMsg::with_dim(d);
+                        let mut r = rng.derive((round * n + i) as u64);
+                        comp.compress_into(&pay_a[i][0], &mut r, &mut m, &mut scratch);
+                        m
+                    })
+                    .collect();
+                let msgs_dense: Vec<CompressedMsg> = msgs_sparse
+                    .iter()
+                    .map(|m| {
+                        let mut m = m.clone();
+                        m.ensure_dense();
+                        m
+                    })
+                    .collect();
+                // One shared mix (from the dense decode) for both arms —
+                // this test isolates the *own* path; mixing equivalence
+                // has its own proptest.
+                for i in 0..n {
+                    mixed[i][0].fill(0.0);
+                    for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
+                        lead::linalg::axpy(mix.weight(i, j), &msgs_dense[j].values, &mut mixed[i][0]);
+                    }
+                }
+                let inbox_a = Inbox::with_decoded0(&pay_a, &mixed, &msgs_sparse);
+                a.recv_all(&ctx, &g, &inbox_a, Exec::seq());
+                let inbox_b = Inbox::with_decoded0(&pay_b, &mixed, &msgs_dense);
+                b.recv_all(&ctx, &g, &inbox_b, Exec::seq());
+                for i in 0..n {
+                    for (t, (u, v)) in a.x(i).iter().zip(b.x(i)).enumerate() {
+                        assert_eq!(
+                            u.to_bits(),
+                            v.to_bits(),
+                            "{name}/{}: round {round} agent {i} coord {t}: sparse {u} vs dense {v}",
+                            comp.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -178,6 +178,66 @@ fn global_average_view_invariant_under_compression() {
     });
 }
 
+/// The paper's compression-error dynamics (Fig. 1d / the consensus-error
+/// bound of Cor. 2, which needs no bounded-gradient assumption): LEAD's
+/// recorded `comp_err = ‖Y − H‖`-style residual must decay
+/// *geometrically alongside the primal error* — here under biased top-k
+/// sparsification on a heterogeneous logistic regression. This pins the
+/// convergence behavior the sparse-own apply path must preserve: a bug
+/// that silently perturbed the own-decode values would break the
+/// geometric comp_err decay long before it broke a loose final-accuracy
+/// check.
+#[test]
+fn lead_topk_comp_err_decays_geometrically_with_primal_error() {
+    use lead::compress::topk::TopK;
+    use lead::problems::{logreg::LogReg, DataSplit};
+    let p = LogReg::synthetic(4, 160, 10, 4, 1e-2, DataSplit::Heterogeneous, 5, true);
+    let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+    let mut e = Engine::new(
+        EngineConfig { eta: 0.1, record_every: 100, ..Default::default() },
+        mix,
+        std::sync::Arc::new(p),
+    );
+    // k = d/2 (d = d_feat · classes = 40) — the sparse-own steady state.
+    let rec = e.run(
+        Box::new(Lead::new(LeadParams { gamma: 0.5, alpha: 0.5 })),
+        Some(Box::new(TopK::new(20))),
+        8000,
+    );
+    // Primal error makes solid progress…
+    let first = rec.series.first().unwrap().dist_opt;
+    let last = rec.last();
+    assert!(
+        last.dist_opt < 1e-2 * first,
+        "primal error stalled under top-k: {first} -> {}",
+        last.dist_opt
+    );
+    // …and the compression error vanishes with it rather than plateauing
+    // (the QDGD/DeepSqueeze failure mode, Fig. 1d).
+    let early_comp = rec
+        .series
+        .iter()
+        .find(|m| m.round > 0)
+        .expect("need an observed round")
+        .comp_err;
+    assert!(early_comp > 0.0, "top-k at k < d must have nonzero early compression error");
+    assert!(
+        last.comp_err < 1e-2 * early_comp,
+        "comp_err plateaued: early {early_comp} vs final {}",
+        last.comp_err
+    );
+    // Geometric decay: a decisive log-linear fit, for both metrics.
+    let rho_comp = rec
+        .empirical_rho_of(|m| m.comp_err, last.comp_err.max(1e-14))
+        .expect("need a comp_err decay segment");
+    assert!(
+        rho_comp < 0.9995,
+        "comp_err decay not geometric: fitted per-round factor {rho_comp}"
+    );
+    let rho_primal = rec.empirical_rho(last.dist_opt.max(1e-14)).expect("need a decay segment");
+    assert!(rho_primal < 0.9995, "primal decay not geometric: ρ̂ = {rho_primal}");
+}
+
 /// DGD with the same stepsize stalls at an O(η) bias while LEAD converges —
 /// the paper's central heterogeneous-data comparison.
 #[test]
