@@ -33,6 +33,17 @@
 //! `BENCH_hotpath.json` as the `sparse-own` config so `lead bench-diff`
 //! gates regressions on it.
 //!
+//! Part 4 — simnet overhead A/B: the legacy uniform round-time formula
+//! vs the discrete-event network simulator (`lead::simnet`) on the same
+//! run. The degenerate homogeneous model isolates pure event-queue cost
+//! (n·deg binary-heap ops per round); a straggler+drop model adds
+//! retransmit events. Trajectories are bitwise-identical and the
+//! degenerate model reproduces the legacy `sim_time` exactly
+//! (`assert_simnet_timing_only`, pinned harder by
+//! `rust/tests/simnet.rs`), so the A/B measures the overlay alone; the
+//! configs ship in `BENCH_hotpath.json` (smoke: one short lossy config)
+//! so `lead bench-diff` gates the subsystem once baselines land.
+//!
 //! Run `cargo bench --bench hotpath` (full) or
 //! `cargo bench --bench hotpath -- --smoke` (one short config; wired
 //! into CI so regressions in the harness itself are caught early).
@@ -45,6 +56,7 @@ use lead::coordinator::engine::{mix_msgs, Engine, EngineConfig, Scheduler};
 use lead::coordinator::metrics::PhaseTimes;
 use lead::problems::{linreg::LinReg, logreg::LogReg, quad::Quad, DataSplit};
 use lead::rng::Rng;
+use lead::simnet::NetModel;
 use lead::topology::{MixingRule, Topology};
 
 /// Part 1: isolated mix phase, all agents, dense vs sparse representation.
@@ -110,6 +122,20 @@ fn timed_run(
     scheduler: Scheduler,
     comp: Box<dyn Compressor>,
 ) -> (f64, PhaseTimes) {
+    timed_run_net(n, d, rounds, threads, scheduler, comp, None)
+}
+
+/// [`timed_run`] with an optional simnet overlay (None ⇒ legacy uniform
+/// round-time formula).
+fn timed_run_net(
+    n: usize,
+    d: usize,
+    rounds: usize,
+    threads: usize,
+    scheduler: Scheduler,
+    comp: Box<dyn Compressor>,
+    net: Option<NetModel>,
+) -> (f64, PhaseTimes) {
     let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
     let mut e = Engine::new(
         EngineConfig {
@@ -117,6 +143,7 @@ fn timed_run(
             threads,
             record_every: usize::MAX / 2,
             scheduler,
+            net,
             ..Default::default()
         },
         mix,
@@ -263,6 +290,81 @@ fn write_json(results: &[AbResult], smoke: bool) {
     }
 }
 
+/// Part 4: simnet event-queue overhead vs the legacy uniform formula —
+/// same scheduler, same codec, the only delta is the per-round
+/// discrete-event simulation of all n·deg transfers. `old` = legacy
+/// formula, `new` = simnet, so speedup ≲ 1 and the config's entry in
+/// `BENCH_hotpath.json` gates the overlay's cost via `lead bench-diff`.
+fn bench_simnet_ab(
+    name: &str,
+    n: usize,
+    d: usize,
+    rounds: usize,
+    threads: usize,
+    link: &str,
+) -> AbResult {
+    let model = NetModel::parse(link).expect("bench link spec");
+    let comp = || -> Box<dyn Compressor> { Box::new(TopK::new((d / 100).max(1))) };
+    let _ = timed_run(n, d, rounds.min(5), threads, Scheduler::Persistent, comp());
+    let (legacy_rps, legacy_phases) =
+        timed_run(n, d, rounds, threads, Scheduler::Persistent, comp());
+    let (sim_rps, sim_phases) =
+        timed_run_net(n, d, rounds, threads, Scheduler::Persistent, comp(), Some(model));
+    let r = AbResult {
+        name: name.to_string(),
+        n,
+        d,
+        threads,
+        rounds,
+        old_rps: legacy_rps,
+        new_rps: sim_rps,
+        old_phases: legacy_phases,
+        new_phases: sim_phases,
+    };
+    println!(
+        "simnet A/B {name:<34} threads={threads}  legacy {legacy_rps:8.2} r/s  simnet {sim_rps:8.2} r/s  overhead {:5.3}x  ({link})",
+        r.speedup()
+    );
+    r
+}
+
+/// Bitwise guard for the simnet overlay: a heterogeneous lossy model
+/// must leave the trajectory untouched, and the degenerate homogeneous
+/// model must reproduce the legacy sim_time exactly (release-mode
+/// counterpart of `rust/tests/simnet.rs` — a drift here means the A/B
+/// above is comparing different computations).
+fn assert_simnet_timing_only() {
+    let run = |link: Option<&str>| {
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut e = Engine::new(
+            EngineConfig {
+                eta: 0.05,
+                threads: 2,
+                record_every: 11,
+                net: link.map(|s| NetModel::parse(s).expect("guard link spec")),
+                ..Default::default()
+            },
+            mix,
+            std::sync::Arc::new(Quad::new(8, 200, 3)),
+        );
+        let rec = e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(20))), 60);
+        let m = rec.last();
+        (m.dist_opt.to_bits(), m.consensus.to_bits(), m.sim_time.to_bits())
+    };
+    let legacy = run(None);
+    // EngineConfig's default LinkModel is 1e-4 s / 1e9 bps.
+    let degenerate = run(Some("uniform:1e-4:1e9"));
+    let lossy = run(Some("straggler:1e-4:1e9:0.25:10:drop=0.05"));
+    assert_eq!(
+        (legacy.0, legacy.1),
+        (degenerate.0, degenerate.1),
+        "simnet perturbed the trajectory"
+    );
+    assert_eq!((legacy.0, legacy.1), (lossy.0, lossy.1), "lossy simnet perturbed the trajectory");
+    assert_eq!(legacy.2, degenerate.2, "degenerate simnet drifted from the legacy sim_time");
+    println!("simnet bitwise guard: timing-only overlay, degenerate model == legacy formula");
+}
+
 /// Bitwise guard for the sparse-own A/B: the lazy sparse-own run and the
 /// eager dense-own run must report identical final metrics (release-mode
 /// counterpart of the `rust/tests/sparse_own.rs` harness — a drift here
@@ -288,13 +390,24 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
         // CI smoke: one short config proving the A/B harness, the phase
-        // breakdown, the JSON emission, and the sparse-own bitwise guard
-        // all work end to end.
+        // breakdown, the JSON emission, and both bitwise guards
+        // (sparse-own + simnet timing-only) all work end to end.
         assert_sparse_own_bitwise();
+        assert_simnet_timing_only();
         let r = bench_engine_ab("smoke quad d=2e3 q∞-2bit", 16, 2_000, 10, 4, &|| {
             Box::new(QuantizeP::paper_default())
         });
-        write_json(&[r], true);
+        // Event-queue overhead on a lossy model: exercises the heap +
+        // retransmit path under the bench-diff gate.
+        let s = bench_simnet_ab(
+            "smoke simnet straggler+drop d=2e3",
+            16,
+            2_000,
+            10,
+            4,
+            "straggler:1e-4:1e9:0.25:10:drop=0.01",
+        );
+        write_json(&[r, s], true);
         return;
     }
 
@@ -370,6 +483,27 @@ fn main() {
         );
         results.push(r);
     }
+    // Part 4: discrete-event network simulation overhead vs the legacy
+    // uniform formula — the degenerate homogeneous model isolates pure
+    // event-queue cost (n·deg heap ops/round), the lossy straggler model
+    // adds retransmit events.
+    assert_simnet_timing_only();
+    results.push(bench_simnet_ab(
+        "simnet uniform overhead n=32 d=1e4",
+        32,
+        10_000,
+        40,
+        8,
+        "uniform:1e-4:1e9",
+    ));
+    results.push(bench_simnet_ab(
+        "simnet straggler+drop n=32 d=1e4",
+        32,
+        10_000,
+        40,
+        8,
+        "straggler:1e-4:1e9:0.25:10:drop=0.01",
+    ));
     write_json(&results, false);
 
     for threads in [1usize, 4, 8] {

@@ -112,6 +112,7 @@ pub fn table4_dnn(heterogeneous: bool) -> Vec<AlgoSetup> {
 /// topology = "ring"
 /// agents = 8
 /// seed = 42
+/// # link = "straggler:1e-4:1e9:0.25:10"   # simnet timing overlay
 /// ```
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -125,6 +126,9 @@ pub struct RunConfig {
     pub agents: usize,
     pub seed: u64,
     pub batch_size: Option<usize>,
+    /// Simnet link-model spec (`crate::simnet::NetModel::parse`); empty
+    /// ⇒ the legacy uniform round-time formula.
+    pub link: String,
 }
 
 impl Default for RunConfig {
@@ -140,6 +144,7 @@ impl Default for RunConfig {
             agents: 8,
             seed: 42,
             batch_size: None,
+            link: String::new(),
         }
     }
 }
@@ -169,6 +174,7 @@ impl RunConfig {
             seed: self.seed,
             record_every: (self.rounds / 100).max(1),
             t0: None,
+            link: self.link.clone(),
         }
     }
 
@@ -188,6 +194,7 @@ impl RunConfig {
                 "agents" => c.agents = v.as_i64().ok_or("agents must be int")? as usize,
                 "seed" => c.seed = v.as_i64().ok_or("seed must be int")? as u64,
                 "batch_size" => c.batch_size = Some(v.as_i64().ok_or("batch_size: int")? as usize),
+                "link" => c.link = v.as_str().ok_or("link: string")?.into(),
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -217,12 +224,14 @@ mod tests {
     #[test]
     fn run_config_parses() {
         let c = RunConfig::from_toml(
-            "algo = \"choco\"\neta = 0.05\ngamma = 0.6\nrounds = 100\nbatch_size = 64\n",
+            "algo = \"choco\"\neta = 0.05\ngamma = 0.6\nrounds = 100\nbatch_size = 64\nlink = \"uniform:1e-4:1e9\"\n",
         )
         .unwrap();
         assert_eq!(c.algo, "choco");
         assert_eq!(c.eta, 0.05);
         assert_eq!(c.batch_size, Some(64));
+        assert_eq!(c.link, "uniform:1e-4:1e9");
+        assert!(c.to_spec().build_net().unwrap().is_some(), "link flows into the spec");
         assert!(RunConfig::from_toml("bogus_key = 1").is_err());
     }
 

@@ -69,6 +69,23 @@
 //! documented exception; every in-tree codec — quantizers, top-k, and
 //! rand-k — has a scratch-carrying `compress_into` fast path.
 //!
+//! # §Network timing — uniform formula vs. simnet overlay
+//!
+//! Round durations come from one of two interchangeable time models:
+//! the legacy uniform formula (`cfg.link`: `latency + max_bits /
+//! bandwidth` per synchronous round) or, when `cfg.net` is set, the
+//! discrete-event simulator [`crate::simnet`] (per-edge heterogeneous
+//! links, stragglers, jitter, drop-with-retransmit). Both are **timing
+//! overlays**: they observe the already-accounted `round_bits` and add
+//! seconds to [`TrafficStats`], and neither touches payloads or any RNG
+//! stream an algorithm consumes — so the trajectory series
+//! (dist/consensus/comp_err/bits) are bitwise-identical across time
+//! models, and the degenerate homogeneous simnet model reproduces the
+//! uniform formula's `sim_time` bit-for-bit (`rust/tests/simnet.rs`,
+//! plus a proptest over random topologies/links). The timer always runs
+//! sequentially on the coordinator thread, so its event order is
+//! independent of `exec`.
+//!
 //! # §Scheduling — outer vs. inner parallelism
 //!
 //! A single engine run parallelizes *inside* the round (per-agent tasks)
@@ -100,6 +117,7 @@
 
 use super::metrics::{PhaseTimes, RoundMetrics, RunRecord};
 use super::network::{LinkModel, TrafficStats};
+use crate::simnet::{NetModel, NetSummary, RoundTimer};
 use crate::algorithms::{Algorithm, Ctx, Inbox, OwnAccess};
 use crate::compress::{CodecScratch, CompressedMsg, Compressor};
 use crate::pool::{par_chunks, Exec, SendPtr, WorkerPool};
@@ -142,7 +160,15 @@ pub struct EngineConfig {
     pub record_every: usize,
     /// Worker threads for the produce, mix, and apply phases (1 = inline).
     pub threads: usize,
+    /// Uniform link model for the legacy round-time formula (used when
+    /// `net` is None).
     pub link: LinkModel,
+    /// Discrete-event network model (`crate::simnet`). `Some` replaces
+    /// the uniform formula with per-round event simulation of all
+    /// directed transfers — a timing-only overlay: trajectories are
+    /// bitwise-identical either way, and the degenerate homogeneous
+    /// model reproduces the legacy `sim_time` exactly (§Network timing).
+    pub net: Option<NetModel>,
     /// Execution backend (default: persistent pool).
     pub scheduler: Scheduler,
 }
@@ -157,6 +183,7 @@ impl Default for EngineConfig {
             record_every: 10,
             threads: 1,
             link: LinkModel::default(),
+            net: None,
             scheduler: Scheduler::default(),
         }
     }
@@ -328,6 +355,11 @@ impl Engine {
         // both fan out over agents (n·channels·d, allocated once).
         let mut mixed_all = vec![vec![vec![0.0f64; d]; spec.channels]; n];
         let mut traffic = TrafficStats::new(n);
+        // §Network timing: the optional discrete-event overlay. It only
+        // ever *observes* round_bits and produces durations from its own
+        // dedicated RNG stream, so enabling it cannot perturb any
+        // trajectory (pinned by rust/tests/simnet.rs).
+        let mut timer = self.cfg.net.map(|m| RoundTimer::new(&self.mix, m, self.cfg.seed));
         let mut series = Vec::new();
         let mut round_bits = vec![0u64; n];
         let mut phases = PhaseTimes::default();
@@ -342,7 +374,7 @@ impl Engine {
         let extra_channel_bits = (spec.channels as u64 - 1) * (d as u64) * 32;
 
         // Record the initial state as round 0.
-        series.push(self.observe(&*algo, 0, 0.0, &traffic));
+        series.push(self.observe(&*algo, 0, 0.0, &traffic, 0.0));
 
         for round in 1..=rounds {
             let eta = self.eta_at(round);
@@ -447,7 +479,12 @@ impl Engine {
                 algo.produce_all(&ctx, &grad, &mut g, &mut payload, &sink, exec);
                 phases.produce += t.elapsed().as_secs_f64();
             }
-            traffic.record_round(&self.mix, &self.cfg.link, &round_bits);
+            traffic.record_bits(&self.mix, &round_bits);
+            traffic.sim_time += match &mut timer {
+                Some(t) => t.round(&round_bits),
+                None => TrafficStats::uniform_round_time(&self.cfg.link, &round_bits),
+            };
+            traffic.rounds += 1;
 
             // (2) mix (parallel over agents; sparse-aware on channel 0).
             let mix_apply_exec =
@@ -506,11 +543,15 @@ impl Engine {
                 } else {
                     0.0
                 };
-                series.push(self.observe(&*algo, round, comp_err, &traffic));
+                let idle_max = timer.as_ref().map_or(0.0, |tm| tm.stats.max_idle());
+                series.push(self.observe(&*algo, round, comp_err, &traffic, idle_max));
                 phases.observe += t.elapsed().as_secs_f64();
             }
         }
 
+        let net = timer.as_ref().map(|t| {
+            NetSummary::from_stats(&self.cfg.net.expect("timer implies model"), &t.stats, t.n_links())
+        });
         RunRecord {
             algo: algo.name(),
             problem: self.problem.name(),
@@ -521,6 +562,7 @@ impl Engine {
             series,
             wall_secs: wall_start.elapsed().as_secs_f64(),
             phases,
+            net,
         }
     }
 
@@ -530,6 +572,7 @@ impl Engine {
         round: usize,
         comp_err: f64,
         traffic: &TrafficStats,
+        idle_max: f64,
     ) -> RoundMetrics {
         let n = self.mix.n;
         let d = self.problem.dim();
@@ -558,6 +601,7 @@ impl Engine {
             comp_err,
             bits_per_agent: traffic.mean_bits_per_agent(),
             sim_time: traffic.sim_time,
+            idle_max,
         }
     }
 }

@@ -1,6 +1,9 @@
-//! Run metrics: the quantities the paper plots, recorded per round.
+//! Run metrics: the quantities the paper plots, recorded per round, plus
+//! the time-axis queries (`time_to_tol`) and per-agent network summaries
+//! that the simnet overlay adds for time-to-accuracy studies.
 
 use crate::serialize::json;
+use crate::simnet::NetSummary;
 
 /// Metrics snapshot at one recorded round.
 #[derive(Clone, Debug)]
@@ -21,6 +24,11 @@ pub struct RoundMetrics {
     pub bits_per_agent: f64,
     /// Simulated communication time so far (network model), seconds.
     pub sim_time: f64,
+    /// Max over agents of cumulative barrier-wait (idle) seconds so far.
+    /// Always 0 under the legacy uniform time model; populated by the
+    /// simnet overlay (`crate::simnet` §Timing contract: extra
+    /// observability, never a trajectory change).
+    pub idle_max: f64,
 }
 
 /// Wall-clock totals per engine phase, accumulated over a run (§Perf —
@@ -75,6 +83,9 @@ pub struct RunRecord {
     pub wall_secs: f64,
     /// Per-phase wall-clock totals for this run.
     pub phases: PhaseTimes,
+    /// Network summary (per-agent idle/straggler stats, retransmits,
+    /// utilization) — `Some` iff the run used the simnet overlay.
+    pub net: Option<NetSummary>,
 }
 
 impl RunRecord {
@@ -90,6 +101,13 @@ impl RunRecord {
     /// Bits/agent spent when dist_opt first ≤ tol.
     pub fn bits_to_tol(&self, tol: f64) -> Option<f64> {
         self.series.iter().find(|m| m.dist_opt <= tol).map(|m| m.bits_per_agent)
+    }
+
+    /// Simulated seconds elapsed when dist_opt first ≤ tol — the
+    /// time-to-accuracy metric the `examples/time_to_accuracy.toml` grid
+    /// sweeps across link models. None if the tolerance is never reached.
+    pub fn time_to_tol(&self, tol: f64) -> Option<f64> {
+        self.series.iter().find(|m| m.dist_opt <= tol).map(|m| m.sim_time)
     }
 
     /// Empirical contraction factor ρ̂ fitted over the linear-decay segment
@@ -127,11 +145,19 @@ impl RunRecord {
 
     /// CSV with a header row (one line per recorded round).
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("round,dist_opt,consensus,loss,comp_err,bits_per_agent,sim_time\n");
+        let mut s =
+            String::from("round,dist_opt,consensus,loss,comp_err,bits_per_agent,sim_time,idle_max\n");
         for m in &self.series {
             s.push_str(&format!(
-                "{},{:e},{:e},{:e},{:e},{},{:e}\n",
-                m.round, m.dist_opt, m.consensus, m.loss, m.comp_err, m.bits_per_agent, m.sim_time
+                "{},{:e},{:e},{:e},{:e},{},{:e},{:e}\n",
+                m.round,
+                m.dist_opt,
+                m.consensus,
+                m.loss,
+                m.comp_err,
+                m.bits_per_agent,
+                m.sim_time,
+                m.idle_max
             ));
         }
         s
@@ -156,6 +182,13 @@ impl RunRecord {
         out.push(':');
         json::write_num(&mut out, self.wall_secs);
         out.push(',');
+        json::write_str(&mut out, "net");
+        out.push(':');
+        match &self.net {
+            Some(n) => out.push_str(&n.to_json()),
+            None => out.push_str("null"),
+        }
+        out.push(',');
         json::write_str(&mut out, "series");
         out.push_str(":[");
         for (i, m) in self.series.iter().enumerate() {
@@ -163,14 +196,15 @@ impl RunRecord {
                 out.push(',');
             }
             out.push_str(&format!(
-                "[{},{},{},{},{},{},{}]",
+                "[{},{},{},{},{},{},{},{}]",
                 m.round,
                 fin(m.dist_opt),
                 fin(m.consensus),
                 fin(m.loss),
                 fin(m.comp_err),
                 m.bits_per_agent,
-                fin(m.sim_time)
+                fin(m.sim_time),
+                fin(m.idle_max)
             ));
         }
         out.push_str("]}");
@@ -203,6 +237,7 @@ mod tests {
             compressor: "none".into(),
             wall_secs: 0.1,
             phases: PhaseTimes::default(),
+            net: None,
             series: dists
                 .iter()
                 .enumerate()
@@ -214,6 +249,7 @@ mod tests {
                     comp_err: 0.0,
                     bits_per_agent: (i as f64) * 100.0,
                     sim_time: i as f64,
+                    idle_max: 0.0,
                 })
                 .collect(),
         }
@@ -224,7 +260,9 @@ mod tests {
         let r = rec(&[1.0, 0.1, 0.01, 0.001]);
         assert_eq!(r.rounds_to_tol(0.05), Some(2));
         assert_eq!(r.bits_to_tol(0.05), Some(200.0));
+        assert_eq!(r.time_to_tol(0.05), Some(2.0));
         assert_eq!(r.rounds_to_tol(1e-9), None);
+        assert_eq!(r.time_to_tol(1e-9), None);
     }
 
     #[test]
@@ -238,12 +276,30 @@ mod tests {
 
     #[test]
     fn csv_and_json_shape() {
-        let r = rec(&[1.0, 0.5]);
+        let mut r = rec(&[1.0, 0.5]);
         let csv = r.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.starts_with("round,"));
+        assert!(csv.lines().next().unwrap().ends_with(",idle_max"));
         let js = crate::serialize::json::parse(&r.to_json()).unwrap();
         assert_eq!(js.get("algo").unwrap().as_str(), Some("test"));
         assert_eq!(js.get("series").unwrap().as_arr().unwrap().len(), 2);
+        // Each series row carries 8 columns (…, sim_time, idle_max).
+        let row = js.get("series").unwrap().as_arr().unwrap()[0].as_arr().unwrap().len();
+        assert_eq!(row, 8);
+        assert!(js.get("net").is_some(), "legacy runs serialize net as null");
+
+        // With a simnet summary attached the JSON embeds it.
+        r.net = Some(NetSummary {
+            link: "uniform:1e-4:1e9".into(),
+            idle_s: vec![0.0, 0.25],
+            straggler_rounds: vec![1, 1],
+            retransmits: 0,
+            utilization: 0.5,
+        });
+        let js = crate::serialize::json::parse(&r.to_json()).unwrap();
+        let net = js.get("net").unwrap();
+        assert_eq!(net.get("link").unwrap().as_str(), Some("uniform:1e-4:1e9"));
+        assert_eq!(net.get("idle_s").unwrap().as_arr().unwrap().len(), 2);
     }
 }

@@ -3,7 +3,10 @@
 //! [`engine::Engine`] is the single entry point examples and benches use;
 //! it owns the problem and topology and drives any [`crate::algorithms::
 //! Algorithm`] with any [`crate::compress::Compressor`] under identical
-//! accounting rules (see DESIGN.md §6).
+//! accounting rules (see DESIGN.md §6). Round *time* comes from either
+//! [`network`]'s uniform formula or the discrete-event heterogeneous
+//! simulator [`crate::simnet`] (engine §Network timing) — a timing-only
+//! choice that never affects trajectories.
 
 pub mod engine;
 pub mod metrics;

@@ -5,6 +5,13 @@
 //! time. Each round every agent broadcasts its payload to each neighbor;
 //! since all links operate in parallel in a synchronous gossip round, the
 //! round's simulated duration is `latency + max_link_bits / bandwidth`.
+//!
+//! This uniform formula is the *homogeneous* time model. Heterogeneous
+//! networks (per-edge bandwidth/latency, stragglers, jitter, lossy
+//! links) are simulated event-by-event by [`crate::simnet`], which plugs
+//! into the same [`TrafficStats`] accounting via
+//! [`TrafficStats::record_bits`] + an externally computed round duration
+//! and degenerates to this formula bit-for-bit on a homogeneous network.
 
 use crate::topology::MixingMatrix;
 
@@ -43,18 +50,35 @@ impl TrafficStats {
         TrafficStats { broadcast_bits: vec![0; n], ..Default::default() }
     }
 
-    /// Account one synchronous gossip round. `bits[i]` is the payload size
-    /// agent i broadcast this round.
+    /// Account one synchronous gossip round under the uniform link-time
+    /// model. `bits[i]` is the payload size agent i broadcast this round.
+    /// The engine decomposes this into [`TrafficStats::record_bits`] plus
+    /// a round duration — either [`TrafficStats::uniform_round_time`]
+    /// (this model) or a simulated one from
+    /// [`crate::simnet::RoundTimer::round`]; both paths produce identical
+    /// accounting for a homogeneous network (the simnet §Timing
+    /// contract).
     pub fn record_round(&mut self, mix: &MixingMatrix, link: &LinkModel, bits: &[u64]) {
+        self.record_bits(mix, bits);
+        self.sim_time += Self::uniform_round_time(link, bits);
+        self.rounds += 1;
+    }
+
+    /// Bit accounting only (no time model): per-agent broadcast bits and
+    /// network-wide directed link-bits.
+    pub fn record_bits(&mut self, mix: &MixingMatrix, bits: &[u64]) {
         debug_assert_eq!(bits.len(), self.broadcast_bits.len());
-        let mut max_bits = 0u64;
         for (i, &b) in bits.iter().enumerate() {
             self.broadcast_bits[i] += b;
             self.link_bits += b * mix.neighbors[i].len() as u64;
-            max_bits = max_bits.max(b);
         }
-        self.sim_time += link.latency_s + max_bits as f64 / link.bandwidth_bps;
-        self.rounds += 1;
+    }
+
+    /// The legacy uniform round duration: all links run in parallel, so a
+    /// synchronous round costs `latency + max_bits / bandwidth`.
+    pub fn uniform_round_time(link: &LinkModel, bits: &[u64]) -> f64 {
+        let max_bits = bits.iter().copied().max().unwrap_or(0);
+        link.latency_s + max_bits as f64 / link.bandwidth_bps
     }
 
     /// Mean broadcast bits per agent so far.

@@ -21,6 +21,7 @@
 //! name = "sweep"
 //! rounds = 800
 //! compressor = "qinf:2:512"
+//! tol = 1e-6                   # optional: per-run time_to_tol in <grid>.json
 //!
 //! [problem]
 //! kind = "linreg"
@@ -29,6 +30,13 @@
 //! [axes]
 //! alpha = [0.1, 0.3, 0.5, 0.7, 0.9]
 //! gamma = [0.2, 0.5, 1.0, 1.5, 2.0]
+//! # Network conditions are an axis too (`lead::simnet` specs; the
+//! # timing overlay never changes trajectories, only the time axis):
+//! # link = ["uniform:1e-4:1e9", "lognormal:1e-3:1e8:0.75",
+//! #         "straggler:1e-4:1e9:0.25:10:drop=0.01"]
+//! # Sweeping `seed` additionally emits mean ± std aggregate bands per
+//! # cell into <grid>.json (scenarios §Seed-axis aggregation); see
+//! # examples/time_to_accuracy.toml for the full time-to-accuracy grid.
 //! ```
 //!
 //! Determinism: grids are bitwise-identical at any thread count (every
@@ -306,6 +314,7 @@ pub fn fig7_grid(rounds: usize) -> Grid {
                 [0.2, 0.5, 1.0, 1.5, 2.0].iter().map(|&v| Value::Float(v)).collect(),
             ),
         ],
+        tol: None,
     }
 }
 

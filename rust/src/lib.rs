@@ -9,8 +9,10 @@
 //!   accounting, the LEAD algorithm plus eight baselines, a coordinator
 //!   engine driven by a persistent worker pool ([`pool`]) with a
 //!   steady-state allocation-free round loop, declarative scenario grids
-//!   with a sharded multi-run executor ([`scenarios`]), experiment
-//!   drivers for every figure in the paper, metrics, and a CLI.
+//!   with a sharded multi-run executor ([`scenarios`]), a discrete-event
+//!   heterogeneous network simulator for time-to-accuracy studies
+//!   ([`simnet`]), experiment drivers for every figure in the paper,
+//!   metrics, and a CLI.
 //! - **L2 (python/compile)**: JAX compute graphs (linear/logistic
 //!   regression, MLP, transformer LM forward+backward) lowered once to HLO
 //!   text artifacts.
@@ -56,6 +58,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scenarios;
 pub mod serialize;
+pub mod simnet;
 pub mod topology;
 
 /// Convenience re-exports for examples and benches.
@@ -80,6 +83,7 @@ pub mod prelude {
     pub use crate::pool::{Exec, WorkerPool};
     pub use crate::problems::{linreg::LinReg, logreg::LogReg, DataSplit, Problem};
     pub use crate::scenarios::{Driver, Grid, ProblemSpec, RunSpec};
+    pub use crate::simnet::{NetModel, NetSummary, RoundTimer};
     pub use crate::rng::Rng;
     pub use crate::topology::{MixingMatrix, MixingRule, Topology};
 }

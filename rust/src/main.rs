@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! lead exp <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tables|all> [--out DIR] [--rounds N]
-//! lead grid <spec.toml> [--out DIR] [--threads N]   # declarative scenario grid
+//! lead grid <spec.toml> [--out DIR] [--threads N] [--tol X]  # declarative scenario grid
+//! lead net-report <spec.toml> [--out DIR] [--threads N] [--tol X]  # network/time view of a grid
 //! lead run <config.toml> [--out DIR]                # custom single run
 //! lead bench-diff <new.json> <baseline.json> [--tol X]  # perf gate
 //! lead info                                         # topology/spectral summary
@@ -23,6 +24,22 @@ use std::path::PathBuf;
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Shared preamble of the `grid` and `net-report` arms: load + expand the
+/// grid TOML named by the first positional arg and resolve the common
+/// flags (`--threads`, `--tol` overriding the grid's own `tol`).
+fn load_grid_args(
+    args: &[String],
+    usage: &str,
+) -> lead::error::Result<(Grid, Vec<lead::scenarios::RunSpec>, usize, Option<f64>)> {
+    let path = args.get(1).ok_or_else(|| err(usage))?;
+    let src = std::fs::read_to_string(path)?;
+    let grid = Grid::from_toml(&src)?;
+    let specs = grid.expand()?;
+    let threads = flag(args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(8);
+    let tol = flag(args, "--tol").and_then(|t| t.parse().ok()).or(grid.tol);
+    Ok((grid, specs, threads, tol))
 }
 
 fn main() -> lead::error::Result<()> {
@@ -75,13 +92,10 @@ fn main() -> lead::error::Result<()> {
             }
         }
         Some("grid") => {
-            let path = args.get(1).ok_or_else(|| {
-                err("usage: lead grid <spec.toml> [--out DIR] [--threads N]")
-            })?;
-            let src = std::fs::read_to_string(path)?;
-            let grid = Grid::from_toml(&src)?;
-            let specs = grid.expand()?;
-            let threads = flag(&args, "--threads").and_then(|t| t.parse().ok()).unwrap_or(8);
+            let (grid, specs, threads, tol) = load_grid_args(
+                &args,
+                "usage: lead grid <spec.toml> [--out DIR] [--threads N] [--tol X]",
+            )?;
             eprintln!(
                 "grid {:?}: {} cells, {} threads{}",
                 grid.name,
@@ -89,7 +103,8 @@ fn main() -> lead::error::Result<()> {
                 threads,
                 out_ref.map_or(String::new(), |d| format!(", artifacts -> {}", d.display()))
             );
-            let records = Driver::new(threads).with_out(out_ref).run(&grid.name, &specs)?;
+            let records =
+                Driver::new(threads).with_out(out_ref).with_tol(tol).run(&grid.name, &specs)?;
             println!(
                 "{:<40} {:<16} {:>12} {:>12} {:>14} {:>8}",
                 "cell", "algorithm", "dist(x*)", "consensus", "bits/agent", "secs"
@@ -107,6 +122,44 @@ fn main() -> lead::error::Result<()> {
                     show(m.consensus),
                     m.bits_per_agent,
                     rec.wall_secs
+                );
+            }
+        }
+        Some("net-report") => {
+            // The same grid execution as `lead grid`, reported on the
+            // network/time axis: per-cell simulated time, time-to-tol,
+            // idle (barrier-wait) stats, utilization, retransmits.
+            let (grid, specs, threads, tol) = load_grid_args(
+                &args,
+                "usage: lead net-report <spec.toml> [--out DIR] [--threads N] [--tol X]",
+            )?;
+            eprintln!("net-report {:?}: {} cells, {} threads", grid.name, specs.len(), threads);
+            let records =
+                Driver::new(threads).with_out(out_ref).with_tol(tol).run(&grid.name, &specs)?;
+            println!(
+                "{:<44} {:>11} {:>11} {:>9} {:>9} {:>6} {:>7}",
+                "cell", "sim_time", "t_to_tol", "idle_max", "idle_avg", "util", "retx"
+            );
+            for (s, rec) in specs.iter().zip(&records) {
+                let m = rec.last();
+                let ttt = tol
+                    .and_then(|t| rec.time_to_tol(t))
+                    .map_or("-".into(), |v| format!("{v:.3e}"));
+                let (idle_max, idle_avg, util, retx) = match &rec.net {
+                    Some(n) => {
+                        let avg = n.idle_s.iter().sum::<f64>() / n.idle_s.len().max(1) as f64;
+                        (
+                            format!("{:.2e}", m.idle_max),
+                            format!("{avg:.2e}"),
+                            format!("{:.2}", n.utilization),
+                            n.retransmits.to_string(),
+                        )
+                    }
+                    None => ("-".into(), "-".into(), "-".into(), "-".into()),
+                };
+                println!(
+                    "{:<44} {:>11.3e} {:>11} {:>9} {:>9} {:>6} {:>7}",
+                    s.name, m.sim_time, ttt, idle_max, idle_avg, util, retx
                 );
             }
         }
@@ -175,7 +228,7 @@ fn main() -> lead::error::Result<()> {
             }
         }
         _ => {
-            eprintln!("usage: lead <exp|grid|run|bench-diff|info> ... (see README)");
+            eprintln!("usage: lead <exp|grid|net-report|run|bench-diff|info> ... (see README)");
         }
     }
     Ok(())

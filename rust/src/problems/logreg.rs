@@ -216,6 +216,15 @@ impl Problem for LogReg {
         self.parts[agent].len()
     }
 
+    fn round_cost_hint(&self) -> Option<usize> {
+        // One full-gradient pass streams every local sample's logits and
+        // per-class residuals: samples · d_feat · classes elements — the
+        // regime where a modest-d problem is still gradient-heavy (the
+        // driver's message-size rule alone would call it "small").
+        let max_samples = (0..self.n_agents).map(|i| self.parts[i].len()).max().unwrap_or(0);
+        Some(max_samples.saturating_mul(self.dim()))
+    }
+
     fn loss(&self, agent: usize, x: &[f64]) -> f64 {
         self.loss_over(x, &self.parts[agent])
     }

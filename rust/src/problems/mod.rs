@@ -97,6 +97,18 @@ pub trait Problem: Send + Sync {
         None
     }
 
+    /// Approximate per-agent cost of one full-gradient evaluation, in
+    /// streamed-f64-element equivalents — a scheduling hint, never a
+    /// correctness input. The scenario driver classifies runs as
+    /// small (outer-sharded) or large (inner-parallel) by
+    /// `max(round_cost_hint, channels·dim)`, so gradient-heavy problems
+    /// at modest dimension (e.g. full-batch logistic regression over many
+    /// samples) can claim the inner parallelism the default n·d message
+    /// rule would deny them. `None` ⇒ classify by message size alone.
+    fn round_cost_hint(&self) -> Option<usize> {
+        None
+    }
+
     fn name(&self) -> String;
 }
 

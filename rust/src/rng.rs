@@ -173,6 +173,10 @@ pub mod streams {
     pub const INIT: u64 = 0x04;
     pub const TOPOLOGY: u64 = 0x05;
     pub const GRADIENT_NOISE: u64 = 0x06;
+    /// Simulated-network link parameters, jitter, and drop draws
+    /// (`crate::simnet`). Derived — never drawn — from the engine seed,
+    /// so enabling the timing overlay cannot shift any other stream.
+    pub const NET: u64 = 0x07;
 }
 
 #[cfg(test)]

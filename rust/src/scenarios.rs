@@ -40,6 +40,10 @@
 //! record_every = 10
 //! # batch_size = 512           # omit for full gradient
 //! # t0 = 200.0                 # diminishing stepsize η·t0/(t0+k)
+//! # link = "uniform:1e-4:1e9"  # simnet::NetModel spec; omit (or "legacy")
+//!                              # for the uniform round-time formula
+//! # tol = 1e-6                 # dist(x*) tolerance: emits time_to_tol
+//!                              # per run into <grid>.json
 //!
 //! [problem]                    # omit for the paper's linreg workload
 //! kind = "linreg"              # linreg | logreg | quad
@@ -49,17 +53,29 @@
 //!
 //! [axes]                       # arrays expand as a cartesian product,
 //! alpha = [0.1, 0.3, 0.5]      # in alphabetical key order (first key
-//! gamma = [0.5, 1.0]           # outermost); any [grid] scalar key works
+//! gamma = [0.5, 1.0]           # outermost); any [grid] scalar key works,
+//! link = ["uniform:1e-4:1e9",  # including network conditions — the
+//!         "straggler:1e-4:1e9:0.25:10"]   # time-to-accuracy axis
 //! ```
+//!
+//! # Seed-axis aggregation
+//!
+//! When a grid sweeps a `seed` axis, the `<grid>.json` artifact also
+//! carries an `aggregates` array: cells identical except for their seed
+//! are grouped and their per-round metrics reduced to mean ± std bands
+//! (population std over the seeds), plus mean ± std of `time_to_tol`
+//! when `tol` is set — so variance and time-to-accuracy plots come from
+//! one artifact instead of re-reducing per-run records downstream.
 
 use crate::compress::Compressor;
 use crate::config::{self, AlgoSetup};
 use crate::coordinator::engine::{phase_threads, Engine, EngineConfig, Schedule};
-use crate::coordinator::metrics::RunRecord;
+use crate::coordinator::metrics::{RoundMetrics, RunRecord};
 use crate::error::{err, Result};
 use crate::pool::{par_dynamic, Exec, SendPtr, WorkerPool};
 use crate::problems::{linreg::LinReg, logreg::LogReg, quad::Quad, DataSplit, Problem};
 use crate::serialize::{json, toml_mini};
+use crate::simnet::NetModel;
 use crate::topology::{MixingMatrix, MixingRule, Topology};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -209,6 +225,10 @@ pub struct RunSpec {
     pub record_every: usize,
     /// `Some(t0)` ⇒ diminishing stepsize η·t0/(t0+k) (Theorem 2).
     pub t0: Option<f64>,
+    /// [`NetModel::parse`] spec for the simnet timing overlay; `""` (or
+    /// `"legacy"`) keeps the uniform round-time formula. Timing-only:
+    /// the trajectory is identical for every value of this field.
+    pub link: String,
 }
 
 impl RunSpec {
@@ -231,6 +251,7 @@ impl RunSpec {
             seed: 42,
             record_every: 10,
             t0: None,
+            link: String::new(),
         }
     }
 
@@ -253,17 +274,20 @@ impl RunSpec {
         }
     }
 
-    /// Engine configuration for this spec. `threads` stays at 1: the
-    /// [`Driver`] supplies the execution backend via [`Engine::run_on`].
-    pub fn engine_config(&self) -> EngineConfig {
-        EngineConfig {
+    /// Engine configuration for this spec, network model included (fails
+    /// on a malformed `link` spec, like the other builders). `threads`
+    /// stays at 1: the [`Driver`] supplies the execution backend via
+    /// [`Engine::run_on`].
+    pub fn engine_config(&self) -> Result<EngineConfig> {
+        Ok(EngineConfig {
             eta: self.eta,
             schedule: self.schedule(),
             batch_size: self.batch_size,
             seed: self.seed,
             record_every: self.record_every.max(1),
+            net: self.build_net()?,
             ..EngineConfig::default()
-        }
+        })
     }
 
     pub fn build_mix(&self) -> Result<MixingMatrix> {
@@ -286,6 +310,17 @@ impl RunSpec {
             .ok_or_else(|| err(format!("{}: bad compressor spec {:?}", self.name, self.compressor)))
     }
 
+    /// Parse the `link` field into a simnet model (None ⇒ legacy uniform
+    /// round-time formula).
+    pub fn build_net(&self) -> Result<Option<NetModel>> {
+        if self.link.is_empty() || self.link == "legacy" {
+            return Ok(None);
+        }
+        NetModel::parse(&self.link)
+            .map(Some)
+            .ok_or_else(|| err(format!("{}: bad link model spec {:?}", self.name, self.link)))
+    }
+
     /// Set one scalar field by its TOML key (axis application).
     pub fn apply_axis(&mut self, key: &str, v: &toml_mini::Value) -> Result<()> {
         let want_f64 =
@@ -306,6 +341,7 @@ impl RunSpec {
             "algo" => self.algo = want_str()?,
             "topology" => self.topology = want_str()?,
             "compressor" => self.compressor = want_str()?,
+            "link" => self.link = want_str()?,
             "mixing" => {
                 let s = want_str()?;
                 self.mixing = MixingRule::parse(&s)
@@ -331,6 +367,7 @@ impl RunSpec {
         kv_str(&mut o, "problem", &self.problem.label(), true);
         kv_str(&mut o, "topology", &self.topology, true);
         kv_str(&mut o, "compressor", &self.compressor, true);
+        kv_str(&mut o, "link", &self.link, true);
         for (k, v) in [("eta", self.eta), ("gamma", self.gamma), ("alpha", self.alpha)] {
             o.push(',');
             json::write_str(&mut o, k);
@@ -379,6 +416,10 @@ pub struct Grid {
     /// `(key, values)` — first axis outermost. Keys are the
     /// [`RunSpec::apply_axis`] scalar keys.
     pub axes: Vec<(String, Vec<toml_mini::Value>)>,
+    /// dist(x*) tolerance for time-to-accuracy reporting: when set, the
+    /// driver emits each run's `time_to_tol` (and its seed-axis mean ±
+    /// std) into the `<grid>.json` artifact.
+    pub tol: Option<f64>,
 }
 
 impl Grid {
@@ -424,6 +465,7 @@ impl Grid {
         let doc = toml_mini::parse(src).map_err(err)?;
         let mut base = RunSpec::paper_default();
         let mut name = String::from("grid");
+        let mut tol = None;
         for section in ["", "grid"] {
             let Some(sec) = doc.get(section) else { continue };
             for (k, v) in sec {
@@ -433,6 +475,11 @@ impl Grid {
                             .as_str()
                             .ok_or_else(|| err("grid.name: string expected"))?
                             .to_string()
+                    }
+                    "tol" => {
+                        tol = Some(
+                            v.as_f64().ok_or_else(|| err("grid.tol: number expected"))?,
+                        )
                     }
                     other => base
                         .apply_axis(other, v)
@@ -457,7 +504,7 @@ impl Grid {
                 .collect::<Result<Vec<_>>>()?,
         };
         base.name = name.clone();
-        Ok(Grid { name, base, axes })
+        Ok(Grid { name, base, axes, tol })
     }
 }
 
@@ -477,6 +524,27 @@ fn fmt_value(v: &toml_mini::Value) -> String {
 pub struct Driver {
     threads: usize,
     out: Option<PathBuf>,
+    tol: Option<f64>,
+}
+
+/// Per-agent work estimate (streamed f64-element equivalents) used to
+/// classify a run as small (outer-sharded) or large (inner-parallel).
+/// The floor is the message traffic (`channels · d`); problems that are
+/// gradient-heavy at modest dimension raise it via
+/// [`Problem::round_cost_hint`], and mini-batch runs cap the gradient
+/// term at `batch · d` (the hint describes the full-gradient sweep).
+pub(crate) fn run_work_estimate(
+    p: &dyn Problem,
+    channels: usize,
+    batch_size: Option<usize>,
+) -> usize {
+    let msg = channels * p.dim();
+    let grad = match (p.round_cost_hint(), batch_size) {
+        (Some(c), None) => c,
+        (Some(_), Some(b)) => b.saturating_mul(p.dim()),
+        (None, _) => 0,
+    };
+    grad.max(msg)
 }
 
 /// Everything a single run needs, prebuilt and prevalidated so the
@@ -490,13 +558,20 @@ struct Prepared {
 
 impl Driver {
     pub fn new(threads: usize) -> Driver {
-        Driver { threads: threads.max(1), out: None }
+        Driver { threads: threads.max(1), out: None, tol: None }
     }
 
     /// Write one CSV per run plus the unified `<grid>.json` artifact into
     /// `dir` (no artifacts when `None`).
     pub fn with_out(mut self, dir: Option<&Path>) -> Driver {
         self.out = dir.map(Path::to_path_buf);
+        self
+    }
+
+    /// dist(x*) tolerance for time-to-accuracy reporting: emits per-run
+    /// `time_to_tol` (and seed-axis aggregate bands) into `<grid>.json`.
+    pub fn with_tol(mut self, tol: Option<f64>) -> Driver {
+        self.tol = tol;
         self
     }
 
@@ -515,6 +590,7 @@ impl Driver {
             s.build_mix()?;
             let algo = s.build_algo()?;
             s.build_compressor()?;
+            s.build_net()?;
             channels.push(algo.spec().channels);
         }
         // Resolve problems with structural dedupe, check agent counts,
@@ -539,7 +615,8 @@ impl Driver {
                     s.agents
                 )));
             }
-            let inner_useful = phase_threads(self.threads, s.agents, ch * p.dim()) > 1;
+            let work = run_work_estimate(&**p, ch, s.batch_size);
+            let inner_useful = phase_threads(self.threads, s.agents, work) > 1;
             prepared.push(Prepared { problem: Arc::clone(p), inner_useful });
         }
 
@@ -548,7 +625,8 @@ impl Driver {
             let mix = s.build_mix().expect("prevalidated");
             let algo = s.build_algo().expect("prevalidated");
             let comp = s.build_compressor().expect("prevalidated");
-            let mut engine = Engine::new(s.engine_config(), mix, Arc::clone(&prepared[i].problem));
+            let cfg = s.engine_config().expect("prevalidated");
+            let mut engine = Engine::new(cfg, mix, Arc::clone(&prepared[i].problem));
             engine.run_on(exec, algo, comp, s.rounds)
         };
 
@@ -602,32 +680,205 @@ impl Driver {
             }
             std::fs::write(
                 dir.join(format!("{grid_name}.json")),
-                grid_json(grid_name, self.threads, specs, &records),
+                grid_json(grid_name, self.threads, self.tol, specs, &records),
             )?;
         }
         Ok(records)
     }
 }
 
-/// The unified per-grid JSON artifact: spec + full record per run.
-fn grid_json(grid_name: &str, threads: usize, specs: &[RunSpec], records: &[RunRecord]) -> String {
-    let mut out = String::from("{\"schema\":1,\"grid\":");
+/// The unified per-grid JSON artifact: spec + full record per run, plus
+/// optional per-run `time_to_tol` (when a tolerance is configured) and
+/// seed-axis aggregates (module docs §Seed-axis aggregation).
+fn grid_json(
+    grid_name: &str,
+    threads: usize,
+    tol: Option<f64>,
+    specs: &[RunSpec],
+    records: &[RunRecord],
+) -> String {
+    let mut out = String::from("{\"schema\":2,\"grid\":");
     json::write_str(&mut out, grid_name);
-    out.push_str(&format!(",\"threads\":{threads},\"runs\":["));
+    out.push_str(&format!(",\"threads\":{threads}"));
+    if let Some(t) = tol {
+        out.push_str(",\"tol\":");
+        json::write_num(&mut out, t);
+    }
+    out.push_str(",\"runs\":[");
     for (i, (s, rec)) in specs.iter().zip(records).enumerate() {
         if i > 0 {
             out.push(',');
         }
         out.push_str("{\"name\":");
         json::write_str(&mut out, &s.name);
+        if let Some(t) = tol {
+            out.push_str(",\"time_to_tol\":");
+            match rec.time_to_tol(t) {
+                Some(v) => json::write_num(&mut out, v),
+                None => out.push_str("null"),
+            }
+        }
         out.push_str(",\"spec\":");
         out.push_str(&s.spec_json());
         out.push_str(",\"record\":");
         out.push_str(&rec.to_json());
         out.push('}');
     }
-    out.push_str("]}\n");
+    out.push(']');
+    if let Some(agg) = aggregates_json(tol, specs, records) {
+        out.push_str(",\"aggregates\":");
+        out.push_str(&agg);
+    }
+    out.push_str("}\n");
     out
+}
+
+/// Two specs describe the same cell iff they differ at most in `seed`
+/// (and the derived `name`). Float fields compare by bits so NaN preset
+/// placeholders (γ/α for algorithms that ignore them) group correctly.
+fn same_cell_ignoring_seed(a: &RunSpec, b: &RunSpec) -> bool {
+    a.problem.same(&b.problem)
+        && a.topology == b.topology
+        && a.mixing == b.mixing
+        && a.agents == b.agents
+        && a.algo == b.algo
+        && a.eta.to_bits() == b.eta.to_bits()
+        && a.gamma.to_bits() == b.gamma.to_bits()
+        && a.alpha.to_bits() == b.alpha.to_bits()
+        && a.compressor == b.compressor
+        && a.rounds == b.rounds
+        && a.batch_size == b.batch_size
+        && a.record_every == b.record_every
+        && a.t0.map(f64::to_bits) == b.t0.map(f64::to_bits)
+        && a.link == b.link
+}
+
+/// Mean ± population std per recorded round over a cell's seed group,
+/// for every metric a variance/time-to-accuracy plot needs. Returns
+/// `None` when no cell has ≥ 2 seeds (no `seed` axis ⇒ no aggregates).
+fn aggregates_json(tol: Option<f64>, specs: &[RunSpec], records: &[RunRecord]) -> Option<String> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for i in 0..specs.len() {
+        match groups.iter_mut().find(|g| same_cell_ignoring_seed(&specs[g[0]], &specs[i])) {
+            Some(g) => g.push(i),
+            None => groups.push(vec![i]),
+        }
+    }
+    groups.retain(|g| g.len() > 1);
+    // Series must be round-aligned — guaranteed for same-cell specs
+    // (identical rounds/record_every); drop any group that is not.
+    groups.retain(|g| {
+        let first = &records[g[0]].series;
+        g.iter().all(|&i| {
+            let s = &records[i].series;
+            s.len() == first.len() && s.iter().zip(first).all(|(a, b)| a.round == b.round)
+        })
+    });
+    if groups.is_empty() {
+        return None;
+    }
+
+    let mean_std = |vals: &[f64]| -> (f64, f64) {
+        let k = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / k;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / k;
+        (mean, var.max(0.0).sqrt())
+    };
+    let write_band =
+        |out: &mut String, key: &str, g: &[usize], metric: &dyn Fn(&RoundMetrics) -> f64| {
+            out.push(',');
+            json::write_str(out, key);
+            out.push_str(":{\"mean\":[");
+            let rounds = records[g[0]].series.len();
+            let mut means = Vec::with_capacity(rounds);
+            let mut stds = Vec::with_capacity(rounds);
+            for r in 0..rounds {
+                let vals: Vec<f64> = g.iter().map(|&i| metric(&records[i].series[r])).collect();
+                let (m, s) = mean_std(&vals);
+                means.push(m);
+                stds.push(s);
+            }
+            for (i, m) in means.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                json::write_num(out, *m);
+            }
+            out.push_str("],\"std\":[");
+            for (i, s) in stds.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                json::write_num(out, *s);
+            }
+            out.push_str("]}");
+        };
+
+    let mut out = String::from("[");
+    for (gi, g) in groups.iter().enumerate() {
+        if gi > 0 {
+            out.push(',');
+        }
+        let first = &specs[g[0]];
+        // Cell label: the first member's name with its axis-generated
+        // `_seed<k>` segment stripped. Only the LAST occurrence goes —
+        // axes append after the user-chosen grid name, so a grid name
+        // that happens to contain the same substring stays intact.
+        let seg = format!("_seed{}", first.seed);
+        let label = match first.name.rfind(&seg) {
+            Some(pos) => {
+                let mut s = first.name.clone();
+                s.replace_range(pos..pos + seg.len(), "");
+                s
+            }
+            None => first.name.clone(),
+        };
+        out.push_str("{\"cell\":");
+        json::write_str(&mut out, &label);
+        out.push_str(",\"seeds\":[");
+        for (i, &j) in g.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&specs[j].seed.to_string());
+        }
+        out.push_str("],\"rounds\":[");
+        for (i, m) in records[g[0]].series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&m.round.to_string());
+        }
+        out.push(']');
+        write_band(&mut out, "dist_opt", g, &|m| m.dist_opt);
+        write_band(&mut out, "consensus", g, &|m| m.consensus);
+        write_band(&mut out, "loss", g, &|m| m.loss);
+        write_band(&mut out, "comp_err", g, &|m| m.comp_err);
+        write_band(&mut out, "sim_time", g, &|m| m.sim_time);
+        write_band(&mut out, "idle_max", g, &|m| m.idle_max);
+        if let Some(t) = tol {
+            let reached: Vec<f64> =
+                g.iter().filter_map(|&i| records[i].time_to_tol(t)).collect();
+            out.push_str(&format!(
+                ",\"time_to_tol\":{{\"reached\":{},\"of\":{}",
+                reached.len(),
+                g.len()
+            ));
+            if reached.is_empty() {
+                out.push_str(",\"mean\":null,\"std\":null}");
+            } else {
+                let (m, s) = mean_std(&reached);
+                out.push_str(",\"mean\":");
+                json::write_num(&mut out, m);
+                out.push_str(",\"std\":");
+                json::write_num(&mut out, s);
+                out.push('}');
+            }
+        }
+        out.push('}');
+    }
+    out.push(']');
+    Some(out)
 }
 
 #[cfg(test)]
@@ -651,6 +902,7 @@ mod tests {
                     ],
                 ),
             ],
+            tol: None,
         };
         let specs = grid.expand().unwrap();
         assert_eq!(specs.len(), 6);
@@ -707,11 +959,133 @@ seed = [1, 2, 3]
     }
 
     #[test]
+    fn grid_toml_link_and_tol_parse() {
+        let src = r#"
+[grid]
+name = "net"
+rounds = 20
+tol = 1e-5
+link = "uniform:1e-4:1e9"
+
+[axes]
+link = ["legacy", "uniform:1e-3:1e6", "straggler:1e-4:1e9:0.25:10:drop=0.01"]
+"#;
+        let g = Grid::from_toml(src).unwrap();
+        assert_eq!(g.tol, Some(1e-5));
+        assert_eq!(g.base.link, "uniform:1e-4:1e9");
+        let specs = g.expand().unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(specs[0].build_net().unwrap().is_none(), "legacy ⇒ no overlay");
+        assert!(specs[1].build_net().unwrap().is_some());
+        assert_eq!(specs[2].build_net().unwrap().unwrap().drop, 0.01);
+        assert_eq!(specs[1].name, "net_linkuniform:1e-3:1e6");
+    }
+
+    #[test]
+    fn run_work_estimate_uses_cost_hint() {
+        // LogReg's full-gradient sweep is samples·d per agent — far above
+        // the channels·d message floor the old classifier used.
+        let p = crate::problems::logreg::LogReg::synthetic(
+            4, 400, 10, 3, 1e-2, DataSplit::Homogeneous, 5, false,
+        );
+        let d = p.dim();
+        let samples = (0..4).map(|i| p.n_samples(i)).max().unwrap();
+        assert_eq!(run_work_estimate(&p, 2, None), (samples * d).max(2 * d));
+        // Mini-batch runs cap the gradient term at batch·d.
+        assert_eq!(run_work_estimate(&p, 2, Some(8)), (8 * d).max(2 * d));
+        // Problems without a hint keep the message-size classifier.
+        let q = crate::problems::quad::Quad::new(4, 100, 1);
+        assert_eq!(run_work_estimate(&q, 2, None), 200);
+    }
+
+    /// Seed-axis aggregation: cells differing only by seed reduce to one
+    /// aggregate with mean ± std bands and a time_to_tol summary.
+    #[test]
+    fn grid_json_aggregates_over_seed_axis() {
+        let dir = std::env::temp_dir().join(format!("lead_agg_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let grid = Grid::from_toml(
+            r#"
+[grid]
+name = "agg"
+rounds = 40
+record_every = 10
+tol = 1e-3
+
+[problem]
+kind = "linreg"
+dim = 30
+reg = 0.1
+seed = 7
+
+[axes]
+compressor = ["qinf:2:512", "raw"]
+seed = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        let specs = grid.expand().unwrap();
+        assert_eq!(specs.len(), 6);
+        Driver::new(2)
+            .with_out(Some(dir.as_path()))
+            .with_tol(grid.tol)
+            .run(&grid.name, &specs)
+            .unwrap();
+        let js = json::parse(&std::fs::read_to_string(dir.join("agg.json")).unwrap()).unwrap();
+        assert_eq!(js.get("tol").unwrap().as_f64(), Some(1e-3));
+        let runs = js.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 6);
+        for r in runs {
+            assert!(r.get("time_to_tol").is_some(), "per-run time_to_tol emitted");
+        }
+        let aggs = js.get("aggregates").unwrap().as_arr().unwrap();
+        assert_eq!(aggs.len(), 2, "one aggregate per compressor cell");
+        for a in aggs {
+            assert_eq!(a.get("seeds").unwrap().as_arr().unwrap().len(), 3);
+            let rounds = a.get("rounds").unwrap().as_arr().unwrap().len();
+            assert_eq!(a.get("dist_opt").unwrap().get("mean").unwrap().as_arr().unwrap().len(), rounds);
+            assert_eq!(a.get("dist_opt").unwrap().get("std").unwrap().as_arr().unwrap().len(), rounds);
+            assert!(a.get("sim_time").unwrap().get("mean").is_some());
+            let ttt = a.get("time_to_tol").unwrap();
+            assert_eq!(ttt.get("of").unwrap().as_f64(), Some(3.0));
+            let cell = a.get("cell").unwrap().as_str().unwrap();
+            assert!(!cell.contains("seed"), "cell label must drop the seed segment: {cell}");
+        }
+        // Different seeds actually differ (std > 0 somewhere): the bands
+        // carry real variance, not copies of one run.
+        let band = aggs[0].get("dist_opt").unwrap().get("std").unwrap().as_arr().unwrap();
+        assert!(
+            band.iter().any(|v| v.as_f64().is_some_and(|x| x > 0.0)),
+            "zero variance across seeds"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Grids without a seed axis emit no aggregates array.
+    #[test]
+    fn no_seed_axis_no_aggregates() {
+        let mut a = RunSpec::paper_default();
+        a.name = "a".into();
+        a.problem = ProblemSpec::Quad { dim: 16, seed: 1 };
+        a.rounds = 4;
+        a.record_every = 2;
+        let mut b = a.clone();
+        b.name = "b".into();
+        b.eta = 0.2;
+        let recs = Driver::new(1).run("t", &[a.clone(), b.clone()]).unwrap();
+        assert!(aggregates_json(None, &[a, b], &recs).is_none());
+    }
+
+    #[test]
     fn driver_validates_before_running() {
         let mut bad = RunSpec::paper_default();
         bad.rounds = 5;
         bad.topology = "er:1.5".into();
         assert!(Driver::new(1).run("t", &[bad]).is_err());
+        let mut bad = RunSpec::paper_default();
+        bad.rounds = 5;
+        bad.link = "uniform:1e-4".into();
+        assert!(Driver::new(1).run("t", &[bad]).is_err(), "bad link spec must fail loudly");
         let mut bad = RunSpec::paper_default();
         bad.rounds = 5;
         bad.algo = "nope".into();
@@ -737,7 +1111,7 @@ seed = [1, 2, 3]
             .iter()
             .map(|s| {
                 let mut e = Engine::new(
-                    s.engine_config(),
+                    s.engine_config().unwrap(),
                     s.build_mix().unwrap(),
                     s.problem.build(s.agents),
                 );

@@ -1,0 +1,390 @@
+//! Discrete-event heterogeneous network simulation (`simnet`).
+//!
+//! The paper's plots put communication on a *bits* axis; deployments care
+//! about *wall-clock time* under real link conditions — heterogeneous
+//! bandwidth, stragglers, jitter, lossy edges. This subsystem replaces the
+//! coordinator's uniform `latency + max_bits / bandwidth` round formula
+//! with an event-driven model: every synchronous round simulates all
+//! `n · deg` directed payload transfers through a binary-heap event queue
+//! ([`queue::EventQueue`], deterministic tie-breaking), over per-edge link
+//! parameters drawn once from a seeded distribution ([`LinkDist`]), with
+//! optional per-attempt jitter and drop-with-retransmit. The output is a
+//! per-round completion time plus per-agent idle/straggler statistics and
+//! network-wide utilization ([`NetStats`]).
+//!
+//! # §Timing contract — the overlay never perturbs trajectories
+//!
+//! `simnet` is a **timing-only overlay**. It observes the per-agent wire
+//! bits the engine already accounts and produces *durations*; it never
+//! touches payloads, messages, mixing, or any algorithm state, and all of
+//! its randomness comes from a dedicated stream
+//! ([`crate::rng::streams::NET`], derived — not drawn — from the engine
+//! seed), so enabling it cannot shift any existing RNG stream. Iterate
+//! series (`dist_opt`/`consensus`/`comp_err`/`bits_per_agent`) are
+//! therefore **bitwise-identical** with the overlay on or off, pinned by
+//! `rust/tests/simnet.rs` across codecs and thread counts. Additionally,
+//! the degenerate homogeneous model — [`LinkDist::Uniform`] with zero
+//! jitter and zero drop — reproduces the legacy
+//! [`TrafficStats`](crate::coordinator::network::TrafficStats) `sim_time`
+//! **bit-for-bit** (every transfer evaluates the exact legacy float
+//! expression `latency ⊕ bits ⊘ bandwidth`, and the round max over those
+//! monotone images equals the legacy max-bits formula exactly — see
+//! [`round::RoundTimer`]); a property test in `rust/tests/proptests.rs`
+//! pins this over random topologies, links, and bit patterns.
+//!
+//! The timer itself always runs sequentially on the coordinator thread
+//! (n · deg events per round is negligible next to the gradient work), so
+//! its event order and draws are independent of the engine's worker
+//! count by construction.
+//!
+//! # Link-model specs
+//!
+//! [`NetModel::parse`] accepts colon-separated specs, mirroring
+//! [`Topology::parse`](crate::topology::Topology::parse) /
+//! [`compress::parse`](crate::compress::parse):
+//!
+//! ```text
+//! uniform:LAT:BW               every edge identical (LAT seconds one-way,
+//!                              BW bits/s) — degenerate == legacy formula
+//! lognormal:LAT:BW:SIGMA       per-link latency/bandwidth multiplied by
+//!                              independent exp(SIGMA·N(0,1)) factors
+//!                              (median LAT / BW)
+//! straggler:LAT:BW:FRAC:SLOW   bimodal: each *agent* is a straggler with
+//!                              probability FRAC; every edge touching one
+//!                              runs SLOW× slower (latency ×SLOW,
+//!                              bandwidth ÷SLOW)
+//! ```
+//!
+//! Any spec may append `key=value` modifiers:
+//!
+//! ```text
+//! jitter=X    per-attempt multiplicative delay, uniform in [1, 1+X)
+//! drop=P      per-attempt loss probability in [0, 1); dropped transfers
+//!             retransmit immediately (each attempt re-billed)
+//! seed=N      nonzero N pins the drawn network across run seeds
+//!             (omitted/0: the network re-draws from each run's seed)
+//! ```
+//!
+//! e.g. `straggler:1e-4:1e9:0.25:10:drop=0.01:seed=7`. The scenario layer
+//! exposes exactly these strings as the `link` grid axis
+//! (`crate::scenarios` TOML format).
+
+pub mod queue;
+pub mod round;
+
+pub use round::RoundTimer;
+
+use crate::serialize::json;
+
+/// Per-edge link parameter distribution (drawn once per run at
+/// [`RoundTimer::new`] from the model's seeded stream). Undirected
+/// neighbors share parameters: the pair (i, j) is drawn once and both
+/// directed edges i→j and j→i use it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkDist {
+    /// Every edge identical — with zero jitter/drop this is the
+    /// degenerate model that reproduces the legacy uniform formula
+    /// bit-for-bit (§Timing contract).
+    Uniform { latency_s: f64, bandwidth_bps: f64 },
+    /// Heavy-tailed heterogeneity: per-pair latency and bandwidth are the
+    /// nominal values times independent `exp(sigma · N(0,1))` factors
+    /// (log-normal with median at the nominal value).
+    LogNormal { latency_s: f64, bandwidth_bps: f64, sigma: f64 },
+    /// Bimodal stragglers: each *agent* is flagged with probability
+    /// `frac`; edges touching a flagged agent get `latency × slow` and
+    /// `bandwidth / slow`. `frac = 0` (or `slow = 1`) degenerates to
+    /// [`LinkDist::Uniform`] exactly (×1.0 and ÷1.0 are bitwise no-ops).
+    Straggler { latency_s: f64, bandwidth_bps: f64, frac: f64, slow: f64 },
+}
+
+/// A parsed network model: the link distribution plus the stochastic
+/// per-attempt modifiers. Plain copyable data — lives inside
+/// [`EngineConfig`](crate::coordinator::engine::EngineConfig).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetModel {
+    pub dist: LinkDist,
+    /// Per-attempt multiplicative delay amplitude: each transfer's time is
+    /// scaled by `1 + jitter · U[0,1)`. 0 ⇒ no draw, exact base time.
+    pub jitter: f64,
+    /// Per-attempt drop probability in [0, 1); dropped transfers
+    /// retransmit from the drop time (capped, see [`round::MAX_ATTEMPTS`]).
+    pub drop: f64,
+    /// Link-parameter seed. 0 (the default): link draws derive from the
+    /// engine seed, so a `seed` grid axis re-draws the network per run —
+    /// trajectory and network variance move together. Nonzero: the
+    /// network derives from this value *alone*, pinning one drawn
+    /// network (straggler flags, per-pair params) across every run seed,
+    /// so seed-axis bands isolate trajectory variance.
+    pub seed: u64,
+}
+
+impl NetModel {
+    /// The degenerate homogeneous model (legacy-formula twin).
+    pub fn uniform(latency_s: f64, bandwidth_bps: f64) -> NetModel {
+        NetModel {
+            dist: LinkDist::Uniform { latency_s, bandwidth_bps },
+            jitter: 0.0,
+            drop: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// Parse a link-model spec string (module docs). Returns `None` on
+    /// unknown kinds, malformed numbers, or out-of-range parameters —
+    /// mirroring the other spec parsers so config typos fail loudly
+    /// upstream.
+    pub fn parse(spec: &str) -> Option<NetModel> {
+        let mut parts = spec.split(':');
+        let kind = parts.next()?;
+        // Positional numeric arguments come first; trailing key=value
+        // segments are modifiers.
+        let mut pos: Vec<f64> = Vec::new();
+        let mut jitter = 0.0f64;
+        let mut drop = 0.0f64;
+        let mut seed = 0u64;
+        for part in parts {
+            if let Some((k, v)) = part.split_once('=') {
+                match k {
+                    "jitter" => jitter = v.parse().ok()?,
+                    "drop" => drop = v.parse().ok()?,
+                    "seed" => seed = v.parse().ok()?,
+                    _ => return None,
+                }
+            } else {
+                if pos.len() == 4 {
+                    return None; // no kind takes more than 4 positionals
+                }
+                pos.push(part.parse().ok()?);
+            }
+        }
+        if !(jitter.is_finite() && jitter >= 0.0) || !(drop >= 0.0 && drop < 1.0) {
+            return None;
+        }
+        let ok_link = |lat: f64, bw: f64| lat.is_finite() && lat >= 0.0 && bw.is_finite() && bw > 0.0;
+        let dist = match (kind, pos.as_slice()) {
+            ("uniform", &[lat, bw]) if ok_link(lat, bw) => {
+                LinkDist::Uniform { latency_s: lat, bandwidth_bps: bw }
+            }
+            ("lognormal", &[lat, bw, sigma]) if ok_link(lat, bw) && sigma.is_finite() && sigma >= 0.0 => {
+                LinkDist::LogNormal { latency_s: lat, bandwidth_bps: bw, sigma }
+            }
+            ("straggler", &[lat, bw, frac, slow])
+                if ok_link(lat, bw) && (0.0..=1.0).contains(&frac) && slow >= 1.0 && slow.is_finite() =>
+            {
+                LinkDist::Straggler { latency_s: lat, bandwidth_bps: bw, frac, slow }
+            }
+            _ => return None,
+        };
+        Some(NetModel { dist, jitter, drop, seed })
+    }
+
+    /// Canonical spec string; round-trips through [`NetModel::parse`].
+    pub fn label(&self) -> String {
+        let mut s = match self.dist {
+            LinkDist::Uniform { latency_s, bandwidth_bps } => {
+                format!("uniform:{latency_s:e}:{bandwidth_bps:e}")
+            }
+            LinkDist::LogNormal { latency_s, bandwidth_bps, sigma } => {
+                format!("lognormal:{latency_s:e}:{bandwidth_bps:e}:{sigma:e}")
+            }
+            LinkDist::Straggler { latency_s, bandwidth_bps, frac, slow } => {
+                format!("straggler:{latency_s:e}:{bandwidth_bps:e}:{frac:e}:{slow:e}")
+            }
+        };
+        if self.jitter > 0.0 {
+            s.push_str(&format!(":jitter={:e}", self.jitter));
+        }
+        if self.drop > 0.0 {
+            s.push_str(&format!(":drop={:e}", self.drop));
+        }
+        if self.seed != 0 {
+            s.push_str(&format!(":seed={}", self.seed));
+        }
+        s
+    }
+}
+
+/// Cumulative network statistics over a run's simulated rounds.
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    pub rounds: usize,
+    /// Total simulated communication time, seconds.
+    pub sim_time: f64,
+    /// Per-agent cumulative barrier-wait (idle) seconds: each round, the
+    /// gap between an agent's last incoming transfer and the round's
+    /// global completion.
+    pub idle_s: Vec<f64>,
+    /// Rounds in which the agent was the round's straggler (its last
+    /// arrival defined the round end; ties go to the lowest agent id).
+    pub straggler_rounds: Vec<u64>,
+    /// Total retransmitted (dropped) attempts.
+    pub retransmits: u64,
+    /// Total link-active seconds (every attempt's duration, including
+    /// dropped ones), summed over all directed edges.
+    pub busy_link_s: f64,
+}
+
+impl NetStats {
+    pub fn new(n: usize) -> NetStats {
+        NetStats {
+            idle_s: vec![0.0; n],
+            straggler_rounds: vec![0; n],
+            ..NetStats::default()
+        }
+    }
+
+    /// Mean fraction of the run's duration each directed link spent
+    /// actively transferring: `busy / (links · sim_time)`. 0 when nothing
+    /// was simulated.
+    pub fn utilization(&self, links: usize) -> f64 {
+        if links == 0 || self.sim_time <= 0.0 {
+            return 0.0;
+        }
+        self.busy_link_s / (links as f64 * self.sim_time)
+    }
+
+    /// Max over agents of cumulative idle seconds (the top straggler-wait
+    /// series recorded into [`RoundMetrics`]).
+    ///
+    /// [`RoundMetrics`]: crate::coordinator::metrics::RoundMetrics
+    pub fn max_idle(&self) -> f64 {
+        self.idle_s.iter().copied().fold(0.0f64, f64::max)
+    }
+}
+
+/// Per-run network summary attached to
+/// [`RunRecord`](crate::coordinator::metrics::RunRecord) when the engine
+/// ran with a simnet overlay.
+#[derive(Clone, Debug)]
+pub struct NetSummary {
+    /// Canonical model spec ([`NetModel::label`]).
+    pub link: String,
+    /// Per-agent cumulative idle (barrier-wait) seconds.
+    pub idle_s: Vec<f64>,
+    /// Per-agent count of rounds where the agent was the straggler.
+    pub straggler_rounds: Vec<u64>,
+    pub retransmits: u64,
+    /// Mean directed-link utilization over the run.
+    pub utilization: f64,
+}
+
+impl NetSummary {
+    pub fn from_stats(model: &NetModel, stats: &NetStats, links: usize) -> NetSummary {
+        NetSummary {
+            link: model.label(),
+            utilization: stats.utilization(links),
+            idle_s: stats.idle_s.clone(),
+            straggler_rounds: stats.straggler_rounds.clone(),
+            retransmits: stats.retransmits,
+        }
+    }
+
+    /// Compact JSON object (embedded in the run record artifact).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        json::write_str(&mut out, "link");
+        out.push(':');
+        json::write_str(&mut out, &self.link);
+        out.push_str(",\"idle_s\":[");
+        for (i, v) in self.idle_s.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::write_num(&mut out, *v);
+        }
+        out.push_str("],\"straggler_rounds\":[");
+        for (i, v) in self.straggler_rounds.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&v.to_string());
+        }
+        out.push_str(&format!("],\"retransmits\":{},\"utilization\":", self.retransmits));
+        json::write_num(&mut out, self.utilization);
+        out.push('}');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_kinds() {
+        let u = NetModel::parse("uniform:1e-4:1e9").unwrap();
+        assert_eq!(u, NetModel::uniform(1e-4, 1e9));
+        let l = NetModel::parse("lognormal:1e-3:1e8:0.5").unwrap();
+        assert_eq!(
+            l.dist,
+            LinkDist::LogNormal { latency_s: 1e-3, bandwidth_bps: 1e8, sigma: 0.5 }
+        );
+        let s = NetModel::parse("straggler:1e-4:1e9:0.25:10").unwrap();
+        assert_eq!(
+            s.dist,
+            LinkDist::Straggler { latency_s: 1e-4, bandwidth_bps: 1e9, frac: 0.25, slow: 10.0 }
+        );
+    }
+
+    #[test]
+    fn parse_modifiers_and_roundtrip() {
+        let m = NetModel::parse("straggler:1e-4:1e9:0.25:10:drop=0.01:jitter=0.05:seed=7").unwrap();
+        assert_eq!(m.drop, 0.01);
+        assert_eq!(m.jitter, 0.05);
+        assert_eq!(m.seed, 7);
+        // label() is canonical and parses back to the same model.
+        assert_eq!(NetModel::parse(&m.label()), Some(m));
+        let plain = NetModel::uniform(1e-4, 1e9);
+        assert_eq!(NetModel::parse(&plain.label()), Some(plain));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "",
+            "uniform",
+            "uniform:1e-4",              // missing bandwidth
+            "uniform:1e-4:0",            // zero bandwidth
+            "uniform:-1:1e9",            // negative latency
+            "uniform:1e-4:1e9:0.5",      // stray positional
+            "lognormal:1e-4:1e9",        // missing sigma
+            "lognormal:1e-4:1e9:-0.5",   // negative sigma
+            "straggler:1e-4:1e9:1.5:10", // frac > 1
+            "straggler:1e-4:1e9:0.2:0.5",// slow < 1
+            "uniform:1e-4:1e9:drop=1.0", // drop must be < 1
+            "uniform:1e-4:1e9:jitter=-1",
+            "uniform:1e-4:1e9:wat=3",
+            "wat:1:2",
+            "uniform:abc:1e9",
+        ] {
+            assert!(NetModel::parse(bad).is_none(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn stats_utilization_and_max_idle() {
+        let mut st = NetStats::new(3);
+        assert_eq!(st.utilization(6), 0.0);
+        st.sim_time = 2.0;
+        st.busy_link_s = 6.0;
+        st.idle_s = vec![0.5, 0.0, 1.25];
+        assert!((st.utilization(6) - 0.5).abs() < 1e-12);
+        assert_eq!(st.max_idle(), 1.25);
+        assert_eq!(st.utilization(0), 0.0);
+    }
+
+    #[test]
+    fn summary_json_parses() {
+        let s = NetSummary {
+            link: "uniform:1e-4:1e9".into(),
+            idle_s: vec![0.0, 0.5],
+            straggler_rounds: vec![3, 1],
+            retransmits: 4,
+            utilization: 0.75,
+        };
+        let js = crate::serialize::json::parse(&s.to_json()).unwrap();
+        assert_eq!(js.get("link").unwrap().as_str(), Some("uniform:1e-4:1e9"));
+        assert_eq!(js.get("idle_s").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(js.get("retransmits").unwrap().as_f64(), Some(4.0));
+    }
+}

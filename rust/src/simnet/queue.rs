@@ -1,0 +1,134 @@
+//! Binary-heap event queue with deterministic tie-breaking.
+//!
+//! The simulator's only ordering structure: a min-heap of transfer
+//! events keyed by `(time, edge, attempt)`. Times are compared with
+//! [`f64::total_cmp`], so the order is total even in the presence of
+//! equal keys, and ties are broken by edge id then attempt number —
+//! **never** by insertion order or heap internals. Two simulations fed
+//! the same events therefore pop them in exactly the same sequence,
+//! which is what makes the whole timing overlay reproducible
+//! (`rust/tests/simnet.rs` pins this across thread counts and reruns).
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// One scheduled event: transfer attempt `attempt` on directed edge
+/// `edge` completing at `at` seconds after the round started.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Round-relative completion time, seconds (finite, ≥ 0).
+    pub at: f64,
+    /// Directed-edge id ([`RoundTimer`](crate::simnet::round::RoundTimer)
+    /// enumeration order).
+    pub edge: u32,
+    /// 0 for the first attempt; +1 per retransmit.
+    pub attempt: u32,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at
+            .total_cmp(&other.at)
+            .then(self.edge.cmp(&other.edge))
+            .then(self.attempt.cmp(&other.attempt))
+    }
+}
+
+/// Min-heap over [`Event`]s; reusable across rounds ([`EventQueue::clear`]
+/// keeps the backing allocation, §Perf: no per-round heap growth after
+/// warm-up).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Drop all pending events, keeping capacity.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        debug_assert!(ev.at.is_finite() && ev.at >= 0.0, "event at t = {}", ev.at);
+        self.heap.push(Reverse(ev));
+    }
+
+    /// Pop the earliest event (ties: lowest edge id, then lowest attempt).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        for (at, edge) in [(3.0, 0u32), (1.0, 1), (2.0, 2), (1.5, 3)] {
+            q.push(Event { at, edge, attempt: 0 });
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop()).map(|e| e.edge).collect();
+        assert_eq!(order, vec![1, 3, 2, 0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_times_break_ties_by_edge_then_attempt() {
+        // Push in scrambled order; equal times must still pop in
+        // (edge, attempt) order regardless of insertion sequence.
+        let mut q = EventQueue::new();
+        let evs = [
+            Event { at: 1.0, edge: 2, attempt: 0 },
+            Event { at: 1.0, edge: 0, attempt: 1 },
+            Event { at: 1.0, edge: 0, attempt: 0 },
+            Event { at: 1.0, edge: 1, attempt: 0 },
+        ];
+        for &e in &evs {
+            q.push(e);
+        }
+        let order: Vec<(u32, u32)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.edge, e.attempt)).collect();
+        assert_eq!(order, vec![(0, 0), (0, 1), (1, 0), (2, 0)]);
+    }
+
+    #[test]
+    fn clear_keeps_reuse_working() {
+        let mut q = EventQueue::new();
+        q.push(Event { at: 1.0, edge: 0, attempt: 0 });
+        q.clear();
+        assert!(q.is_empty());
+        q.push(Event { at: 2.0, edge: 7, attempt: 3 });
+        assert_eq!(q.len(), 1);
+        let e = q.pop().unwrap();
+        assert_eq!((e.edge, e.attempt), (7, 3));
+        assert_eq!(e.at, 2.0);
+    }
+}

@@ -1,0 +1,365 @@
+//! The per-round discrete-event simulation: n·deg directed transfers
+//! through the event queue, producing round completion times and
+//! per-agent idle/straggler statistics.
+//!
+//! One [`RoundTimer`] is built per engine run (per-edge link parameters
+//! drawn once from the model's seeded stream) and then fed each round's
+//! per-agent wire bits. Rounds are simulated in *round-relative* time
+//! (every round starts at t = 0 and the returned duration is accumulated
+//! by the caller), which is both simpler and what makes the degenerate
+//! homogeneous model bit-exact against the legacy formula: a first
+//! attempt's completion is literally `latency + bits as f64 / bandwidth`
+//! — the legacy expression — and the round max over those values equals
+//! `latency + max_bits / bandwidth` exactly because `b ↦ lat ⊕ (b ⊘ bw)`
+//! is weakly monotone under IEEE-754 round-to-nearest, so the max over
+//! monotone images is the image of the max (see the module-level §Timing
+//! contract and the proptest in `rust/tests/proptests.rs`).
+//!
+//! Determinism: edges are enumerated in a fixed order (pairs (i, j),
+//! i < j ascending, neighbor-list order; both directions adjacent), all
+//! jitter/drop draws come from *per-edge* streams consumed in attempt
+//! order, and the event queue breaks time ties by (edge, attempt) — so
+//! the event order, timings, and stats are identical across reruns and
+//! engine thread counts (the timer itself always runs on the coordinator
+//! thread).
+
+use super::queue::{Event, EventQueue};
+use super::{LinkDist, NetModel, NetStats};
+use crate::rng::{streams, Rng};
+use crate::topology::MixingMatrix;
+
+/// Retransmit cap per directed edge per round: a transfer is force-
+/// delivered on its `MAX_ATTEMPTS`-th attempt even if the drop draw
+/// fails again. With `drop < 1` enforced at parse time this is
+/// unreachable in practice (p ≤ 0.99 ⇒ P(cap) ≤ 0.99⁶³ ≈ 0.53 per
+/// pathological edge-round, and realistic drop rates make it
+/// astronomically small); the cap only bounds the worst case.
+pub const MAX_ATTEMPTS: u32 = 64;
+
+/// One directed edge with its drawn link parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeLink {
+    pub src: u32,
+    pub dst: u32,
+    pub latency_s: f64,
+    pub bandwidth_bps: f64,
+}
+
+/// Attempt duration for `bits` over `link`. The jitter multiplier is
+/// only applied (and its uniform only drawn) when the model carries
+/// jitter, so deterministic models evaluate the exact legacy expression.
+fn xfer_time(link: &EdgeLink, bits: u64, jitter: f64, rng: Option<&mut Rng>) -> f64 {
+    let base = link.latency_s + bits as f64 / link.bandwidth_bps;
+    match rng {
+        Some(r) if jitter > 0.0 => base * (1.0 + jitter * r.uniform()),
+        _ => base,
+    }
+}
+
+/// Discrete-event round simulator (module docs). Build once per run,
+/// call [`RoundTimer::round`] once per synchronous gossip round.
+pub struct RoundTimer {
+    model: NetModel,
+    /// Directed edges in canonical order; index = edge id.
+    edges: Vec<EdgeLink>,
+    /// Per-directed-edge jitter/drop stream (empty for deterministic
+    /// models — no draws, no allocation).
+    rngs: Vec<Rng>,
+    queue: EventQueue,
+    /// Per-agent latest-arrival scratch, reset each round.
+    arrival: Vec<f64>,
+    pub stats: NetStats,
+}
+
+impl RoundTimer {
+    /// Draw the per-edge link parameters for `mix`'s graph under `model`.
+    /// The draws root at the engine seed by default (a `seed` grid axis
+    /// re-draws the network per run) or at the model's own nonzero
+    /// `seed`, which pins one network across run seeds (`NetModel::seed`
+    /// docs). Either way everything lives on the dedicated
+    /// [`streams::NET`] stream, so building a timer never perturbs any
+    /// other stream of the run.
+    pub fn new(mix: &MixingMatrix, model: NetModel, engine_seed: u64) -> RoundTimer {
+        let n = mix.n;
+        let base = if model.seed == 0 { engine_seed } else { model.seed };
+        let root = Rng::new(base).derive(streams::NET);
+        let mut prng = root.derive(0);
+        // Straggler models flag whole agents (one draw per agent, in
+        // agent order) so that every edge touching a slow agent slows.
+        let flags: Vec<bool> = match model.dist {
+            LinkDist::Straggler { frac, .. } => (0..n).map(|_| prng.uniform() < frac).collect(),
+            _ => Vec::new(),
+        };
+        let mut edges: Vec<EdgeLink> = Vec::new();
+        for i in 0..n {
+            for &j in &mix.neighbors[i] {
+                if j <= i {
+                    continue; // each undirected pair drawn exactly once
+                }
+                let (lat, bw) = match model.dist {
+                    LinkDist::Uniform { latency_s, bandwidth_bps } => (latency_s, bandwidth_bps),
+                    LinkDist::LogNormal { latency_s, bandwidth_bps, sigma } => {
+                        let lat = latency_s * (sigma * prng.normal()).exp();
+                        let bw = bandwidth_bps * (sigma * prng.normal()).exp();
+                        (lat, bw)
+                    }
+                    LinkDist::Straggler { latency_s, bandwidth_bps, slow, .. } => {
+                        // ×1.0 / ÷1.0 are bitwise no-ops, so an all-fast
+                        // draw degenerates to Uniform exactly.
+                        let s = if flags[i] || flags[j] { slow } else { 1.0 };
+                        (latency_s * s, bandwidth_bps / s)
+                    }
+                };
+                let (si, sj) = (i as u32, j as u32);
+                edges.push(EdgeLink { src: si, dst: sj, latency_s: lat, bandwidth_bps: bw });
+                edges.push(EdgeLink { src: sj, dst: si, latency_s: lat, bandwidth_bps: bw });
+            }
+        }
+        let stochastic = model.jitter > 0.0 || model.drop > 0.0;
+        let rngs: Vec<Rng> = if stochastic {
+            (0..edges.len()).map(|e| root.derive(1 + e as u64)).collect()
+        } else {
+            Vec::new()
+        };
+        RoundTimer {
+            model,
+            edges,
+            rngs,
+            queue: EventQueue::new(),
+            arrival: vec![0.0; n],
+            stats: NetStats::new(n),
+        }
+    }
+
+    /// Number of directed links (the utilization denominator).
+    pub fn n_links(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn links(&self) -> &[EdgeLink] {
+        &self.edges
+    }
+
+    /// Simulate one synchronous round in which agent `i` broadcasts
+    /// `bits[i]` wire bits to each neighbor. Returns the round duration
+    /// (seconds) and accumulates [`NetStats`]. Zero heap allocations in
+    /// the steady state: the queue and arrival scratch are reused.
+    pub fn round(&mut self, bits: &[u64]) -> f64 {
+        let n = self.arrival.len();
+        debug_assert_eq!(bits.len(), n);
+        self.queue.clear();
+        self.arrival.fill(0.0);
+        // Every transfer starts at the round barrier (t = 0); first
+        // attempts are scheduled in edge order so jitter draws are
+        // position-independent of queue behavior.
+        for e in 0..self.edges.len() {
+            let b = bits[self.edges[e].src as usize];
+            let dur = xfer_time(&self.edges[e], b, self.model.jitter, self.rngs.get_mut(e));
+            self.stats.busy_link_s += dur;
+            self.queue.push(Event { at: dur, edge: e as u32, attempt: 0 });
+        }
+        let mut t_end = 0.0f64;
+        while let Some(ev) = self.queue.pop() {
+            let e = ev.edge as usize;
+            // Drop draws come from the edge's own stream in attempt
+            // order, so the outcome is independent of how attempts from
+            // different edges interleave in the queue.
+            let dropped = self.model.drop > 0.0
+                && ev.attempt + 1 < MAX_ATTEMPTS
+                && self.rngs[e].uniform() < self.model.drop;
+            if dropped {
+                self.stats.retransmits += 1;
+                let b = bits[self.edges[e].src as usize];
+                let dur = xfer_time(&self.edges[e], b, self.model.jitter, self.rngs.get_mut(e));
+                self.stats.busy_link_s += dur;
+                self.queue.push(Event { at: ev.at + dur, edge: ev.edge, attempt: ev.attempt + 1 });
+            } else {
+                let dst = self.edges[e].dst as usize;
+                if ev.at > self.arrival[dst] {
+                    self.arrival[dst] = ev.at;
+                }
+                if ev.at > t_end {
+                    t_end = ev.at;
+                }
+            }
+        }
+        // Barrier accounting: everyone waits for the slowest arrival.
+        let mut worst = 0usize;
+        for i in 0..n {
+            self.stats.idle_s[i] += t_end - self.arrival[i];
+            if self.arrival[i] > self.arrival[worst] {
+                worst = i;
+            }
+        }
+        self.stats.straggler_rounds[worst] += 1;
+        self.stats.sim_time += t_end;
+        self.stats.rounds += 1;
+        t_end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::network::{LinkModel, TrafficStats};
+    use crate::topology::{MixingRule, Topology};
+
+    fn ring(n: usize) -> MixingMatrix {
+        Topology::Ring.build(n, MixingRule::UniformNeighbors)
+    }
+
+    #[test]
+    fn homogeneous_round_matches_legacy_formula_bitwise() {
+        let mix = ring(6);
+        let link = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let mut timer = RoundTimer::new(&mix, NetModel::uniform(1e-3, 1e6), 42);
+        let mut traffic = TrafficStats::new(6);
+        let mut sim = 0.0f64;
+        for round in 0..5u64 {
+            let bits: Vec<u64> = (0..6).map(|i| 1000 + 137 * i * (round + 1)).collect();
+            traffic.record_round(&mix, &link, &bits);
+            sim += timer.round(&bits);
+        }
+        assert_eq!(sim.to_bits(), traffic.sim_time.to_bits());
+        assert_eq!(timer.stats.rounds, 5);
+    }
+
+    #[test]
+    fn straggler_frac_zero_degenerates_to_uniform() {
+        let mix = ring(5);
+        let bits = vec![1000u64; 5];
+        let mut uni = RoundTimer::new(&mix, NetModel::uniform(1e-4, 1e9), 1);
+        let m = NetModel::parse("straggler:1e-4:1e9:0:50").unwrap();
+        let mut st = RoundTimer::new(&mix, m, 1);
+        assert_eq!(uni.round(&bits).to_bits(), st.round(&bits).to_bits());
+    }
+
+    #[test]
+    fn straggler_agents_slow_the_round_and_show_in_stats() {
+        let mix = ring(8);
+        let bits = vec![10_000u64; 8];
+        let mut uni = RoundTimer::new(&mix, NetModel::uniform(1e-4, 1e6), 3);
+        let fast = uni.round(&bits);
+        // Scan for a seed whose flag draws produce ≥1 straggler but not
+        // all 8 (frac=0.5 at n=8 makes both failure modes rare, but the
+        // test must not depend on one seed's luck).
+        let m = NetModel::parse("straggler:1e-4:1e6:0.5:20").unwrap();
+        let mut st = (0..100u64)
+            .map(|seed| RoundTimer::new(&mix, m, seed))
+            .find(|t| {
+                let slowed = t.links().iter().filter(|l| l.latency_s > 1e-4).count();
+                slowed > 0 && slowed < t.n_links()
+            })
+            .expect("no seed in 0..100 drew a mixed straggler set");
+        let slow = st.round(&bits);
+        assert!(
+            slow > fast,
+            "straggler round ({slow}) not slower than uniform ({fast})"
+        );
+        // Someone strained the barrier; idle is nonzero for the fast side.
+        assert!(st.stats.max_idle() > 0.0);
+        assert_eq!(st.stats.straggler_rounds.iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn drop_retransmits_and_extends_rounds() {
+        let mix = ring(6);
+        let bits = vec![100_000u64; 6];
+        let m = NetModel::parse("uniform:1e-4:1e6:drop=0.4").unwrap();
+        let mut lossy = RoundTimer::new(&mix, m, 9);
+        let mut clean = RoundTimer::new(&mix, NetModel::uniform(1e-4, 1e6), 9);
+        let mut lossy_t = 0.0;
+        let mut clean_t = 0.0;
+        for _ in 0..20 {
+            lossy_t += lossy.round(&bits);
+            clean_t += clean.round(&bits);
+        }
+        assert!(lossy.stats.retransmits > 0, "drop=0.4 over 240 transfers never dropped");
+        assert!(lossy_t > clean_t);
+        // Busy time grows with every attempt; utilization stays in (0, 1].
+        let u = lossy.stats.utilization(lossy.n_links());
+        assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn same_seed_same_timings_fresh_timer() {
+        let mix = ring(7);
+        let m = NetModel::parse("lognormal:1e-4:1e8:0.7:jitter=0.3:drop=0.2").unwrap();
+        let run = || {
+            let mut t = RoundTimer::new(&mix, m, 17);
+            let durs: Vec<u64> = (0..15u64)
+                .map(|r| {
+                    let bits: Vec<u64> = (0..7).map(|i| 500 + 999 * i * (r + 1)).collect();
+                    t.round(&bits).to_bits()
+                })
+                .collect();
+            (durs, t.stats.clone())
+        };
+        let (d1, s1) = run();
+        let (d2, s2) = run();
+        assert_eq!(d1, d2);
+        assert_eq!(s1.retransmits, s2.retransmits);
+        assert_eq!(s1.straggler_rounds, s2.straggler_rounds);
+        for (a, b) in s1.idle_s.iter().zip(&s2.idle_s) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn model_seed_pins_network_across_run_seeds() {
+        let mix = ring(6);
+        let params = |m: NetModel, engine_seed: u64| -> Vec<(u64, u64)> {
+            RoundTimer::new(&mix, m, engine_seed)
+                .links()
+                .iter()
+                .map(|l| (l.latency_s.to_bits(), l.bandwidth_bps.to_bits()))
+                .collect()
+        };
+        let pinned = NetModel::parse("lognormal:1e-4:1e9:0.8:seed=7").unwrap();
+        assert_eq!(params(pinned, 1), params(pinned, 2), "seed=7 must pin the network");
+        let unpinned = NetModel::parse("lognormal:1e-4:1e9:0.8").unwrap();
+        assert_ne!(
+            params(unpinned, 1),
+            params(unpinned, 2),
+            "default must re-draw per run seed"
+        );
+    }
+
+    #[test]
+    fn undirected_pairs_share_parameters() {
+        let mix = ring(5);
+        let m = NetModel::parse("lognormal:1e-4:1e9:1.0").unwrap();
+        let t = RoundTimer::new(&mix, m, 5);
+        assert_eq!(t.n_links(), 10, "5-ring has 5 undirected = 10 directed edges");
+        // Consecutive entries are the two directions of one pair.
+        for pair in t.links().chunks(2) {
+            assert_eq!(pair[0].src, pair[1].dst);
+            assert_eq!(pair[0].dst, pair[1].src);
+            assert_eq!(pair[0].latency_s.to_bits(), pair[1].latency_s.to_bits());
+            assert_eq!(pair[0].bandwidth_bps.to_bits(), pair[1].bandwidth_bps.to_bits());
+        }
+    }
+
+    #[test]
+    fn idle_and_straggler_accounting() {
+        // Star: agent 0 talks to everyone. Give agent 3 a huge payload so
+        // every round ends on its transfer into agent 0.
+        let mix = Topology::Star.build(4, MixingRule::UniformNeighbors);
+        let mut t = RoundTimer::new(&mix, NetModel::uniform(0.0, 1e3), 2);
+        let bits = [10u64, 10, 10, 1000];
+        for _ in 0..3 {
+            let dur = t.round(&bits);
+            assert_eq!(dur.to_bits(), 1.0f64.to_bits(), "1000 bits / 1e3 bps");
+        }
+        // Agent 0 receives the straggler payload last ⇒ zero idle; the
+        // leaves only receive agent 0's small payload ⇒ big idle.
+        assert_eq!(t.stats.idle_s[0], 0.0);
+        for leaf in 1..4 {
+            assert!(t.stats.idle_s[leaf] > 0.0, "leaf {leaf} should wait at the barrier");
+        }
+        // The round ends on an arrival at agent 0, so agent 0 is the
+        // "straggler" (latest arrival) every round.
+        assert_eq!(t.stats.straggler_rounds[0], 3);
+        assert_eq!(t.stats.sim_time, 3.0);
+    }
+}

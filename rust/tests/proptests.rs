@@ -264,3 +264,49 @@ fn engine_seed_determinism() {
         "different seeds should give different dither"
     );
 }
+
+/// Homogeneous simnet == legacy `TrafficStats.sim_time`, bit for bit:
+/// for any topology, link parameters, round count, and per-agent bit
+/// pattern, the event-driven round duration under the degenerate
+/// `uniform` model accumulates to exactly the legacy formula's time
+/// (the simnet §Timing contract, half 2; the engine-level differential
+/// lives in `tests/simnet.rs`).
+#[test]
+fn prop_homogeneous_simnet_matches_legacy_sim_time() {
+    use lead::coordinator::network::{LinkModel, TrafficStats};
+    use lead::simnet::{NetModel, RoundTimer};
+    forall(48, 0x5117_ED, |g| {
+        let n = g.usize_in(2..=12);
+        let topo = match g.usize_in(0..=3) {
+            0 => Topology::Ring,
+            1 => Topology::FullyConnected,
+            2 => Topology::Star,
+            _ => Topology::Path,
+        };
+        let rule = *g.choose(&[
+            MixingRule::UniformNeighbors,
+            MixingRule::MetropolisHastings,
+            MixingRule::LazyMetropolis,
+        ]);
+        let mix = topo.build(n, rule);
+        let lat = g.f64_in(0.0, 1e-2);
+        let bw = g.f64_in(1e3, 1e12);
+        let link = LinkModel { latency_s: lat, bandwidth_bps: bw };
+        let mut timer = RoundTimer::new(&mix, NetModel::uniform(lat, bw), g.case_seed);
+        let mut traffic = TrafficStats::new(n);
+        let mut sim = 0.0f64;
+        let rounds = g.usize_in(1..=6);
+        for _ in 0..rounds {
+            let bits: Vec<u64> = (0..n).map(|_| g.rng.below(1_000_000_000) as u64).collect();
+            traffic.record_round(&mix, &link, &bits);
+            sim += timer.round(&bits);
+        }
+        prop_assert!(
+            sim.to_bits() == traffic.sim_time.to_bits(),
+            "simnet {sim} != legacy {} (n={n}, lat={lat}, bw={bw})",
+            traffic.sim_time
+        );
+        prop_assert!(timer.stats.rounds == rounds, "round count drifted");
+        Ok(())
+    });
+}

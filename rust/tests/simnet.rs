@@ -1,0 +1,212 @@
+//! Differential harness for the simnet timing overlay (`lead::simnet`).
+//!
+//! Pins the two halves of the §Timing contract:
+//!
+//! 1. **Timing-only**: enabling any network model — homogeneous or
+//!    heterogeneous, lossy or clean — leaves the trajectory series
+//!    (dist_opt / consensus / comp_err / bits_per_agent) bitwise-
+//!    identical to the legacy uniform-formula accounting, across codecs
+//!    and thread counts.
+//! 2. **Degenerate exactness**: the homogeneous `uniform` model with no
+//!    jitter/drop reproduces the legacy `TrafficStats` `sim_time`
+//!    bit-for-bit (the companion proptest in `proptests.rs` covers the
+//!    raw RoundTimer-vs-formula identity over random topologies).
+//!
+//! Plus simnet determinism: same seed ⇒ identical timings, idle series,
+//! and straggler/retransmit counts across thread counts and reruns.
+
+use lead::compress::quantize::{PNorm, QuantizeP};
+use lead::compress::topk::TopK;
+use lead::compress::Compressor;
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::coordinator::metrics::RunRecord;
+use lead::coordinator::network::LinkModel;
+use lead::problems::linreg::LinReg;
+use lead::simnet::NetModel;
+use lead::topology::{MixingRule, Topology};
+use std::sync::Arc;
+
+fn codec(name: &str) -> Box<dyn Compressor> {
+    match name {
+        "topk" => Box::new(TopK::new(5)),
+        "qinf" => Box::new(QuantizeP::new(2, PNorm::Inf, 64)),
+        other => panic!("unknown test codec {other}"),
+    }
+}
+
+/// One short LEAD run on the Fig. 1-shaped workload with an optional
+/// simnet model (None ⇒ legacy accounting via `link`).
+fn run_with(
+    net: Option<&str>,
+    link: LinkModel,
+    codec_name: &str,
+    topology: Topology,
+    threads: usize,
+) -> RunRecord {
+    let n = 8;
+    let p = LinReg::synthetic(n, 40, 0.1, 3);
+    let mix = topology.build(n, MixingRule::UniformNeighbors);
+    let cfg = EngineConfig {
+        threads,
+        record_every: 7,
+        link,
+        net: net.map(|s| NetModel::parse(s).expect("bad test model")),
+        ..Default::default()
+    };
+    let mut e = Engine::new(cfg, mix, Arc::new(p));
+    e.run(
+        Box::new(lead::algorithms::lead::Lead::paper_default()),
+        Some(codec(codec_name)),
+        50,
+    )
+}
+
+fn assert_trajectory_bitwise_equal(a: &RunRecord, b: &RunRecord, tag: &str) {
+    assert_eq!(a.series.len(), b.series.len(), "{tag}: series length");
+    for (ma, mb) in a.series.iter().zip(&b.series) {
+        assert_eq!(ma.round, mb.round, "{tag}");
+        assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.consensus.to_bits(), mb.consensus.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.comp_err.to_bits(), mb.comp_err.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.bits_per_agent, mb.bits_per_agent, "{tag} round {}", ma.round);
+    }
+}
+
+/// Acceptance pin: degenerate homogeneous simnet == legacy accounting,
+/// *including* sim_time, bit for bit — at non-default link parameters
+/// too, and for both dense and sparse codecs.
+#[test]
+fn homogeneous_simnet_reproduces_legacy_exactly() {
+    for (spec, link) in [
+        ("uniform:1e-4:1e9", LinkModel { latency_s: 1e-4, bandwidth_bps: 1e9 }),
+        ("uniform:2.5e-3:1.5e7", LinkModel { latency_s: 2.5e-3, bandwidth_bps: 1.5e7 }),
+    ] {
+        for codec_name in ["topk", "qinf"] {
+            let legacy = run_with(None, link, codec_name, Topology::Ring, 1);
+            let sim = run_with(Some(spec), link, codec_name, Topology::Ring, 1);
+            assert_trajectory_bitwise_equal(&legacy, &sim, codec_name);
+            for (ma, mb) in legacy.series.iter().zip(&sim.series) {
+                assert_eq!(
+                    ma.sim_time.to_bits(),
+                    mb.sim_time.to_bits(),
+                    "{codec_name}/{spec} round {}: legacy {} vs simnet {}",
+                    ma.round,
+                    ma.sim_time,
+                    mb.sim_time
+                );
+            }
+            assert!(sim.net.is_some(), "simnet run must carry a net summary");
+            assert!(legacy.net.is_none(), "legacy run must not carry a net summary");
+        }
+    }
+}
+
+/// The overlay is timing-only for *every* model: heterogeneous links,
+/// stragglers, jitter, and packet loss change sim_time but never the
+/// trajectory, across codecs, topologies, and thread counts.
+#[test]
+fn heterogeneous_models_never_perturb_trajectories() {
+    let link = LinkModel::default();
+    let models = [
+        "lognormal:1e-3:1e8:0.75",
+        "straggler:1e-4:1e9:0.5:10",
+        "uniform:1e-4:1e9:drop=0.2",
+        "uniform:1e-4:1e9:jitter=0.5",
+        "straggler:1e-3:1e7:0.25:20:drop=0.1:jitter=0.2:seed=9",
+    ];
+    for (codec_name, topology) in [("topk", Topology::Ring), ("qinf", Topology::Star)] {
+        let legacy = run_with(None, link, codec_name, topology.clone(), 1);
+        for model in models {
+            for threads in [1usize, 3] {
+                let sim = run_with(Some(model), link, codec_name, topology.clone(), threads);
+                assert_trajectory_bitwise_equal(&legacy, &sim, &format!("{codec_name}/{model}"));
+            }
+        }
+    }
+}
+
+/// Lossy/jittery models actually move the clock (and count retransmits)
+/// — the overlay is observable where it should be.
+#[test]
+fn lossy_models_extend_time_and_count_retransmits() {
+    let link = LinkModel::default();
+    let legacy = run_with(None, link, "topk", Topology::Ring, 1);
+    let dropped = run_with(Some("uniform:1e-4:1e9:drop=0.3"), link, "topk", Topology::Ring, 1);
+    let legacy_t = legacy.last().sim_time;
+    let lossy_t = dropped.last().sim_time;
+    assert!(
+        lossy_t > legacy_t,
+        "drop=0.3 did not extend sim_time ({lossy_t} vs {legacy_t})"
+    );
+    let net = dropped.net.as_ref().unwrap();
+    assert!(net.retransmits > 0, "800 transfers at drop=0.3 never retransmitted");
+    assert!(net.utilization > 0.0 && net.utilization <= 1.0);
+    // Straggler barrier waits surface in the idle series and metrics.
+    let straggled = run_with(Some("straggler:1e-4:1e6:0.5:20:seed=3"), link, "topk", Topology::Ring, 1);
+    let snet = straggled.net.as_ref().unwrap();
+    assert_eq!(snet.idle_s.len(), 8);
+    assert_eq!(
+        snet.straggler_rounds.iter().sum::<u64>(),
+        50,
+        "exactly one straggler per simulated round"
+    );
+    if snet.idle_s.iter().any(|&v| v > 0.0) {
+        assert!(
+            straggled.last().idle_max > 0.0,
+            "idle_max metric must reflect nonzero idle"
+        );
+    }
+    assert_eq!(legacy.last().idle_max, 0.0, "legacy accounting reports no idle");
+}
+
+/// Same seed ⇒ identical event order, timings, and stats — across engine
+/// thread counts (the timer is coordinator-side) and across reruns.
+#[test]
+fn simnet_determinism_across_thread_counts_and_reruns() {
+    let link = LinkModel::default();
+    let model = "straggler:1e-3:1e7:0.25:20:drop=0.1:jitter=0.2";
+    let reference = run_with(Some(model), link, "topk", Topology::Ring, 1);
+    for threads in [1usize, 3, 8] {
+        let rerun = run_with(Some(model), link, "topk", Topology::Ring, threads);
+        assert_trajectory_bitwise_equal(&reference, &rerun, &format!("threads={threads}"));
+        for (ma, mb) in reference.series.iter().zip(&rerun.series) {
+            assert_eq!(
+                ma.sim_time.to_bits(),
+                mb.sim_time.to_bits(),
+                "threads={threads} round {}",
+                ma.round
+            );
+            assert_eq!(ma.idle_max.to_bits(), mb.idle_max.to_bits(), "threads={threads}");
+        }
+        let (a, b) = (reference.net.as_ref().unwrap(), rerun.net.as_ref().unwrap());
+        assert_eq!(a.retransmits, b.retransmits, "threads={threads}");
+        assert_eq!(a.straggler_rounds, b.straggler_rounds, "threads={threads}");
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "threads={threads}");
+        for (x, y) in a.idle_s.iter().zip(&b.idle_s) {
+            assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+        }
+    }
+}
+
+/// time_to_tol reads the sim_time of the first observed round at
+/// tolerance — so the same trajectory crosses tol at different *times*
+/// under different link models (the whole point of the time axis).
+#[test]
+fn time_to_tol_follows_the_link_model() {
+    let link = LinkModel::default();
+    let fast = run_with(Some("uniform:1e-4:1e9"), link, "qinf", Topology::Ring, 1);
+    let slow = run_with(Some("uniform:1e-2:1e6"), link, "qinf", Topology::Ring, 1);
+    // Pick a tolerance both runs reach: the dist at the midpoint of the
+    // (shared) trajectory.
+    let tol = fast.series[fast.series.len() / 2].dist_opt;
+    let (rf, rs) = (fast.rounds_to_tol(tol), slow.rounds_to_tol(tol));
+    assert_eq!(rf, rs, "same trajectory ⇒ same round count");
+    let (tf, ts) = (fast.time_to_tol(tol).unwrap(), slow.time_to_tol(tol).unwrap());
+    assert!(
+        ts > tf,
+        "slower network must take longer to the same accuracy ({ts} vs {tf})"
+    );
+    // And the value is exactly the sim_time recorded at that round.
+    let at = fast.series.iter().find(|m| m.dist_opt <= tol).unwrap();
+    assert_eq!(tf.to_bits(), at.sim_time.to_bits());
+}
