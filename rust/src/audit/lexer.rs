@@ -1,0 +1,309 @@
+//! Line lexer for the in-tree auditor: split rust source into per-line
+//! *code* and *comment* channels so the rules in [`super::rules`] can
+//! pattern-match code without being fooled by string literals or
+//! commented-out snippets, and can read justification comments
+//! (`SAFETY:` / `ORDERING:` / `audit:allow` pragmas) without matching
+//! code.
+//!
+//! This is deliberately not a full rust lexer — it only has to get four
+//! things right, and has unit tests for each:
+//!
+//! 1. line comments (`//`, `///`, `//!`) and *nested* block comments
+//!    (`/* /* */ */`), including multi-line ones;
+//! 2. string literals — plain (`"…"` with escapes), byte (`b"…"`), and
+//!    raw (`r"…"`, `r#"…"#`, `br##"…"##`) — whose *contents* are blanked
+//!    from the code channel (the delimiting quotes survive so the code
+//!    still reads naturally in diagnostics);
+//! 3. char literals vs lifetimes: `'a'` is a literal (blanked), `&'a T`
+//!    is code;
+//! 4. physical line numbering: every `\n` produces exactly one [`Line`],
+//!    even inside multi-line strings and block comments, so rule
+//!    diagnostics carry exact `file:line` positions.
+
+/// One physical source line, split into channels.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Source text with comments removed and string/char contents
+    /// blanked (delimiters kept).
+    pub code: String,
+    /// Concatenated comment text on this line (both `//…` and the part
+    /// of a `/* … */` that falls on this line), without the `//` that
+    /// introduced it.
+    pub comment: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Split `src` into per-line code/comment channels (see module docs).
+pub fn lex(src: &str) -> Vec<Line> {
+    let ch: Vec<char> = src.chars().collect();
+    let n = ch.len();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    // Carried across physical lines:
+    let mut block_depth = 0usize; // nested /* */ depth
+    let mut in_str = false; // inside a "…" / b"…" literal
+    let mut raw_hashes: Option<usize> = None; // inside r#…#"…"#…# with k hashes
+    let mut prev_ident = false; // last code char was identifier-ish
+    let mut i = 0usize;
+
+    while i < n {
+        let c = ch[i];
+        // Physical line breaks always produce a Line, whatever the state.
+        if c == '\n' {
+            lines.push(Line { code: std::mem::take(&mut code), comment: std::mem::take(&mut comment) });
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        if block_depth > 0 {
+            if c == '/' && ch.get(i + 1) == Some(&'*') {
+                block_depth += 1;
+                i += 2;
+            } else if c == '*' && ch.get(i + 1) == Some(&'/') {
+                block_depth -= 1;
+                i += 2;
+            } else {
+                comment.push(c);
+                i += 1;
+            }
+            continue;
+        }
+        if let Some(h) = raw_hashes {
+            // Raw string: ends at `"` followed by exactly `h` hashes.
+            if c == '"' && ch[i + 1..].iter().take(h).filter(|&&x| x == '#').count() == h {
+                code.push('"');
+                i += 1 + h;
+                raw_hashes = None;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if in_str {
+            match c {
+                '\\' => {
+                    // Escape: swallow the next char unless it is the
+                    // newline (handled by the top-of-loop line break).
+                    if ch.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                }
+                '"' => {
+                    code.push('"');
+                    in_str = false;
+                    i += 1;
+                }
+                _ => i += 1,
+            }
+            continue;
+        }
+        // --- code state ---
+        match c {
+            '/' if ch.get(i + 1) == Some(&'/') => {
+                // Line comment: rest of the line is comment text. Strip
+                // the introducing slashes and any doc-comment marker.
+                let mut j = i + 2;
+                if ch.get(j) == Some(&'/') || ch.get(j) == Some(&'!') {
+                    j += 1;
+                }
+                while j < n && ch[j] != '\n' {
+                    comment.push(ch[j]);
+                    j += 1;
+                }
+                i = j;
+            }
+            '/' if ch.get(i + 1) == Some(&'*') => {
+                block_depth = 1;
+                i += 2;
+            }
+            'r' | 'b' if !prev_ident => {
+                // Possible raw-string / byte-string start: `r…`, `br…`,
+                // or `b"…"`.
+                let mut j = i + 1;
+                if c == 'b' && ch.get(j) == Some(&'r') {
+                    j += 1;
+                }
+                let mut hashes = 0usize;
+                while ch.get(j + hashes) == Some(&'#') {
+                    hashes += 1;
+                }
+                let rawish = j > i + 1 || c == 'r'; // an `r` is present
+                if rawish && ch.get(j + hashes) == Some(&'"') {
+                    for k in i..j {
+                        code.push(ch[k]);
+                    }
+                    code.push('"');
+                    raw_hashes = Some(hashes);
+                    i = j + hashes + 1;
+                } else if c == 'b' && ch.get(i + 1) == Some(&'"') {
+                    code.push('b');
+                    code.push('"');
+                    in_str = true;
+                    i += 2;
+                } else {
+                    code.push(c);
+                    prev_ident = true;
+                    i += 1;
+                }
+            }
+            '"' => {
+                code.push('"');
+                in_str = true;
+                i += 1;
+            }
+            '\'' => {
+                // Char literal vs lifetime. `'\…'` and `'x'` are
+                // literals; anything else (`'a`, `'static`, `'_`) is a
+                // lifetime and stays in the code channel.
+                if ch.get(i + 1) == Some(&'\\') {
+                    // Escaped char literal: the backslash escapes exactly
+                    // the next char (`'\\'`, `'\''`); longer escapes
+                    // (`'\u{…}'`) extend to the closing quote.
+                    let mut j = i + 3;
+                    while j < n && ch[j] != '\'' && ch[j] != '\n' {
+                        j += 1;
+                    }
+                    code.push_str("''");
+                    i = (j + 1).min(n);
+                } else if i + 2 < n && ch[i + 2] == '\'' && ch[i + 1] != '\n' {
+                    code.push_str("''");
+                    i += 3;
+                } else {
+                    code.push('\'');
+                    i += 1;
+                }
+                prev_ident = false;
+            }
+            _ => {
+                code.push(c);
+                prev_ident = is_ident(c);
+                i += 1;
+            }
+        }
+    }
+    lines.push(Line { code, comment });
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_split_channels() {
+        let ls = lex("let x = 1; // trailing note\n/// doc\nlet y = 2;");
+        assert_eq!(ls.len(), 3);
+        assert_eq!(ls[0].code.trim(), "let x = 1;");
+        assert_eq!(ls[0].comment.trim(), "trailing note");
+        assert!(ls[1].code.trim().is_empty());
+        assert_eq!(ls[1].comment.trim(), "doc");
+        assert_eq!(ls[2].code.trim(), "let y = 2;");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let ls = lex("a /* one /* two */ still */ b\nc");
+        assert_eq!(ls[0].code.replace(' ', ""), "ab");
+        assert!(ls[0].comment.contains("one"));
+        assert!(ls[0].comment.contains("still"));
+        assert_eq!(ls[1].code, "c");
+    }
+
+    #[test]
+    fn multiline_block_comment_keeps_line_count() {
+        let ls = lex("x\n/* a\nb\nc */ y\nz");
+        assert_eq!(ls.len(), 5);
+        assert_eq!(ls[0].code, "x");
+        assert!(ls[1].code.trim().is_empty());
+        assert!(ls[2].code.trim().is_empty());
+        assert_eq!(ls[2].comment, "b");
+        assert_eq!(ls[3].code.trim(), "y");
+        assert_eq!(ls[4].code, "z");
+    }
+
+    #[test]
+    fn string_contents_blanked() {
+        let ls = lex("let s = \"unsafe // HashMap\"; f();");
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(!ls[0].code.contains("HashMap"));
+        assert!(ls[0].comment.is_empty(), "comment chars inside strings are not comments");
+        assert!(ls[0].code.contains("f();"));
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_string() {
+        let ls = lex(r#"let s = "a\"b"; g();"#);
+        assert!(ls[0].code.contains("g();"));
+        assert!(!ls[0].code.contains('a'), "string contents must be blanked: {}", ls[0].code);
+    }
+
+    #[test]
+    fn raw_strings_blanked() {
+        let src = "let s = r#\"unsafe \"quoted\" HashMap\"#; h();";
+        let ls = lex(src);
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(!ls[0].code.contains("HashMap"));
+        assert!(ls[0].code.contains("h();"));
+        // Byte strings too.
+        let ls = lex("let b = b\"unsafe\"; k();");
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(ls[0].code.contains("k();"));
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_count() {
+        let ls = lex("let s = \"line one\nline two unsafe\n\"; tail();");
+        assert_eq!(ls.len(), 3);
+        assert!(!ls[1].code.contains("unsafe"));
+        assert!(ls[2].code.contains("tail();"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let ls = lex("let c = 'x'; let n = '\\n'; fn f<'a>(v: &'a str) -> &'static str { v }");
+        let code = &ls[0].code;
+        assert!(!code.contains('x'), "char literal contents blanked: {code}");
+        assert!(code.contains("<'a>"), "lifetimes survive: {code}");
+        assert!(code.contains("&'static str"), "lifetimes survive: {code}");
+    }
+
+    #[test]
+    fn tricky_escaped_char_literals() {
+        // `'\\'` and `'\''` must not swallow their closing quote (a
+        // mis-scan here would blank the rest of the file as "string").
+        let ls = lex("let a = '\\\\'; let b = '\\''; let c = '\\u{7f}'; tail();");
+        assert!(ls[0].code.contains("tail();"), "lexer resynced: {}", ls[0].code);
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_raw_string() {
+        // `var` followed by a string must not eat the `r` as a raw-string
+        // prefix; the string opens normally and blanks its contents.
+        let ls = lex("foo(var, \"unsafe\");");
+        assert!(ls[0].code.contains("var"));
+        assert!(!ls[0].code.contains("unsafe"));
+    }
+
+    #[test]
+    fn comment_markers_inside_strings_ignored() {
+        let ls = lex("let s = \"// not a comment /* nope */\"; end();");
+        assert!(ls[0].comment.is_empty());
+        assert!(ls[0].code.contains("end();"));
+    }
+
+    #[test]
+    fn line_numbers_are_physical() {
+        let src = "a\nb\nc\n";
+        assert_eq!(codes(src), vec!["a", "b", "c", ""]);
+    }
+}

@@ -1,0 +1,178 @@
+//! In-tree determinism & unsafe-soundness auditor (`lead audit`).
+//!
+//! Every correctness claim in this repo is a bitwise differential pin:
+//! sparse mixing equals dense (`sparse_mixing_bitwise_equals_dense`),
+//! scheduler modes are interchangeable
+//! (`scheduler_modes_bitwise_identical`), the sparse-own apply path
+//! equals eager decode (`rust/tests/sparse_own.rs`), and simnet is a
+//! timing-only overlay (`rust/tests/simnet.rs`). One nondeterministic
+//! float ordering or RNG-stream leak silently invalidates all of them —
+//! the trajectories would still *look* plausible. This module makes the
+//! rules those pins rely on mechanical: a hand-rolled, zero-dependency
+//! static-analysis pass over the repo's own sources, run both as
+//! `lead audit [path]` (CI) and as the `tree_audits_clean` test below.
+//!
+//! # Determinism invariants (the enforced rules)
+//!
+//! * **`safety_comment`** (R1) — every `unsafe` block/fn/impl carries a
+//!   `// SAFETY:` comment on, or directly above, its line. The raw-pointer
+//!   fan-out in `pool.rs` and the Send/Sync story in `runtime`/`problems`
+//!   are soundness *arguments*; this rule keeps them written down where
+//!   they are used (cross-checked in CI by
+//!   `clippy::undocumented_unsafe_blocks`).
+//! * **`nondeterminism`** (R2) — trajectory-affecting code must not use
+//!   `HashMap`/`HashSet` (unordered iteration feeding float reductions is
+//!   the classic silent pin-breaker; banning the types subsumes the
+//!   reduction-order hazard), `Instant::now`/`SystemTime` (wall clock), or
+//!   `thread_rng`/`rand::random` (unseeded entropy). Indexed `Vec`s and
+//!   `BTreeMap` are the sanctioned alternatives; wall-clock metrics go
+//!   through one pragma-certified choke point
+//!   (`coordinator::engine::wall_clock`).
+//! * **`rng_stream`** (R3) — `Rng` construction must name its purpose
+//!   stream on the same statement: `Rng::new(seed).derive(streams::…)`.
+//!   Purpose-separated streams ([`crate::rng::streams`]) are why enabling
+//!   one feature (e.g. the simnet overlay, seeded from `streams::NET`)
+//!   cannot shift the draws of another; an anonymous `Rng::new` is where
+//!   that contract leaks.
+//! * **`thread_spawn`** (R4) — no `thread::spawn`/`thread::Builder`/
+//!   `thread::scope` outside `pool.rs`. All parallelism goes through the
+//!   worker pool's dispatch primitives, whose chunking contract is what
+//!   makes thread count a pure performance knob.
+//! * **`atomic_ordering`** (R5) — every atomic `Ordering::{Relaxed,
+//!   Acquire, Release, AcqRel, SeqCst}` carries an `// ORDERING:` comment
+//!   justifying the choice (`cmp::Ordering` is recognized and exempt).
+//!
+//! Rules R2–R5 skip `#[cfg(test)]` regions (tests do not affect
+//! trajectories); R1 applies everywhere. String literals and comments
+//! can never trigger a rule — sources are lexed first
+//! ([`lexer`]), which is also what makes the auditor self-clean: its own
+//! pattern tables are string literals.
+//!
+//! # The escape hatch
+//!
+//! A violation that is genuinely sound is *annotated, not silenced*: put
+//! `audit:allow(rule): reason` in a `//` comment on the offending line,
+//! or on its own line directly above. The reason is mandatory — a pragma
+//! without one (or naming an unknown rule) is itself a diagnostic, so
+//! every exemption in the tree is a reviewed sentence of justification.
+//! `lead audit --list-rules` prints the rule ids.
+//!
+//! # Relation to the bitwise-pin test strategy
+//!
+//! The differential harnesses prove *today's* tree deterministic on the
+//! configurations they run. The auditor complements them: it bounds the
+//! ways a *future* change (the algorithm-zoo arc multiplies the kernels
+//! that must obey these rules) can introduce nondeterminism that those
+//! pins only catch after the fact, and it turns each `unsafe`/atomic into
+//! reviewed text instead of implicit folklore.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{check_file, rules, Diagnostic, RuleInfo};
+
+use crate::error::{err, Result};
+use std::path::{Path, PathBuf};
+
+/// Recursively collect `.rs` files under `path` (or `path` itself when
+/// it is a file), sorted so diagnostics are emitted in a stable order.
+fn rs_files(path: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if path.is_file() {
+        out.push(path.to_path_buf());
+        return Ok(out);
+    }
+    if !path.is_dir() {
+        return Err(err(format!("audit: {} is neither a file nor a directory", path.display())));
+    }
+    let mut stack = vec![path.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let p = entry?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Audit one file or a whole source tree. Returns every diagnostic,
+/// ordered by file then line; an empty vec means the tree is clean.
+pub fn audit_path(path: impl AsRef<Path>) -> Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    for f in rs_files(path.as_ref())? {
+        let src = std::fs::read_to_string(&f)
+            .map_err(|e| err(format!("audit: reading {}: {e}", f.display())))?;
+        diags.extend(check_file(&f.to_string_lossy(), &src));
+    }
+    Ok(diags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The repo's own sources must audit clean: every `unsafe` and atomic
+    /// is annotated and every pragma carries a reason. This is the
+    /// in-tree twin of the CI `lead audit src` step — it keeps the sweep
+    /// honest without a shell.
+    #[test]
+    fn tree_audits_clean() {
+        let src_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let diags = audit_path(&src_dir).expect("audit walk failed");
+        assert!(
+            diags.is_empty(),
+            "rust/src must audit clean; {} violation(s):\n{}",
+            diags.len(),
+            diags.iter().map(|d| format!("  {d}\n")).collect::<String>()
+        );
+    }
+
+    /// The auditor must actually *see* the tree it certifies: sanity-pin
+    /// that the walk finds the known core modules.
+    #[test]
+    fn tree_walk_finds_core_modules() {
+        let src_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let files = rs_files(&src_dir).unwrap();
+        for needle in ["pool.rs", "engine.rs", "scenarios.rs", "neural.rs", "mod.rs"] {
+            assert!(
+                files.iter().any(|f| f.file_name().is_some_and(|n| n == needle)),
+                "walk missed {needle}; found {} files",
+                files.len()
+            );
+        }
+        assert!(files.len() > 30, "suspiciously small tree: {} files", files.len());
+    }
+
+    #[test]
+    fn audit_path_accepts_single_file() {
+        let pool = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/pool.rs");
+        let diags = audit_path(&pool).unwrap();
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn missing_path_errors() {
+        assert!(audit_path("/definitely/not/a/path").is_err());
+    }
+
+    #[test]
+    fn rule_listing_is_stable() {
+        let ids: Vec<&str> = rules().iter().map(|r| r.id).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "safety_comment",
+                "nondeterminism",
+                "rng_stream",
+                "thread_spawn",
+                "atomic_ordering",
+                "pragma"
+            ]
+        );
+    }
+}

@@ -1,0 +1,542 @@
+//! The auditor's rule engine: pragma parsing, `#[cfg(test)]`-region
+//! tracking, justification-comment lookup, and the five rules R1–R5
+//! (see `super` for the invariant each one protects).
+//!
+//! Every rule works on the lexed line model from [`super::lexer`], so
+//! string literals and commented-out code can never trigger a rule, and
+//! justifications are read from real comments only.
+
+use super::lexer::{lex, Line};
+
+/// One finding, rendered as `file:line: [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub file: String,
+    /// 1-indexed physical source line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Static description of one rule, for `lead audit --list-rules`.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+/// Rule ids, in the order they are listed and applied. `pragma` is the
+/// meta-rule validating the escape hatch itself and cannot be allowed
+/// away.
+pub const R_SAFETY: &str = "safety_comment";
+pub const R_NONDET: &str = "nondeterminism";
+pub const R_RNG: &str = "rng_stream";
+pub const R_THREAD: &str = "thread_spawn";
+pub const R_ATOMIC: &str = "atomic_ordering";
+pub const R_PRAGMA: &str = "pragma";
+
+pub fn rules() -> &'static [RuleInfo] {
+    &[
+        RuleInfo {
+            id: R_SAFETY,
+            summary: "every `unsafe` block/fn/impl carries a `SAFETY:` comment on or \
+                      directly above the line (applies to test code too)",
+        },
+        RuleInfo {
+            id: R_NONDET,
+            summary: "no nondeterminism sources in trajectory-affecting code: HashMap/HashSet \
+                      (unordered iteration), Instant::now/SystemTime (wall clock), \
+                      thread_rng/rand::random (unseeded RNG)",
+        },
+        RuleInfo {
+            id: R_RNG,
+            summary: "Rng construction must seed a named purpose stream on the same \
+                      statement (`Rng::new(seed).derive(streams::…)`)",
+        },
+        RuleInfo {
+            id: R_THREAD,
+            summary: "no thread spawning (`thread::spawn`/`thread::Builder`/`thread::scope`) \
+                      outside pool.rs — all parallelism goes through the worker pool",
+        },
+        RuleInfo {
+            id: R_ATOMIC,
+            summary: "every atomic memory ordering carries an `ORDERING:` comment on or \
+                      directly above the line",
+        },
+        RuleInfo {
+            id: R_PRAGMA,
+            summary: "meta-rule: `audit:allow(rule): reason` pragmas must name a known \
+                      rule and give a non-empty reason (cannot itself be allowed away)",
+        },
+    ]
+}
+
+fn known_rule(id: &str) -> bool {
+    rules().iter().any(|r| r.id == id && r.id != R_PRAGMA)
+}
+
+/// A parsed `audit:allow(rule): reason` pragma.
+struct Pragma {
+    line: usize,
+    rule: String,
+    /// Err(msg) when malformed (unknown rule / missing reason).
+    ok: Result<(), String>,
+    /// Whether the pragma line itself carries code (then it covers that
+    /// line; otherwise it covers the next line with code).
+    own_line: bool,
+}
+
+/// Parse the pragma on `comment`, if any. Only recognized when the
+/// comment *starts* with `audit:allow(` (after trimming), so prose that
+/// merely mentions the syntax mid-sentence is not a pragma.
+fn parse_pragma(comment: &str) -> Option<(String, Result<(), String>)> {
+    let t = comment.trim_start();
+    let rest = t.strip_prefix("audit:allow(")?;
+    let Some(close) = rest.find(')') else {
+        return Some((String::new(), Err("unclosed `audit:allow(`".into())));
+    };
+    let rule = rest[..close].trim().to_string();
+    let tail = &rest[close + 1..];
+    if !known_rule(&rule) {
+        return Some((rule.clone(), Err(format!("unknown rule {rule:?} (see `lead audit --list-rules`)"))));
+    }
+    let reason_ok = tail
+        .strip_prefix(':')
+        .map(|r| !r.trim().is_empty())
+        .unwrap_or(false);
+    if !reason_ok {
+        return Some((rule, Err("missing reason — write `audit:allow(rule): why this is sound`".into())));
+    }
+    Some((rule, Ok(())))
+}
+
+/// Per-file analysis context computed once from the lexed lines.
+struct FileCtx {
+    lines: Vec<Line>,
+    /// 0-indexed: line is inside a `#[cfg(test)]` item (attribute line
+    /// included). Test code cannot affect trajectories, so R2–R5 skip it.
+    in_test: Vec<bool>,
+    /// 0-indexed: rules allowed on this line via pragma.
+    allowed: Vec<Vec<String>>,
+    pragma_diags: Vec<(usize, String)>,
+}
+
+fn build_ctx(src: &str) -> FileCtx {
+    let lines = lex(src);
+    let n = lines.len();
+
+    // --- #[cfg(test)] regions: attribute → next `{` → matching `}` ---
+    let mut in_test = vec![false; n];
+    let mut depth = 0i64;
+    let mut pending = false; // saw the attribute, waiting for the item's `{`
+    let mut close_at: Option<i64> = None;
+    for (i, l) in lines.iter().enumerate() {
+        if close_at.is_some() || pending {
+            in_test[i] = true;
+        }
+        if l.code.replace(' ', "").contains("#[cfg(test)]") {
+            pending = true;
+            in_test[i] = true;
+        }
+        for c in l.code.chars() {
+            match c {
+                '{' => {
+                    if pending && close_at.is_none() {
+                        close_at = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if close_at == Some(depth) {
+                        close_at = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // --- pragmas ---
+    let mut pragmas = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if let Some((rule, ok)) = parse_pragma(&l.comment) {
+            pragmas.push(Pragma { line: i, rule, ok, own_line: !l.code.trim().is_empty() });
+        }
+    }
+    let mut allowed: Vec<Vec<String>> = vec![Vec::new(); n];
+    let mut pragma_diags = Vec::new();
+    for p in pragmas {
+        match p.ok {
+            Err(msg) => pragma_diags.push((p.line, msg)),
+            Ok(()) => {
+                let target = if p.own_line {
+                    Some(p.line)
+                } else {
+                    // Standalone pragma covers the next line carrying code.
+                    (p.line + 1..n).find(|&j| !lines[j].code.trim().is_empty())
+                };
+                match target {
+                    Some(t) => allowed[t].push(p.rule),
+                    None => pragma_diags.push((p.line, "pragma covers no code line".into())),
+                }
+            }
+        }
+    }
+
+    FileCtx { lines, in_test, allowed, pragma_diags }
+}
+
+impl FileCtx {
+    /// `needle` present in the comment on line `i` or in the contiguous
+    /// run of comment-only lines directly above it (a blank line or code
+    /// breaks the run — justifications must sit *on* the site).
+    fn justified(&self, i: usize, needle: &str) -> bool {
+        if self.lines[i].comment.contains(needle) {
+            return true;
+        }
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let l = &self.lines[j];
+            if !l.code.trim().is_empty() || l.comment.trim().is_empty() {
+                return false;
+            }
+            if l.comment.contains(needle) {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn is_allowed(&self, i: usize, rule: &str) -> bool {
+        self.allowed[i].iter().any(|r| r == rule)
+    }
+}
+
+/// `needle` occurs in `code` as a full word (not as part of a longer
+/// identifier, so `unsafe_op_in_unsafe_fn` does not count as `unsafe`).
+fn contains_word(code: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(needle) {
+        let at = start + pos;
+        let before = code[..at].chars().next_back();
+        let after = code[at + needle.len()..].chars().next();
+        let b_ok = before.is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        let a_ok = after.is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        if b_ok && a_ok {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}
+
+const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// True when the line uses an *atomic* memory ordering (and not
+/// `cmp::Ordering::{Less,Equal,Greater}`).
+fn has_atomic_ordering(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find("Ordering::") {
+        let at = start + pos + "Ordering::".len();
+        let rest = &code[at..];
+        if ATOMIC_ORDERINGS.iter().any(|v| rest.starts_with(v)) {
+            return true;
+        }
+        start = at;
+    }
+    false
+}
+
+/// Run all rules over one file's source. `file` is used for diagnostics
+/// and for the R4 pool.rs exemption (matched on file name).
+pub fn check_file(file: &str, src: &str) -> Vec<Diagnostic> {
+    let ctx = build_ctx(src);
+    let file_name = std::path::Path::new(file)
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| file.to_string());
+    let mut out = Vec::new();
+    let mut diag = |line: usize, rule: &'static str, msg: String| {
+        out.push(Diagnostic { file: file.to_string(), line: line + 1, rule, msg });
+    };
+
+    for (i, msg) in &ctx.pragma_diags {
+        diag(*i, R_PRAGMA, msg.clone());
+    }
+
+    for (i, l) in ctx.lines.iter().enumerate() {
+        let code = l.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+
+        // R1 — SAFETY comments. Applies everywhere, tests included: an
+        // unsound unsafe block in a test corrupts the process like any
+        // other.
+        if contains_word(code, "unsafe")
+            && !ctx.justified(i, "SAFETY:")
+            && !ctx.is_allowed(i, R_SAFETY)
+        {
+            diag(i, R_SAFETY, "`unsafe` without a `// SAFETY:` comment on or directly above this line".into());
+        }
+
+        if ctx.in_test[i] {
+            continue; // R2–R5 guard trajectory-affecting code only.
+        }
+
+        // R2 — nondeterminism sources.
+        if !ctx.is_allowed(i, R_NONDET) {
+            let hits: &[(&str, bool, &str)] = &[
+                ("HashMap", true, "unordered iteration order leaks into float reductions"),
+                ("HashSet", true, "unordered iteration order leaks into float reductions"),
+                ("Instant::now", false, "wall clock is nondeterministic"),
+                ("SystemTime", true, "wall clock is nondeterministic"),
+                ("thread_rng", true, "unseeded OS-entropy RNG"),
+                ("rand::random", false, "unseeded OS-entropy RNG"),
+            ];
+            for (pat, word, why) in hits {
+                let found = if *word { contains_word(code, pat) } else { code.contains(pat) };
+                if found {
+                    diag(i, R_NONDET, format!("`{pat}` in trajectory-affecting code — {why}; use ordered containers / the engine's seeded streams, or justify with a pragma"));
+                    break;
+                }
+            }
+        }
+
+        // R3 — RNG stream discipline.
+        if code.contains("Rng::new(")
+            && !code.contains("streams::")
+            && !ctx.is_allowed(i, R_RNG)
+        {
+            diag(i, R_RNG, "`Rng::new` without a named purpose stream — derive one on the same statement (`Rng::new(seed).derive(streams::…)`) or justify with a pragma".into());
+        }
+
+        // R4 — threading discipline.
+        if file_name != "pool.rs" && !ctx.is_allowed(i, R_THREAD) {
+            for pat in ["thread::spawn", "thread::Builder", "thread::scope"] {
+                if code.contains(pat) {
+                    diag(i, R_THREAD, format!("`{pat}` outside pool.rs — all parallelism goes through the worker pool (`crate::pool`)"));
+                    break;
+                }
+            }
+        }
+
+        // R5 — atomic ordering justification.
+        if has_atomic_ordering(code)
+            && !ctx.justified(i, "ORDERING:")
+            && !ctx.is_allowed(i, R_ATOMIC)
+        {
+            diag(i, R_ATOMIC, "atomic `Ordering::…` without an `// ORDERING:` comment on or directly above this line".into());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn audit(src: &str) -> Vec<Diagnostic> {
+        check_file("fixture.rs", src)
+    }
+
+    fn lines_for(diags: &[Diagnostic], rule: &str) -> Vec<usize> {
+        diags.iter().filter(|d| d.rule == rule).map(|d| d.line).collect()
+    }
+
+    // ---- R1: safety_comment ----
+
+    #[test]
+    fn r1_fires_with_correct_line() {
+        let src = "fn f(p: *mut u8) {\n    let v = unsafe { *p };\n}\n";
+        let d = audit(src);
+        assert_eq!(lines_for(&d, R_SAFETY), vec![2], "{d:?}");
+    }
+
+    #[test]
+    fn r1_quiet_with_safety_comment_same_line_or_above() {
+        let above = "fn f(p: *mut u8) {\n    // SAFETY: caller guarantees p is valid.\n    let v = unsafe { *p };\n}\n";
+        assert!(audit(above).is_empty(), "{:?}", audit(above));
+        let multi = "// SAFETY: the pointer is
+// valid for the whole dispatch.
+unsafe impl Send for X {}
+";
+        assert!(audit(multi).is_empty());
+        let same = "unsafe impl Send for X {} // SAFETY: lock-serialized.\n";
+        assert!(audit(same).is_empty());
+    }
+
+    #[test]
+    fn r1_blank_line_breaks_the_comment_run() {
+        let src = "// SAFETY: stale justification far above.\n\nunsafe impl Send for X {}\n";
+        assert_eq!(lines_for(&audit(src), R_SAFETY), vec![3]);
+    }
+
+    #[test]
+    fn r1_allowed_via_pragma() {
+        let src = "// audit:allow(safety_comment): justified in the module docs above\nunsafe impl Send for X {}\n";
+        assert!(audit(src).is_empty());
+    }
+
+    #[test]
+    fn r1_applies_inside_test_code_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(p: *mut u8) -> u8 {\n        unsafe { *p }\n    }\n}\n";
+        assert_eq!(lines_for(&audit(src), R_SAFETY), vec![4]);
+    }
+
+    #[test]
+    fn r1_word_boundary_ignores_lint_name() {
+        assert!(audit("#![deny(unsafe_op_in_unsafe_fn)]\n").is_empty());
+    }
+
+    #[test]
+    fn r1_ignores_strings_and_comments() {
+        assert!(audit("let s = \"unsafe\"; // unsafe in prose\n").is_empty());
+    }
+
+    // ---- R2: nondeterminism ----
+
+    #[test]
+    fn r2_fires_on_hashmap_and_wall_clock() {
+        let src = "use std::collections::HashMap;\nfn f() {\n    let t = Instant::now();\n}\n";
+        assert_eq!(lines_for(&audit(src), R_NONDET), vec![1, 3]);
+    }
+
+    #[test]
+    fn r2_quiet_in_test_code_and_via_pragma() {
+        let test = "#[cfg(test)]\nmod tests {\n    fn t() { let x = Instant::now(); }\n}\n";
+        assert!(audit(test).is_empty());
+        let pragma = "let t = Instant::now(); // audit:allow(nondeterminism): metrics only\n";
+        assert!(audit(pragma).is_empty());
+    }
+
+    #[test]
+    fn r2_clean_code_is_quiet() {
+        assert!(audit("use std::collections::BTreeMap;\nlet m = BTreeMap::new();\n").is_empty());
+    }
+
+    // ---- R3: rng_stream ----
+
+    #[test]
+    fn r3_fires_on_unnamed_stream() {
+        let src = "fn f(seed: u64) {\n    let mut rng = Rng::new(seed);\n}\n";
+        assert_eq!(lines_for(&audit(src), R_RNG), vec![2]);
+    }
+
+    #[test]
+    fn r3_quiet_with_named_stream_or_pragma() {
+        let named = "let mut rng = Rng::new(seed).derive(streams::DATA);\n";
+        assert!(audit(named).is_empty());
+        let pragma = "// audit:allow(rng_stream): root of the stream tree\nlet root = Rng::new(seed);\n";
+        assert!(audit(pragma).is_empty());
+    }
+
+    #[test]
+    fn r3_quiet_in_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let mut r = Rng::new(42); }\n}\n";
+        assert!(audit(src).is_empty());
+    }
+
+    // ---- R4: thread_spawn ----
+
+    #[test]
+    fn r4_fires_outside_pool_rs() {
+        let src = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        assert_eq!(lines_for(&audit(src), R_THREAD), vec![2]);
+        let scope = "std::thread::scope(|s| {});\n";
+        assert_eq!(lines_for(&audit(scope), R_THREAD), vec![1]);
+    }
+
+    #[test]
+    fn r4_quiet_in_pool_rs_and_via_pragma() {
+        let src = "std::thread::Builder::new();\n";
+        assert!(check_file("rust/src/pool.rs", src).is_empty());
+        let pragma = "std::thread::spawn(f); // audit:allow(thread_spawn): watchdog, never touches run state\n";
+        assert!(audit(pragma).is_empty());
+    }
+
+    // ---- R5: atomic_ordering ----
+
+    #[test]
+    fn r5_fires_without_ordering_comment() {
+        let src = "fn f(a: &AtomicUsize) {\n    a.store(1, Ordering::Release);\n}\n";
+        assert_eq!(lines_for(&audit(src), R_ATOMIC), vec![2]);
+    }
+
+    #[test]
+    fn r5_quiet_with_comment_or_pragma() {
+        let above = "// ORDERING: publishes init to the Acquire load in f().\na.store(1, Ordering::Release);\n";
+        assert!(audit(above).is_empty());
+        let pragma = "a.store(1, Ordering::Relaxed); // audit:allow(atomic_ordering): covered by module invariants doc\n";
+        assert!(audit(pragma).is_empty());
+    }
+
+    #[test]
+    fn r5_ignores_cmp_ordering() {
+        let src = "fn c(a: u32, b: u32) -> bool { a.cmp(&b) == Ordering::Equal }\n";
+        assert!(audit(src).is_empty());
+        let qualified = "use std::cmp::Ordering;\nmatch x.cmp(&y) { Ordering::Less => {} _ => {} }\n";
+        assert!(audit(qualified).is_empty());
+    }
+
+    // ---- pragma meta-rule ----
+
+    #[test]
+    fn pragma_missing_reason_is_flagged() {
+        let src = "let t = Instant::now(); // audit:allow(nondeterminism)\n";
+        let d = audit(src);
+        assert_eq!(lines_for(&d, R_PRAGMA), vec![1], "{d:?}");
+        // The underlying violation is NOT suppressed by a malformed pragma.
+        assert_eq!(lines_for(&d, R_NONDET), vec![1]);
+        let empty = "let t = Instant::now(); // audit:allow(nondeterminism):   \n";
+        assert_eq!(lines_for(&audit(empty), R_PRAGMA), vec![1]);
+    }
+
+    #[test]
+    fn pragma_unknown_rule_is_flagged() {
+        let src = "// audit:allow(made_up_rule): because\nlet x = 1;\n";
+        assert_eq!(lines_for(&audit(src), R_PRAGMA), vec![1]);
+    }
+
+    #[test]
+    fn pragma_on_own_line_covers_next_code_line_only() {
+        let src = "// audit:allow(rng_stream): root stream\nlet a = Rng::new(s);\nlet b = Rng::new(s);\n";
+        assert_eq!(lines_for(&audit(src), R_RNG), vec![3]);
+    }
+
+    #[test]
+    fn pragma_mentioned_mid_prose_is_not_parsed() {
+        let src = "// The escape hatch is `audit:allow(rule): reason` on the line.\nlet x = 1;\n";
+        assert!(audit(src).is_empty());
+    }
+
+    #[test]
+    fn pragma_covering_nothing_is_flagged() {
+        let src = "let x = 1;\n// audit:allow(rng_stream): dangling at EOF\n";
+        assert_eq!(lines_for(&audit(src), R_PRAGMA), vec![2]);
+    }
+
+    #[test]
+    fn pragma_cannot_allow_the_pragma_rule() {
+        // `audit:allow(pragma): …` names a rule the engine refuses to
+        // treat as known — the meta-rule cannot be allowed away.
+        let src = "// audit:allow(pragma): nope\nlet x = 1;\n";
+        assert_eq!(lines_for(&audit(src), R_PRAGMA), vec![1]);
+    }
+
+    // ---- test-region tracking ----
+
+    #[test]
+    fn cfg_test_region_ends_at_matching_brace() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let x = Instant::now(); }\n}\nfn live() { let y = Instant::now(); }\n";
+        assert_eq!(lines_for(&audit(src), R_NONDET), vec![5]);
+    }
+}

@@ -97,6 +97,9 @@ impl CompressedMsg {
             return;
         }
         #[cfg(debug_assertions)]
+        // ORDERING: monotonic debug counter; tests read it only after the
+        // run's dispatch barriers have joined (which is what provides the
+        // happens-before), so Relaxed suffices.
         DENSE_DECODES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.values.fill(0.0);
         if let Some(sp) = &self.sparse {
@@ -115,6 +118,8 @@ impl CompressedMsg {
     /// builds.
     #[cfg(debug_assertions)]
     pub fn dense_decode_count() -> u64 {
+        // ORDERING: see the fetch_add in `ensure_dense` — the reader
+        // synchronizes via the pool's dispatch barrier, not this load.
         DENSE_DECODES.load(std::sync::atomic::Ordering::Relaxed)
     }
 }

@@ -11,8 +11,9 @@
 //!   steady-state allocation-free round loop, declarative scenario grids
 //!   with a sharded multi-run executor ([`scenarios`]), a discrete-event
 //!   heterogeneous network simulator for time-to-accuracy studies
-//!   ([`simnet`]), experiment drivers for every figure in the paper,
-//!   metrics, and a CLI.
+//!   ([`simnet`]), an in-tree determinism & unsafe-soundness auditor
+//!   ([`audit`], `lead audit`), experiment drivers for every figure in
+//!   the paper, metrics, and a CLI.
 //! - **L2 (python/compile)**: JAX compute graphs (linear/logistic
 //!   regression, MLP, transformer LM forward+backward) lowered once to HLO
 //!   text artifacts.
@@ -43,7 +44,13 @@
 //! let records = Driver::new(8).run(&grid.name, &specs).unwrap();
 //! ```
 
+// Unsafe code inside `unsafe fn` bodies must still be wrapped in explicit
+// `unsafe {}` blocks, which the auditor (`audit` rule `safety_comment`)
+// then forces to be individually justified.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod algorithms;
+pub mod audit;
 pub mod bench;
 pub mod compress;
 pub mod config;

@@ -6,6 +6,7 @@
 //! lead net-report <spec.toml> [--out DIR] [--threads N] [--tol X]  # network/time view of a grid
 //! lead run <config.toml> [--out DIR]                # custom single run
 //! lead bench-diff <new.json> <baseline.json> [--tol X]  # perf gate
+//! lead audit [--list-rules] [path]                  # determinism/unsafe auditor
 //! lead info                                         # topology/spectral summary
 //! ```
 //! (clap is not in the offline vendor set; flags are parsed by hand.)
@@ -214,6 +215,33 @@ fn main() -> lead::error::Result<()> {
                 )));
             }
         }
+        Some("audit") => {
+            if args.iter().any(|a| a == "--list-rules") {
+                for r in lead::audit::rules() {
+                    println!("{:<16} {}", r.id, r.summary);
+                }
+                return Ok(());
+            }
+            // Default target: the crate sources, whether invoked from the
+            // repo root or from rust/.
+            let path = match args.get(1).filter(|a| !a.starts_with("--")) {
+                Some(p) => p.clone(),
+                None if std::path::Path::new("rust/src").is_dir() => "rust/src".into(),
+                None => "src".into(),
+            };
+            let diags = lead::audit::audit_path(&path)?;
+            for d in &diags {
+                eprintln!("{d}");
+            }
+            if !diags.is_empty() {
+                return Err(err(format!(
+                    "audit: {} violation(s) in {path} (escape hatch: `audit:allow(rule): reason`; \
+                     see `lead audit --list-rules`)",
+                    diags.len()
+                )));
+            }
+            println!("audit: {path} clean");
+        }
         Some("info") => {
             for name in ["ring", "full", "star", "path"] {
                 let t = Topology::parse(name, 0).unwrap();
@@ -228,7 +256,7 @@ fn main() -> lead::error::Result<()> {
             }
         }
         _ => {
-            eprintln!("usage: lead <exp|grid|net-report|run|bench-diff|info> ... (see README)");
+            eprintln!("usage: lead <exp|grid|net-report|run|bench-diff|audit|info> ... (see README)");
         }
     }
     Ok(())

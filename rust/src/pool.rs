@@ -75,7 +75,14 @@ pub const MAX_MATS: usize = 8;
 /// contract: no two workers ever receive the same index.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr<T>(pub *mut T);
+// SAFETY: SendPtr wraps pointers into buffers whose `&mut` borrow the
+// dispatching caller holds across the whole barrier (dispatches block
+// until every worker finishes), so the pointee outlives every use; each
+// use site derives disjoint per-index references under the chunking /
+// unique-claim contracts documented on the dispatch helpers below.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: shared by reference across workers; see the Send impl directly
+// above — lifetime and disjoint-index access are the same argument.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Type-erased job pointer parked in the pool's dispatch slot. The
@@ -83,6 +90,10 @@ unsafe impl<T> Sync for SendPtr<T> {}
 /// until every worker has acknowledged the dispatch.
 #[derive(Clone, Copy)]
 struct RawJob(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls are fine) and the pointer
+// is only dereferenced by workers between dispatch and ack, while
+// [`WorkerPool::run`] provably keeps the closure alive (its JoinGuard
+// blocks until every spawned worker has acknowledged the epoch).
 unsafe impl Send for RawJob {}
 
 struct JobSlot {
@@ -166,6 +177,11 @@ impl WorkerPool {
             }
             return;
         }
+        // ORDERING: Acquire pairs with the Release store in
+        // JoinGuard::drop — a dispatcher that wins the flag observes the
+        // previous dispatch's slot cleanup. Mutual exclusion itself needs
+        // only the swap's atomicity; the job handoff to workers is
+        // synchronized by the slot mutex, not by this flag.
         if self.busy.swap(true, Ordering::Acquire) {
             // Nested dispatch from inside a running job: run inline.
             for w in 0..workers {
@@ -177,9 +193,12 @@ impl WorkerPool {
             let mut slot = self.shared.slot.lock().unwrap();
             slot.epoch += 1;
             slot.bound = workers;
-            // Lifetime erasure — sound because the JoinGuard below blocks
-            // until every spawned worker acknowledged this epoch.
             let raw = job as *const (dyn Fn(usize) + Sync);
+            // SAFETY: lifetime erasure of the borrowed job closure —
+            // sound because the JoinGuard below blocks until every
+            // spawned worker acknowledged this epoch, so no worker can
+            // hold the pointer past the borrow; the slot entry is cleared
+            // again (job = None) before the guard releases.
             slot.job = Some(RawJob(unsafe { std::mem::transmute(raw) }));
         }
         self.shared.start.notify_all();
@@ -208,6 +227,8 @@ impl Drop for JoinGuard<'_> {
             done.panic.take()
         };
         shared.slot.lock().unwrap().job = None;
+        // ORDERING: Release publishes the slot cleanup above to the next
+        // dispatcher's busy.swap(Acquire).
         self.pool.busy.store(false, Ordering::Release);
         if let Some(p) = panic {
             if !std::thread::panicking() {
@@ -386,6 +407,10 @@ where
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
     exec.run_workers(t, &|_w| loop {
+        // ORDERING: pure work counter — each index is claimed exactly
+        // once by the fetch_add's atomicity alone; the data tasks write
+        // is published to the caller by the dispatch barrier, not by
+        // this counter, so Relaxed suffices.
         let i = next.fetch_add(1, Ordering::Relaxed);
         if i >= count {
             break;

@@ -117,6 +117,7 @@ pub enum Value<'a> {
 #[cfg(feature = "pjrt")]
 mod backend {
     use super::*;
+    use std::mem::ManuallyDrop;
 
     impl Manifest {
         /// Compile one artifact on the shared PJRT client.
@@ -126,24 +127,60 @@ mod backend {
             let proto = xla::HloModuleProto::from_text_file(&path)
                 .map_err(|e| err(format!("loading {}: {e:?}", path.display())))?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let _guard = crate::runtime::client::compile_lock();
-            let exe = crate::runtime::client()
+            let guard = crate::runtime::client::lock();
+            let exe = crate::runtime::client::client(&guard)
                 .compile(&comp)
                 .map_err(|e| err(format!("compiling {name}: {e:?}")))?;
-            Ok(Artifact { meta, exe })
+            Ok(Artifact { meta, exe: ManuallyDrop::new(exe) })
         }
     }
 
     /// A compiled computation plus its port metadata.
+    ///
+    /// Invariant: `exe` (an `Rc`-backed xla wrapper, hence !Send/!Sync)
+    /// is only ever touched with the process-wide
+    /// [`client::lock`](crate::runtime::client::lock) held — at
+    /// construction in [`Manifest::compile`], in [`Artifact::execute`],
+    /// and in `Drop`. That serialization is what makes the `Send`/`Sync`
+    /// impls below sound, letting the engine's worker pool share
+    /// problems that own artifacts.
     pub struct Artifact {
         pub meta: ArtifactMeta,
-        exe: xla::PjRtLoadedExecutable,
+        /// `ManuallyDrop` so `Drop::drop` can destroy it while still
+        /// holding the client lock (a plain field would drop *after* the
+        /// drop body returns, once the lock guard is already released).
+        exe: ManuallyDrop<xla::PjRtLoadedExecutable>,
+    }
+
+    // SAFETY: `xla::PjRtLoadedExecutable` is !Send only because of its
+    // non-atomic `Rc` refcounts; the underlying PJRT CPU executable is
+    // thread-safe for serialized calls. `exe` is private, never cloned
+    // out, and every access (construction, execute, drop) holds the
+    // process-wide client lock — see the struct invariant above — so
+    // moving an `Artifact` across threads can never race the refcounts.
+    unsafe impl Send for Artifact {}
+    // SAFETY: same invariant — `execute(&self)` is the only shared-access
+    // path to `exe` and it takes the process-wide client lock first, so
+    // concurrent `&Artifact` use from the worker pool is fully
+    // serialized.
+    unsafe impl Sync for Artifact {}
+
+    impl Drop for Artifact {
+        fn drop(&mut self) {
+            let _guard = crate::runtime::client::lock();
+            // SAFETY: `exe` was initialized in `Manifest::compile` and is
+            // dropped exactly once, here; `ManuallyDrop` exists precisely
+            // so this runs before `_guard` releases the client lock.
+            unsafe { ManuallyDrop::drop(&mut self.exe) };
+        }
     }
 
     impl Artifact {
         /// Execute with positional inputs; returns each output flattened to
-        /// f64 (scalars come back as length-1 vectors).
+        /// f64 (scalars come back as length-1 vectors). Serialized against
+        /// all other PJRT activity by the process-wide client lock.
         pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Vec<f64>>> {
+            let _guard = crate::runtime::client::lock();
             if inputs.len() != self.meta.inputs.len() {
                 return Err(err(format!(
                     "{}: {} inputs given, {} expected",

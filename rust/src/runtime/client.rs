@@ -1,24 +1,60 @@
 //! Process-wide PJRT CPU client (creating one per artifact would leak a
 //! thread pool each time; XLA clients are expensive singletons).
 //!
-//! SAFETY: the `xla` crate wraps the client in a non-atomic `Rc`, so the
-//! type is !Send/!Sync even though the PJRT CPU plugin itself is
-//! thread-safe. We never clone the wrapper after init and serialize every
-//! compile through [`compile_lock`]; executions are serialized by the
-//! problem-level mutexes in `problems::neural`.
+//! # Locking discipline
+//!
+//! The `xla` crate wraps the client and its executables in non-atomic
+//! `Rc` refcounts, so the types are !Send/!Sync even though the PJRT CPU
+//! plugin itself is thread-safe. Rather than asserting thread safety per
+//! problem type (the old blanket impls in `problems::neural`), every
+//! access to the client now goes through a single process-wide mutex:
+//! [`lock`] returns a [`ClientGuard`], and [`client`] *requires* a
+//! `&ClientGuard` argument, so "the lock is held" is proved at compile
+//! time instead of by convention. `Artifact` (the only other holder of
+//! an `Rc`-backed xla value) takes the same lock around execute and
+//! drop — see `runtime::artifact`.
 
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Mutex, MutexGuard, OnceLock};
 
 struct SharedClient(xla::PjRtClient);
+
+// SAFETY: `xla::PjRtClient` is !Send only because of its non-atomic `Rc`
+// refcount. The one instance lives in the private `CLIENT` static below,
+// is never cloned, and is only reachable through `client(&ClientGuard)`,
+// so every touch — including the refcount bump a hypothetical clone would
+// do — happens under `CLIENT_LOCK` and cannot race across threads.
 unsafe impl Send for SharedClient {}
+// SAFETY: same invariant as the `Send` impl above — all shared (`&`)
+// access is serialized by `CLIENT_LOCK` via the `ClientGuard` proof
+// token, and the PJRT CPU plugin itself is thread-safe for serialized
+// compile/execute calls.
 unsafe impl Sync for SharedClient {}
 
 static CLIENT: OnceLock<SharedClient> = OnceLock::new();
-static COMPILE_LOCK: Mutex<()> = Mutex::new(());
+static CLIENT_LOCK: Mutex<()> = Mutex::new(());
 
-/// The shared PJRT CPU client. Panics if the plugin cannot initialize —
-/// there is nothing useful the caller can do without a backend.
-pub fn client() -> &'static xla::PjRtClient {
+/// Proof token that the process-wide PJRT lock is held.
+///
+/// Obtainable only from [`lock`]; the lock releases when the guard
+/// drops. APIs that touch xla's `Rc`-backed values take `&ClientGuard`
+/// so the borrow checker enforces the serialization invariant.
+pub struct ClientGuard {
+    _held: MutexGuard<'static, ()>,
+}
+
+/// Acquire the process-wide PJRT lock.
+pub fn lock() -> ClientGuard {
+    // A failed artifact execute panics (`expect`) while holding the lock,
+    // which poisons it; the client itself is left in a usable state by a
+    // failed call, so recover instead of cascading poison errors.
+    ClientGuard { _held: CLIENT_LOCK.lock().unwrap_or_else(|poison| poison.into_inner()) }
+}
+
+/// The shared PJRT CPU client; the `ClientGuard` is compile-time proof
+/// that the caller holds the process-wide lock. Panics if the plugin
+/// cannot initialize — there is nothing useful the caller can do
+/// without a backend.
+pub fn client<'g>(_proof: &'g ClientGuard) -> &'g xla::PjRtClient {
     &CLIENT
         .get_or_init(|| {
             SharedClient(xla::PjRtClient::cpu().expect("failed to initialize PJRT CPU client"))
@@ -26,17 +62,13 @@ pub fn client() -> &'static xla::PjRtClient {
         .0
 }
 
-/// Guards XLA compilation (see module SAFETY note).
-pub fn compile_lock() -> std::sync::MutexGuard<'static, ()> {
-    COMPILE_LOCK.lock().unwrap()
-}
-
 #[cfg(test)]
 mod tests {
     #[test]
     fn client_initializes_once() {
-        let a = super::client();
-        let b = super::client();
+        let g = super::lock();
+        let a = super::client(&g);
+        let b = super::client(&g);
         assert_eq!(a.platform_name(), b.platform_name());
         assert!(a.device_count() >= 1);
     }

@@ -9,6 +9,12 @@
 //! The backend itself (the vendored `xla` PJRT bindings) is gated behind
 //! the `pjrt` cargo feature; without it, manifest parsing still works and
 //! `compile`/`execute` return a descriptive error.
+//!
+//! All PJRT access is serialized through one process-wide lock: see the
+//! locking-discipline notes on `runtime::client` and the `Artifact`
+//! invariant in [`artifact`]. Callers never lock manually —
+//! `compile`/`execute`/drop take the lock internally, and `Artifact` is
+//! Send + Sync because of it.
 
 pub mod artifact;
 #[cfg(feature = "pjrt")]
@@ -16,4 +22,4 @@ pub mod client;
 
 pub use artifact::{Artifact, Manifest, ParamSpec};
 #[cfg(feature = "pjrt")]
-pub use client::client;
+pub use client::{client, lock, ClientGuard};
