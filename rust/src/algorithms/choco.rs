@@ -147,6 +147,9 @@ impl Algorithm for ChocoSgd {
             exec,
             &mut [&mut self.x, &mut self.xhat, &mut self.s, &mut self.xhalf],
             |i, rows| match rows {
+                // Crashed agents freeze x and the x̂ difference-
+                // compression reference alike (degraded-inbox contract).
+                _ if !inbox.live(i) => {}
                 [x, xh, s, half] => {
                     apply_agent(gamma, inbox.own_view(i, 0), inbox.mix(i, 0), x, xh, s, half)
                 }

@@ -126,6 +126,7 @@ impl Algorithm for D2 {
             exec,
             &mut [&mut self.x, &mut self.x_prev, &mut self.g_prev],
             |i, rows| match rows {
+                _ if !inbox.live(i) => {}
                 [x, xp, gp] => apply_agent(&g[i], inbox.own_view(i, 0), inbox.mix(i, 0), x, xp, gp),
                 _ => unreachable!(),
             },

@@ -118,6 +118,7 @@ impl Algorithm for DeepSqueeze {
         let gamma = self.gamma;
         let eta = ctx.eta;
         super::par_agents(exec, &mut [&mut self.x, &mut self.e], |i, rows| match rows {
+            _ if !inbox.live(i) => {}
             [x, e] => apply_agent(gamma, eta, &g[i], inbox.own_view(i, 0), inbox.mix(i, 0), x, e),
             _ => unreachable!(),
         });

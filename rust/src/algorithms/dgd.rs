@@ -77,6 +77,7 @@ impl Algorithm for Dgd {
     fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let eta = ctx.eta;
         super::par_agents(exec, &mut [&mut self.x], |i, rows| match rows {
+            _ if !inbox.live(i) => {}
             [x] => apply_agent(eta, &g[i], inbox.mix(i, 0), x),
             _ => unreachable!(),
         });

@@ -127,6 +127,7 @@ impl Algorithm for DiGing {
         let _ = g;
         let eta = ctx.eta;
         super::par_agents(exec, &mut [&mut self.x, &mut self.y], |i, rows| match rows {
+            _ if !inbox.live(i) => {}
             [x, y] => apply_agent(eta, inbox.mix(i, 0), inbox.mix(i, 1), x, y),
             _ => unreachable!(),
         });

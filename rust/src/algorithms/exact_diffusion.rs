@@ -109,6 +109,7 @@ impl Algorithm for ExactDiffusion {
     fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let _ = (ctx, g);
         super::par_agents(exec, &mut [&mut self.x], |i, rows| match rows {
+            _ if !inbox.live(i) => {}
             [x] => apply_agent(inbox.own_view(i, 0), inbox.mix(i, 0), x),
             _ => unreachable!(),
         });

@@ -219,6 +219,10 @@ impl Algorithm for Lead {
             exec,
             &mut [&mut self.x, &mut self.d, &mut self.h, &mut self.hw],
             |i, rows| match rows {
+                // Crashed agents skip the update wholesale: x, d, and
+                // the compression references h/hw all freeze (degraded-
+                // inbox contract — no corrupted h on recovery).
+                _ if !inbox.live(i) => {}
                 [x, dvar, h, hw] => {
                     let (own, mixed) = (inbox.own_view(i, 0), inbox.mix(i, 0));
                     apply_agent(params, eta, &g[i], own, mixed, x, dvar, h, hw)

@@ -185,13 +185,18 @@ pub struct Inbox<'a> {
     mixed: &'a [Vec<Vec<f64>>],
     /// Decoded channel-0 messages (compressed runs only).
     decoded0: Option<&'a [CompressedMsg]>,
+    /// Per-agent crash mask for this round (fault-injection runs only;
+    /// see the degraded-inbox contract in `coordinator::engine` §Fault
+    /// injection). A down agent's apply must be skipped wholesale —
+    /// [`Inbox::live`] — freezing its state until recovery.
+    down: Option<&'a [bool]>,
 }
 
 impl<'a> Inbox<'a> {
     /// Assemble an inbox from raw (uncompressed) payloads and per-agent
     /// mixes — every agent's own decoded payload is just what it sent.
     pub fn from_payloads(payload: &'a [Vec<Vec<f64>>], mixed: &'a [Vec<Vec<f64>>]) -> Inbox<'a> {
-        Inbox { payload, mixed, decoded0: None }
+        Inbox { payload, mixed, decoded0: None, down: None }
     }
 
     /// Engine view: decoded channel-0 messages spliced in front of the
@@ -204,7 +209,22 @@ impl<'a> Inbox<'a> {
         mixed: &'a [Vec<Vec<f64>>],
         msgs: &'a [CompressedMsg],
     ) -> Inbox<'a> {
-        Inbox { payload, mixed, decoded0: Some(msgs) }
+        Inbox { payload, mixed, decoded0: Some(msgs), down: None }
+    }
+
+    /// Attach the fault schedule's per-agent crash mask (builder-style,
+    /// engine-only). Apply kernels — overrides and the trait default —
+    /// must gate on [`Inbox::live`] so crashed agents' state freezes.
+    pub fn with_faults(mut self, down: &'a [bool]) -> Inbox<'a> {
+        self.down = Some(down);
+        self
+    }
+
+    /// Whether `agent` participates in this round's apply phase (always
+    /// true outside fault-injection runs).
+    #[inline]
+    pub fn live(&self, agent: usize) -> bool {
+        self.down.is_none_or(|d| !d[agent])
     }
 
     /// Agent i's own decoded channel-c payload as a *dense* slice.
@@ -371,6 +391,9 @@ pub trait Algorithm: Send + Sync {
         let _ = exec;
         let ch = self.spec().channels;
         for (i, gi) in g.iter().enumerate() {
+            if !inbox.live(i) {
+                continue;
+            }
             let own: Vec<&[f64]> = (0..ch).map(|c| inbox.own(i, c)).collect();
             let mixed: Vec<&[f64]> = (0..ch).map(|c| inbox.mix(i, c)).collect();
             self.recv(ctx, i, gi, &own, &mixed);

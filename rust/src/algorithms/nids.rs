@@ -112,6 +112,7 @@ impl Algorithm for Nids {
     fn recv_all(&mut self, ctx: &Ctx, g: &[Vec<f64>], inbox: &Inbox<'_>, exec: Exec<'_>) {
         let eta = ctx.eta;
         super::par_agents(exec, &mut [&mut self.x, &mut self.d], |i, rows| match rows {
+            _ if !inbox.live(i) => {}
             [x, d] => apply_agent(eta, &g[i], inbox.own_view(i, 0), inbox.mix(i, 0), x, d),
             _ => unreachable!(),
         });

@@ -100,6 +100,7 @@ impl Algorithm for Qdgd {
         let eta = ctx.eta;
         let mix = ctx.mix;
         super::par_agents(exec, &mut [&mut self.x], |i, rows| match rows {
+            _ if !inbox.live(i) => {}
             [x] => apply_agent(
                 gamma,
                 eta,

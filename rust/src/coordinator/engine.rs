@@ -86,6 +86,35 @@
 //! sequentially on the coordinator thread, so its event order is
 //! independent of `exec`.
 //!
+//! # §Fault injection — the degraded-inbox contract
+//!
+//! When `cfg.faults` carries a non-no-op [`FaultPlan`], the engine
+//! compiles it into a [`FaultSchedule`] on the dedicated
+//! `streams::FAULT` stream and runs a *graceful-degradation* round
+//! loop. Unlike the timing overlays this **changes trajectories by
+//! design**; determinism is preserved the same way as everywhere else
+//! (fixed draw counts on a dedicated stream, all schedule mutation on
+//! the coordinator thread, workers only read). The contract per round:
+//!
+//! * **produce** runs for *every* agent — crashed included — so every
+//!   dither/batch stream advances exactly as in the fault-free run;
+//!   a crashed agent's message simply never leaves the node (its wire
+//!   bits are zeroed, its in-links and out-links resolve Lost).
+//! * **mix** consults the schedule per directed in-link: `Delivered`
+//!   accumulates at the nominal weight, `Stale` replays the sender's
+//!   last delivered decode (bounded age), and `Lost` is skipped with
+//!   the missing mass folded into the self weight
+//!   ([`crate::faults::folded_self_weight`]) — every live row stays
+//!   row-stochastic (proptest in `crate::faults`).
+//! * **apply** skips crashed agents wholesale (`Inbox::live`): their
+//!   algorithm state — including LEAD/CHOCO difference-compression
+//!   reference points — is frozen, not corrupted, and resumes on
+//!   recovery.
+//!
+//! With `cfg.faults` None (or no-op) none of these paths run and the
+//! loop is bitwise-identical to today's engine; `rust/tests/faults.rs`
+//! pins both directions plus thread-count determinism with faults on.
+//!
 //! # §Scheduling — outer vs. inner parallelism
 //!
 //! A single engine run parallelizes *inside* the round (per-agent tasks)
@@ -117,6 +146,7 @@
 
 use super::metrics::{PhaseTimes, RoundMetrics, RunRecord};
 use super::network::{LinkModel, TrafficStats};
+use crate::faults::{FaultPlan, FaultSchedule, FaultTotals, LinkState};
 use crate::simnet::{NetModel, NetSummary, RoundTimer};
 use crate::algorithms::{Algorithm, Ctx, Inbox, OwnAccess};
 use crate::compress::{CodecScratch, CompressedMsg, Compressor};
@@ -182,6 +212,17 @@ pub struct EngineConfig {
     /// bitwise-identical either way, and the degenerate homogeneous
     /// model reproduces the legacy `sim_time` exactly (§Network timing).
     pub net: Option<NetModel>,
+    /// Fault-injection plan (`crate::faults`). Unlike `net` this is NOT
+    /// a timing-only overlay: faults change trajectories by design
+    /// (§Fault injection). `None` (or a no-op plan) keeps the engine
+    /// bitwise-identical to the fault-free round loop.
+    pub faults: Option<FaultPlan>,
+    /// Stop after this many simulated seconds (`sim_time`) instead of
+    /// running all scheduled rounds; the record is flagged
+    /// `stopped_early`. The budget is checked after each round's timing,
+    /// so the final round that crosses the budget is still completed and
+    /// observed.
+    pub time_budget: Option<f64>,
     /// Execution backend (default: persistent pool).
     pub scheduler: Scheduler,
 }
@@ -197,6 +238,8 @@ impl Default for EngineConfig {
             threads: 1,
             link: LinkModel::default(),
             net: None,
+            faults: None,
+            time_budget: None,
             scheduler: Scheduler::default(),
         }
     }
@@ -224,6 +267,73 @@ pub fn mix_msgs(mix: &MixingMatrix, i: usize, msgs: &[CompressedMsg], out: &mut 
             None => {
                 debug_assert!(!msgs[j].dense_stale, "dense mix over a stale message");
                 crate::linalg::axpy(w, &msgs[j].values, out)
+            }
+        }
+    }
+}
+
+/// [`mix_msgs`] under a fault schedule: the degraded-inbox mix for
+/// receiver `i` (all channels). Crashed receivers get zeroed mixes
+/// (never read — apply skips them); live receivers accumulate their own
+/// message at the *folded* self weight (lost in-links' mass
+/// renormalized in, keeping the row stochastic), delivered neighbors at
+/// nominal weights, and stale neighbors from the schedule's replay
+/// buffer. Read-only over the schedule, so the mix phase fans out
+/// exactly like the fault-free path.
+fn mix_degraded(
+    mix: &MixingMatrix,
+    i: usize,
+    fs: &FaultSchedule,
+    use_comp: bool,
+    msgs: &[CompressedMsg],
+    payload: &[Vec<Vec<f64>>],
+    out: &mut [Vec<f64>],
+) {
+    if fs.is_down(i) {
+        for mx in out.iter_mut() {
+            mx.fill(0.0);
+        }
+        return;
+    }
+    let w_self =
+        crate::faults::folded_self_weight(mix, i, |j| fs.link(i, j) == LinkState::Lost);
+    for (c, mx) in out.iter_mut().enumerate() {
+        mx.fill(0.0);
+        if c == 0 && use_comp {
+            match &msgs[i].sparse {
+                Some(entries) => crate::linalg::scatter_axpy(w_self, entries, mx),
+                None => {
+                    debug_assert!(!msgs[i].dense_stale, "dense mix over a stale message");
+                    crate::linalg::axpy(w_self, &msgs[i].values, mx)
+                }
+            }
+        } else {
+            crate::linalg::axpy(w_self, &payload[i][c], mx);
+        }
+        for &j in &mix.neighbors[i] {
+            match fs.link(i, j) {
+                LinkState::Lost => {}
+                LinkState::Delivered => {
+                    if c == 0 && use_comp {
+                        match &msgs[j].sparse {
+                            Some(entries) => {
+                                crate::linalg::scatter_axpy(mix.weight(i, j), entries, mx)
+                            }
+                            None => {
+                                debug_assert!(
+                                    !msgs[j].dense_stale,
+                                    "dense mix over a stale message"
+                                );
+                                crate::linalg::axpy(mix.weight(i, j), &msgs[j].values, mx)
+                            }
+                        }
+                    } else {
+                        crate::linalg::axpy(mix.weight(i, j), &payload[j][c], mx);
+                    }
+                }
+                LinkState::Stale => {
+                    crate::linalg::axpy(mix.weight(i, j), fs.stale_payload(i, j, c), mx);
+                }
             }
         }
     }
@@ -374,6 +484,14 @@ impl Engine {
         // dedicated RNG stream, so enabling it cannot perturb any
         // trajectory (pinned by rust/tests/simnet.rs).
         let mut timer = self.cfg.net.map(|m| RoundTimer::new(&self.mix, m, self.cfg.seed));
+        // §Fault injection: compiled once per run on the dedicated FAULT
+        // stream; a no-op plan compiles to nothing so it cannot perturb
+        // the fault-free loop.
+        let mut faults = self
+            .cfg
+            .faults
+            .and_then(|p| (!p.is_noop()).then(|| FaultSchedule::new(&self.mix, p, self.cfg.seed, spec.channels, d)));
+        let mut stopped_early = false;
         let mut series = Vec::new();
         let mut round_bits = vec![0u64; n];
         let mut phases = PhaseTimes::default();
@@ -388,7 +506,7 @@ impl Engine {
         let extra_channel_bits = (spec.channels as u64 - 1) * (d as u64) * 32;
 
         // Record the initial state as round 0.
-        series.push(self.observe(&*algo, 0, 0.0, &traffic, 0.0));
+        series.push(self.observe(&*algo, 0, 0.0, &traffic, 0.0, FaultTotals::default()));
 
         for round in 1..=rounds {
             let eta = self.eta_at(round);
@@ -493,12 +611,44 @@ impl Engine {
                 algo.produce_all(&ctx, &grad, &mut g, &mut payload, &sink, exec);
                 phases.produce += t.elapsed().as_secs_f64();
             }
+            // §Fault injection: draw this round's fault events. Crashed
+            // agents produced as usual (stream alignment) but transmit
+            // nothing — their wire bits are zeroed before accounting.
+            if let Some(fs) = &mut faults {
+                fs.begin_round(round);
+                for i in 0..n {
+                    if fs.is_down(i) {
+                        round_bits[i] = 0;
+                    }
+                }
+            }
             traffic.record_bits(&self.mix, &round_bits);
             traffic.sim_time += match &mut timer {
-                Some(t) => t.round(&round_bits),
+                Some(t) => match &faults {
+                    // A preliminarily-lost transfer is charged on the
+                    // wire but never queued: no arrival, no retransmit.
+                    Some(fs) => {
+                        let lost =
+                            |src: usize, dst: usize| fs.link(dst, src) == LinkState::Lost;
+                        t.round_faulted(&round_bits, Some(&lost))
+                    }
+                    None => t.round(&round_bits),
+                },
                 None => TrafficStats::uniform_round_time(&self.cfg.link, &round_bits),
             };
             traffic.rounds += 1;
+            if let Some(fs) = &mut faults {
+                // Under a fault plan a transfer that hit the simnet
+                // retransmit cap is a real loss, not a fiction of
+                // delivery.
+                if let Some(t) = &timer {
+                    for &(src, dst) in t.capped_this_round() {
+                        fs.force_lose(dst as usize, src as usize);
+                    }
+                }
+                fs.resolve_round();
+            }
+            let stop_now = self.cfg.time_budget.is_some_and(|tb| traffic.sim_time >= tb);
 
             // (2) mix (parallel over agents; sparse-aware on channel 0).
             let mix_apply_exec =
@@ -508,16 +658,43 @@ impl Engine {
                 let mix = &self.mix;
                 let payload_ref = &payload;
                 let msgs_ref = &msgs;
-                par_chunks(mix_apply_exec, &mut mixed_all, |i, out| {
-                    for (c, mx) in out.iter_mut().enumerate() {
-                        mx.fill(0.0);
-                        if c == 0 && use_comp {
-                            mix_msgs(mix, i, msgs_ref, mx);
-                        } else {
-                            for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
-                                crate::linalg::axpy(mix.weight(i, j), &payload_ref[j][c], mx);
+                let fs_ref = faults.as_ref();
+                par_chunks(mix_apply_exec, &mut mixed_all, |i, out| match fs_ref {
+                    Some(fs) => {
+                        mix_degraded(mix, i, fs, use_comp, msgs_ref, payload_ref, out)
+                    }
+                    None => {
+                        for (c, mx) in out.iter_mut().enumerate() {
+                            mx.fill(0.0);
+                            if c == 0 && use_comp {
+                                mix_msgs(mix, i, msgs_ref, mx);
+                            } else {
+                                for j in
+                                    std::iter::once(i).chain(mix.neighbors[i].iter().copied())
+                                {
+                                    crate::linalg::axpy(mix.weight(i, j), &payload_ref[j][c], mx);
+                                }
                             }
                         }
+                    }
+                });
+            }
+            // Record delivered decodes for future stale replay (no-op
+            // unless the plan enables it).
+            if let Some(fs) = &mut faults {
+                fs.store_delivered(|j, c, buf| {
+                    if c == 0 && use_comp {
+                        match &msgs[j].sparse {
+                            Some(entries) => {
+                                buf.fill(0.0);
+                                for &(idx, v) in entries.iter() {
+                                    buf[idx as usize] = v;
+                                }
+                            }
+                            None => buf.copy_from_slice(&msgs[j].values),
+                        }
+                    } else {
+                        buf.copy_from_slice(&payload[j][c]);
                     }
                 });
             }
@@ -533,11 +710,18 @@ impl Engine {
             } else {
                 Inbox::from_payloads(&payload, &mixed_all)
             };
+            // §Fault injection: crashed agents' apply is skipped
+            // wholesale — their state (including difference-compression
+            // reference points) is frozen until recovery.
+            let inbox = match &faults {
+                Some(fs) => inbox.with_faults(fs.down_mask()),
+                None => inbox,
+            };
             algo.recv_all(&ctx, &g, &inbox, mix_apply_exec);
             drop(inbox);
             phases.apply += t.elapsed().as_secs_f64();
 
-            if round % self.cfg.record_every == 0 || round == rounds {
+            if round % self.cfg.record_every == 0 || round == rounds || stop_now {
                 let t = wall_clock();
                 // The recorded compression error is the error of the
                 // *observed* round — never a stale accumulation across
@@ -558,8 +742,13 @@ impl Engine {
                     0.0
                 };
                 let idle_max = timer.as_ref().map_or(0.0, |tm| tm.stats.max_idle());
-                series.push(self.observe(&*algo, round, comp_err, &traffic, idle_max));
+                let ft = faults.as_ref().map_or(FaultTotals::default(), |f| f.totals());
+                series.push(self.observe(&*algo, round, comp_err, &traffic, idle_max, ft));
                 phases.observe += t.elapsed().as_secs_f64();
+            }
+            if stop_now {
+                stopped_early = round < rounds;
+                break;
             }
         }
 
@@ -577,6 +766,8 @@ impl Engine {
             wall_secs: wall_start.elapsed().as_secs_f64(),
             phases,
             net,
+            faults: faults.as_ref().map(|f| f.summary()),
+            stopped_early,
         }
     }
 
@@ -587,6 +778,7 @@ impl Engine {
         comp_err: f64,
         traffic: &TrafficStats,
         idle_max: f64,
+        faults: FaultTotals,
     ) -> RoundMetrics {
         let n = self.mix.n;
         let d = self.problem.dim();
@@ -616,6 +808,10 @@ impl Engine {
             bits_per_agent: traffic.mean_bits_per_agent(),
             sim_time: traffic.sim_time,
             idle_max,
+            crashed: faults.crashed_agent_rounds,
+            lost: faults.lost_messages,
+            stale: faults.stale_deliveries,
+            renormed: faults.renormalized_rows,
         }
     }
 }

@@ -2,6 +2,7 @@
 //! the time-axis queries (`time_to_tol`) and per-agent network summaries
 //! that the simnet overlay adds for time-to-accuracy studies.
 
+use crate::faults::FaultSummary;
 use crate::serialize::json;
 use crate::simnet::NetSummary;
 
@@ -29,6 +30,16 @@ pub struct RoundMetrics {
     /// simnet overlay (`crate::simnet` §Timing contract: extra
     /// observability, never a trajectory change).
     pub idle_max: f64,
+    /// Cumulative crashed agent-rounds so far (`crate::faults`; all four
+    /// fault counters are zero when fault injection is off).
+    pub crashed: u64,
+    /// Cumulative messages lost outright (dropped, crashed endpoint, or
+    /// partitioned — and not replaced by a stale replay).
+    pub lost: u64,
+    /// Cumulative stale replays consumed in place of lost messages.
+    pub stale: u64,
+    /// Cumulative mixing rows renormalized by the degraded-inbox path.
+    pub renormed: u64,
 }
 
 /// Wall-clock totals per engine phase, accumulated over a run (§Perf —
@@ -86,6 +97,11 @@ pub struct RunRecord {
     /// Network summary (per-agent idle/straggler stats, retransmits,
     /// utilization) — `Some` iff the run used the simnet overlay.
     pub net: Option<NetSummary>,
+    /// Fault-injection summary — `Some` iff the run used a fault plan.
+    pub faults: Option<FaultSummary>,
+    /// True iff the run stopped at `EngineConfig.time_budget` before
+    /// completing its scheduled rounds.
+    pub stopped_early: bool,
 }
 
 impl RunRecord {
@@ -145,11 +161,12 @@ impl RunRecord {
 
     /// CSV with a header row (one line per recorded round).
     pub fn to_csv(&self) -> String {
-        let mut s =
-            String::from("round,dist_opt,consensus,loss,comp_err,bits_per_agent,sim_time,idle_max\n");
+        let mut s = String::from(
+            "round,dist_opt,consensus,loss,comp_err,bits_per_agent,sim_time,idle_max,crashed,lost,stale,renormed\n",
+        );
         for m in &self.series {
             s.push_str(&format!(
-                "{},{:e},{:e},{:e},{:e},{},{:e},{:e}\n",
+                "{},{:e},{:e},{:e},{:e},{},{:e},{:e},{},{},{},{}\n",
                 m.round,
                 m.dist_opt,
                 m.consensus,
@@ -157,7 +174,11 @@ impl RunRecord {
                 m.comp_err,
                 m.bits_per_agent,
                 m.sim_time,
-                m.idle_max
+                m.idle_max,
+                m.crashed,
+                m.lost,
+                m.stale,
+                m.renormed
             ));
         }
         s
@@ -189,6 +210,17 @@ impl RunRecord {
             None => out.push_str("null"),
         }
         out.push(',');
+        json::write_str(&mut out, "faults");
+        out.push(':');
+        match &self.faults {
+            Some(f) => out.push_str(&f.to_json()),
+            None => out.push_str("null"),
+        }
+        out.push(',');
+        json::write_str(&mut out, "stopped_early");
+        out.push(':');
+        out.push_str(if self.stopped_early { "true" } else { "false" });
+        out.push(',');
         json::write_str(&mut out, "series");
         out.push_str(":[");
         for (i, m) in self.series.iter().enumerate() {
@@ -196,7 +228,7 @@ impl RunRecord {
                 out.push(',');
             }
             out.push_str(&format!(
-                "[{},{},{},{},{},{},{},{}]",
+                "[{},{},{},{},{},{},{},{},{},{},{},{}]",
                 m.round,
                 fin(m.dist_opt),
                 fin(m.consensus),
@@ -204,7 +236,11 @@ impl RunRecord {
                 fin(m.comp_err),
                 m.bits_per_agent,
                 fin(m.sim_time),
-                fin(m.idle_max)
+                fin(m.idle_max),
+                m.crashed,
+                m.lost,
+                m.stale,
+                m.renormed
             ));
         }
         out.push_str("]}");
@@ -238,6 +274,8 @@ mod tests {
             wall_secs: 0.1,
             phases: PhaseTimes::default(),
             net: None,
+            faults: None,
+            stopped_early: false,
             series: dists
                 .iter()
                 .enumerate()
@@ -250,6 +288,10 @@ mod tests {
                     bits_per_agent: (i as f64) * 100.0,
                     sim_time: i as f64,
                     idle_max: 0.0,
+                    crashed: 0,
+                    lost: 0,
+                    stale: 0,
+                    renormed: 0,
                 })
                 .collect(),
         }
@@ -280,14 +322,16 @@ mod tests {
         let csv = r.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.starts_with("round,"));
-        assert!(csv.lines().next().unwrap().ends_with(",idle_max"));
+        assert!(csv.lines().next().unwrap().ends_with(",renormed"));
         let js = crate::serialize::json::parse(&r.to_json()).unwrap();
         assert_eq!(js.get("algo").unwrap().as_str(), Some("test"));
         assert_eq!(js.get("series").unwrap().as_arr().unwrap().len(), 2);
-        // Each series row carries 8 columns (…, sim_time, idle_max).
+        // Each series row carries 12 columns (…, crashed, lost, stale,
+        // renormed).
         let row = js.get("series").unwrap().as_arr().unwrap()[0].as_arr().unwrap().len();
-        assert_eq!(row, 8);
+        assert_eq!(row, 12);
         assert!(js.get("net").is_some(), "legacy runs serialize net as null");
+        assert!(js.get("faults").is_some(), "fault-free runs serialize faults as null");
 
         // With a simnet summary attached the JSON embeds it.
         r.net = Some(NetSummary {
@@ -295,11 +339,29 @@ mod tests {
             idle_s: vec![0.0, 0.25],
             straggler_rounds: vec![1, 1],
             retransmits: 0,
+            capped: 0,
             utilization: 0.5,
         });
         let js = crate::serialize::json::parse(&r.to_json()).unwrap();
         let net = js.get("net").unwrap();
         assert_eq!(net.get("link").unwrap().as_str(), Some("uniform:1e-4:1e9"));
         assert_eq!(net.get("idle_s").unwrap().as_arr().unwrap().len(), 2);
+
+        // With a fault summary attached the JSON embeds that too.
+        r.faults = Some(FaultSummary {
+            plan: "loss:5e-2".into(),
+            crashed_agent_rounds: 0,
+            lost: 7,
+            stale: 0,
+            renormalized_rows: 7,
+            capped_losses: 0,
+            down_rounds: vec![0, 0],
+        });
+        r.stopped_early = true;
+        let js = crate::serialize::json::parse(&r.to_json()).unwrap();
+        let f = js.get("faults").unwrap();
+        assert_eq!(f.get("plan").unwrap().as_str(), Some("loss:5e-2"));
+        assert_eq!(f.get("lost").unwrap().as_f64(), Some(7.0));
+        assert_eq!(js.get("stopped_early"), Some(&crate::serialize::json::Json::Bool(true)));
     }
 }

@@ -37,6 +37,17 @@
 //! # Sweeping `seed` additionally emits mean ± std aggregate bands per
 //! # cell into <grid>.json (scenarios §Seed-axis aggregation); see
 //! # examples/time_to_accuracy.toml for the full time-to-accuracy grid.
+//! # Fault plans are an axis too (`lead::faults` specs; unlike `link`
+//! # these DO perturb trajectories — deterministically, from the
+//! # dedicated fault RNG stream):
+//! # faults = ["none", "loss:0.05", "crash:0.25:100:down=40",
+//! #           "churn:0.01+loss:0.02:stale=2"]
+//! # Degraded-inbox contract: a lost in-link folds its weight into the
+//! # receiver's self weight (row stays stochastic); crashed agents skip
+//! # their apply entirely (state frozen, including LEAD's h / CHOCO's
+//! # x̂ reference points). `time_budget = <secs>` stops every cell once
+//! # sim_time crosses it (record flags stopped_early); see
+//! # examples/fault_tolerance.toml for the full graceful-degradation grid.
 //! ```
 //!
 //! Determinism: grids are bitwise-identical at any thread count (every

@@ -1,0 +1,950 @@
+//! Deterministic fault injection: crash / churn / partition / loss
+//! schedules that *deliberately* perturb trajectories, plus the
+//! bookkeeping the engine's graceful-degradation path needs.
+//!
+//! # Plan → schedule
+//!
+//! A [`FaultPlan`] is plain data, parseable from a grid TOML axis and
+//! round-trippable through [`FaultPlan::label`] exactly like
+//! [`crate::simnet::NetModel`]. The engine compiles it into a
+//! [`FaultSchedule`]: a per-round event source driven by a dedicated
+//! `streams::FAULT` RNG root, so enabling faults cannot shift any stream
+//! an algorithm consumes — and with the plan absent (or a no-op plan)
+//! the round loop is bitwise-identical to the fault-free engine
+//! (`rust/tests/faults.rs`).
+//!
+//! # Degraded-inbox contract
+//!
+//! Every directed in-link (receiver `i`, sender `j`) resolves each round
+//! to one [`LinkState`]:
+//!
+//! * `Delivered` — mixed at weight `w_ij` as usual;
+//! * `Stale` — the link's *last delivered* decode is replayed at `w_ij`,
+//!   bounded by the plan's `stale=` age limit;
+//! * `Lost` — the message is simply gone (no retransmit); the mix step
+//!   folds `w_ij` into the receiver's self weight
+//!   ([`folded_self_weight`]), so the effective mixing row stays
+//!   row-stochastic (proptest below: sums to 1, entries nonnegative,
+//!   symmetric losses keep W symmetric).
+//!
+//! A crashed agent transmits nothing (its out-links resolve Lost and the
+//! engine zeroes its wire bits), consumes nothing (in-links Lost), and
+//! skips its apply step entirely (`Inbox::live`) — its state, including
+//! the LEAD/CHOCO difference-compression reference points `h`/`x̂`,
+//! stays frozen until recovery, so a skipped update can never corrupt
+//! the compression bookkeeping.
+//!
+//! # Determinism
+//!
+//! All schedule mutation happens sequentially on the coordinator thread
+//! ([`FaultSchedule::begin_round`] → [`FaultSchedule::force_lose`] →
+//! [`FaultSchedule::resolve_round`]); the parallel mix/apply phases only
+//! *read* it. Draw counts per round are fixed by the plan alone — one
+//! churn draw per agent when `churn > 0`, one loss draw per directed
+//! in-link (receiver ascending, neighbor-list order) when `loss > 0` —
+//! never by which faults actually fire, so trajectories are
+//! bitwise-deterministic across thread counts and reruns.
+
+use crate::rng::{streams, Rng};
+use crate::serialize::json;
+use crate::topology::MixingMatrix;
+
+/// Default crash outage length (rounds) when `crash:…` carries no
+/// `down=` modifier.
+pub const DEFAULT_CRASH_DOWN: usize = 10;
+/// Default churn outage length (rounds) when `churn:…` carries no
+/// `down=` modifier.
+pub const DEFAULT_CHURN_DOWN: usize = 5;
+
+/// A declarative fault plan — plain `Copy` data so [`crate::coordinator::
+/// engine::EngineConfig`] stays `Copy`.
+///
+/// Spec-string grammar (clauses joined by `+`, `key=value` modifiers
+/// allowed after a clause's positional arguments):
+///
+/// ```text
+/// loss:P                      P ∈ (0, 1): per-round i.i.d. directed-link loss
+/// crash:FRAC:ROUND[:down=K]   ⌈FRAC·n⌉ agents crash at ROUND for K rounds
+/// churn:RATE[:down=K]         per-round per-agent crash probability RATE ∈ (0, 1)
+/// partition:CUT:FROM:TO       links across {0..CUT-1} | {CUT..n-1} cut for rounds [FROM, TO)
+/// ```
+///
+/// Global modifiers, attachable to any clause: `stale=S` (replay a
+/// neighbor's last delivered message on a lost link, up to age S) and
+/// `seed=N` (pin the fault stream independently of the engine seed —
+/// the `NetModel` `seed=` convention). Examples:
+/// `loss:0.05`, `crash:0.25:40+loss:0.1:stale=2`, `partition:4:50:80`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Per-round, per-directed-link message loss probability.
+    pub loss: f64,
+    /// Fraction of agents crashing in the one-shot crash event (0 = off).
+    pub crash_frac: f64,
+    /// Round at which the one-shot crash fires.
+    pub crash_round: usize,
+    /// Outage length, in rounds, of the one-shot crash.
+    pub crash_down: usize,
+    /// Per-round, per-agent crash probability (0 = off).
+    pub churn: f64,
+    /// Outage length, in rounds, of each churn crash.
+    pub churn_down: usize,
+    /// Partition boundary: agents {0..cut-1} vs {cut..n-1} (0 = off).
+    pub part_cut: usize,
+    /// First round (inclusive) of the partition window.
+    pub part_from: usize,
+    /// End round (exclusive) of the partition window.
+    pub part_to: usize,
+    /// Staleness bound: a lost link replays the neighbor's last
+    /// delivered message while its age ≤ this (0 = replay off).
+    pub stale: usize,
+    /// Fault-stream seed; 0 ⇒ derive from the engine seed.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            loss: 0.0,
+            crash_frac: 0.0,
+            crash_round: 0,
+            crash_down: DEFAULT_CRASH_DOWN,
+            churn: 0.0,
+            churn_down: DEFAULT_CHURN_DOWN,
+            part_cut: 0,
+            part_from: 0,
+            part_to: 0,
+            stale: 0,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the spec-string grammar above. Returns None on anything
+    /// malformed: unknown clause kinds or modifiers, duplicate clauses
+    /// or modifiers, missing/stray positionals, out-of-range numbers.
+    pub fn parse(s: &str) -> Option<FaultPlan> {
+        if s.is_empty() {
+            return None;
+        }
+        let mut p = FaultPlan::default();
+        let (mut saw_loss, mut saw_crash, mut saw_churn, mut saw_part) =
+            (false, false, false, false);
+        let (mut saw_stale, mut saw_seed) = (false, false);
+        for clause in s.split('+') {
+            let mut parts = clause.split(':');
+            let kind = parts.next()?;
+            let mut pos: Vec<&str> = Vec::new();
+            let mut down: Option<usize> = None;
+            let mut mods = false;
+            for part in parts {
+                if let Some((k, v)) = part.split_once('=') {
+                    mods = true;
+                    match k {
+                        "down" => {
+                            if down.is_some() {
+                                return None;
+                            }
+                            let d = v.parse::<usize>().ok()?;
+                            if d == 0 {
+                                return None;
+                            }
+                            down = Some(d);
+                        }
+                        "stale" => {
+                            if saw_stale {
+                                return None;
+                            }
+                            p.stale = v.parse::<usize>().ok()?;
+                            saw_stale = true;
+                        }
+                        "seed" => {
+                            if saw_seed {
+                                return None;
+                            }
+                            p.seed = v.parse::<u64>().ok()?;
+                            saw_seed = true;
+                        }
+                        _ => return None,
+                    }
+                } else {
+                    if mods {
+                        // Positional after a modifier is a typo.
+                        return None;
+                    }
+                    pos.push(part);
+                }
+            }
+            match (kind, pos.as_slice()) {
+                ("loss", [prob]) => {
+                    if saw_loss || down.is_some() {
+                        return None;
+                    }
+                    let l = prob.parse::<f64>().ok()?;
+                    if !l.is_finite() || l <= 0.0 || l >= 1.0 {
+                        return None;
+                    }
+                    p.loss = l;
+                    saw_loss = true;
+                }
+                ("crash", [frac, round]) => {
+                    if saw_crash {
+                        return None;
+                    }
+                    let f = frac.parse::<f64>().ok()?;
+                    let r = round.parse::<usize>().ok()?;
+                    if !f.is_finite() || f <= 0.0 || f > 1.0 || r == 0 {
+                        return None;
+                    }
+                    p.crash_frac = f;
+                    p.crash_round = r;
+                    p.crash_down = down.unwrap_or(DEFAULT_CRASH_DOWN);
+                    saw_crash = true;
+                }
+                ("churn", [rate]) => {
+                    if saw_churn {
+                        return None;
+                    }
+                    let c = rate.parse::<f64>().ok()?;
+                    if !c.is_finite() || c <= 0.0 || c >= 1.0 {
+                        return None;
+                    }
+                    p.churn = c;
+                    p.churn_down = down.unwrap_or(DEFAULT_CHURN_DOWN);
+                    saw_churn = true;
+                }
+                ("partition", [cut, from, to]) => {
+                    if saw_part || down.is_some() {
+                        return None;
+                    }
+                    let c = cut.parse::<usize>().ok()?;
+                    let f = from.parse::<usize>().ok()?;
+                    let t = to.parse::<usize>().ok()?;
+                    if c == 0 || f >= t {
+                        return None;
+                    }
+                    p.part_cut = c;
+                    p.part_from = f;
+                    p.part_to = t;
+                    saw_part = true;
+                }
+                _ => return None,
+            }
+        }
+        Some(p)
+    }
+
+    /// Canonical spec string; [`FaultPlan::parse`] round-trips it
+    /// (`parse(label()) == Some(self)` for any parseable plan).
+    pub fn label(&self) -> String {
+        let mut clauses: Vec<String> = Vec::new();
+        if self.loss > 0.0 {
+            clauses.push(format!("loss:{:e}", self.loss));
+        }
+        if self.crash_frac > 0.0 {
+            let mut c = format!("crash:{:e}:{}", self.crash_frac, self.crash_round);
+            if self.crash_down != DEFAULT_CRASH_DOWN {
+                c.push_str(&format!(":down={}", self.crash_down));
+            }
+            clauses.push(c);
+        }
+        if self.churn > 0.0 {
+            let mut c = format!("churn:{:e}", self.churn);
+            if self.churn_down != DEFAULT_CHURN_DOWN {
+                c.push_str(&format!(":down={}", self.churn_down));
+            }
+            clauses.push(c);
+        }
+        if self.part_cut > 0 {
+            clauses.push(format!("partition:{}:{}:{}", self.part_cut, self.part_from, self.part_to));
+        }
+        if clauses.is_empty() {
+            return "none".into();
+        }
+        let mut out = clauses.join("+");
+        if self.stale > 0 {
+            out.push_str(&format!(":stale={}", self.stale));
+        }
+        if self.seed != 0 {
+            out.push_str(&format!(":seed={}", self.seed));
+        }
+        out
+    }
+
+    /// A plan with no enabled fault source. The engine treats a no-op
+    /// plan exactly like `faults: None` (bitwise-identical round loop).
+    pub fn is_noop(&self) -> bool {
+        self.loss == 0.0 && self.crash_frac == 0.0 && self.churn == 0.0 && self.part_cut == 0
+    }
+}
+
+/// Per-round resolution of one directed in-link (receiver, sender).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkState {
+    /// Message arrived; mixed at the nominal weight.
+    Delivered,
+    /// Message lost; weight folded into the receiver's self weight.
+    Lost,
+    /// Message lost but the link's last delivered decode is replayed at
+    /// the nominal weight (age within the plan's `stale=` bound).
+    Stale,
+}
+
+/// Cumulative fault counters, sampled into `RoundMetrics` on observed
+/// rounds and totalled in [`FaultSummary`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultTotals {
+    /// Σ over rounds of the number of crashed agents.
+    pub crashed_agent_rounds: u64,
+    /// Directed messages that resolved [`LinkState::Lost`].
+    pub lost_messages: u64,
+    /// Directed messages that resolved [`LinkState::Stale`].
+    pub stale_deliveries: u64,
+    /// Live receiver rows with ≥ 1 lost in-link (i.e. rows the mix step
+    /// renormalized by folding lost mass into the self weight).
+    pub renormalized_rows: u64,
+    /// Losses injected by [`FaultSchedule::force_lose`] — simnet
+    /// transfers that hit the retransmit cap and, under a fault plan,
+    /// become real losses instead of fictions of delivery.
+    pub capped_losses: u64,
+}
+
+/// Fold the weights of lost in-links into agent `i`'s self weight:
+/// `w'_ii = w_ii + Σ_{j ∈ N_i, lost(j)} w_ij`, which together with
+/// skipping the lost terms keeps the effective row sum at exactly 1 up
+/// to f64 roundoff. Shared by the engine's degraded mix and the
+/// row-stochasticity proptest.
+pub fn folded_self_weight(mix: &MixingMatrix, i: usize, mut lost: impl FnMut(usize) -> bool) -> f64 {
+    let mut w = mix.self_weight(i);
+    for &j in &mix.neighbors[i] {
+        if lost(j) {
+            w += mix.weight(i, j);
+        }
+    }
+    w
+}
+
+/// Compiled per-round fault event source (see module docs for the
+/// begin/force/resolve protocol and the determinism contract).
+pub struct FaultSchedule {
+    plan: FaultPlan,
+    n: usize,
+    channels: usize,
+    d: usize,
+    neighbors: Vec<Vec<usize>>,
+    rng: Rng,
+    /// Agents hit by the one-shot crash event (drawn at construction).
+    crash_set: Vec<usize>,
+    /// Remaining outage rounds per agent (0 = live).
+    down_left: Vec<u32>,
+    /// Down mask for the current round (read by mix/apply workers).
+    down_now: Vec<bool>,
+    /// Total rounds each agent has spent crashed.
+    down_rounds: Vec<u64>,
+    /// Dense directed-link state, indexed `receiver * n + sender`; only
+    /// entries on real edges are ever read.
+    state: Vec<LinkState>,
+    /// Rounds since the link last delivered (`u32::MAX` = never).
+    age: Vec<u32>,
+    /// Last delivered decode per (receiver, sender, channel); allocated
+    /// only when the plan enables stale replay.
+    stale_buf: Vec<f64>,
+    totals: FaultTotals,
+}
+
+impl FaultSchedule {
+    /// Compile `plan` against a topology. `engine_seed` feeds the
+    /// dedicated fault stream unless the plan pins its own `seed=`.
+    pub fn new(
+        mix: &MixingMatrix,
+        plan: FaultPlan,
+        engine_seed: u64,
+        channels: usize,
+        d: usize,
+    ) -> FaultSchedule {
+        let n = mix.n;
+        let base = if plan.seed == 0 { engine_seed } else { plan.seed };
+        let mut rng = Rng::new(base).derive(streams::FAULT);
+        let crash_set = if plan.crash_frac > 0.0 {
+            let k = ((plan.crash_frac * n as f64).ceil() as usize).clamp(1, n);
+            rng.sample_indices(n, k)
+        } else {
+            Vec::new()
+        };
+        let stale_buf = if plan.stale > 0 {
+            vec![0.0f64; n * n * channels * d]
+        } else {
+            Vec::new()
+        };
+        FaultSchedule {
+            plan,
+            n,
+            channels,
+            d,
+            neighbors: mix.neighbors.clone(),
+            rng,
+            crash_set,
+            down_left: vec![0; n],
+            down_now: vec![false; n],
+            down_rounds: vec![0; n],
+            state: vec![LinkState::Delivered; n * n],
+            age: vec![u32::MAX; n * n],
+            stale_buf,
+            totals: FaultTotals::default(),
+        }
+    }
+
+    /// The compiled plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Draw this round's fault events (coordinator thread only; rounds
+    /// are 1-based and must be presented in order). After this call the
+    /// down mask is final; link states are *preliminary* until
+    /// [`FaultSchedule::resolve_round`].
+    pub fn begin_round(&mut self, round: usize) {
+        let n = self.n;
+        // (a) recovery: tick down the outage counters.
+        for left in self.down_left.iter_mut() {
+            *left = left.saturating_sub(1);
+        }
+        // (b) the one-shot crash event.
+        if self.plan.crash_frac > 0.0 && round == self.plan.crash_round {
+            for &i in &self.crash_set {
+                self.down_left[i] = self.plan.crash_down as u32;
+            }
+        }
+        // (c) churn: one draw per agent per round whenever churn is
+        // enabled — the draw count never depends on outcomes.
+        if self.plan.churn > 0.0 {
+            for i in 0..n {
+                let hit = self.rng.uniform() < self.plan.churn;
+                if hit && self.down_left[i] == 0 {
+                    self.down_left[i] = self.plan.churn_down as u32;
+                }
+            }
+        }
+        for i in 0..n {
+            self.down_now[i] = self.down_left[i] > 0;
+            if self.down_now[i] {
+                self.down_rounds[i] += 1;
+                self.totals.crashed_agent_rounds += 1;
+            }
+        }
+        // (d) preliminary link states: crashed endpoints and partitioned
+        // or lossy links resolve Lost. The loss draw always happens when
+        // loss is enabled (fixed draw count), even on links already dead.
+        let cut = self.plan.part_cut;
+        let partition_on =
+            cut > 0 && round >= self.plan.part_from && round < self.plan.part_to;
+        for i in 0..n {
+            for nj in 0..self.neighbors[i].len() {
+                let j = self.neighbors[i][nj];
+                let dropped = self.plan.loss > 0.0 && self.rng.uniform() < self.plan.loss;
+                let cut_off = partition_on && ((i < cut) != (j < cut));
+                let lost = self.down_now[i] || self.down_now[j] || cut_off || dropped;
+                self.state[i * n + j] =
+                    if lost { LinkState::Lost } else { LinkState::Delivered };
+            }
+        }
+    }
+
+    /// Demote a preliminarily-Delivered link to Lost — used by the
+    /// engine when the simnet timer reports a transfer that hit the
+    /// retransmit cap (`sender` → `receiver`): under a fault plan a
+    /// capped transfer is a real loss, not a fiction of delivery.
+    pub fn force_lose(&mut self, receiver: usize, sender: usize) {
+        let idx = receiver * self.n + sender;
+        if self.state[idx] == LinkState::Delivered {
+            self.state[idx] = LinkState::Lost;
+            self.totals.capped_losses += 1;
+        }
+    }
+
+    /// Finalize this round's link states: upgrade Lost links with a
+    /// fresh-enough last delivery to Stale, update link ages, and
+    /// accumulate the round's counters.
+    pub fn resolve_round(&mut self) {
+        let n = self.n;
+        let stale = self.plan.stale as u32;
+        for i in 0..n {
+            let mut any_lost = false;
+            for nj in 0..self.neighbors[i].len() {
+                let j = self.neighbors[i][nj];
+                let idx = i * n + j;
+                match self.state[idx] {
+                    LinkState::Delivered => {
+                        self.age[idx] = 0;
+                    }
+                    LinkState::Lost => {
+                        let a = self.age[idx];
+                        if !self.down_now[i] && stale > 0 && a != u32::MAX && a + 1 <= stale {
+                            self.state[idx] = LinkState::Stale;
+                            self.age[idx] = a + 1;
+                            self.totals.stale_deliveries += 1;
+                        } else {
+                            if a != u32::MAX {
+                                // Too old to replay from now on (until a
+                                // fresh delivery resets the age).
+                                self.age[idx] = a.saturating_add(1);
+                            }
+                            self.totals.lost_messages += 1;
+                            any_lost = true;
+                        }
+                    }
+                    LinkState::Stale => unreachable!("begin_round never emits Stale"),
+                }
+            }
+            if any_lost && !self.down_now[i] {
+                self.totals.renormalized_rows += 1;
+            }
+        }
+    }
+
+    /// Whether agent `i` is crashed this round.
+    #[inline]
+    pub fn is_down(&self, i: usize) -> bool {
+        self.down_now[i]
+    }
+
+    /// Final state of the directed in-link `sender → receiver` this
+    /// round (valid after [`FaultSchedule::resolve_round`]).
+    #[inline]
+    pub fn link(&self, receiver: usize, sender: usize) -> LinkState {
+        self.state[receiver * self.n + sender]
+    }
+
+    /// The replayed decode for a [`LinkState::Stale`] in-link.
+    #[inline]
+    pub fn stale_payload(&self, receiver: usize, sender: usize, channel: usize) -> &[f64] {
+        let off = ((receiver * self.n + sender) * self.channels + channel) * self.d;
+        &self.stale_buf[off..off + self.d]
+    }
+
+    /// Record this round's delivered decodes for future stale replay
+    /// (no-op when the plan disables replay). `fill(sender, channel,
+    /// buf)` writes the sender's decoded channel payload into `buf` —
+    /// the engine supplies the sparse-aware decode.
+    pub fn store_delivered(&mut self, mut fill: impl FnMut(usize, usize, &mut [f64])) {
+        if self.plan.stale == 0 {
+            return;
+        }
+        let (n, ch, d) = (self.n, self.channels, self.d);
+        for i in 0..n {
+            for nj in 0..self.neighbors[i].len() {
+                let j = self.neighbors[i][nj];
+                if self.state[i * n + j] == LinkState::Delivered {
+                    for c in 0..ch {
+                        let off = ((i * n + j) * ch + c) * d;
+                        fill(j, c, &mut self.stale_buf[off..off + d]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-agent down mask for the current round (lifetime-borrowed by
+    /// the degraded `Inbox`).
+    pub fn down_mask(&self) -> &[bool] {
+        &self.down_now
+    }
+
+    /// Cumulative counters so far.
+    pub fn totals(&self) -> FaultTotals {
+        self.totals
+    }
+
+    /// End-of-run summary for the `RunRecord`.
+    pub fn summary(&self) -> FaultSummary {
+        FaultSummary {
+            plan: self.plan.label(),
+            crashed_agent_rounds: self.totals.crashed_agent_rounds,
+            lost: self.totals.lost_messages,
+            stale: self.totals.stale_deliveries,
+            renormalized_rows: self.totals.renormalized_rows,
+            capped_losses: self.totals.capped_losses,
+            down_rounds: self.down_rounds.clone(),
+        }
+    }
+}
+
+/// End-of-run fault summary, serialized into the `RunRecord` JSON the
+/// way `NetSummary` is.
+#[derive(Clone, Debug)]
+pub struct FaultSummary {
+    /// Canonical plan label ([`FaultPlan::label`]).
+    pub plan: String,
+    pub crashed_agent_rounds: u64,
+    pub lost: u64,
+    pub stale: u64,
+    pub renormalized_rows: u64,
+    pub capped_losses: u64,
+    /// Rounds each agent spent crashed.
+    pub down_rounds: Vec<u64>,
+}
+
+impl FaultSummary {
+    /// Compact JSON object (hand-rolled, mirroring `NetSummary::to_json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        json::write_str(&mut out, "plan");
+        out.push(':');
+        json::write_str(&mut out, &self.plan);
+        out.push_str(&format!(
+            ",\"crashed_agent_rounds\":{},\"lost\":{},\"stale\":{},\"renormalized_rows\":{},\"capped_losses\":{},\"down_rounds\":[",
+            self.crashed_agent_rounds,
+            self.lost,
+            self.stale,
+            self.renormalized_rows,
+            self.capped_losses
+        ));
+        for (i, r) in self.down_rounds.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{r}"));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+    use crate::prop_assert;
+    use crate::topology::{MixingRule, Topology};
+
+    #[test]
+    fn parse_accepts_all_kinds() {
+        let p = FaultPlan::parse("loss:0.05").unwrap();
+        assert_eq!(p.loss, 0.05);
+        assert!(p.is_noop() == false);
+
+        let p = FaultPlan::parse("crash:0.25:40").unwrap();
+        assert_eq!(p.crash_frac, 0.25);
+        assert_eq!(p.crash_round, 40);
+        assert_eq!(p.crash_down, DEFAULT_CRASH_DOWN);
+
+        let p = FaultPlan::parse("crash:0.25:40:down=3").unwrap();
+        assert_eq!(p.crash_down, 3);
+
+        let p = FaultPlan::parse("churn:0.01:down=2").unwrap();
+        assert_eq!(p.churn, 0.01);
+        assert_eq!(p.churn_down, 2);
+
+        let p = FaultPlan::parse("partition:4:50:80").unwrap();
+        assert_eq!((p.part_cut, p.part_from, p.part_to), (4, 50, 80));
+
+        let p = FaultPlan::parse("loss:0.1+crash:0.5:10:stale=2:seed=7").unwrap();
+        assert_eq!(p.loss, 0.1);
+        assert_eq!(p.crash_frac, 0.5);
+        assert_eq!(p.stale, 2);
+        assert_eq!(p.seed, 7);
+    }
+
+    #[test]
+    fn parse_label_roundtrip() {
+        for s in [
+            "loss:5e-2",
+            "crash:2.5e-1:40",
+            "crash:2.5e-1:40:down=3",
+            "churn:1e-2",
+            "churn:1e-2:down=2",
+            "partition:4:50:80",
+            "loss:1e-1+crash:5e-1:10+churn:2e-3+partition:2:5:9:stale=2:seed=7",
+            "loss:5e-2:stale=1",
+            "loss:5e-2:seed=123",
+        ] {
+            let p = FaultPlan::parse(s).unwrap_or_else(|| panic!("parse failed: {s}"));
+            assert_eq!(p.label(), s, "label not canonical for {s}");
+            assert_eq!(FaultPlan::parse(&p.label()), Some(p), "roundtrip failed for {s}");
+        }
+        // Non-canonical but valid spellings still round-trip through the
+        // canonical label.
+        let p = FaultPlan::parse("loss:0.05").unwrap();
+        assert_eq!(FaultPlan::parse(&p.label()), Some(p));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for s in [
+            "",
+            "loss",
+            "loss:",
+            "loss:0",
+            "loss:1.0",
+            "loss:-0.1",
+            "loss:nan",
+            "loss:0.1:0.2",
+            "loss:0.1+loss:0.2",
+            "loss:0.1:down=3",
+            "crash:0.5",
+            "crash:0:10",
+            "crash:1.5:10",
+            "crash:0.5:0",
+            "crash:0.5:10:down=0",
+            "churn:1.0",
+            "churn:0",
+            "partition:0:5:9",
+            "partition:4:9:5",
+            "partition:4:5:5",
+            "partition:4:5",
+            "partition:4:5:9:down=2",
+            "blackout:0.5",
+            "loss:0.1:wat=3",
+            "loss:0.1:stale=2:7",
+            "loss:0.1:stale=2+churn:0.1:stale=3",
+            "loss:0.1:seed=1:seed=2",
+        ] {
+            assert_eq!(FaultPlan::parse(s), None, "accepted garbage: {s}");
+        }
+    }
+
+    #[test]
+    fn noop_detection() {
+        assert!(FaultPlan::default().is_noop());
+        let p = FaultPlan { stale: 3, seed: 9, ..FaultPlan::default() };
+        assert!(p.is_noop(), "stale/seed alone enable nothing");
+        assert!(!FaultPlan::parse("loss:0.5").unwrap().is_noop());
+    }
+
+    fn ring(n: usize) -> MixingMatrix {
+        Topology::Ring.build(n, MixingRule::UniformNeighbors)
+    }
+
+    /// Two schedules from the same plan and seed emit identical events.
+    #[test]
+    fn schedule_deterministic() {
+        let mix = ring(8);
+        let plan = FaultPlan::parse("loss:0.2+churn:0.05:down=2").unwrap();
+        let mut a = FaultSchedule::new(&mix, plan, 7, 1, 4);
+        let mut b = FaultSchedule::new(&mix, plan, 7, 1, 4);
+        for round in 1..=50 {
+            a.begin_round(round);
+            b.begin_round(round);
+            a.resolve_round();
+            b.resolve_round();
+            assert_eq!(a.down_now, b.down_now, "round {round}");
+            assert_eq!(a.state, b.state, "round {round}");
+        }
+        assert_eq!(a.totals(), b.totals());
+    }
+
+    /// `seed=` pins the fault stream across engine seeds (the NetModel
+    /// convention); without it, the engine seed drives the stream.
+    #[test]
+    fn plan_seed_pins_events_across_engine_seeds() {
+        let mix = ring(8);
+        let pinned = FaultPlan::parse("loss:0.3:seed=99").unwrap();
+        let free = FaultPlan::parse("loss:0.3").unwrap();
+        let events = |plan: FaultPlan, engine_seed: u64| {
+            let mut fs = FaultSchedule::new(&mix, plan, engine_seed, 1, 4);
+            let mut log = Vec::new();
+            for round in 1..=30 {
+                fs.begin_round(round);
+                fs.resolve_round();
+                log.push(fs.state.clone());
+            }
+            log
+        };
+        assert_eq!(events(pinned, 1), events(pinned, 2));
+        assert_ne!(events(free, 1), events(free, 2));
+    }
+
+    /// The one-shot crash takes the right agents down for exactly
+    /// `down` rounds, and counters add up.
+    #[test]
+    fn crash_window_and_recovery() {
+        let mix = ring(8);
+        let plan = FaultPlan::parse("crash:0.25:5:down=3").unwrap();
+        let mut fs = FaultSchedule::new(&mix, plan, 42, 1, 4);
+        let mut down_per_round = Vec::new();
+        for round in 1..=12 {
+            fs.begin_round(round);
+            fs.resolve_round();
+            down_per_round.push((0..8).filter(|&i| fs.is_down(i)).count());
+        }
+        // ⌈0.25·8⌉ = 2 agents down for rounds 5..=7, nothing else.
+        let want: Vec<usize> = (1..=12).map(|r| if (5..=7).contains(&r) { 2 } else { 0 }).collect();
+        assert_eq!(down_per_round, want);
+        assert_eq!(fs.totals().crashed_agent_rounds, 6);
+        // Crashed agents lose every in- and out-link: 2 agents × 2
+        // links × 2 directions per crash round, minus double counting of
+        // any link between the two crashed agents.
+        assert!(fs.totals().lost_messages >= 12, "{:?}", fs.totals());
+        let s = fs.summary();
+        assert_eq!(s.down_rounds.iter().sum::<u64>(), 6);
+        assert_eq!(s.down_rounds.iter().filter(|&&r| r == 3).count(), 2);
+    }
+
+    /// Partition cuts exactly the cross-boundary links during the
+    /// window and nothing outside it.
+    #[test]
+    fn partition_window() {
+        let mix = ring(8);
+        let plan = FaultPlan::parse("partition:4:3:6").unwrap();
+        let mut fs = FaultSchedule::new(&mix, plan, 42, 1, 4);
+        for round in 1..=8 {
+            fs.begin_round(round);
+            fs.resolve_round();
+            let in_window = (3..6).contains(&round);
+            for i in 0..8 {
+                for &j in &mix.neighbors[i] {
+                    let cross = (i < 4) != (j < 4);
+                    let want = if in_window && cross { LinkState::Lost } else { LinkState::Delivered };
+                    assert_eq!(fs.link(i, j), want, "round {round} link {j}->{i}");
+                }
+            }
+        }
+        // Ring of 8 cut at 4: links 3↔4 and 7↔0 are cross-boundary — 4
+        // directed messages per round × 3 rounds.
+        assert_eq!(fs.totals().lost_messages, 12);
+        assert_eq!(fs.totals().renormalized_rows, 12);
+    }
+
+    /// Stale replay: a lost link with a prior delivery resolves Stale up
+    /// to the age bound, then Lost.
+    #[test]
+    fn stale_ages_out() {
+        let mix = ring(8);
+        // Partition rounds 2..6 with stale=2: rounds 2 and 3 replay the
+        // round-1 delivery, rounds 4 and 5 are real losses.
+        let plan = FaultPlan::parse("partition:4:2:6:stale=2").unwrap();
+        let mut fs = FaultSchedule::new(&mix, plan, 42, 1, 4);
+        let mut states = Vec::new();
+        for round in 1..=7 {
+            fs.begin_round(round);
+            fs.resolve_round();
+            states.push(fs.link(4, 3));
+            fs.store_delivered(|_, _, buf| buf.fill(round as f64));
+        }
+        assert_eq!(
+            states,
+            vec![
+                LinkState::Delivered,
+                LinkState::Stale,
+                LinkState::Stale,
+                LinkState::Lost,
+                LinkState::Lost,
+                LinkState::Delivered,
+                LinkState::Delivered,
+            ]
+        );
+        // The replayed payload during the stale rounds is round 1's.
+        // (Checked via the last store before the partition window.)
+        let mut fs = FaultSchedule::new(&mix, plan, 42, 1, 4);
+        fs.begin_round(1);
+        fs.resolve_round();
+        fs.store_delivered(|_, _, buf| buf.fill(1.0));
+        fs.begin_round(2);
+        fs.resolve_round();
+        assert_eq!(fs.link(4, 3), LinkState::Stale);
+        assert_eq!(fs.stale_payload(4, 3, 0), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    /// A link that never delivered has nothing to replay: Lost even
+    /// with stale enabled.
+    #[test]
+    fn stale_needs_a_prior_delivery() {
+        let mix = ring(8);
+        let plan = FaultPlan::parse("partition:4:1:3:stale=5").unwrap();
+        let mut fs = FaultSchedule::new(&mix, plan, 42, 1, 4);
+        fs.begin_round(1);
+        fs.resolve_round();
+        assert_eq!(fs.link(4, 3), LinkState::Lost);
+        assert_eq!(fs.totals().stale_deliveries, 0);
+    }
+
+    /// force_lose demotes a delivered link and counts it.
+    #[test]
+    fn force_lose_counts_capped() {
+        let mix = ring(8);
+        let plan = FaultPlan::parse("loss:0.5").unwrap();
+        let mut fs = FaultSchedule::new(&mix, plan, 42, 1, 4);
+        fs.begin_round(1);
+        let (mut i, mut j) = (usize::MAX, usize::MAX);
+        'outer: for r in 0..8 {
+            for &s in &mix.neighbors[r] {
+                if fs.link(r, s) == LinkState::Delivered {
+                    (i, j) = (r, s);
+                    break 'outer;
+                }
+            }
+        }
+        assert!(i != usize::MAX, "all 16 links lost at p=0.5?");
+        fs.force_lose(i, j);
+        assert_eq!(fs.link(i, j), LinkState::Lost);
+        assert_eq!(fs.totals().capped_losses, 1);
+        // Idempotent on an already-lost link.
+        fs.force_lose(i, j);
+        assert_eq!(fs.totals().capped_losses, 1);
+        fs.resolve_round();
+    }
+
+    /// Satellite: fault-renormalized mixing rows stay row-stochastic
+    /// (and W stays symmetric when the loss pattern is symmetric) across
+    /// random topologies × crash sets.
+    #[test]
+    fn proptest_renormalized_rows_stay_stochastic() {
+        forall(128, 0xFA017, |g| {
+            let n = g.usize_in(4..=12);
+            let mix = match g.usize_in(0..=2) {
+                0 => Topology::Ring.build(n, MixingRule::UniformNeighbors),
+                1 => Topology::Path.build(n, MixingRule::MetropolisHastings),
+                _ => Topology::ErdosRenyi { p: 0.5, seed: g.rng.next_u64() }
+                    .build(n, MixingRule::MetropolisHastings),
+            };
+            // Random crash set (agents whose links all die — symmetric).
+            let down: Vec<bool> = (0..n).map(|_| g.bool_with(0.3)).collect();
+            let lost = |i: usize, j: usize| down[i] || down[j];
+            for i in 0..n {
+                if down[i] {
+                    continue;
+                }
+                let w_self = folded_self_weight(&mix, i, |j| lost(i, j));
+                prop_assert!(w_self >= mix.self_weight(i) - 1e-15, "self weight shrank");
+                let mut row = w_self;
+                for &j in &mix.neighbors[i] {
+                    if !lost(i, j) {
+                        let w = mix.weight(i, j);
+                        prop_assert!(w >= 0.0, "negative surviving weight");
+                        row += w;
+                    }
+                }
+                prop_assert!((row - 1.0).abs() <= 1e-12, "row {i} sums to {row} (n={n})");
+            }
+            // Symmetric loss pattern ⇒ surviving off-diagonal weights
+            // stay symmetric (w_ij == w_ji and both live or both dead).
+            for i in 0..n {
+                for &j in &mix.neighbors[i] {
+                    prop_assert!(lost(i, j) == lost(j, i), "asymmetric loss from symmetric crashes");
+                    if !lost(i, j) {
+                        let diff = (mix.weight(i, j) - mix.weight(j, i)).abs();
+                        prop_assert!(diff == 0.0, "weight asymmetry {diff}");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn summary_json_parses() {
+        let s = FaultSummary {
+            plan: "loss:5e-2".into(),
+            crashed_agent_rounds: 3,
+            lost: 17,
+            stale: 4,
+            renormalized_rows: 11,
+            capped_losses: 1,
+            down_rounds: vec![0, 3, 0],
+        };
+        let js = crate::serialize::json::parse(&s.to_json()).unwrap();
+        assert_eq!(js.get("plan").unwrap().as_str(), Some("loss:5e-2"));
+        assert_eq!(js.get("lost").unwrap().as_f64(), Some(17.0));
+        assert_eq!(js.get("down_rounds").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

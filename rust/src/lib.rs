@@ -11,7 +11,9 @@
 //!   steady-state allocation-free round loop, declarative scenario grids
 //!   with a sharded multi-run executor ([`scenarios`]), a discrete-event
 //!   heterogeneous network simulator for time-to-accuracy studies
-//!   ([`simnet`]), an in-tree determinism & unsafe-soundness auditor
+//!   ([`simnet`]), deterministic fault injection with a
+//!   graceful-degradation engine path ([`faults`]), an in-tree
+//!   determinism & unsafe-soundness auditor
 //!   ([`audit`], `lead audit`), experiment drivers for every figure in
 //!   the paper, metrics, and a CLI.
 //! - **L2 (python/compile)**: JAX compute graphs (linear/logistic
@@ -57,6 +59,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod experiments;
+pub mod faults;
 pub mod linalg;
 pub mod pool;
 pub mod problems;
@@ -87,6 +90,7 @@ pub mod prelude {
     };
     pub use crate::coordinator::engine::{Engine, EngineConfig, Schedule, Scheduler};
     pub use crate::coordinator::metrics::{PhaseTimes, RoundMetrics, RunRecord};
+    pub use crate::faults::{FaultPlan, FaultSchedule, FaultSummary};
     pub use crate::pool::{Exec, WorkerPool};
     pub use crate::problems::{linreg::LinReg, logreg::LogReg, DataSplit, Problem};
     pub use crate::scenarios::{Driver, Grid, ProblemSpec, RunSpec};

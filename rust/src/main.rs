@@ -129,7 +129,9 @@ fn main() -> lead::error::Result<()> {
         Some("net-report") => {
             // The same grid execution as `lead grid`, reported on the
             // network/time axis: per-cell simulated time, time-to-tol,
-            // idle (barrier-wait) stats, utilization, retransmits.
+            // idle (barrier-wait) stats, utilization, retransmits (plus
+            // retransmit-cap force-deliveries), and fault totals when a
+            // fault plan is active.
             let (grid, specs, threads, tol) = load_grid_args(
                 &args,
                 "usage: lead net-report <spec.toml> [--out DIR] [--threads N] [--tol X]",
@@ -138,15 +140,16 @@ fn main() -> lead::error::Result<()> {
             let records =
                 Driver::new(threads).with_out(out_ref).with_tol(tol).run(&grid.name, &specs)?;
             println!(
-                "{:<44} {:>11} {:>11} {:>9} {:>9} {:>6} {:>7}",
-                "cell", "sim_time", "t_to_tol", "idle_max", "idle_avg", "util", "retx"
+                "{:<44} {:>11} {:>11} {:>9} {:>9} {:>6} {:>7} {:>7} {:>8} {:>8} {:>7}",
+                "cell", "sim_time", "t_to_tol", "idle_max", "idle_avg", "util", "retx",
+                "capped", "crashed", "lost", "stale"
             );
             for (s, rec) in specs.iter().zip(&records) {
                 let m = rec.last();
                 let ttt = tol
                     .and_then(|t| rec.time_to_tol(t))
                     .map_or("-".into(), |v| format!("{v:.3e}"));
-                let (idle_max, idle_avg, util, retx) = match &rec.net {
+                let (idle_max, idle_avg, util, retx, capped) = match &rec.net {
                     Some(n) => {
                         let avg = n.idle_s.iter().sum::<f64>() / n.idle_s.len().max(1) as f64;
                         (
@@ -154,14 +157,28 @@ fn main() -> lead::error::Result<()> {
                             format!("{avg:.2e}"),
                             format!("{:.2}", n.utilization),
                             n.retransmits.to_string(),
+                            n.capped.to_string(),
                         )
                     }
-                    None => ("-".into(), "-".into(), "-".into(), "-".into()),
+                    None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
                 };
+                let (crashed, lost, stale) = match &rec.faults {
+                    Some(f) => (
+                        f.crashed_agent_rounds.to_string(),
+                        f.lost.to_string(),
+                        f.stale.to_string(),
+                    ),
+                    None => ("-".into(), "-".into(), "-".into()),
+                };
+                let early = if rec.stopped_early { "*" } else { "" };
                 println!(
-                    "{:<44} {:>11.3e} {:>11} {:>9} {:>9} {:>6} {:>7}",
-                    s.name, m.sim_time, ttt, idle_max, idle_avg, util, retx
+                    "{:<44} {:>10.3e}{:1} {:>11} {:>9} {:>9} {:>6} {:>7} {:>7} {:>8} {:>8} {:>7}",
+                    s.name, m.sim_time, early, ttt, idle_max, idle_avg, util, retx, capped,
+                    crashed, lost, stale
                 );
+            }
+            if records.iter().any(|r| r.stopped_early) {
+                println!("(* = stopped early at the time budget)");
             }
         }
         Some("run") => {

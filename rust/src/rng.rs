@@ -177,6 +177,10 @@ pub mod streams {
     /// (`crate::simnet`). Derived — never drawn — from the engine seed,
     /// so enabling the timing overlay cannot shift any other stream.
     pub const NET: u64 = 0x07;
+    /// Fault-injection draws (`crate::faults`): crash sets, churn, and
+    /// per-link message loss. Derived — never drawn — from the engine
+    /// seed, so enabling fault injection cannot shift any other stream.
+    pub const FAULT: u64 = 0x08;
 }
 
 #[cfg(test)]

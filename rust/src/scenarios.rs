@@ -42,6 +42,10 @@
 //! # t0 = 200.0                 # diminishing stepsize η·t0/(t0+k)
 //! # link = "uniform:1e-4:1e9"  # simnet::NetModel spec; omit (or "legacy")
 //!                              # for the uniform round-time formula
+//! # faults = "loss:0.05"       # faults::FaultPlan spec; omit (or "none")
+//!                              # for the fault-free engine path
+//! # time_budget = 2.5          # stop once sim_time reaches this many
+//!                              # seconds; the record sets stopped_early
 //! # tol = 1e-6                 # dist(x*) tolerance: emits time_to_tol
 //!                              # per run into <grid>.json
 //!
@@ -72,6 +76,7 @@ use crate::config::{self, AlgoSetup};
 use crate::coordinator::engine::{phase_threads, Engine, EngineConfig, Schedule};
 use crate::coordinator::metrics::{RoundMetrics, RunRecord};
 use crate::error::{err, Result};
+use crate::faults::FaultPlan;
 use crate::pool::{par_dynamic, Exec, SendPtr, WorkerPool};
 use crate::problems::{linreg::LinReg, logreg::LogReg, quad::Quad, DataSplit, Problem};
 use crate::serialize::{json, toml_mini};
@@ -229,6 +234,14 @@ pub struct RunSpec {
     /// `"legacy"`) keeps the uniform round-time formula. Timing-only:
     /// the trajectory is identical for every value of this field.
     pub link: String,
+    /// [`FaultPlan::parse`] spec for the fault-injection layer; `""` (or
+    /// `"none"`) keeps the fault-free engine path bit-for-bit. Unlike
+    /// `link`, this field *does* perturb trajectories.
+    pub faults: String,
+    /// Simulated-time budget in seconds: the engine stops a run early
+    /// once `sim_time` crosses it (the crossing round still completes
+    /// and is observed; the record sets `stopped_early`).
+    pub time_budget: Option<f64>,
 }
 
 impl RunSpec {
@@ -252,6 +265,8 @@ impl RunSpec {
             record_every: 10,
             t0: None,
             link: String::new(),
+            faults: String::new(),
+            time_budget: None,
         }
     }
 
@@ -286,6 +301,8 @@ impl RunSpec {
             seed: self.seed,
             record_every: self.record_every.max(1),
             net: self.build_net()?,
+            faults: self.build_faults()?,
+            time_budget: self.time_budget,
             ..EngineConfig::default()
         })
     }
@@ -321,6 +338,17 @@ impl RunSpec {
             .ok_or_else(|| err(format!("{}: bad link model spec {:?}", self.name, self.link)))
     }
 
+    /// Parse the `faults` field into a fault plan (None ⇒ the fault-free
+    /// engine path, bit-for-bit identical to builds without this layer).
+    pub fn build_faults(&self) -> Result<Option<FaultPlan>> {
+        if self.faults.is_empty() || self.faults == "none" {
+            return Ok(None);
+        }
+        FaultPlan::parse(&self.faults)
+            .map(Some)
+            .ok_or_else(|| err(format!("{}: bad fault plan spec {:?}", self.name, self.faults)))
+    }
+
     /// Set one scalar field by its TOML key (axis application).
     pub fn apply_axis(&mut self, key: &str, v: &toml_mini::Value) -> Result<()> {
         let want_f64 =
@@ -342,6 +370,8 @@ impl RunSpec {
             "topology" => self.topology = want_str()?,
             "compressor" => self.compressor = want_str()?,
             "link" => self.link = want_str()?,
+            "faults" => self.faults = want_str()?,
+            "time_budget" => self.time_budget = Some(want_f64()?),
             "mixing" => {
                 let s = want_str()?;
                 self.mixing = MixingRule::parse(&s)
@@ -368,6 +398,7 @@ impl RunSpec {
         kv_str(&mut o, "topology", &self.topology, true);
         kv_str(&mut o, "compressor", &self.compressor, true);
         kv_str(&mut o, "link", &self.link, true);
+        kv_str(&mut o, "faults", &self.faults, true);
         for (k, v) in [("eta", self.eta), ("gamma", self.gamma), ("alpha", self.alpha)] {
             o.push(',');
             json::write_str(&mut o, k);
@@ -386,6 +417,13 @@ impl RunSpec {
         o.push(':');
         match self.batch_size {
             Some(b) => o.push_str(&b.to_string()),
+            None => o.push_str("null"),
+        }
+        o.push(',');
+        json::write_str(&mut o, "time_budget");
+        o.push(':');
+        match self.time_budget {
+            Some(t) => json::write_num(&mut o, t),
             None => o.push_str("null"),
         }
         o.push('}');
@@ -591,6 +629,7 @@ impl Driver {
             let algo = s.build_algo()?;
             s.build_compressor()?;
             s.build_net()?;
+            s.build_faults()?;
             channels.push(algo.spec().channels);
         }
         // Resolve problems with structural dedupe, check agent counts,
@@ -751,6 +790,8 @@ fn same_cell_ignoring_seed(a: &RunSpec, b: &RunSpec) -> bool {
         && a.record_every == b.record_every
         && a.t0.map(f64::to_bits) == b.t0.map(f64::to_bits)
         && a.link == b.link
+        && a.faults == b.faults
+        && a.time_budget.map(f64::to_bits) == b.time_budget.map(f64::to_bits)
 }
 
 /// Mean ± population std per recorded round over a cell's seed group,
@@ -982,6 +1023,38 @@ link = ["legacy", "uniform:1e-3:1e6", "straggler:1e-4:1e9:0.25:10:drop=0.01"]
     }
 
     #[test]
+    fn grid_toml_faults_and_time_budget_parse() {
+        let src = r#"
+[grid]
+name = "ft"
+rounds = 20
+time_budget = 2.5
+
+[axes]
+faults = ["none", "loss:0.05", "crash:0.25:5:down=10+loss:0.02"]
+"#;
+        let g = Grid::from_toml(src).unwrap();
+        assert_eq!(g.base.time_budget, Some(2.5));
+        let specs = g.expand().unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(specs[0].build_faults().unwrap().is_none(), "none ⇒ fault-free path");
+        assert_eq!(specs[1].build_faults().unwrap().unwrap().loss, 0.05);
+        let plan = specs[2].build_faults().unwrap().unwrap();
+        assert_eq!(plan.crash_frac, 0.25);
+        assert_eq!(plan.loss, 0.02);
+        assert_eq!(specs[1].name, "ft_faultsloss:0.05");
+        // Engine config carries both through.
+        let cfg = specs[1].engine_config().unwrap();
+        assert!(cfg.faults.is_some());
+        assert_eq!(cfg.time_budget, Some(2.5));
+        // Same-cell grouping splits on the faults axis.
+        assert!(!same_cell_ignoring_seed(&specs[0], &specs[1]));
+        let mut reseed = specs[1].clone();
+        reseed.seed = 99;
+        assert!(same_cell_ignoring_seed(&specs[1], &reseed));
+    }
+
+    #[test]
     fn run_work_estimate_uses_cost_hint() {
         // LogReg's full-gradient sweep is samples·d per agent — far above
         // the channels·d message floor the old classifier used.
@@ -1094,6 +1167,10 @@ seed = [1, 2, 3]
         bad.rounds = 5;
         bad.compressor = "q9000".into();
         assert!(Driver::new(1).run("t", &[bad]).is_err());
+        let mut bad = RunSpec::paper_default();
+        bad.rounds = 5;
+        bad.faults = "crash:2.0".into();
+        assert!(Driver::new(1).run("t", &[bad]).is_err(), "bad fault plan must fail loudly");
     }
 
     /// The acceptance pin: the fig7 25-cell (α, γ) sweep through the

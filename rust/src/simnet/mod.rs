@@ -219,6 +219,10 @@ pub struct NetStats {
     pub straggler_rounds: Vec<u64>,
     /// Total retransmitted (dropped) attempts.
     pub retransmits: u64,
+    /// Transfers force-delivered at the [`round::MAX_ATTEMPTS`]
+    /// retransmit cap (previously a silent fiction of delivery; under a
+    /// fault plan the engine demotes these to real losses).
+    pub capped: u64,
     /// Total link-active seconds (every attempt's duration, including
     /// dropped ones), summed over all directed edges.
     pub busy_link_s: f64,
@@ -264,6 +268,8 @@ pub struct NetSummary {
     /// Per-agent count of rounds where the agent was the straggler.
     pub straggler_rounds: Vec<u64>,
     pub retransmits: u64,
+    /// Transfers force-delivered at the retransmit cap ([`NetStats::capped`]).
+    pub capped: u64,
     /// Mean directed-link utilization over the run.
     pub utilization: f64,
 }
@@ -276,6 +282,7 @@ impl NetSummary {
             idle_s: stats.idle_s.clone(),
             straggler_rounds: stats.straggler_rounds.clone(),
             retransmits: stats.retransmits,
+            capped: stats.capped,
         }
     }
 
@@ -299,7 +306,10 @@ impl NetSummary {
             }
             out.push_str(&v.to_string());
         }
-        out.push_str(&format!("],\"retransmits\":{},\"utilization\":", self.retransmits));
+        out.push_str(&format!(
+            "],\"retransmits\":{},\"capped\":{},\"utilization\":",
+            self.retransmits, self.capped
+        ));
         json::write_num(&mut out, self.utilization);
         out.push('}');
         out
@@ -380,11 +390,13 @@ mod tests {
             idle_s: vec![0.0, 0.5],
             straggler_rounds: vec![3, 1],
             retransmits: 4,
+            capped: 2,
             utilization: 0.75,
         };
         let js = crate::serialize::json::parse(&s.to_json()).unwrap();
         assert_eq!(js.get("link").unwrap().as_str(), Some("uniform:1e-4:1e9"));
         assert_eq!(js.get("idle_s").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(js.get("retransmits").unwrap().as_f64(), Some(4.0));
+        assert_eq!(js.get("capped").unwrap().as_f64(), Some(2.0));
     }
 }

@@ -68,6 +68,9 @@ pub struct RoundTimer {
     queue: EventQueue,
     /// Per-agent latest-arrival scratch, reset each round.
     arrival: Vec<f64>,
+    /// (src, dst) of transfers force-delivered at [`MAX_ATTEMPTS`] this
+    /// round; the engine demotes these to real losses under a fault plan.
+    round_capped: Vec<(u32, u32)>,
     pub stats: NetStats,
 }
 
@@ -127,6 +130,7 @@ impl RoundTimer {
             rngs,
             queue: EventQueue::new(),
             arrival: vec![0.0; n],
+            round_capped: Vec::new(),
             stats: NetStats::new(n),
         }
     }
@@ -145,10 +149,29 @@ impl RoundTimer {
     /// (seconds) and accumulates [`NetStats`]. Zero heap allocations in
     /// the steady state: the queue and arrival scratch are reused.
     pub fn round(&mut self, bits: &[u64]) -> f64 {
+        self.round_faulted(bits, None)
+    }
+
+    /// [`RoundTimer::round`] with a fault overlay (`crate::faults`): a
+    /// directed transfer whose `lost(src, dst)` returns true is charged
+    /// on the wire exactly like a first attempt (its duration — and
+    /// jitter draw, if any — happens as usual, keeping the per-edge
+    /// streams aligned with the fault-free run) but never arrives: no
+    /// event is queued, so it neither retransmits nor strains the
+    /// barrier. Transfers force-delivered at [`MAX_ATTEMPTS`] are
+    /// recorded in [`RoundTimer::capped_this_round`] so the caller can
+    /// demote them to real losses instead of today's fiction of
+    /// delivery.
+    pub fn round_faulted(
+        &mut self,
+        bits: &[u64],
+        lost: Option<&dyn Fn(usize, usize) -> bool>,
+    ) -> f64 {
         let n = self.arrival.len();
         debug_assert_eq!(bits.len(), n);
         self.queue.clear();
         self.arrival.fill(0.0);
+        self.round_capped.clear();
         // Every transfer starts at the round barrier (t = 0); first
         // attempts are scheduled in edge order so jitter draws are
         // position-independent of queue behavior.
@@ -156,7 +179,11 @@ impl RoundTimer {
             let b = bits[self.edges[e].src as usize];
             let dur = xfer_time(&self.edges[e], b, self.model.jitter, self.rngs.get_mut(e));
             self.stats.busy_link_s += dur;
-            self.queue.push(Event { at: dur, edge: e as u32, attempt: 0 });
+            let faulted = lost
+                .is_some_and(|f| f(self.edges[e].src as usize, self.edges[e].dst as usize));
+            if !faulted {
+                self.queue.push(Event { at: dur, edge: e as u32, attempt: 0 });
+            }
         }
         let mut t_end = 0.0f64;
         while let Some(ev) = self.queue.pop() {
@@ -174,6 +201,14 @@ impl RoundTimer {
                 self.stats.busy_link_s += dur;
                 self.queue.push(Event { at: ev.at + dur, edge: ev.edge, attempt: ev.attempt + 1 });
             } else {
+                // A delivery on the cap attempt skipped its drop draw
+                // (the short-circuit above adds no draw here, so capped
+                // accounting cannot shift any stream): it was forced
+                // through, not genuinely delivered. Surface it.
+                if self.model.drop > 0.0 && ev.attempt + 1 >= MAX_ATTEMPTS {
+                    self.stats.capped += 1;
+                    self.round_capped.push((self.edges[e].src, self.edges[e].dst));
+                }
                 let dst = self.edges[e].dst as usize;
                 if ev.at > self.arrival[dst] {
                     self.arrival[dst] = ev.at;
@@ -195,6 +230,12 @@ impl RoundTimer {
         self.stats.sim_time += t_end;
         self.stats.rounds += 1;
         t_end
+    }
+
+    /// (src, dst) of transfers force-delivered at the retransmit cap in
+    /// the most recent round (empty unless `drop` is pathological).
+    pub fn capped_this_round(&self) -> &[(u32, u32)] {
+        &self.round_capped
     }
 }
 
@@ -338,6 +379,66 @@ mod tests {
             assert_eq!(pair[0].latency_s.to_bits(), pair[1].latency_s.to_bits());
             assert_eq!(pair[0].bandwidth_bps.to_bits(), pair[1].bandwidth_bps.to_bits());
         }
+    }
+
+    #[test]
+    fn faulted_overlay_none_is_bitwise_round() {
+        // `round_faulted(bits, None)` and a `Some` overlay that loses
+        // nothing must both be pure plumbing: same draws, same timings,
+        // same stats as the plain path.
+        let mix = ring(7);
+        let m = NetModel::parse("lognormal:1e-4:1e8:0.7:jitter=0.3:drop=0.2").unwrap();
+        let mut plain = RoundTimer::new(&mix, m, 23);
+        let mut overlay = RoundTimer::new(&mix, m, 23);
+        let no_loss = |_src: usize, _dst: usize| false;
+        for r in 0..10u64 {
+            let bits: Vec<u64> = (0..7).map(|i| 700 + 311 * i * (r + 1)).collect();
+            let a = plain.round(&bits);
+            let b = overlay.round_faulted(&bits, Some(&no_loss));
+            assert_eq!(a.to_bits(), b.to_bits(), "round {r}");
+        }
+        assert_eq!(plain.stats.retransmits, overlay.stats.retransmits);
+        assert_eq!(plain.stats.busy_link_s.to_bits(), overlay.stats.busy_link_s.to_bits());
+    }
+
+    #[test]
+    fn faulted_transfers_charge_the_wire_but_never_arrive() {
+        // Star, zero latency: every round normally ends on agent 3's
+        // big payload into the hub. Losing that one directed link must
+        // shorten the round (no arrival, no retransmit) while still
+        // charging its duration to busy time.
+        let mix = Topology::Star.build(4, MixingRule::UniformNeighbors);
+        let mut t = RoundTimer::new(&mix, NetModel::uniform(0.0, 1e3), 2);
+        let bits = [10u64, 10, 10, 1000];
+        let lose_heavy = |src: usize, dst: usize| src == 3 && dst == 0;
+        let dur = t.round_faulted(&bits, Some(&lose_heavy));
+        // Hub now ends on a 10-bit leaf payload; leaves still wait on
+        // the hub's 10-bit broadcast.
+        assert_eq!(dur.to_bits(), (10.0f64 / 1e3).to_bits());
+        assert_eq!(t.stats.retransmits, 0);
+        // Wire charge includes the lost 1000-bit attempt exactly once
+        // (tolerance: six-term f64 summation vs one division).
+        assert!((t.stats.busy_link_s - (10.0 * 5.0 + 1000.0) / 1e3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capped_transfers_are_counted_not_silent() {
+        // drop=0.99 makes P(hit the 64-attempt cap) ≈ 0.99^63 ≈ 0.53
+        // per edge-round: over a 6-ring (12 directed edges) × 10 rounds
+        // the cap fires with overwhelming probability. Each cap must
+        // show up both in the cumulative counter and the per-round list.
+        let mix = ring(6);
+        let m = NetModel::parse("uniform:1e-4:1e6:drop=0.99").unwrap();
+        let mut t = RoundTimer::new(&mix, m, 4);
+        let bits = vec![1000u64; 6];
+        let mut listed = 0u64;
+        for _ in 0..10 {
+            t.round(&bits);
+            listed += t.capped_this_round().len() as u64;
+        }
+        assert!(t.stats.capped > 0, "no transfer hit the cap at drop=0.99");
+        assert_eq!(listed, t.stats.capped, "per-round list disagrees with counter");
+        assert!(t.stats.retransmits >= t.stats.capped * (MAX_ATTEMPTS as u64 - 1));
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Differential + determinism harness for the fault-injection layer
+//! (`lead::faults`) and the graceful-degradation engine path.
+//!
+//! Pins the contract from `coordinator::engine` §Fault injection:
+//!
+//! 1. **Off ⇒ identity**: `faults: None` and a no-op plan both take the
+//!    historical round loop bit for bit — trajectories, sim_time, and
+//!    the absence of any fault summary.
+//! 2. **On ⇒ determinism**: a live plan perturbs trajectories by design,
+//!    but bitwise-identically across engine thread counts and reruns
+//!    (fault draws come from the dedicated `streams::FAULT` root with
+//!    fixed per-round draw counts).
+//! 3. **Graceful degradation**: LEAD keeps converging under ≥5% link
+//!    loss plus a crash/recover cycle on the heterogeneous logistic
+//!    workload, while the inexact DGD baseline ends up further from x*.
+//! 4. **Budget + cap surfacing**: `time_budget` stops runs early (the
+//!    crossing round still observed), and simnet retransmit-cap
+//!    force-deliveries are demoted to real losses under a plan.
+
+use lead::algorithms::{dgd::Dgd, lead::Lead};
+use lead::compress::quantize::{PNorm, QuantizeP};
+use lead::compress::Compressor;
+use lead::coordinator::engine::{Engine, EngineConfig, Schedule};
+use lead::coordinator::metrics::RunRecord;
+use lead::faults::FaultPlan;
+use lead::problems::linreg::LinReg;
+use lead::problems::logreg::LogReg;
+use lead::problems::DataSplit;
+use lead::simnet::NetModel;
+use lead::topology::{MixingRule, Topology};
+use std::sync::Arc;
+
+fn codec() -> Option<Box<dyn Compressor>> {
+    Some(Box::new(QuantizeP::new(2, PNorm::Inf, 64)))
+}
+
+/// One short LEAD run on the Fig. 1-shaped workload with an optional
+/// fault plan / net model / time budget.
+fn lead_run(
+    faults: Option<FaultPlan>,
+    net: Option<&str>,
+    time_budget: Option<f64>,
+    threads: usize,
+    rounds: usize,
+) -> RunRecord {
+    let n = 8;
+    let p = LinReg::synthetic(n, 40, 0.1, 3);
+    let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+    let cfg = EngineConfig {
+        threads,
+        record_every: 7,
+        net: net.map(|s| NetModel::parse(s).expect("bad test model")),
+        faults,
+        time_budget,
+        ..Default::default()
+    };
+    let mut e = Engine::new(cfg, mix, Arc::new(p));
+    e.run(Box::new(Lead::paper_default()), codec(), rounds)
+}
+
+fn assert_bitwise_equal(a: &RunRecord, b: &RunRecord, tag: &str) {
+    assert_eq!(a.series.len(), b.series.len(), "{tag}: series length");
+    for (ma, mb) in a.series.iter().zip(&b.series) {
+        assert_eq!(ma.round, mb.round, "{tag}");
+        assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.consensus.to_bits(), mb.consensus.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.comp_err.to_bits(), mb.comp_err.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.sim_time.to_bits(), mb.sim_time.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.bits_per_agent, mb.bits_per_agent, "{tag} round {}", ma.round);
+        assert_eq!(
+            (ma.crashed, ma.lost, ma.stale, ma.renormed),
+            (mb.crashed, mb.lost, mb.stale, mb.renormed),
+            "{tag} round {}",
+            ma.round
+        );
+    }
+}
+
+/// Acceptance pin, direction one: with the plan absent — or present but
+/// no-op — the engine is bitwise-identical to the pre-fault round loop,
+/// with and without the simnet timing overlay.
+#[test]
+fn absent_and_noop_plans_are_bitwise_identical() {
+    for net in [None, Some("lognormal:1e-3:1e8:0.75")] {
+        let off = lead_run(None, net, None, 1, 50);
+        let noop = lead_run(Some(FaultPlan::default()), net, None, 1, 50);
+        assert_bitwise_equal(&off, &noop, "noop plan");
+        assert!(off.faults.is_none() && noop.faults.is_none(), "no summary when inert");
+        assert!(!off.stopped_early && !noop.stopped_early);
+        for m in &off.series {
+            assert_eq!((m.crashed, m.lost, m.stale, m.renormed), (0, 0, 0, 0));
+        }
+    }
+}
+
+/// Acceptance pin, direction two: a live plan perturbs the trajectory
+/// (that is its job) but stays bitwise-deterministic across engine
+/// thread counts and reruns — counters included.
+#[test]
+fn faulty_runs_deterministic_across_threads_and_reruns() {
+    let plan = FaultPlan::parse("loss:0.05+churn:0.02:down=3:stale=2").unwrap();
+    let clean = lead_run(None, None, None, 1, 50);
+    let reference = lead_run(Some(plan), None, None, 1, 50);
+    assert!(
+        reference
+            .series
+            .iter()
+            .zip(&clean.series)
+            .any(|(a, b)| a.dist_opt.to_bits() != b.dist_opt.to_bits()),
+        "a live fault plan must actually perturb the trajectory"
+    );
+    let summary = reference.faults.as_ref().expect("live plan ⇒ summary");
+    assert!(summary.lost > 0, "5% loss over 50 rounds never fired");
+    assert_eq!(summary.plan, plan.label());
+    for threads in [1usize, 3, 8] {
+        let rerun = lead_run(Some(plan), None, None, threads, 50);
+        assert_bitwise_equal(&reference, &rerun, &format!("threads={threads}"));
+        let s = rerun.faults.as_ref().unwrap();
+        assert_eq!(summary.lost, s.lost, "threads={threads}");
+        assert_eq!(summary.stale, s.stale, "threads={threads}");
+        assert_eq!(summary.crashed_agent_rounds, s.crashed_agent_rounds, "threads={threads}");
+        assert_eq!(summary.renormalized_rows, s.renormalized_rows, "threads={threads}");
+        assert_eq!(summary.down_rounds, s.down_rounds, "threads={threads}");
+    }
+}
+
+/// The one-shot crash event has exact, countable bookkeeping: ⌈frac·n⌉
+/// agents down for exactly `down=` rounds, renormalized rows while they
+/// are gone, and full recovery afterwards.
+#[test]
+fn crash_event_counts_and_recovers() {
+    // ⌈0.25·8⌉ = 2 agents crash at round 10 for 5 rounds.
+    let plan = FaultPlan::parse("crash:0.25:10:down=5").unwrap();
+    let rec = lead_run(Some(plan), None, None, 1, 50);
+    let s = rec.faults.as_ref().unwrap();
+    assert_eq!(s.crashed_agent_rounds, 2 * 5, "2 agents × 5 rounds");
+    assert_eq!(s.down_rounds.len(), 8);
+    assert_eq!(s.down_rounds.iter().filter(|&&r| r == 5).count(), 2);
+    assert_eq!(s.down_rounds.iter().filter(|&&r| r == 0).count(), 6);
+    // A crashed agent's out-links are lost on the ring: every live
+    // neighbor renormalizes while the outage lasts.
+    assert!(s.lost > 0 && s.renormalized_rows > 0);
+    // The trajectory still reaches a sane final state (no NaN poisoning
+    // from the frozen agents' reference points).
+    assert!(rec.last().dist_opt.is_finite());
+    assert!(rec.last().consensus.is_finite());
+}
+
+/// Graceful degradation (the tentpole's convergence claim): on the
+/// heterogeneous logistic workload under 5% link loss plus a mid-run
+/// crash/recover cycle, LEAD still makes an order-of-magnitude style
+/// progress, while inexact DGD under the *identical* fault schedule ends
+/// up strictly further from x*.
+#[test]
+fn lead_converges_under_faults_while_dgd_degrades() {
+    let plan = FaultPlan::parse("loss:0.05+crash:0.25:500:down=100").unwrap();
+    let run = |algo: Box<dyn lead::algorithms::Algorithm>,
+               comp: Option<Box<dyn Compressor>>|
+     -> RunRecord {
+        let p = LogReg::synthetic(4, 160, 10, 4, 1e-2, DataSplit::Heterogeneous, 5, true);
+        let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+        let cfg = EngineConfig {
+            eta: 0.5,
+            schedule: Schedule::Diminishing { t0: 200.0 },
+            batch_size: Some(8),
+            record_every: 50,
+            faults: Some(plan),
+            ..Default::default()
+        };
+        let mut e = Engine::new(cfg, mix, Arc::new(p));
+        e.run(algo, comp, 2000)
+    };
+    let lead_rec = run(
+        Box::new(Lead::paper_default()),
+        Some(Box::new(QuantizeP::new(4, PNorm::Inf, 512))),
+    );
+    let first = lead_rec.series.first().unwrap().dist_opt;
+    let last = lead_rec.last().dist_opt;
+    assert!(
+        last.is_finite() && last < 0.5 * first,
+        "LEAD under faults made no progress: {first} -> {last}"
+    );
+    // The crash cycle actually happened (one agent, 100 rounds).
+    let s = lead_rec.faults.as_ref().unwrap();
+    assert_eq!(s.crashed_agent_rounds, 100);
+    assert!(s.lost > 0);
+    // DGD sees the same plan (same fault stream, same schedule) and ends
+    // further out — or diverges outright.
+    let dgd_rec = run(Box::new(Dgd::new()), None);
+    let dgd_last = dgd_rec.last().dist_opt;
+    assert!(
+        dgd_last.is_nan() || dgd_last > last,
+        "DGD under faults should degrade past LEAD: dgd {dgd_last} vs lead {last}"
+    );
+}
+
+/// Satellite: `time_budget` stops a run once sim_time crosses it — the
+/// crossing round completes and is observed, the record flags
+/// stopped_early, and a generous budget changes nothing.
+#[test]
+fn time_budget_stops_early_and_observes_the_crossing_round() {
+    let full = lead_run(None, None, None, 1, 50);
+    let total = full.last().sim_time;
+    assert!(total > 0.0);
+
+    let capped = lead_run(None, None, Some(total / 2.0), 1, 50);
+    assert!(capped.stopped_early, "half the budget must stop early");
+    assert!(capped.series.len() < full.series.len());
+    let last = capped.last();
+    assert!(last.sim_time >= total / 2.0, "budget crossed before stopping");
+    assert!(last.round < 50);
+    // The crossing round is observed even off the record_every cadence
+    // (record_every = 7 here), so the final sample is the stop point.
+    assert_eq!(
+        capped.series.iter().filter(|m| m.sim_time >= total / 2.0).count(),
+        1,
+        "exactly the crossing round is recorded past the budget"
+    );
+
+    let roomy = lead_run(None, None, Some(total * 2.0), 1, 50);
+    assert!(!roomy.stopped_early);
+    assert_bitwise_equal(&full, &roomy, "unreached budget");
+
+    // Budgets compose with faults: still early-stopped, still summarized.
+    let plan = FaultPlan::parse("loss:0.05").unwrap();
+    let faulted = lead_run(Some(plan), None, Some(total / 2.0), 1, 50);
+    assert!(faulted.stopped_early);
+    assert!(faulted.faults.is_some());
+}
+
+/// Satellite: transfers force-delivered at the simnet retransmit cap are
+/// demoted to real losses under a fault plan — surfaced both in the net
+/// summary (`capped`) and the fault summary (`capped_losses`).
+#[test]
+fn capped_transfers_become_losses_under_a_plan() {
+    let net = Some("uniform:1e-4:1e9:drop=0.99:seed=5");
+    let plan = FaultPlan::parse("loss:0.01").unwrap();
+    let rec = lead_run(Some(plan), net, None, 1, 20);
+    let n = rec.net.as_ref().expect("net summary");
+    let f = rec.faults.as_ref().expect("fault summary");
+    assert!(n.capped > 0, "drop=0.99 over 20 rounds never hit the retransmit cap");
+    assert!(f.capped_losses > 0, "capped transfers were not demoted to losses");
+    // Plan-lost transfers never reach the timer's queue, so only
+    // Delivered links can be capped: the demotions are a subset.
+    assert!(f.capped_losses <= n.capped, "{} demotions > {} caps", f.capped_losses, n.capped);
+    assert!(f.lost >= f.capped_losses, "demotions count as losses");
+    // Without a plan the same lossy model is a timing-only fiction of
+    // delivery: trajectory identical to the clean-network run.
+    let fiction = lead_run(None, net, None, 1, 20);
+    let clean = lead_run(None, None, None, 1, 20);
+    for (ma, mb) in fiction.series.iter().zip(&clean.series) {
+        assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits(), "round {}", ma.round);
+    }
+    assert!(fiction.net.as_ref().unwrap().capped > 0, "caps are still counted without a plan");
+    assert!(fiction.faults.is_none());
+}

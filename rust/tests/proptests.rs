@@ -310,3 +310,47 @@ fn prop_homogeneous_simnet_matches_legacy_sim_time() {
         Ok(())
     });
 }
+
+/// Randomly composed fault plans round-trip through their canonical
+/// label (`parse(label(p)) == p`), and the canonical form is a fixed
+/// point — the property `Grid` cell names and `FaultSummary.plan` rely
+/// on (the enumerated spellings live in `lead::faults`' unit tests).
+#[test]
+fn prop_fault_plan_label_roundtrips() {
+    use lead::faults::FaultPlan;
+    forall(200, 0xFA_B1E, |g| {
+        let mut p = FaultPlan::default();
+        if g.bool_with(0.6) {
+            p.loss = g.f64_in(1e-4, 0.99);
+        }
+        if g.bool_with(0.5) {
+            p.crash_frac = g.f64_in(1e-3, 1.0);
+            p.crash_round = g.usize_in(1..=1000);
+            p.crash_down = g.usize_in(1..=60);
+        }
+        if g.bool_with(0.4) {
+            p.churn = g.f64_in(1e-4, 0.99);
+            p.churn_down = g.usize_in(1..=30);
+        }
+        if g.bool_with(0.4) {
+            p.part_cut = g.usize_in(1..=16);
+            p.part_from = g.usize_in(0..=500);
+            p.part_to = p.part_from + g.usize_in(1..=500);
+        }
+        if p.is_noop() {
+            // `label()` of a no-op plan is the sentinel "none", which
+            // parse (by design) does not accept — the scenario layer
+            // maps it to `faults: None` before parse ever runs.
+            prop_assert!(p.label() == "none", "noop label: {}", p.label());
+            return Ok(());
+        }
+        p.stale = g.usize_in(0..=4);
+        p.seed = if g.bool_with(0.3) { g.case_seed } else { 0 };
+        let label = p.label();
+        let back = FaultPlan::parse(&label);
+        prop_assert!(back == Some(p), "roundtrip failed: {label:?} -> {back:?}");
+        let canon = back.unwrap().label();
+        prop_assert!(canon == label, "label not a fixed point: {label:?} vs {canon:?}");
+        Ok(())
+    });
+}
