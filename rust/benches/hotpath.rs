@@ -44,6 +44,21 @@
 //! configs ship in `BENCH_hotpath.json` (smoke: one short lossy config)
 //! so `lead bench-diff` gates the subsystem once baselines land.
 //!
+//! Part 5 — kernel microbenches + pool wake latency: the 4-lane chunked
+//! `linalg::simd` kernels (axpy / scatter_axpy / dot) and the quantize
+//! encode/decode burst loops vs their pre-SIMD scalar references
+//! (`linalg::simd::reference`, plus bench-local replicas of the old
+//! per-element quantize loops), at d = 10⁵; and the pool's per-worker
+//! wake path vs the legacy one-condvar-wakes-all broadcast
+//! (`WorkerPool::new_broadcast`), measured as empty-dispatch round-trip
+//! latency. Elementwise kernels and the quantize wire bytes are asserted
+//! bitwise/byte-identical across arms in-release before timing;
+//! reductions are pinned to the scalar emulation of the fixed 4-lane
+//! tree (`reference::dot_tree`), so every config's A/B compares
+//! identical computations. Ships as `kernel …` / `pool wake` configs in
+//! `BENCH_hotpath.json` so `lead bench-diff` gates kernel-level
+//! regressions forever after.
+//!
 //! Run `cargo bench --bench hotpath` (full) or
 //! `cargo bench --bench hotpath -- --smoke` (one short config; wired
 //! into CI so regressions in the harness itself are caught early).
@@ -386,6 +401,249 @@ fn assert_sparse_own_bitwise() {
     println!("sparse-own bitwise guard: lazy == eager dense own decode");
 }
 
+// ---------------------------------------------------------------------------
+// Part 5: kernel microbenches + pool wake latency
+// ---------------------------------------------------------------------------
+
+/// Bench-local replica of the pre-SIMD per-element quantize encoder
+/// (norm per block, one fused `sign | level<<1` push per element) — the
+/// "old" arm of the `kernel quantize encode` A/B. Must stay RNG-stream-
+/// and byte-identical to `QuantizeP::compress` (asserted by
+/// [`assert_kernels_bitwise`]); it only lacks the 4-lane `push4` bursts.
+fn quantize_encode_reference(
+    q: &QuantizeP,
+    x: &[f64],
+    rng: &mut Rng,
+    w: &mut lead::compress::wire::BitWriter,
+    vals: &mut [f64],
+) {
+    for (xb, vb) in x.chunks(q.block).zip(vals.chunks_mut(q.block)) {
+        let norm_f32 = lead::linalg::norm_inf(xb) as f32;
+        w.push_f32(norm_f32);
+        let norm = norm_f32 as f64;
+        if norm <= 0.0 || !norm.is_finite() {
+            for out in vb.iter_mut() {
+                *out = 0.0;
+                w.push(0, 1 + q.bits);
+            }
+            continue;
+        }
+        let scale = (1u64 << (q.bits - 1)) as f64;
+        let unit = norm / scale;
+        let inv = scale / norm;
+        for (xi, out) in xb.iter().zip(vb.iter_mut()) {
+            let sign = u64::from(xi.is_sign_negative());
+            let level = ((xi.abs() * inv) + rng.uniform_f64()).floor() as u64;
+            let level = level.min(scale as u64);
+            w.push(sign | (level << 1), 1 + q.bits);
+            let mag = unit * level as f64;
+            *out = if sign == 1 { -mag } else { mag };
+        }
+    }
+}
+
+/// Bench-local replica of the pre-SIMD per-element quantize decoder
+/// (separate sign/level reads) — the "old" arm of `kernel quantize
+/// decode`.
+fn quantize_decode_reference(q: &QuantizeP, payload: &[u8], d: usize, out: &mut Vec<f64>) {
+    out.clear();
+    let mut r = lead::compress::wire::BitReader::new(payload);
+    let scale = (1u64 << (q.bits - 1)) as f64;
+    let mut remaining = d;
+    while remaining > 0 {
+        let blk = remaining.min(q.block);
+        let norm = r.read_f32() as f64;
+        let unit = if norm > 0.0 && norm.is_finite() { norm / scale } else { 0.0 };
+        for _ in 0..blk {
+            let sign = r.read(1);
+            let level = r.read(q.bits);
+            let mag = unit * level as f64;
+            out.push(if sign == 1 { -mag } else { mag });
+        }
+        remaining -= blk;
+    }
+}
+
+/// Release-mode bitwise guard for every Part 5 A/B: the chunked kernels
+/// must equal their scalar references (elementwise exactly; reductions
+/// via the pinned-tree emulation), and the burst quantize encoder must
+/// produce byte-identical wire (and identical values) to the
+/// per-element replica under the same RNG seed. A drift here means the
+/// microbenches compare different computations — fail before timing.
+fn assert_kernels_bitwise(d: usize) {
+    use lead::linalg::simd::reference;
+    let mut rng = Rng::new(0xBE7C);
+    let mut x = vec![0.0f64; d];
+    let mut y = vec![0.0f64; d];
+    rng.fill_normal(&mut x, 2.0);
+    rng.fill_normal(&mut y, 2.0);
+
+    let (mut ya, mut yb) = (y.clone(), y.clone());
+    lead::linalg::axpy(0.37, &x, &mut ya);
+    reference::axpy(0.37, &x, &mut yb);
+    assert!(ya.iter().zip(&yb).all(|(a, b)| a.to_bits() == b.to_bits()), "axpy drifted");
+
+    let entries: Vec<(u32, f64)> =
+        (0..d / 100).map(|_| (rng.below(d) as u32, rng.normal_f64())).collect();
+    let (mut sa, mut sb) = (y.clone(), y.clone());
+    lead::linalg::scatter_axpy(-0.5, &entries, &mut sa);
+    reference::scatter_axpy(-0.5, &entries, &mut sb);
+    assert!(sa.iter().zip(&sb).all(|(a, b)| a.to_bits() == b.to_bits()), "scatter_axpy drifted");
+
+    assert_eq!(
+        lead::linalg::dot(&x, &y).to_bits(),
+        reference::dot_tree(&x, &y).to_bits(),
+        "dot drifted from the pinned-tree emulation"
+    );
+
+    let q = QuantizeP::paper_default();
+    let msg = q.compress_alloc(&x, &mut Rng::new(0x0123));
+    let mut w = lead::compress::wire::BitWriter::new();
+    let mut vals = vec![0.0f64; d];
+    quantize_encode_reference(&q, &x, &mut Rng::new(0x0123), &mut w, &mut vals);
+    assert_eq!(msg.payload, w.bytes, "burst quantize encoder changed the wire bytes");
+    assert!(
+        msg.values.iter().zip(&vals).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "burst quantize encoder changed the dequantized values"
+    );
+    let (mut da, mut db) = (Vec::new(), Vec::new());
+    lead::compress::quantize::decode(&q, &msg.payload, d, &mut da);
+    quantize_decode_reference(&q, &msg.payload, d, &mut db);
+    assert!(da.iter().zip(&db).all(|(a, b)| a.to_bits() == b.to_bits()), "decode drifted");
+    println!("kernel bitwise guard: chunked/burst kernels == scalar references (d={d})");
+}
+
+/// Time `reps` repetitions of `f`, returning seconds per repetition.
+fn time_reps(reps: usize, mut f: impl FnMut()) -> f64 {
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
+fn kernel_ab(name: &str, d: usize, reps: usize, old_s: f64, new_s: f64) -> AbResult {
+    let r = AbResult {
+        name: name.to_string(),
+        n: 1,
+        d,
+        threads: 1,
+        rounds: reps,
+        old_rps: 1.0 / old_s,
+        new_rps: 1.0 / new_s,
+        old_phases: PhaseTimes::default(),
+        new_phases: PhaseTimes::default(),
+    };
+    println!(
+        "kernel A/B {name:<34} d={d:<7}  old {:10.1} passes/s  new {:10.1} passes/s  speedup {:5.2}x",
+        r.old_rps,
+        r.new_rps,
+        r.speedup()
+    );
+    r
+}
+
+/// Per-kernel microbenches: one "round" = one full pass over a d-vector
+/// (or one encode/decode of it). Old arms are the scalar references;
+/// see [`assert_kernels_bitwise`] for why the comparison is honest.
+fn bench_kernels(d: usize, reps: usize) -> Vec<AbResult> {
+    use lead::linalg::simd::reference;
+    use std::hint::black_box;
+    assert_kernels_bitwise(d);
+    let mut rng = Rng::new(0x1234);
+    let mut x = vec![0.0f64; d];
+    let mut y = vec![0.0f64; d];
+    rng.fill_normal(&mut x, 2.0);
+    rng.fill_normal(&mut y, 2.0);
+    let mut results = Vec::new();
+
+    let warm = (reps / 10).max(1);
+    let _ = time_reps(warm, || lead::linalg::axpy(1e-9, black_box(&x), black_box(&mut y)));
+    let old = time_reps(reps, || reference::axpy(1e-9, black_box(&x), black_box(&mut y)));
+    let new = time_reps(reps, || lead::linalg::axpy(1e-9, black_box(&x), black_box(&mut y)));
+    results.push(kernel_ab("kernel axpy", d, reps, old, new));
+
+    let entries: Vec<(u32, f64)> =
+        (0..(d / 100).max(1)).map(|_| (rng.below(d) as u32, rng.normal_f64())).collect();
+    let sreps = reps * 20; // O(d/100) work per pass — more reps for signal
+    let _ = time_reps(warm, || lead::linalg::scatter_axpy(1e-9, black_box(&entries), black_box(&mut y)));
+    let old = time_reps(sreps, || reference::scatter_axpy(1e-9, black_box(&entries), black_box(&mut y)));
+    let new = time_reps(sreps, || lead::linalg::scatter_axpy(1e-9, black_box(&entries), black_box(&mut y)));
+    results.push(kernel_ab("kernel scatter_axpy", d, sreps, old, new));
+
+    let _ = time_reps(warm, || {
+        black_box(lead::linalg::dot(black_box(&x), black_box(&y)));
+    });
+    let old = time_reps(reps, || {
+        black_box(reference::dot_seq(black_box(&x), black_box(&y)));
+    });
+    let new = time_reps(reps, || {
+        black_box(lead::linalg::dot(black_box(&x), black_box(&y)));
+    });
+    results.push(kernel_ab("kernel dot", d, reps, old, new));
+
+    let q = QuantizeP::paper_default();
+    let qreps = (reps / 4).max(1);
+    let mut msg = CompressedMsg::with_dim(d);
+    let mut w = lead::compress::wire::BitWriter::new();
+    let mut vals = vec![0.0f64; d];
+    let _ = time_reps(warm, || q.compress(black_box(&x), &mut Rng::new(0xAB), &mut msg));
+    let old = time_reps(qreps, || {
+        w.clear();
+        quantize_encode_reference(&q, black_box(&x), &mut Rng::new(0xAB), &mut w, &mut vals);
+    });
+    let new = time_reps(qreps, || q.compress(black_box(&x), &mut Rng::new(0xAB), &mut msg));
+    results.push(kernel_ab("kernel quantize encode", d, qreps, old, new));
+
+    let mut dec = Vec::with_capacity(d);
+    let _ = time_reps(warm, || lead::compress::quantize::decode(&q, black_box(&msg.payload), d, &mut dec));
+    let old = time_reps(qreps, || quantize_decode_reference(&q, black_box(&msg.payload), d, &mut dec));
+    let new = time_reps(qreps, || lead::compress::quantize::decode(&q, black_box(&msg.payload), d, &mut dec));
+    results.push(kernel_ab("kernel quantize decode", d, qreps, old, new));
+
+    results
+}
+
+/// Pool wake latency: empty-dispatch round trips (wake + join, no work)
+/// on the legacy broadcast pool vs the per-worker wake path. This is the
+/// §Wake path A/B — per-dispatch latency, so `rounds_per_s` here is
+/// dispatches/s.
+fn bench_pool_wake(threads: usize, dispatches: usize) -> AbResult {
+    use lead::pool::WorkerPool;
+    let time_pool = |pool: &WorkerPool, reps: usize| {
+        time_reps(reps, || {
+            pool.run(threads, &|w| {
+                std::hint::black_box(w);
+            });
+        })
+    };
+    let old_pool = WorkerPool::new_broadcast(threads);
+    let new_pool = WorkerPool::new(threads);
+    let warm = (dispatches / 10).max(1);
+    let _ = time_pool(&old_pool, warm);
+    let _ = time_pool(&new_pool, warm);
+    let old_s = time_pool(&old_pool, dispatches);
+    let new_s = time_pool(&new_pool, dispatches);
+    let r = AbResult {
+        name: "pool wake".to_string(),
+        n: threads,
+        d: 0,
+        threads,
+        rounds: dispatches,
+        old_rps: 1.0 / old_s,
+        new_rps: 1.0 / new_s,
+        old_phases: PhaseTimes::default(),
+        new_phases: PhaseTimes::default(),
+    };
+    println!(
+        "pool wake  threads={threads} {dispatches} empty dispatches:  broadcast {:7.2} µs/dispatch  per-worker {:7.2} µs/dispatch  speedup {:5.2}x",
+        old_s * 1e6,
+        new_s * 1e6,
+        r.speedup()
+    );
+    r
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
@@ -407,7 +665,13 @@ fn main() {
             4,
             "straggler:1e-4:1e9:0.25:10:drop=0.01",
         );
-        write_json(&[r, s], true);
+        let mut results = vec![r, s];
+        // Part 5 smoke: tiny kernel + wake configs so CI proves the
+        // bitwise guards and the JSON plumbing for the `kernel …` /
+        // `pool wake` names without a long run.
+        results.extend(bench_kernels(10_000, 200));
+        results.push(bench_pool_wake(4, 1_000));
+        write_json(&results, true);
         return;
     }
 
@@ -504,6 +768,9 @@ fn main() {
         8,
         "straggler:1e-4:1e9:0.25:10:drop=0.01",
     ));
+    // Part 5: kernel microbenches + pool wake latency (module docs).
+    results.extend(bench_kernels(100_000, 2_000));
+    results.push(bench_pool_wake(8, 10_000));
     write_json(&results, false);
 
     for threads in [1usize, 4, 8] {

@@ -41,9 +41,15 @@
 //! * **`atomic_ordering`** (R5) — every atomic `Ordering::{Relaxed,
 //!   Acquire, Release, AcqRel, SeqCst}` carries an `// ORDERING:` comment
 //!   justifying the choice (`cmp::Ordering` is recognized and exempt).
+//! * **`arch_intrinsics`** (R6) — no `core::arch`/`std::arch` outside
+//!   `linalg/simd.rs`. CPU intrinsics are where a "harmless" FMA or a
+//!   CPU-dependent reduction shape would fork trajectories between
+//!   machines; confining them to the one module whose §Determinism
+//!   contract pins every accumulation shape keeps that review surface
+//!   minimal.
 //!
 //! Rules R2–R5 skip `#[cfg(test)]` regions (tests do not affect
-//! trajectories); R1 applies everywhere. String literals and comments
+//! trajectories); R1 and R6 apply everywhere. String literals and comments
 //! can never trigger a rule — sources are lexed first
 //! ([`lexer`]), which is also what makes the auditor self-clean: its own
 //! pattern tables are string literals.
@@ -171,6 +177,7 @@ mod tests {
                 "rng_stream",
                 "thread_spawn",
                 "atomic_ordering",
+                "arch_intrinsics",
                 "pragma"
             ]
         );

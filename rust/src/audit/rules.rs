@@ -1,5 +1,5 @@
 //! The auditor's rule engine: pragma parsing, `#[cfg(test)]`-region
-//! tracking, justification-comment lookup, and the five rules R1–R5
+//! tracking, justification-comment lookup, and the six rules R1–R6
 //! (see `super` for the invariant each one protects).
 //!
 //! Every rule works on the lexed line model from [`super::lexer`], so
@@ -38,6 +38,7 @@ pub const R_NONDET: &str = "nondeterminism";
 pub const R_RNG: &str = "rng_stream";
 pub const R_THREAD: &str = "thread_spawn";
 pub const R_ATOMIC: &str = "atomic_ordering";
+pub const R_ARCH: &str = "arch_intrinsics";
 pub const R_PRAGMA: &str = "pragma";
 
 pub fn rules() -> &'static [RuleInfo] {
@@ -67,6 +68,12 @@ pub fn rules() -> &'static [RuleInfo] {
             id: R_ATOMIC,
             summary: "every atomic memory ordering carries an `ORDERING:` comment on or \
                       directly above the line",
+        },
+        RuleInfo {
+            id: R_ARCH,
+            summary: "no `core::arch`/`std::arch` (CPU intrinsics) outside linalg/simd.rs — \
+                      unsafe SIMD stays confined to the one reviewed kernel module \
+                      (applies to test code too)",
         },
         RuleInfo {
             id: R_PRAGMA,
@@ -263,6 +270,9 @@ pub fn check_file(file: &str, src: &str) -> Vec<Diagnostic> {
         .file_name()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| file.to_string());
+    // R6 exemption is matched on the path suffix, not the bare file name,
+    // so an unrelated `simd.rs` elsewhere cannot claim it.
+    let in_simd_module = file.replace('\\', "/").ends_with("linalg/simd.rs");
     let mut out = Vec::new();
     let mut diag = |line: usize, rule: &'static str, msg: String| {
         out.push(Diagnostic { file: file.to_string(), line: line + 1, rule, msg });
@@ -286,6 +296,17 @@ pub fn check_file(file: &str, src: &str) -> Vec<Diagnostic> {
             && !ctx.is_allowed(i, R_SAFETY)
         {
             diag(i, R_SAFETY, "`unsafe` without a `// SAFETY:` comment on or directly above this line".into());
+        }
+
+        // R6 — intrinsics confinement. Applies everywhere, tests
+        // included: the determinism contract on the SIMD kernels only
+        // holds while every `core::arch` use sits in the one module
+        // whose reduction shapes are reviewed and pinned.
+        if !in_simd_module
+            && !ctx.is_allowed(i, R_ARCH)
+            && (contains_word(code, "core::arch") || contains_word(code, "std::arch"))
+        {
+            diag(i, R_ARCH, "`core::arch`/`std::arch` outside linalg/simd.rs — CPU intrinsics live only in the reviewed SIMD kernel module (see its §Determinism docs), or justify with a pragma".into());
         }
 
         if ctx.in_test[i] {
@@ -485,6 +506,41 @@ unsafe impl Send for X {}
         assert!(audit(src).is_empty());
         let qualified = "use std::cmp::Ordering;\nmatch x.cmp(&y) { Ordering::Less => {} _ => {} }\n";
         assert!(audit(qualified).is_empty());
+    }
+
+    // ---- R6: arch_intrinsics ----
+
+    #[test]
+    fn r6_fires_outside_the_simd_module() {
+        let src = "// SAFETY: avx2 checked by caller.\nunsafe { std::arch::x86_64::_mm256_add_pd(a, b) }\n";
+        assert_eq!(lines_for(&audit(src), R_ARCH), vec![2]);
+        let import = "use core::arch::x86_64::*;\n";
+        assert_eq!(lines_for(&audit(import), R_ARCH), vec![1]);
+    }
+
+    #[test]
+    fn r6_applies_inside_test_code_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::arch::x86_64::*;\n}\n";
+        assert_eq!(lines_for(&audit(src), R_ARCH), vec![3]);
+    }
+
+    #[test]
+    fn r6_quiet_in_linalg_simd_and_via_pragma() {
+        let src = "use std::arch::x86_64::*;\n";
+        assert!(check_file("rust/src/linalg/simd.rs", src).is_empty());
+        // Windows-style separators normalize before the suffix match.
+        assert!(check_file("rust\\src\\linalg\\simd.rs", src).is_empty());
+        // A stray simd.rs elsewhere does NOT inherit the exemption.
+        assert_eq!(lines_for(&check_file("rust/src/other/simd.rs", src), R_ARCH), vec![1]);
+        let pragma = "use std::arch::x86_64::*; // audit:allow(arch_intrinsics): scalar-identical fallback proven above\n";
+        assert!(audit(pragma).is_empty());
+    }
+
+    #[test]
+    fn r6_word_boundary_and_clean_code_quiet() {
+        // Identifier containing the needle as a substring must not fire.
+        assert!(audit("let mystd::arch_like = 1;\n").is_empty());
+        assert!(audit("fn plain() -> u32 { 7 }\n").is_empty());
     }
 
     // ---- pragma meta-rule ----

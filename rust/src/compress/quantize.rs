@@ -25,6 +25,7 @@
 
 use super::wire::{BitReader, BitWriter};
 use super::{CompressedMsg, Compressor};
+use crate::linalg::simd::LANES;
 use crate::rng::Rng;
 
 /// Which norm scales the quantization grid.
@@ -87,23 +88,47 @@ impl QuantizeP {
         }
         let scale = (1u64 << (self.bits - 1)) as f64; // 2^{b-1}
         let unit = norm / scale; // ‖x‖_p · 2^{-(b-1)}
-        // Hot loop (§Perf): precompute 1/norm (divide → multiply) and fuse
-        // sign+level into a single bit-stream push — the LSB-first layout
-        // `sign | level<<1` is bit-identical to the two separate pushes, so
-        // decode() and the wire format are unchanged.
+        // Hot loop (§Perf): precompute 1/norm (divide → multiply), fuse
+        // sign+level into a single field (`sign | level<<1` — LSB-first,
+        // bit-identical to the two separate pushes), and emit fields in
+        // 4-lane bursts via `push4` (byte-identical to sequential pushes).
+        // `quantize_one` draws the dither in element-index order, so the
+        // RNG stream, the wire bytes, and the dequantized values are all
+        // unchanged from the per-element loop.
         let inv = scale / norm;
         let field_width = 1 + self.bits;
-        for (xi, out) in x.iter().zip(vals.iter_mut()) {
-            let sign_bit = u64::from(xi.is_sign_negative());
-            let scaled = xi.abs() * inv;
-            let level = (scaled + rng.uniform_f64()).floor() as u64;
-            debug_assert!(level <= scale as u64 + 1, "level {level} > {scale}");
-            let level = level.min(scale as u64); // guard fp edge (|x| == norm, u→1)
-            w.push(sign_bit | (level << 1), field_width);
-            let mag = unit * level as f64;
-            *out = if sign_bit == 1 { -mag } else { mag };
+        let mut xit = x.chunks_exact(LANES);
+        let mut vit = vals.chunks_exact_mut(LANES);
+        for (cx, cv) in (&mut xit).zip(&mut vit) {
+            let mut fields = [0u64; LANES];
+            for l in 0..LANES {
+                let (f, v) = quantize_one(cx[l], inv, unit, scale, rng);
+                fields[l] = f;
+                cv[l] = v;
+            }
+            w.push4(fields, field_width);
+        }
+        for (xi, out) in xit.remainder().iter().zip(vit.into_remainder()) {
+            let (f, v) = quantize_one(*xi, inv, unit, scale, rng);
+            w.push(f, field_width);
+            *out = v;
         }
     }
+}
+
+/// One element of the quantize hot loop — exactly the pre-chunking
+/// per-element expressions, factored out so the 4-lane burst loop and its
+/// remainder tail stay bitwise- and RNG-stream-identical. Returns the
+/// fused wire field (`sign | level<<1`) and the dequantized value.
+#[inline]
+fn quantize_one(xi: f64, inv: f64, unit: f64, scale: f64, rng: &mut Rng) -> (u64, f64) {
+    let sign_bit = u64::from(xi.is_sign_negative());
+    let scaled = xi.abs() * inv;
+    let level = (scaled + rng.uniform_f64()).floor() as u64;
+    debug_assert!(level <= scale as u64 + 1, "level {level} > {scale}");
+    let level = level.min(scale as u64); // guard fp edge (|x| == norm, u→1)
+    let mag = unit * level as f64;
+    (sign_bit | (level << 1), if sign_bit == 1 { -mag } else { mag })
 }
 
 impl Compressor for QuantizeP {
@@ -167,13 +192,32 @@ pub fn decode(q: &QuantizeP, payload: &[u8], d: usize, out: &mut Vec<f64>) {
         // block norm encodes all-zero levels, so it must decode to 0.0 —
         // `inf · 0` would otherwise produce NaN here.
         let unit = if norm > 0.0 && norm.is_finite() { norm / scale } else { 0.0 };
-        for _ in 0..blk {
-            let sign = r.read(1);
-            let level = r.read(q.bits);
-            let mag = unit * level as f64;
-            out.push(if sign == 1 { -mag } else { mag });
+        // 4-lane bursts mirroring encode_block: one fused field per
+        // element (`sign | level<<1`, LSB-first — reading it whole is
+        // bit-identical to the old read(1) + read(bits) pair).
+        let fw = 1 + q.bits;
+        let mut done = 0usize;
+        while done + LANES <= blk {
+            for f in r.read4(fw) {
+                out.push(field_val(f, unit));
+            }
+            done += LANES;
+        }
+        for _ in done..blk {
+            out.push(field_val(r.read(fw), unit));
         }
         remaining -= blk;
+    }
+}
+
+/// Dequantize one fused wire field (see [`quantize_one`]).
+#[inline]
+fn field_val(f: u64, unit: f64) -> f64 {
+    let mag = unit * (f >> 1) as f64;
+    if f & 1 == 1 {
+        -mag
+    } else {
+        mag
     }
 }
 
@@ -210,6 +254,20 @@ mod tests {
             prop_assert!(dec == msg.values, "wire decode mismatch (bits={bits} block={block})");
             Ok(())
         });
+    }
+
+    #[test]
+    fn widest_fields_take_the_burst_fallback() {
+        // bits=16 ⇒ field width 17 ⇒ 4·17 > 64, exercising push4/read4's
+        // sequential fallback path; the wire must still round-trip exactly.
+        let q = QuantizeP::new(16, PNorm::Inf, 64);
+        let mut rng = Rng::new(23);
+        let x: Vec<f64> = (0..150).map(|i| ((i * 37) as f64).sin() * 4.0).collect();
+        let msg = q.compress_alloc(&x, &mut rng);
+        assert_eq!(msg.wire_bits, 3 * 32 + 150 * 17);
+        let mut dec = Vec::new();
+        decode(&q, &msg.payload, x.len(), &mut dec);
+        assert!(dec.iter().zip(&msg.values).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

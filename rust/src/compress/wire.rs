@@ -64,6 +64,32 @@ impl BitWriter {
     pub fn push_f32(&mut self, x: f32) {
         self.push(x.to_bits() as u64, 32);
     }
+
+    /// Append four equal-width fields in order — the quantizer's 4-lane
+    /// burst. When `4 · width ≤ 64` the lanes are pre-packed into one
+    /// u64 (`v0 | v1≪w | v2≪2w | v3≪3w`) and written with a single
+    /// [`push`](Self::push); because the stream is LSB-first, that packed
+    /// word's byte layout is identical to four sequential pushes, so this
+    /// is a pure speed path (pinned by `push4_matches_sequential`).
+    /// Wider fields fall back to four pushes.
+    #[inline]
+    pub fn push4(&mut self, values: [u64; 4], width: u32) {
+        if width != 0 && 4 * width <= 64 {
+            let mut packed = 0u64;
+            for (l, &v) in values.iter().enumerate() {
+                // A lane overflowing `width` would bleed into the next
+                // lane's bits (plain `push` merely writes a wrong value),
+                // so overflow must be a hard error here.
+                debug_assert!(v < (1u64 << width), "push4: lane {l} value {v} overflows {width} bits");
+                packed |= (v & ((1u64 << width) - 1)) << (l as u32 * width);
+            }
+            self.push(packed, 4 * width);
+        } else {
+            for v in values {
+                self.push(v, width);
+            }
+        }
+    }
 }
 
 /// LSB-first bit reader.
@@ -111,6 +137,27 @@ impl<'a> BitReader<'a> {
     #[inline]
     pub fn read_f32(&mut self) -> f32 {
         f32::from_bits(self.read(32) as u32)
+    }
+
+    /// Read four equal-width fields in order ([`BitWriter::push4`]'s
+    /// mirror — but it decodes ANY four sequential fields, packed or
+    /// not, since the layouts are identical). One
+    /// [`read`](Self::read) when `4 · width ≤ 64`, else four.
+    #[inline]
+    pub fn read4(&mut self, width: u32) -> [u64; 4] {
+        if width != 0 && 4 * width <= 64 {
+            let packed = self.read(4 * width);
+            // width ≤ 16 here, so the mask shift cannot overflow.
+            let mask = (1u64 << width) - 1;
+            [
+                packed & mask,
+                (packed >> width) & mask,
+                (packed >> (2 * width)) & mask,
+                (packed >> (3 * width)) & mask,
+            ]
+        } else {
+            [self.read(width), self.read(width), self.read(width), self.read(width)]
+        }
     }
 
     /// Bits consumed so far.
@@ -236,6 +283,54 @@ mod tests {
                 assert_eq!(r.position(), w.bits);
             }
         }
+    }
+
+    /// `push4` must be a pure speed path: for every width (packed branch
+    /// ≤ 16 and fallback > 16) at every start offset, the stream is
+    /// byte-identical to four sequential `push`es, and `read4` recovers
+    /// the lanes whichever writer produced them.
+    #[test]
+    fn push4_matches_sequential() {
+        let mut rng = Rng::new(41);
+        for width in 1u32..=20 {
+            for offset in 0u32..8 {
+                let lanes: [u64; 4] = std::array::from_fn(|_| rng.next_u64() & ((1u64 << width) - 1));
+                let mut burst = BitWriter::new();
+                let mut seq = BitWriter::new();
+                for w in [&mut burst, &mut seq] {
+                    if offset > 0 {
+                        w.push(0b0110_1001 & ((1u64 << offset) - 1), offset);
+                    }
+                }
+                burst.push4(lanes, width);
+                for v in lanes {
+                    seq.push(v, width);
+                }
+                // Trailing field so the final partial byte is compared too.
+                burst.push(0b10, 2);
+                seq.push(0b10, 2);
+                assert_eq!(burst.bytes, seq.bytes, "layout drifted (width={width} offset={offset})");
+                assert_eq!(burst.bits, seq.bits);
+                let mut r = BitReader::new(&seq.bytes);
+                if offset > 0 {
+                    let _ = r.read(offset);
+                }
+                assert_eq!(r.read4(width), lanes, "width={width} offset={offset}");
+                assert_eq!(r.read(2), 0b10);
+            }
+        }
+    }
+
+    #[test]
+    fn read4_matches_sequential_reads() {
+        let mut w = BitWriter::new();
+        let vals = [5u64, 0, 31, 17];
+        for v in vals {
+            w.push(v, 5);
+        }
+        let mut r4 = BitReader::new(&w.bytes);
+        assert_eq!(r4.read4(5), vals);
+        assert_eq!(r4.position(), 20);
     }
 
     #[test]

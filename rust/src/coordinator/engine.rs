@@ -783,9 +783,7 @@ impl Engine {
         let n = self.mix.n;
         let d = self.problem.dim();
         let mut xbar = vec![0.0f64; d];
-        for i in 0..n {
-            crate::linalg::axpy(1.0 / n as f64, algo.x(i), &mut xbar);
-        }
+        crate::linalg::mean_rows((0..n).map(|i| algo.x(i)), &mut xbar);
         let consensus = ((0..n)
             .map(|i| crate::linalg::dist_sq(algo.x(i), &xbar))
             .sum::<f64>()

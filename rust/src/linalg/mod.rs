@@ -1,81 +1,28 @@
-//! Minimal dense linear algebra over `f64`/`f64` slices.
+//! Minimal dense linear algebra over `f64` slices.
 //!
 //! Everything the reproduction needs and nothing more: BLAS-1 vector ops on
-//! the hot path (all branch-free, auto-vectorizable loops), small dense
-//! matrix routines for problem setup (Gram matrices, Cholesky solve for the
-//! closed-form linear-regression optimum), and symmetric eigensolvers for
-//! the mixing-matrix spectral constants β = λmax(I−W) and
-//! κ_g = λmax(I−W)/λmin⁺(I−W) used throughout the paper's theory.
+//! the hot path, small dense matrix routines for problem setup (Gram
+//! matrices, Cholesky solve for the closed-form linear-regression optimum),
+//! and symmetric eigensolvers for the mixing-matrix spectral constants
+//! β = λmax(I−W) and κ_g = λmax(I−W)/λmin⁺(I−W) used throughout the
+//! paper's theory.
+//!
+//! The hot BLAS-1 kernels live in [`simd`] as fixed-shape 4-lane chunked
+//! loops (optionally AVX2 behind `--features simd`) and are re-exported
+//! here unchanged — callers keep writing `linalg::axpy`. Read
+//! `simd`'s §Determinism docs before touching any of them: the reduction
+//! kernels pin an accumulation-tree shape in source, and a kernel may only
+//! reorder float ops when the reordering is IEEE-exact or the pinned shape
+//! (and its scalar emulation in [`simd::reference`]) changes for every
+//! build and arch at once.
 //!
 //! Matrices are row-major `Vec<f64>` with explicit dimensions; at the sizes
 //! we need (n ≤ 64 agents, d ≤ a few hundred for setup-time solves) cache
 //! blocking is irrelevant and clarity wins.
 
-// ---------------------------------------------------------------------------
-// BLAS-1 on f64 (hot path)
-// ---------------------------------------------------------------------------
+pub mod simd;
 
-/// y += alpha * x
-#[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
-}
-
-/// Sparse counterpart of [`axpy`]: `y[i] += alpha * v` for each `(i, v)`
-/// entry. When `entries` holds exactly the nonzeros of a dense vector and
-/// `y` is accumulated from +0.0, the result is bitwise-identical to the
-/// dense `axpy` over that vector (the omitted terms are ±0.0 additions,
-/// which cannot change any partial sum reachable from a +0.0 start under
-/// IEEE 754 round-to-nearest). This is what lets the engine mix top-k /
-/// rand-k messages in O(deg·k) without perturbing trajectories.
-#[inline]
-pub fn scatter_axpy(alpha: f64, entries: &[(u32, f64)], y: &mut [f64]) {
-    for &(i, v) in entries {
-        y[i as usize] += alpha * v;
-    }
-}
-
-/// out = a - b
-#[inline]
-pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(a.len(), b.len());
-    debug_assert_eq!(a.len(), out.len());
-    for i in 0..a.len() {
-        out[i] = a[i] - b[i];
-    }
-}
-
-/// x *= alpha
-#[inline]
-pub fn scale(x: &mut [f64], alpha: f64) {
-    for v in x.iter_mut() {
-        *v *= alpha;
-    }
-}
-
-/// Dot product, accumulated in f64 for stability.
-#[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        s += (*x as f64) * (*y as f64);
-    }
-    s
-}
-
-/// Squared L2 norm (f64 accumulator).
-#[inline]
-pub fn norm2_sq(x: &[f64]) -> f64 {
-    let mut s = 0.0f64;
-    for v in x {
-        s += (*v as f64) * (*v as f64);
-    }
-    s
-}
+pub use simd::{axpy, dist_sq, dot, norm2_sq, norm_inf, scale, scatter_axpy, sub};
 
 /// L2 norm.
 #[inline]
@@ -83,45 +30,33 @@ pub fn norm2(x: &[f64]) -> f64 {
     norm2_sq(x).sqrt()
 }
 
-/// L-infinity norm.
-#[inline]
-pub fn norm_inf(x: &[f64]) -> f64 {
-    let mut m = 0.0f64;
-    for v in x {
-        m = m.max(v.abs());
-    }
-    m
-}
-
 /// p-norm for finite p >= 1 (f64 accumulator).
 pub fn norm_p(x: &[f64], p: f64) -> f64 {
     debug_assert!(p >= 1.0);
     let mut s = 0.0f64;
     for v in x {
-        s += (v.abs() as f64).powf(p);
+        s += v.abs().powf(p);
     }
     s.powf(1.0 / p)
 }
 
-/// Squared distance ||a - b||^2.
-#[inline]
-pub fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        let d = (*x - *y) as f64;
-        s += d * d;
-    }
-    s
-}
-
-/// Mean of rows: `xs` is a set of equal-length vectors; `out` = average.
-pub fn mean_rows(xs: &[Vec<f64>], out: &mut [f64]) {
+/// Mean of rows: `rows` yields equal-length vectors; `out` = average.
+///
+/// Generic over any exact-size iterator of slices so callers can feed
+/// contiguous [`Mat`] rows ([`Mat::rows_iter`]) or borrowed per-agent
+/// state views without materializing a `Vec<Vec<f64>>`. An empty
+/// iterator fills `out` with NaN (0/0), matching the historical
+/// behavior.
+pub fn mean_rows<'a, I>(rows: I, out: &mut [f64])
+where
+    I: ExactSizeIterator<Item = &'a [f64]>,
+{
+    let n = rows.len();
     out.fill(0.0);
-    for x in xs {
+    for x in rows {
         axpy(1.0, x, out);
     }
-    scale(out, 1.0 / xs.len() as f64);
+    scale(out, 1.0 / n as f64);
 }
 
 // ---------------------------------------------------------------------------
@@ -157,6 +92,13 @@ impl Mat {
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Iterate the rows as contiguous slices (exact-size, so it plugs
+    /// straight into [`mean_rows`]).
+    #[inline]
+    pub fn rows_iter(&self) -> std::slice::ChunksExact<'_, f64> {
+        self.data.chunks_exact(self.cols.max(1))
     }
 
     /// Pack equal-length row vectors into a contiguous row-major matrix
@@ -419,11 +361,27 @@ mod tests {
     }
 
     #[test]
+    fn mean_rows_over_mat_rows_matches_vecs() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0], vec![-2.0, 0.5, 7.0]];
+        let m = Mat::from_rows(&rows);
+        let mut from_mat = vec![0.0; 3];
+        let mut from_vecs = vec![0.0; 3];
+        mean_rows(m.rows_iter(), &mut from_mat);
+        mean_rows(rows.iter().map(Vec::as_slice), &mut from_vecs);
+        for (a, b) in from_mat.iter().zip(&from_vecs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!((from_mat[0] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
     fn mat_rows_roundtrip() {
         let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
         let mut m = Mat::from_rows(&rows);
         assert_eq!((m.rows, m.cols), (3, 2));
         assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.rows_iter().count(), 3);
+        assert_eq!(m.rows_iter().nth(2).unwrap(), &[5.0, 6.0]);
         m.row_mut(2)[0] = 9.0;
         assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0, 9.0, 6.0]);
     }

@@ -1,0 +1,672 @@
+//! Fixed-shape chunked (4-lane) hot kernels — the crate's one SIMD layer.
+//!
+//! Profiling (ROADMAP "raw-speed pass", PR 2–5 phase breakdowns) shows the
+//! zero-alloc round loop is memory/ALU-bound in exactly these BLAS-1
+//! kernels plus the quantize bit-packing. This module rewrites the BLAS-1
+//! loops in a fixed 4-lane chunk shape (`[f64; 4]`, one AVX2 register)
+//! that the *stable* autovectorizer reliably turns into SIMD, and adds
+//! optional hand-written AVX2 paths behind the off-by-default `simd`
+//! cargo feature.
+//!
+//! # §Determinism — the fixed-reduction-shape contract
+//!
+//! Every trajectory claim in this repo is a bitwise differential pin, so
+//! a kernel may change *speed* but never a single output bit across
+//! builds, feature flags, thread counts, or CPUs. Two cases:
+//!
+//! **Elementwise kernels** ([`axpy`], [`scatter_axpy`], [`sub`],
+//! [`scale`]) are bitwise-identical to the plain scalar loops *by
+//! construction*: each output element is produced by exactly the same
+//! IEEE-754 expression and there is no cross-element data flow, so
+//! chunking (and any vectorization the compiler or the AVX2 path applies)
+//! cannot change any bit. `scatter_axpy` additionally applies its entries
+//! in list order, so even duplicate indices accumulate identically.
+//!
+//! **Reduction kernels** ([`dot`], [`norm2_sq`], [`dist_sq`]) DO fix an
+//! accumulation order, and that order is part of this module's public
+//! contract:
+//!
+//! ```text
+//! element j's term accumulates into lane (j mod 4)
+//! result = (lane0 + lane1) + (lane2 + lane3)
+//! ```
+//!
+//! The tree shape is pinned IN SOURCE — it is never chosen by runtime CPU
+//! detection, feature flags, or thread count. [`reference::dot_tree`] (and
+//! friends) are scalar emulations of the same tree and serve as the
+//! bitwise reference; the chunked portable code and the AVX2 path both
+//! realize it with identical per-lane IEEE op sequences: one multiply,
+//! one add, never FMA (a fused multiply-add rounds once instead of twice
+//! and would fork trajectories between builds; rustc never contracts
+//! float ops on its own, and the intrinsic paths use `_mm256_mul_pd` +
+//! `_mm256_add_pd` explicitly). [`norm_inf`] is chunked too but needs no
+//! shape contract: `f64::max` is exact (no rounding) and NaN-ignoring, so
+//! every accumulation order yields the same bits on any input; it gets no
+//! intrinsic path because `_mm256_max_pd` has *different* NaN semantics.
+//!
+//! The rule for future kernels: a float reordering is allowed only when
+//! it is exact (elementwise work, max/min-reductions); anything that
+//! changes a rounding sequence must change it for every build and arch at
+//! once, in source, with the scalar tree emulation updated in lockstep.
+//!
+//! # The `simd` feature
+//!
+//! `--features simd` compiles `#[target_feature(enable = "avx2")]` x86_64
+//! intrinsic paths and selects them at runtime via
+//! `is_x86_feature_detected!`. Because both implementations compute the
+//! identical pinned tree, detection is a pure performance knob — pinned by
+//! the proptests below and by running the whole differential suite under
+//! `--features simd` in CI. This module is the only place `core::arch`/
+//! `std::arch` may appear (audit rule R6 `arch_intrinsics`).
+
+/// Chunk width: 4 f64 lanes (one AVX2 register).
+pub const LANES: usize = 4;
+
+/// Largest multiple of [`LANES`] ≤ `len` (main-chunk/tail split point).
+#[inline]
+fn split4(len: usize) -> usize {
+    len - len % LANES
+}
+
+/// Fold the tail elements into the fixed tree's lanes and reduce in the
+/// pinned shape (see §Determinism): tail element `4m + t` lands in lane
+/// `t` — i.e. lane `(4m + t) mod 4` — then `(l0 + l1) + (l2 + l3)`.
+#[inline]
+fn finish_tree(
+    mut acc: [f64; LANES],
+    ta: &[f64],
+    tb: &[f64],
+    term: impl Fn(f64, f64) -> f64,
+) -> f64 {
+    for (t, (x, y)) in ta.iter().zip(tb).enumerate() {
+        acc[t] += term(*x, *y);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// y += alpha * x (elementwise; bitwise-identical to the scalar loop).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2::usable() {
+            // SAFETY: guarded by the runtime AVX2 detection above.
+            unsafe { avx2::axpy(alpha, x, y) };
+            return;
+        }
+    }
+    let n = x.len().min(y.len());
+    let m = split4(n);
+    for (cx, cy) in x[..m].chunks_exact(LANES).zip(y[..m].chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            cy[l] += alpha * cx[l];
+        }
+    }
+    for (xi, yi) in x[m..n].iter().zip(&mut y[m..n]) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Sparse counterpart of [`axpy`]: `y[i] += alpha * v` for each `(i, v)`
+/// entry, applied in list order. When `entries` holds exactly the
+/// nonzeros of a dense vector and `y` is accumulated from +0.0, the
+/// result is bitwise-identical to the dense `axpy` over that vector (the
+/// omitted terms are ±0.0 additions, which cannot change any partial sum
+/// reachable from a +0.0 start under IEEE 754 round-to-nearest). This is
+/// what lets the engine mix top-k / rand-k messages in O(deg·k) without
+/// perturbing trajectories.
+///
+/// A scatter cannot vectorize (indexed stores), but the fixed 4-entry
+/// chunks let the compiler interleave index loads with the FP ops; list
+/// order is preserved, so duplicate indices accumulate identically to the
+/// plain loop.
+#[inline]
+pub fn scatter_axpy(alpha: f64, entries: &[(u32, f64)], y: &mut [f64]) {
+    let mut it = entries.chunks_exact(LANES);
+    for c in &mut it {
+        for &(i, v) in c {
+            y[i as usize] += alpha * v;
+        }
+    }
+    for &(i, v) in it.remainder() {
+        y[i as usize] += alpha * v;
+    }
+}
+
+/// out = a - b (elementwise; bitwise-identical to the scalar loop).
+#[inline]
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2::usable() {
+            // SAFETY: guarded by the runtime AVX2 detection above.
+            unsafe { avx2::sub(a, b, out) };
+            return;
+        }
+    }
+    let n = a.len().min(b.len()).min(out.len());
+    let m = split4(n);
+    for ((ca, cb), co) in a[..m]
+        .chunks_exact(LANES)
+        .zip(b[..m].chunks_exact(LANES))
+        .zip(out[..m].chunks_exact_mut(LANES))
+    {
+        for l in 0..LANES {
+            co[l] = ca[l] - cb[l];
+        }
+    }
+    for i in m..n {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// x *= alpha (elementwise; bitwise-identical to the scalar loop).
+#[inline]
+pub fn scale(x: &mut [f64], alpha: f64) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2::usable() {
+            // SAFETY: guarded by the runtime AVX2 detection above.
+            unsafe { avx2::scale(x, alpha) };
+            return;
+        }
+    }
+    let m = split4(x.len());
+    for c in x[..m].chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            c[l] *= alpha;
+        }
+    }
+    for v in &mut x[m..] {
+        *v *= alpha;
+    }
+}
+
+/// Dot product in the pinned 4-lane tree (see §Determinism; bitwise
+/// reference: [`reference::dot_tree`]).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2::usable() {
+            // SAFETY: guarded by the runtime AVX2 detection above.
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    let n = a.len().min(b.len());
+    let m = split4(n);
+    let mut acc = [0.0f64; LANES];
+    for (ca, cb) in a[..m].chunks_exact(LANES).zip(b[..m].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    finish_tree(acc, &a[m..n], &b[m..n], |x, y| x * y)
+}
+
+/// Squared L2 norm in the pinned 4-lane tree (= `dot(x, x)`).
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Squared distance ||a - b||² in the pinned 4-lane tree (per-element
+/// term `(a[j] - b[j])²`; bitwise reference: [`reference::dist_sq_tree`]).
+#[inline]
+pub fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2::usable() {
+            // SAFETY: guarded by the runtime AVX2 detection above.
+            return unsafe { avx2::dist_sq(a, b) };
+        }
+    }
+    let n = a.len().min(b.len());
+    let m = split4(n);
+    let mut acc = [0.0f64; LANES];
+    for (ca, cb) in a[..m].chunks_exact(LANES).zip(b[..m].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            let d = ca[l] - cb[l];
+            acc[l] += d * d;
+        }
+    }
+    finish_tree(acc, &a[m..n], &b[m..n], |x, y| {
+        let d = x - y;
+        d * d
+    })
+}
+
+/// L-infinity norm, chunked. `f64::max` is exact and NaN-ignoring, so the
+/// 4-lane accumulation is bitwise-identical to the sequential scalar loop
+/// on every input (including NaN entries, which both simply skip). No
+/// intrinsic path: `_mm256_max_pd` propagates NaN differently.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    let m = split4(x.len());
+    let mut acc = [0.0f64; LANES];
+    for c in x[..m].chunks_exact(LANES) {
+        for l in 0..LANES {
+            acc[l] = acc[l].max(c[l].abs());
+        }
+    }
+    for (t, v) in x[m..].iter().enumerate() {
+        acc[t] = acc[t].max(v.abs());
+    }
+    (acc[0].max(acc[1])).max(acc[2].max(acc[3]))
+}
+
+/// x86_64 AVX2 intrinsic paths (`--features simd` only). Every function
+/// implements EXACTLY the portable kernel's elementwise expressions or
+/// pinned reduction tree — lanewise `_mm256_mul_pd` + `_mm256_add_pd`,
+/// never FMA — so the results are bitwise-identical and runtime dispatch
+/// is a pure performance knob (see the module docs, §Determinism).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::{finish_tree, split4, LANES};
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_setzero_pd,
+        _mm256_storeu_pd, _mm256_sub_pd,
+    };
+
+    /// Whether the AVX2 paths may be entered on this CPU. Dispatch only —
+    /// both branches compute the identical pinned tree, so this runtime
+    /// check can never affect a trajectory.
+    #[inline]
+    pub fn usable() -> bool {
+        is_x86_feature_detected!("avx2")
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must ensure the CPU supports AVX2 (see `usable`).
+    pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len().min(y.len());
+        let m = split4(n);
+        // SAFETY: every offset below is < m ≤ both slice lengths; loads
+        // and stores are unaligned-tolerant (`loadu`/`storeu`).
+        unsafe {
+            let a = _mm256_set1_pd(alpha);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            let mut i = 0;
+            while i < m {
+                let xv = _mm256_loadu_pd(xp.add(i));
+                let yv = _mm256_loadu_pd(yp.add(i));
+                _mm256_storeu_pd(yp.add(i), _mm256_add_pd(yv, _mm256_mul_pd(a, xv)));
+                i += LANES;
+            }
+        }
+        for i in m..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must ensure the CPU supports AVX2 (see `usable`).
+    pub unsafe fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+        let n = a.len().min(b.len()).min(out.len());
+        let m = split4(n);
+        // SAFETY: every offset below is < m ≤ all three slice lengths.
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut i = 0;
+            while i < m {
+                let av = _mm256_loadu_pd(ap.add(i));
+                let bv = _mm256_loadu_pd(bp.add(i));
+                _mm256_storeu_pd(op.add(i), _mm256_sub_pd(av, bv));
+                i += LANES;
+            }
+        }
+        for i in m..n {
+            out[i] = a[i] - b[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must ensure the CPU supports AVX2 (see `usable`).
+    pub unsafe fn scale(x: &mut [f64], alpha: f64) {
+        let m = split4(x.len());
+        // SAFETY: every offset below is < m ≤ the slice length.
+        unsafe {
+            let a = _mm256_set1_pd(alpha);
+            let xp = x.as_mut_ptr();
+            let mut i = 0;
+            while i < m {
+                let xv = _mm256_loadu_pd(xp.add(i));
+                _mm256_storeu_pd(xp.add(i), _mm256_mul_pd(xv, a));
+                i += LANES;
+            }
+        }
+        for v in &mut x[m..] {
+            *v *= alpha;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must ensure the CPU supports AVX2 (see `usable`).
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let m = split4(n);
+        let mut acc = [0.0f64; LANES];
+        // SAFETY: every offset below is < m ≤ both slice lengths; the
+        // accumulator store writes a full 4-lane array. Vector lane l
+        // holds exactly the portable loop's acc[l] op sequence (lanewise
+        // IEEE mul then add — no FMA).
+        unsafe {
+            let mut acc_v = _mm256_setzero_pd();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut i = 0;
+            while i < m {
+                let av = _mm256_loadu_pd(ap.add(i));
+                let bv = _mm256_loadu_pd(bp.add(i));
+                acc_v = _mm256_add_pd(acc_v, _mm256_mul_pd(av, bv));
+                i += LANES;
+            }
+            _mm256_storeu_pd(acc.as_mut_ptr(), acc_v);
+        }
+        finish_tree(acc, &a[m..n], &b[m..n], |x, y| x * y)
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must ensure the CPU supports AVX2 (see `usable`).
+    pub unsafe fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let m = split4(n);
+        let mut acc = [0.0f64; LANES];
+        // SAFETY: same bounds argument as `dot`; per-lane op sequence is
+        // sub, mul, add — identical to the portable chunk body.
+        unsafe {
+            let mut acc_v = _mm256_setzero_pd();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut i = 0;
+            while i < m {
+                let av = _mm256_loadu_pd(ap.add(i));
+                let bv = _mm256_loadu_pd(bp.add(i));
+                let dv = _mm256_sub_pd(av, bv);
+                acc_v = _mm256_add_pd(acc_v, _mm256_mul_pd(dv, dv));
+                i += LANES;
+            }
+            _mm256_storeu_pd(acc.as_mut_ptr(), acc_v);
+        }
+        finish_tree(acc, &a[m..n], &b[m..n], |x, y| {
+            let d = x - y;
+            d * d
+        })
+    }
+}
+
+/// Bitwise reference implementations, public so tests and
+/// `benches/hotpath.rs` can pin/compare against them:
+///
+/// * the pre-SIMD plain scalar loops for the elementwise kernels and
+///   `norm_inf` (chunking must reproduce them exactly);
+/// * `*_tree` — scalar emulations of the pinned 4-lane reduction tree
+///   (THE bitwise reference for `dot`/`norm2_sq`/`dist_sq`);
+/// * `*_seq` — the pre-PR sequential reductions, kept as the "old" arm
+///   of the kernel microbenches (numerically different shape; never used
+///   by library code).
+pub mod reference {
+    use super::LANES;
+
+    /// Plain scalar `y += alpha * x` (the pre-SIMD loop).
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// Plain scalar scatter-add (the pre-SIMD loop).
+    pub fn scatter_axpy(alpha: f64, entries: &[(u32, f64)], y: &mut [f64]) {
+        for &(i, v) in entries {
+            y[i as usize] += alpha * v;
+        }
+    }
+
+    /// Plain scalar `out = a - b` (the pre-SIMD loop).
+    pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+        for i in 0..a.len().min(b.len()).min(out.len()) {
+            out[i] = a[i] - b[i];
+        }
+    }
+
+    /// Plain scalar `x *= alpha` (the pre-SIMD loop).
+    pub fn scale(x: &mut [f64], alpha: f64) {
+        for v in x.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Plain sequential max-abs (the pre-SIMD loop).
+    pub fn norm_inf(x: &[f64]) -> f64 {
+        let mut m = 0.0f64;
+        for v in x {
+            m = m.max(v.abs());
+        }
+        m
+    }
+
+    /// Scalar emulation of the pinned 4-lane tree for `dot` — the
+    /// bitwise reference: element j accumulates into lane `j mod 4`,
+    /// reduced as `(l0 + l1) + (l2 + l3)`.
+    pub fn dot_tree(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            acc[j % LANES] += x * y;
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
+
+    /// Scalar emulation of the pinned tree for `norm2_sq`.
+    pub fn norm2_sq_tree(x: &[f64]) -> f64 {
+        dot_tree(x, x)
+    }
+
+    /// Scalar emulation of the pinned tree for `dist_sq`.
+    pub fn dist_sq_tree(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            let d = x - y;
+            acc[j % LANES] += d * d;
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
+
+    /// Pre-PR sequential dot (bench "old" arm only — different shape).
+    pub fn dot_seq(a: &[f64], b: &[f64]) -> f64 {
+        let mut s = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            s += x * y;
+        }
+        s
+    }
+
+    /// Pre-PR sequential squared norm (bench "old" arm only).
+    pub fn norm2_sq_seq(x: &[f64]) -> f64 {
+        dot_seq(x, x)
+    }
+
+    /// Pre-PR sequential squared distance (bench "old" arm only).
+    pub fn dist_sq_seq(a: &[f64], b: &[f64]) -> f64 {
+        let mut s = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            let d = x - y;
+            s += d * d;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+    use crate::prop_assert;
+    use crate::rng::Rng;
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Random NaN-free vector with signed zeros sprinkled in.
+    fn vec_with_zeros(rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0f64; n];
+        rng.fill_normal(&mut v, 3.0);
+        for (j, x) in v.iter_mut().enumerate() {
+            if j % 7 == 3 {
+                *x = if j % 2 == 0 { 0.0 } else { -0.0 };
+            }
+        }
+        v
+    }
+
+    /// Every length 0..=64 (all chunk/tail splits) plus signed zeros:
+    /// chunked elementwise kernels == old scalar loops, bit for bit.
+    #[test]
+    fn elementwise_bitwise_equals_scalar_loops() {
+        let mut rng = Rng::new(0x51AD);
+        for n in 0..=64usize {
+            let x = vec_with_zeros(&mut rng, n);
+            let y0 = vec_with_zeros(&mut rng, n);
+            for alpha in [0.37, -1.5, 0.0, -0.0] {
+                let mut ya = y0.clone();
+                let mut yb = y0.clone();
+                axpy(alpha, &x, &mut ya);
+                reference::axpy(alpha, &x, &mut yb);
+                assert_eq!(bits(&ya), bits(&yb), "axpy n={n} alpha={alpha}");
+
+                let mut sa = x.clone();
+                let mut sb = x.clone();
+                scale(&mut sa, alpha);
+                reference::scale(&mut sb, alpha);
+                assert_eq!(bits(&sa), bits(&sb), "scale n={n} alpha={alpha}");
+            }
+            let mut oa = vec![0.0f64; n];
+            let mut ob = vec![0.0f64; n];
+            sub(&x, &y0, &mut oa);
+            reference::sub(&x, &y0, &mut ob);
+            assert_eq!(bits(&oa), bits(&ob), "sub n={n}");
+        }
+    }
+
+    /// Chunked scatter (4-unrolled, list order) == plain loop, including
+    /// duplicate indices, every entry count 0..=64.
+    #[test]
+    fn scatter_axpy_bitwise_equals_scalar_loop() {
+        let mut rng = Rng::new(0x5CA7);
+        let d = 40usize;
+        for k in 0..=64usize {
+            let entries: Vec<(u32, f64)> = (0..k)
+                .map(|_| {
+                    let i = rng.below(d) as u32; // duplicates likely for k > d
+                    let v = if rng.below(9) == 0 { -0.0 } else { rng.normal_f64() };
+                    (i, v)
+                })
+                .collect();
+            let mut ya = vec![0.0f64; d];
+            let mut yb = vec![0.0f64; d];
+            for alpha in [1.0, -0.5] {
+                scatter_axpy(alpha, &entries, &mut ya);
+                reference::scatter_axpy(alpha, &entries, &mut yb);
+            }
+            assert_eq!(bits(&ya), bits(&yb), "scatter_axpy k={k}");
+        }
+    }
+
+    /// Every length 0..=64: the chunked (and, under `--features simd`,
+    /// AVX2) reductions == the scalar emulation of the pinned tree, bit
+    /// for bit; norm_inf == the old sequential loop.
+    #[test]
+    fn reductions_bitwise_equal_scalar_tree_emulation() {
+        let mut rng = Rng::new(0x7EE5);
+        for n in 0..=64usize {
+            let a = vec_with_zeros(&mut rng, n);
+            let b = vec_with_zeros(&mut rng, n);
+            assert_eq!(dot(&a, &b).to_bits(), reference::dot_tree(&a, &b).to_bits(), "dot n={n}");
+            assert_eq!(
+                norm2_sq(&a).to_bits(),
+                reference::norm2_sq_tree(&a).to_bits(),
+                "norm2_sq n={n}"
+            );
+            assert_eq!(
+                dist_sq(&a, &b).to_bits(),
+                reference::dist_sq_tree(&a, &b).to_bits(),
+                "dist_sq n={n}"
+            );
+            assert_eq!(
+                norm_inf(&a).to_bits(),
+                reference::norm_inf(&a).to_bits(),
+                "norm_inf n={n}"
+            );
+        }
+    }
+
+    /// The tree SHAPE itself, pinned against the documented formula on a
+    /// length with a tail (n = 7: lanes get {0,4}, {1,5}, {2,6}, {3}).
+    #[test]
+    fn reduction_tree_shape_is_the_documented_one() {
+        let x = [1e16, 1.0, 2.0, 3.0, 5.0, -1e16, 7.0];
+        let y = [2.0, 3.0, -1.0, 0.5, 4.0, 1.0, 0.25];
+        let want = (((x[0] * y[0] + x[4] * y[4]) + (x[1] * y[1] + x[5] * y[5]))
+            + ((x[2] * y[2] + x[6] * y[6]) + x[3] * y[3]))
+            .to_bits();
+        assert_eq!(dot(&x, &y).to_bits(), want);
+        assert_eq!(reference::dot_tree(&x, &y).to_bits(), want);
+    }
+
+    /// Property sweep over random lengths (tails included): kernels match
+    /// their bitwise references on NaN-free ±0.0-bearing inputs.
+    #[test]
+    fn kernels_match_references_prop() {
+        forall(80, 0x51D5, |g| {
+            let x = g.vec_f64(0..=257, 7.0);
+            let n = x.len();
+            let mut y = g.vec_f64(n..=n, 7.0);
+            let alpha = g.f64_in(-2.0, 2.0);
+
+            let mut ya = y.clone();
+            axpy(alpha, &x, &mut ya);
+            reference::axpy(alpha, &x, &mut y);
+            prop_assert!(bits(&ya) == bits(&y), "axpy diverged at n={n}");
+
+            prop_assert!(
+                dot(&x, &ya).to_bits() == reference::dot_tree(&x, &ya).to_bits(),
+                "dot diverged at n={n}"
+            );
+            prop_assert!(
+                dist_sq(&x, &ya).to_bits() == reference::dist_sq_tree(&x, &ya).to_bits(),
+                "dist_sq diverged at n={n}"
+            );
+            prop_assert!(
+                norm2_sq(&x).to_bits() == reference::norm2_sq_tree(&x).to_bits(),
+                "norm2_sq diverged at n={n}"
+            );
+            prop_assert!(
+                norm_inf(&x).to_bits() == reference::norm_inf(&x).to_bits(),
+                "norm_inf diverged at n={n}"
+            );
+            Ok(())
+        });
+    }
+
+    /// Degenerate lengths run (and agree) without panicking.
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(norm2_sq(&[]), 0.0);
+        assert_eq!(dist_sq(&[], &[]), 0.0);
+        assert_eq!(norm_inf(&[]), 0.0);
+        let mut y: Vec<f64> = vec![];
+        axpy(1.0, &[], &mut y);
+        scale(&mut y, 2.0);
+        scatter_axpy(1.0, &[], &mut y);
+        assert!(y.is_empty());
+    }
+}

@@ -11,6 +11,26 @@
 //! steady-state round loop allocation-free (see
 //! `coordinator::engine` §Perf).
 //!
+//! # Wake path
+//!
+//! A dispatch must wake `workers − 1` sleeping threads. The original
+//! design parked every worker on ONE `Mutex`+`Condvar` pair and
+//! `notify_all`'d it: every spawned worker — including those above the
+//! dispatch `bound`, which only idle-ack — woke and then serialized on
+//! the single slot mutex to re-read the epoch (a thundering herd; wake
+//! latency grows with pool size regardless of how many workers the
+//! dispatch actually needs). The default wake path now gives every
+//! spawned worker its own [`WakeCell`] (`Mutex<JobSlot>` + `Condvar`):
+//! the dispatcher writes the job into exactly the cells of the workers
+//! that will run it and `notify_one`s each, so no wake lock is ever
+//! contended by more than two threads and workers above the bound stay
+//! asleep entirely. Completion still joins on the one shared ack counter
+//! (the dispatcher is its only waiter). The broadcast path survives as
+//! [`WorkerPool::new_broadcast`] for the `benches/hotpath.rs`
+//! "pool wake" A/B; both modes implement the identical scheduling
+//! contract below, so the wake mechanism is a pure performance knob and
+//! can never affect a trajectory.
+//!
 //! # Scheduling contract
 //!
 //! All dispatch primitives ([`par_chunks`], [`par_agents`],
@@ -97,12 +117,39 @@ struct RawJob(*const (dyn Fn(usize) + Sync));
 unsafe impl Send for RawJob {}
 
 struct JobSlot {
-    /// Dispatch generation; workers run one job per increment.
+    /// Dispatch generation; workers run one job per increment. In
+    /// per-worker mode each [`WakeCell`] counts its own generations.
     epoch: u64,
-    /// Worker indices `< bound` execute the job; the rest just ack.
+    /// Worker indices `< bound` execute the job; the rest just ack
+    /// (broadcast mode) or are never woken (per-worker mode).
     bound: usize,
     job: Option<RawJob>,
     shutdown: bool,
+}
+
+impl JobSlot {
+    fn idle() -> Self {
+        JobSlot { epoch: 0, bound: 0, job: None, shutdown: false }
+    }
+}
+
+/// One spawned worker's private wake channel (see module docs, §Wake
+/// path): worker `w` sleeps on `cells[w − 1]` and nothing else, so a
+/// dispatch wakes exactly the workers it needs, one uncontended
+/// `notify_one` each.
+struct WakeCell {
+    msg: Mutex<JobSlot>,
+    wake: Condvar,
+}
+
+/// Which wake path a pool uses. Pure performance knob — the scheduling
+/// contract is identical in both modes (§Wake path).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum WakeMode {
+    /// Per-worker wake cells, `notify_one` each (default).
+    PerWorker,
+    /// Single shared slot + `notify_all` (legacy; bench A/B arm).
+    Broadcast,
 }
 
 struct DoneState {
@@ -111,8 +158,12 @@ struct DoneState {
 }
 
 struct Shared {
+    mode: WakeMode,
+    /// Broadcast-mode dispatch slot (also carries shutdown in that mode).
     slot: Mutex<JobSlot>,
     start: Condvar,
+    /// Per-worker wake channels, one per spawned worker (index `w − 1`).
+    cells: Vec<WakeCell>,
     done: Mutex<DoneState>,
     finish: Condvar,
 }
@@ -121,11 +172,12 @@ struct Shared {
 ///
 /// The pool represents `threads` units of parallelism: the caller of
 /// [`WorkerPool::run`] participates as worker 0 and `threads − 1` spawned
-/// threads serve indices `1..threads`. Workers sleep on a condvar between
-/// dispatches; a dispatch publishes a borrowed job closure, wakes
-/// everyone, runs the caller's own share, and blocks until all spawned
-/// workers acknowledge — so the borrowed closure provably outlives every
-/// use, and per-dispatch cost is two condvar hops with no allocation.
+/// threads serve indices `1..threads`. Workers sleep on their wake
+/// channel between dispatches; a dispatch publishes a borrowed job
+/// closure, wakes the workers it needs (§Wake path), runs the caller's
+/// own share, and blocks until every woken worker acknowledges — so the
+/// borrowed closure provably outlives every use, and per-dispatch cost
+/// is two condvar hops with no allocation.
 pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -138,12 +190,27 @@ pub struct WorkerPool {
 impl WorkerPool {
     /// Create a pool representing `threads` total units of parallelism
     /// (spawns `threads − 1` OS threads; the dispatching thread is
-    /// worker 0).
+    /// worker 0). Uses the per-worker wake path (§Wake path).
     pub fn new(threads: usize) -> Self {
+        Self::with_mode(threads, WakeMode::PerWorker)
+    }
+
+    /// [`WorkerPool::new`] with the legacy one-condvar-wakes-all dispatch.
+    /// Kept as the "old" arm of the `benches/hotpath.rs` "pool wake"
+    /// microbench; identical scheduling contract, slower wakes.
+    pub fn new_broadcast(threads: usize) -> Self {
+        Self::with_mode(threads, WakeMode::Broadcast)
+    }
+
+    fn with_mode(threads: usize, mode: WakeMode) -> Self {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
-            slot: Mutex::new(JobSlot { epoch: 0, bound: 0, job: None, shutdown: false }),
+            mode,
+            slot: Mutex::new(JobSlot::idle()),
             start: Condvar::new(),
+            cells: (1..threads)
+                .map(|_| WakeCell { msg: Mutex::new(JobSlot::idle()), wake: Condvar::new() })
+                .collect(),
             done: Mutex::new(DoneState { acked: 0, panic: None }),
             finish: Condvar::new(),
         });
@@ -189,22 +256,42 @@ impl WorkerPool {
             }
             return;
         }
-        {
-            let mut slot = self.shared.slot.lock().unwrap();
-            slot.epoch += 1;
-            slot.bound = workers;
-            let raw = job as *const (dyn Fn(usize) + Sync);
-            // SAFETY: lifetime erasure of the borrowed job closure —
-            // sound because the JoinGuard below blocks until every
-            // spawned worker acknowledged this epoch, so no worker can
-            // hold the pointer past the borrow; the slot entry is cleared
-            // again (job = None) before the guard releases.
-            slot.job = Some(RawJob(unsafe { std::mem::transmute(raw) }));
-        }
-        self.shared.start.notify_all();
+        let raw = job as *const (dyn Fn(usize) + Sync);
+        // SAFETY: lifetime erasure of the borrowed job closure — sound
+        // because the JoinGuard below blocks until every woken worker
+        // acknowledged this dispatch, so no worker can hold the pointer
+        // past the borrow; every cell/slot entry is cleared again
+        // (job = None) before the guard releases.
+        let raw = RawJob(unsafe { std::mem::transmute(raw) });
+        let expect = match self.shared.mode {
+            WakeMode::PerWorker => {
+                // Wake exactly the workers that will run — indices
+                // 1..workers, i.e. cells[..workers − 1] — one uncontended
+                // notify_one each; the rest stay asleep (§Wake path).
+                for cell in &self.shared.cells[..workers - 1] {
+                    let mut msg = cell.msg.lock().unwrap();
+                    msg.epoch += 1;
+                    msg.bound = workers;
+                    msg.job = Some(raw);
+                    drop(msg);
+                    cell.wake.notify_one();
+                }
+                workers - 1
+            }
+            WakeMode::Broadcast => {
+                {
+                    let mut slot = self.shared.slot.lock().unwrap();
+                    slot.epoch += 1;
+                    slot.bound = workers;
+                    slot.job = Some(raw);
+                }
+                self.shared.start.notify_all();
+                self.handles.len()
+            }
+        };
         // Even if the caller's own share panics, the guard still waits for
-        // the workers before unwinding past the job's borrow.
-        let guard = JoinGuard { pool: self };
+        // the woken workers before unwinding past the job's borrow.
+        let guard = JoinGuard { pool: self, expect };
         job(0);
         drop(guard);
     }
@@ -212,22 +299,32 @@ impl WorkerPool {
 
 struct JoinGuard<'a> {
     pool: &'a WorkerPool,
+    /// How many worker acks this dispatch produces: the woken workers in
+    /// per-worker mode (`workers − 1`), every spawned worker in broadcast
+    /// mode (idle workers ack too).
+    expect: usize,
 }
 
 impl Drop for JoinGuard<'_> {
     fn drop(&mut self) {
         let shared = &self.pool.shared;
-        let spawned = self.pool.handles.len();
         let panic = {
             let mut done = shared.done.lock().unwrap();
-            while done.acked < spawned {
+            while done.acked < self.expect {
                 done = shared.finish.wait(done).unwrap();
             }
             done.acked = 0;
             done.panic.take()
         };
-        shared.slot.lock().unwrap().job = None;
-        // ORDERING: Release publishes the slot cleanup above to the next
+        match shared.mode {
+            WakeMode::PerWorker => {
+                for cell in &shared.cells[..self.expect] {
+                    cell.msg.lock().unwrap().job = None;
+                }
+            }
+            WakeMode::Broadcast => shared.slot.lock().unwrap().job = None,
+        }
+        // ORDERING: Release publishes the job cleanup above to the next
         // dispatcher's busy.swap(Acquire).
         self.pool.busy.store(false, Ordering::Release);
         if let Some(p) = panic {
@@ -240,8 +337,20 @@ impl Drop for JoinGuard<'_> {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.shared.slot.lock().unwrap().shutdown = true;
-        self.shared.start.notify_all();
+        match self.shared.mode {
+            WakeMode::PerWorker => {
+                for cell in &self.shared.cells {
+                    let mut msg = cell.msg.lock().unwrap();
+                    msg.shutdown = true;
+                    drop(msg);
+                    cell.wake.notify_one();
+                }
+            }
+            WakeMode::Broadcast => {
+                self.shared.slot.lock().unwrap().shutdown = true;
+                self.shared.start.notify_all();
+            }
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -251,19 +360,36 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: &Shared, w: usize) {
     let mut seen = 0u64;
     loop {
-        let (job, bound) = {
-            let mut slot = shared.slot.lock().unwrap();
-            loop {
-                if slot.shutdown {
-                    return;
+        let (job, bound) = match shared.mode {
+            WakeMode::PerWorker => {
+                let cell = &shared.cells[w - 1];
+                let mut msg = cell.msg.lock().unwrap();
+                loop {
+                    if msg.shutdown {
+                        return;
+                    }
+                    if msg.epoch != seen {
+                        break;
+                    }
+                    msg = cell.wake.wait(msg).unwrap();
                 }
-                if slot.epoch != seen {
-                    break;
-                }
-                slot = shared.start.wait(slot).unwrap();
+                seen = msg.epoch;
+                (msg.job.expect("dispatch without job"), msg.bound)
             }
-            seen = slot.epoch;
-            (slot.job.expect("dispatch without job"), slot.bound)
+            WakeMode::Broadcast => {
+                let mut slot = shared.slot.lock().unwrap();
+                loop {
+                    if slot.shutdown {
+                        return;
+                    }
+                    if slot.epoch != seen {
+                        break;
+                    }
+                    slot = shared.start.wait(slot).unwrap();
+                }
+                seen = slot.epoch;
+                (slot.job.expect("dispatch without job"), slot.bound)
+            }
         };
         if w < bound {
             // SAFETY: the dispatcher blocks until this worker acks below,
@@ -516,19 +642,25 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
+    /// Both wake modes must satisfy every pool contract test.
+    fn both_modes(threads: usize) -> [WorkerPool; 2] {
+        [WorkerPool::new(threads), WorkerPool::new_broadcast(threads)]
+    }
+
     #[test]
     fn pool_runs_every_worker_index_once() {
-        let pool = WorkerPool::new(4);
-        for bound in [1usize, 2, 3, 4, 7] {
-            let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
-            let h = &hits;
-            pool.run(bound, &|w| {
-                h[w].fetch_add(1, Ordering::Relaxed);
-            });
-            let expect = bound.min(4);
-            for (w, c) in hits.iter().enumerate() {
-                let want = usize::from(w < expect);
-                assert_eq!(c.load(Ordering::Relaxed), want, "bound={bound} w={w}");
+        for pool in both_modes(4) {
+            for bound in [1usize, 2, 3, 4, 7] {
+                let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+                let h = &hits;
+                pool.run(bound, &|w| {
+                    h[w].fetch_add(1, Ordering::Relaxed);
+                });
+                let expect = bound.min(4);
+                for (w, c) in hits.iter().enumerate() {
+                    let want = usize::from(w < expect);
+                    assert_eq!(c.load(Ordering::Relaxed), want, "bound={bound} w={w}");
+                }
             }
         }
     }
@@ -537,15 +669,33 @@ mod tests {
     fn pool_reused_across_many_dispatches() {
         // The point of the pool: thousands of dispatches on the same
         // workers. Sum 0..n once per dispatch and check the total.
-        let pool = WorkerPool::new(3);
+        for pool in both_modes(3) {
+            let total = AtomicUsize::new(0);
+            for _ in 0..2000 {
+                let t = &total;
+                pool.run(3, &|w| {
+                    t.fetch_add(w + 1, Ordering::Relaxed);
+                });
+            }
+            assert_eq!(total.load(Ordering::Relaxed), 2000 * 6);
+        }
+    }
+
+    #[test]
+    fn partial_dispatches_leave_unneeded_workers_asleep_but_usable() {
+        // Per-worker mode never wakes workers >= bound; interleave
+        // partial and full dispatches to prove their cells stay
+        // consistent (per-cell epochs advance independently).
+        let pool = WorkerPool::new(4);
         let total = AtomicUsize::new(0);
-        for _ in 0..2000 {
-            let t = &total;
-            pool.run(3, &|w| {
+        let t = &total;
+        for bound in [2usize, 4, 2, 3, 4, 2] {
+            pool.run(bound, &|w| {
                 t.fetch_add(w + 1, Ordering::Relaxed);
             });
         }
-        assert_eq!(total.load(Ordering::Relaxed), 2000 * 6);
+        // Σ over dispatches of Σ_{w<bound} (w+1) = 3+10+3+6+10+3.
+        assert_eq!(total.load(Ordering::Relaxed), 35);
     }
 
     #[test]
@@ -565,22 +715,23 @@ mod tests {
 
     #[test]
     fn worker_panic_propagates() {
-        let pool = WorkerPool::new(2);
-        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            pool.run(2, &|w| {
-                if w == 1 {
-                    panic!("boom");
-                }
+        for pool in both_modes(2) {
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.run(2, &|w| {
+                    if w == 1 {
+                        panic!("boom");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "worker panic must reach the caller");
+            // The pool must still be usable afterwards.
+            let ok = AtomicUsize::new(0);
+            let o = &ok;
+            pool.run(2, &|_| {
+                o.fetch_add(1, Ordering::Relaxed);
             });
-        }));
-        assert!(r.is_err(), "worker panic must reach the caller");
-        // The pool must still be usable afterwards.
-        let ok = AtomicUsize::new(0);
-        let o = &ok;
-        pool.run(2, &|_| {
-            o.fetch_add(1, Ordering::Relaxed);
-        });
-        assert_eq!(ok.load(Ordering::Relaxed), 2);
+            assert_eq!(ok.load(Ordering::Relaxed), 2);
+        }
     }
 
     #[test]

@@ -118,13 +118,13 @@ pub trait Problem: Send + Sync {
 pub fn gradient_heterogeneity(p: &dyn Problem, at: &[f64]) -> f64 {
     let n = p.n_agents();
     let d = p.dim();
-    let mut grads = vec![vec![0.0f64; d]; n];
+    let mut grads = crate::linalg::Mat::zeros(n, d);
     for i in 0..n {
-        p.grad_full(i, at, &mut grads[i]);
+        p.grad_full(i, at, grads.row_mut(i));
     }
     let mut mean = vec![0.0f64; d];
-    crate::linalg::mean_rows(&grads, &mut mean);
-    grads.iter().map(|g| crate::linalg::dist_sq(g, &mean)).sum::<f64>() / n as f64
+    crate::linalg::mean_rows(grads.rows_iter(), &mut mean);
+    (0..n).map(|i| crate::linalg::dist_sq(grads.row(i), &mean)).sum::<f64>() / n as f64
 }
 
 #[cfg(test)]
