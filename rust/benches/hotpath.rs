@@ -59,6 +59,17 @@
 //! `BENCH_hotpath.json` so `lead bench-diff` gates kernel-level
 //! regressions forever after.
 //!
+//! Part 6 — transport A/B: the shared-memory mix (`TransportMode::Mem`)
+//! vs the framed in-process channel exchange (`TransportMode::Channel`)
+//! on the same run — the only delta is encoding each neighbor message
+//! into an envelope, queueing it through `mpsc`, and decoding it on the
+//! receive side. Trajectories are bitwise-identical
+//! (`assert_transport_bitwise`, pinned harder by
+//! `rust/tests/transport.rs`), so `old` = shared memory, `new` =
+//! channel, speedup ≲ 1 measures pure serialization + queueing overhead;
+//! the config ships in `BENCH_hotpath.json` so `lead bench-diff` gates
+//! the transport's cost.
+//!
 //! Run `cargo bench --bench hotpath` (full) or
 //! `cargo bench --bench hotpath -- --smoke` (one short config; wired
 //! into CI so regressions in the harness itself are caught early).
@@ -73,6 +84,7 @@ use lead::problems::{linreg::LinReg, logreg::LogReg, quad::Quad, DataSplit};
 use lead::rng::Rng;
 use lead::simnet::NetModel;
 use lead::topology::{MixingRule, Topology};
+use lead::transport::TransportMode;
 
 /// Part 1: isolated mix phase, all agents, dense vs sparse representation.
 fn bench_mix_phase() {
@@ -380,6 +392,95 @@ fn assert_simnet_timing_only() {
     println!("simnet bitwise guard: timing-only overlay, degenerate model == legacy formula");
 }
 
+/// [`timed_run`] over an explicit transport mode (persistent scheduler).
+fn timed_run_transport(
+    n: usize,
+    d: usize,
+    rounds: usize,
+    threads: usize,
+    transport: TransportMode,
+    comp: Box<dyn Compressor>,
+) -> (f64, PhaseTimes) {
+    let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+    let mut e = Engine::new(
+        EngineConfig {
+            eta: 0.05,
+            threads,
+            record_every: usize::MAX / 2,
+            transport,
+            ..Default::default()
+        },
+        mix,
+        std::sync::Arc::new(Quad::new(n, d, 3)),
+    );
+    let t = std::time::Instant::now();
+    let rec = e.run(Box::new(Lead::paper_default()), Some(comp), rounds);
+    let secs = t.elapsed().as_secs_f64();
+    let _ = rec.last().consensus; // keep the run observable
+    (rounds as f64 / secs, rec.phases)
+}
+
+/// Part 6: transport A/B — shared-memory mix vs framed channel exchange.
+/// `old` = `Mem`, `new` = `Channel`, so speedup ≲ 1 and the config's
+/// entry in `BENCH_hotpath.json` gates the encode+queue+decode overhead
+/// via `lead bench-diff`.
+fn bench_transport_ab(
+    name: &str,
+    n: usize,
+    d: usize,
+    rounds: usize,
+    threads: usize,
+    make_comp: &dyn Fn() -> Box<dyn Compressor>,
+) -> AbResult {
+    let _ = timed_run_transport(n, d, rounds.min(5), threads, TransportMode::Mem, make_comp());
+    let (mem_rps, mem_phases) =
+        timed_run_transport(n, d, rounds, threads, TransportMode::Mem, make_comp());
+    let (chan_rps, chan_phases) =
+        timed_run_transport(n, d, rounds, threads, TransportMode::Channel, make_comp());
+    let r = AbResult {
+        name: name.to_string(),
+        n,
+        d,
+        threads,
+        rounds,
+        old_rps: mem_rps,
+        new_rps: chan_rps,
+        old_phases: mem_phases,
+        new_phases: chan_phases,
+    };
+    println!(
+        "transport A/B {name:<31} threads={threads}  mem {mem_rps:8.2} r/s  channel {chan_rps:8.2} r/s  overhead {:5.3}x",
+        r.speedup()
+    );
+    r
+}
+
+/// Release-mode bitwise guard for the transport A/B: the channel and
+/// multiplexed exchanges must report identical final metrics to shared
+/// memory (release counterpart of the `rust/tests/transport.rs`
+/// harness — a drift here means the A/B above compares different
+/// computations).
+fn assert_transport_bitwise() {
+    let final_bits = |transport: TransportMode| {
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut e = Engine::new(
+            EngineConfig { eta: 0.05, threads: 2, record_every: 11, transport, ..Default::default() },
+            mix,
+            std::sync::Arc::new(Quad::new(8, 200, 3)),
+        );
+        let rec = e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(20))), 60);
+        (rec.last().dist_opt.to_bits(), rec.last().consensus.to_bits())
+    };
+    let mem = final_bits(TransportMode::Mem);
+    assert_eq!(mem, final_bits(TransportMode::Channel), "channel transport perturbed the trajectory");
+    assert_eq!(
+        mem,
+        final_bits(TransportMode::Mux { per_worker: 4 }),
+        "multiplexed transport perturbed the trajectory"
+    );
+    println!("transport bitwise guard: channel/mux exchange == shared-memory mix");
+}
+
 /// Bitwise guard for the sparse-own A/B: the lazy sparse-own run and the
 /// eager dense-own run must report identical final metrics (release-mode
 /// counterpart of the `rust/tests/sparse_own.rs` harness — a drift here
@@ -652,6 +753,7 @@ fn main() {
         // (sparse-own + simnet timing-only) all work end to end.
         assert_sparse_own_bitwise();
         assert_simnet_timing_only();
+        assert_transport_bitwise();
         let r = bench_engine_ab("smoke quad d=2e3 q∞-2bit", 16, 2_000, 10, 4, &|| {
             Box::new(QuantizeP::paper_default())
         });
@@ -665,7 +767,11 @@ fn main() {
             4,
             "straggler:1e-4:1e9:0.25:10:drop=0.01",
         );
-        let mut results = vec![r, s];
+        // Transport encode+queue+decode overhead under the bench-diff gate.
+        let t = bench_transport_ab("smoke transport channel d=2e3", 16, 2_000, 10, 4, &|| {
+            Box::new(TopK::new(20))
+        });
+        let mut results = vec![r, s, t];
         // Part 5 smoke: tiny kernel + wake configs so CI proves the
         // bitwise guards and the JSON plumbing for the `kernel …` /
         // `pool wake` names without a long run.
@@ -767,6 +873,25 @@ fn main() {
         40,
         8,
         "straggler:1e-4:1e9:0.25:10:drop=0.01",
+    ));
+    // Part 6: transport serialization + queueing overhead vs the
+    // shared-memory mix, on both codec families.
+    assert_transport_bitwise();
+    results.push(bench_transport_ab(
+        "transport channel n=32 d=1e4 top-k",
+        32,
+        10_000,
+        40,
+        8,
+        &|| Box::new(TopK::new(100)),
+    ));
+    results.push(bench_transport_ab(
+        "transport channel n=32 d=1e4 q∞-2bit",
+        32,
+        10_000,
+        40,
+        8,
+        &|| Box::new(QuantizeP::paper_default()),
     ));
     // Part 5: kernel microbenches + pool wake latency (module docs).
     results.extend(bench_kernels(100_000, 2_000));

@@ -138,6 +138,37 @@ pub struct CodecScratch {
     pub idx: Vec<usize>,
 }
 
+/// How a codec's packed channel-0 payload decodes on a receiving agent
+/// that has **only the wire bytes** — the contract the transport layer
+/// ([`crate::transport`]) needs to reconstruct a sender's published
+/// message bit-for-bit on the far side of a channel.
+///
+/// A codec is *wire-complete* when `(payload, d)` alone determines the
+/// exact decoded message:
+///
+/// * [`WireFormat::Quantize`] — decode via [`quantize::decode`], which is
+///   pinned bitwise to the sender's `values` (test
+///   `decode_matches_values_exactly`).
+/// * [`WireFormat::TopK`] — the payload is `entries` records of
+///   `(index_bits(d)`-wide index, f32 value)` in ascending index order;
+///   each decodes to the sparse entry `(index, value as f64)`, which is
+///   exactly the list `compress_into` published (±0.0 entries included).
+///
+/// Rand-k is **not** wire-complete (receivers re-derive the index set
+/// from RNG state the wire does not carry) and identity packs no payload
+/// — both return `None` from [`Compressor::wire_format`] and are
+/// rejected by non-`Mem` transports up front.
+#[derive(Clone, Debug)]
+pub enum WireFormat {
+    /// Block p-norm quantizer payload; decode with the carried params.
+    Quantize(quantize::QuantizeP),
+    /// Top-k sparse payload: k `(index, f32)` records, ascending.
+    TopK {
+        /// Entries per message (every message carries exactly k).
+        k: usize,
+    },
+}
+
 /// A communication compression operator.
 pub trait Compressor: Send + Sync {
     /// Human-readable identifier, e.g. `q∞-2bit/512`.
@@ -187,6 +218,18 @@ pub trait Compressor: Send + Sync {
     /// The worst-case variance constant C with `E‖x−Q(x)‖² ≤ C‖x‖²`, if
     /// the operator is unbiased (None for biased operators).
     fn variance_constant(&self, d: usize) -> Option<f64>;
+
+    /// The receiver-side decode recipe for this codec's packed payload,
+    /// or `None` if the payload alone does not determine the decoded
+    /// message (see [`WireFormat`]). `None` (the default) makes the
+    /// codec `Mem`-only: the scenario validator rejects it for
+    /// channel-backed transports instead of letting trajectories
+    /// silently diverge. Wrappers ([`StripSparse`], [`EagerDense`])
+    /// deliberately inherit `None` — they alter coordinator-side
+    /// representation, which the wire does not carry.
+    fn wire_format(&self) -> Option<WireFormat> {
+        None
+    }
 
     /// Convenience: allocate-and-compress.
     fn compress_alloc(&self, x: &[f64], rng: &mut Rng) -> CompressedMsg {

@@ -158,6 +158,13 @@ impl Compressor for QuantizeP {
         true
     }
 
+    fn wire_format(&self) -> Option<crate::compress::WireFormat> {
+        // Wire-complete: `decode` reconstructs the sender's `values`
+        // bit-for-bit from the payload and these params
+        // (`decode_matches_values_exactly`).
+        Some(crate::compress::WireFormat::Quantize(self.clone()))
+    }
+
     /// Worst-case C (Remark 7). For p = ∞ the supremum of
     /// `‖x‖_∞²/‖x‖²` is 1 (a single spike), giving `C = B · 4^{-b}` with
     /// B the effective block length. For finite p ≥ 2 the same bound holds

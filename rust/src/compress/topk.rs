@@ -113,6 +113,12 @@ impl Compressor for TopK {
     fn variance_constant(&self, _d: usize) -> Option<f64> {
         None
     }
+
+    fn wire_format(&self) -> Option<crate::compress::WireFormat> {
+        // Wire-complete: the payload is exactly k (index, f32) records in
+        // ascending index order — see `select_and_emit`.
+        Some(crate::compress::WireFormat::TopK { k: self.k })
+    }
 }
 
 #[cfg(test)]

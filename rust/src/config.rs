@@ -113,6 +113,7 @@ pub fn table4_dnn(heterogeneous: bool) -> Vec<AlgoSetup> {
 /// agents = 8
 /// seed = 42
 /// # link = "straggler:1e-4:1e9:0.25:10"   # simnet timing overlay
+/// # transport = "channel"                 # mem | channel | mux:<N>
 /// ```
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -129,6 +130,9 @@ pub struct RunConfig {
     /// Simnet link-model spec (`crate::simnet::NetModel::parse`); empty
     /// ⇒ the legacy uniform round-time formula.
     pub link: String,
+    /// Transport-mode spec (`crate::transport::TransportMode::parse`):
+    /// `mem` | `channel` | `mux:<N>`; empty ⇒ shared memory.
+    pub transport: String,
 }
 
 impl Default for RunConfig {
@@ -145,6 +149,7 @@ impl Default for RunConfig {
             seed: 42,
             batch_size: None,
             link: String::new(),
+            transport: String::new(),
         }
     }
 }
@@ -175,6 +180,9 @@ impl RunConfig {
             record_every: (self.rounds / 100).max(1),
             t0: None,
             link: self.link.clone(),
+            faults: String::new(),
+            time_budget: None,
+            transport: self.transport.clone(),
         }
     }
 
@@ -195,6 +203,7 @@ impl RunConfig {
                 "seed" => c.seed = v.as_i64().ok_or("seed must be int")? as u64,
                 "batch_size" => c.batch_size = Some(v.as_i64().ok_or("batch_size: int")? as usize),
                 "link" => c.link = v.as_str().ok_or("link: string")?.into(),
+                "transport" => c.transport = v.as_str().ok_or("transport: string")?.into(),
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -233,6 +242,15 @@ mod tests {
         assert_eq!(c.link, "uniform:1e-4:1e9");
         assert!(c.to_spec().build_net().unwrap().is_some(), "link flows into the spec");
         assert!(RunConfig::from_toml("bogus_key = 1").is_err());
+
+        let t = RunConfig::from_toml("transport = \"mux:8\"\n").unwrap();
+        assert_eq!(t.transport, "mux:8");
+        assert_eq!(
+            t.to_spec().build_transport().unwrap(),
+            crate::transport::TransportMode::Mux { per_worker: 8 },
+            "transport flows into the spec"
+        );
+        assert!(RunConfig::from_toml("transport = \"udp\"\n").unwrap().to_spec().build_transport().is_err());
     }
 
     #[test]

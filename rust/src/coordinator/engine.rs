@@ -115,6 +115,27 @@
 //! loop is bitwise-identical to today's engine; `rust/tests/faults.rs`
 //! pins both directions plus thread-count determinism with faults on.
 //!
+//! # §Transport — message-passing backends
+//!
+//! `cfg.transport` selects how messages move between agents. The default
+//! ([`TransportMode::Mem`]) is the shared-memory model above: the mix
+//! phase reads neighbors' messages straight out of the coordinator's
+//! buffers. Channel modes ([`TransportMode::Channel`],
+//! [`TransportMode::Mux`]) replace exactly the mix phase's *data motion*:
+//! after the fault schedule resolves, the coordinator thread frames each
+//! deliverable directed edge's wire bytes and enqueues them
+//! (`send_round`), then receive slots drain, decode, and mix in parallel
+//! (`recv_and_mix`) — everything else (produce, accounting, timing,
+//! store-delivered, apply, comp-err) is untouched, and each agent's own
+//! message never crosses the transport. The full delivery / ordering /
+//! bitwise contract — including why lossless channel runs reproduce the
+//! `Mem` trajectory series bit-for-bit, the frame-asserted `round_bits`
+//! accounting, and the fault drop path — is the §Transport contract in
+//! [`crate::transport`]; the differential harness is
+//! `rust/tests/transport.rs`. Channel modes relax the §Perf zero-alloc
+//! contract by exactly one `Vec<u8>` per frame in flight (`Mem` runs are
+//! unaffected).
+//!
 //! # §Scheduling — outer vs. inner parallelism
 //!
 //! A single engine run parallelizes *inside* the round (per-agent tasks)
@@ -154,6 +175,7 @@ use crate::pool::{par_chunks, Exec, SendPtr, WorkerPool};
 use crate::problems::Problem;
 use crate::rng::{streams, Rng};
 use crate::topology::MixingMatrix;
+use crate::transport::{ChannelTransport, TransportMode};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -223,6 +245,13 @@ pub struct EngineConfig {
     /// so the final round that crosses the budget is still completed and
     /// observed.
     pub time_budget: Option<f64>,
+    /// How messages move between agents (§Transport): shared memory (the
+    /// default and bitwise reference) or framed wire bytes over
+    /// in-process channels ([`crate::transport`]). Lossless channel
+    /// transports are bitwise-invisible; compressed runs require a
+    /// wire-complete codec
+    /// ([`Compressor::wire_format`](crate::compress::Compressor::wire_format)).
+    pub transport: TransportMode,
     /// Execution backend (default: persistent pool).
     pub scheduler: Scheduler,
 }
@@ -240,6 +269,7 @@ impl Default for EngineConfig {
             net: None,
             faults: None,
             time_budget: None,
+            transport: TransportMode::default(),
             scheduler: Scheduler::default(),
         }
     }
@@ -491,6 +521,22 @@ impl Engine {
             .cfg
             .faults
             .and_then(|p| (!p.is_noop()).then(|| FaultSchedule::new(&self.mix, p, self.cfg.seed, spec.channels, d)));
+        // §Transport: non-Mem modes stand up per-slot receive queues once
+        // per run; `None` keeps the shared-memory mix path byte-for-byte
+        // as before. Compressed runs on a channel transport require a
+        // wire-complete codec — the scenario driver rejects others up
+        // front, and `for_mode` asserts as the engine-API backstop.
+        let codec_label =
+            compressor.as_deref().map_or_else(|| "none".to_string(), |c| c.name());
+        let mut transport = ChannelTransport::for_mode(
+            self.cfg.transport,
+            &self.mix,
+            d,
+            spec.channels,
+            use_comp,
+            compressor.as_deref().and_then(|c| c.wire_format()),
+            &codec_label,
+        );
         let mut stopped_early = false;
         let mut series = Vec::new();
         let mut round_bits = vec![0u64; n];
@@ -659,25 +705,48 @@ impl Engine {
                 let payload_ref = &payload;
                 let msgs_ref = &msgs;
                 let fs_ref = faults.as_ref();
-                par_chunks(mix_apply_exec, &mut mixed_all, |i, out| match fs_ref {
-                    Some(fs) => {
-                        mix_degraded(mix, i, fs, use_comp, msgs_ref, payload_ref, out)
+                match &mut transport {
+                    // §Transport: the round's frames leave sequentially on
+                    // the coordinator thread (the drop path consults the
+                    // just-resolved fault schedule), then receive slots
+                    // drain/decode/mix in parallel. Bitwise-equal to the
+                    // shared-memory arm below (rust/tests/transport.rs).
+                    Some(tr) => {
+                        tr.send_round(round, mix, fs_ref, msgs_ref, payload_ref, &round_bits);
+                        tr.recv_and_mix(
+                            mix_apply_exec,
+                            round,
+                            mix,
+                            fs_ref,
+                            msgs_ref,
+                            payload_ref,
+                            &mut mixed_all,
+                        );
                     }
-                    None => {
-                        for (c, mx) in out.iter_mut().enumerate() {
-                            mx.fill(0.0);
-                            if c == 0 && use_comp {
-                                mix_msgs(mix, i, msgs_ref, mx);
-                            } else {
-                                for j in
-                                    std::iter::once(i).chain(mix.neighbors[i].iter().copied())
-                                {
-                                    crate::linalg::axpy(mix.weight(i, j), &payload_ref[j][c], mx);
+                    None => par_chunks(mix_apply_exec, &mut mixed_all, |i, out| match fs_ref {
+                        Some(fs) => {
+                            mix_degraded(mix, i, fs, use_comp, msgs_ref, payload_ref, out)
+                        }
+                        None => {
+                            for (c, mx) in out.iter_mut().enumerate() {
+                                mx.fill(0.0);
+                                if c == 0 && use_comp {
+                                    mix_msgs(mix, i, msgs_ref, mx);
+                                } else {
+                                    for j in
+                                        std::iter::once(i).chain(mix.neighbors[i].iter().copied())
+                                    {
+                                        crate::linalg::axpy(
+                                            mix.weight(i, j),
+                                            &payload_ref[j][c],
+                                            mx,
+                                        );
+                                    }
                                 }
                             }
                         }
-                    }
-                });
+                    }),
+                }
             }
             // Record delivered decodes for future stale replay (no-op
             // unless the plan enables it).
@@ -767,6 +836,7 @@ impl Engine {
             phases,
             net,
             faults: faults.as_ref().map(|f| f.summary()),
+            transport: transport.as_ref().map(|t| t.summary()),
             stopped_early,
         }
     }
@@ -1077,6 +1147,39 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// §Transport smoke: a lossless channel run reproduces the
+    /// shared-memory trajectory bit-for-bit and reports a frame-count
+    /// summary. The full algorithm × codec × topology × thread ×
+    /// multiplex matrix lives in `rust/tests/transport.rs`.
+    #[test]
+    fn channel_transport_bitwise_equals_mem() {
+        let run = |transport: TransportMode| {
+            let p = LinReg::synthetic(8, 30, 0.1, 3);
+            let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+            let mut e = Engine::new(
+                EngineConfig { record_every: 5, transport, ..Default::default() },
+                mix,
+                std::sync::Arc::new(p),
+            );
+            e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(10))), 40)
+        };
+        let mem = run(TransportMode::Mem);
+        let chan = run(TransportMode::Channel);
+        assert!(mem.transport.is_none());
+        let ts = chan.transport.as_ref().expect("channel run carries a summary");
+        assert_eq!(ts.mode, "channel");
+        // ring of 8: 16 directed edges, one frame each, 40 rounds.
+        assert_eq!(ts.frames_sent, 16 * 40);
+        assert_eq!(ts.frames_dropped, 0);
+        assert_eq!(mem.series.len(), chan.series.len());
+        for (a, b) in mem.series.iter().zip(&chan.series) {
+            assert_eq!(a.dist_opt.to_bits(), b.dist_opt.to_bits(), "round {}", a.round);
+            assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
+            assert_eq!(a.comp_err.to_bits(), b.comp_err.to_bits());
+            assert_eq!(a.bits_per_agent, b.bits_per_agent);
         }
     }
 

@@ -5,6 +5,7 @@
 use crate::faults::FaultSummary;
 use crate::serialize::json;
 use crate::simnet::NetSummary;
+use crate::transport::TransportSummary;
 
 /// Metrics snapshot at one recorded round.
 #[derive(Clone, Debug)]
@@ -99,6 +100,10 @@ pub struct RunRecord {
     pub net: Option<NetSummary>,
     /// Fault-injection summary — `Some` iff the run used a fault plan.
     pub faults: Option<FaultSummary>,
+    /// Transport summary (frames sent/dropped, actual bytes on the wire,
+    /// envelope included) — `Some` iff the run used a non-`Mem`
+    /// [`TransportMode`](crate::transport::TransportMode).
+    pub transport: Option<TransportSummary>,
     /// True iff the run stopped at `EngineConfig.time_budget` before
     /// completing its scheduled rounds.
     pub stopped_early: bool,
@@ -217,6 +222,13 @@ impl RunRecord {
             None => out.push_str("null"),
         }
         out.push(',');
+        json::write_str(&mut out, "transport");
+        out.push(':');
+        match &self.transport {
+            Some(t) => out.push_str(&t.to_json()),
+            None => out.push_str("null"),
+        }
+        out.push(',');
         json::write_str(&mut out, "stopped_early");
         out.push(':');
         out.push_str(if self.stopped_early { "true" } else { "false" });
@@ -275,6 +287,7 @@ mod tests {
             phases: PhaseTimes::default(),
             net: None,
             faults: None,
+            transport: None,
             stopped_early: false,
             series: dists
                 .iter()
@@ -332,6 +345,7 @@ mod tests {
         assert_eq!(row, 12);
         assert!(js.get("net").is_some(), "legacy runs serialize net as null");
         assert!(js.get("faults").is_some(), "fault-free runs serialize faults as null");
+        assert!(js.get("transport").is_some(), "mem runs serialize transport as null");
 
         // With a simnet summary attached the JSON embeds it.
         r.net = Some(NetSummary {
@@ -363,5 +377,17 @@ mod tests {
         assert_eq!(f.get("plan").unwrap().as_str(), Some("loss:5e-2"));
         assert_eq!(f.get("lost").unwrap().as_f64(), Some(7.0));
         assert_eq!(js.get("stopped_early"), Some(&crate::serialize::json::Json::Bool(true)));
+
+        // With a transport summary attached the JSON embeds it too.
+        r.transport = Some(TransportSummary {
+            mode: "mux:8".into(),
+            frames_sent: 640,
+            frames_dropped: 3,
+            bytes_on_wire: 81920,
+        });
+        let js = crate::serialize::json::parse(&r.to_json()).unwrap();
+        let t = js.get("transport").unwrap();
+        assert_eq!(t.get("mode").unwrap().as_str(), Some("mux:8"));
+        assert_eq!(t.get("frames_dropped").unwrap().as_f64(), Some(3.0));
     }
 }

@@ -48,6 +48,11 @@
 //! # x̂ reference points). `time_budget = <secs>` stops every cell once
 //! # sim_time crosses it (record flags stopped_early); see
 //! # examples/fault_tolerance.toml for the full graceful-degradation grid.
+//! # Message-passing backends are an axis too (`lead::transport` specs;
+//! # lossless transports never change trajectories — only the frame
+//! # counters in each cell's record — so the axis A/Bs the runtime, not
+//! # the math). Compressed cells need a wire-complete codec (topk, q*):
+//! # transport = ["mem", "channel", "mux:8"]
 //! ```
 //!
 //! Determinism: grids are bitwise-identical at any thread count (every

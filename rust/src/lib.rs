@@ -12,7 +12,10 @@
 //!   with a sharded multi-run executor ([`scenarios`]), a discrete-event
 //!   heterogeneous network simulator for time-to-accuracy studies
 //!   ([`simnet`]), deterministic fault injection with a
-//!   graceful-degradation engine path ([`faults`]), an in-tree
+//!   graceful-degradation engine path ([`faults`]), pluggable
+//!   message-passing transports that move framed wire bytes over
+//!   in-process channels bitwise-identically to shared memory
+//!   ([`transport`]), an in-tree
 //!   determinism & unsafe-soundness auditor
 //!   ([`audit`], `lead audit`), experiment drivers for every figure in
 //!   the paper, metrics, and a CLI.
@@ -70,6 +73,7 @@ pub mod scenarios;
 pub mod serialize;
 pub mod simnet;
 pub mod topology;
+pub mod transport;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
@@ -97,4 +101,5 @@ pub mod prelude {
     pub use crate::simnet::{NetModel, NetSummary, RoundTimer};
     pub use crate::rng::Rng;
     pub use crate::topology::{MixingMatrix, MixingRule, Topology};
+    pub use crate::transport::{TransportMode, TransportSummary};
 }

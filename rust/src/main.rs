@@ -15,6 +15,11 @@
 //! (`lead::scenarios`): specs expand to a batch, the sharded driver runs
 //! the batch on one shared worker pool, and artifacts (per-cell CSVs +
 //! the unified `<grid>.json`) land in `--out`.
+//!
+//! Grid and run TOMLs accept a `transport` key/axis (`mem` | `channel`
+//! | `mux:<N>`, see `lead::transport`): non-`mem` backends exchange the
+//! framed wire bytes over in-process channels, bitwise-identically to
+//! shared memory, and report frame counters in each record.
 
 use lead::error::err;
 use lead::experiments;

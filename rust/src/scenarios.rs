@@ -46,6 +46,12 @@
 //!                              # for the fault-free engine path
 //! # time_budget = 2.5          # stop once sim_time reaches this many
 //!                              # seconds; the record sets stopped_early
+//! # transport = "channel"      # transport::TransportMode spec: mem |
+//!                              # channel | mux:<N>; omit (or "mem") for
+//!                              # the shared-memory reference. Lossless
+//!                              # channel runs are bitwise-identical to
+//!                              # mem; compressed cells need a
+//!                              # wire-complete codec (topk, q*)
 //! # tol = 1e-6                 # dist(x*) tolerance: emits time_to_tol
 //!                              # per run into <grid>.json
 //!
@@ -82,6 +88,7 @@ use crate::problems::{linreg::LinReg, logreg::LogReg, quad::Quad, DataSplit, Pro
 use crate::serialize::{json, toml_mini};
 use crate::simnet::NetModel;
 use crate::topology::{MixingMatrix, MixingRule, Topology};
+use crate::transport::TransportMode;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -242,6 +249,12 @@ pub struct RunSpec {
     /// once `sim_time` crosses it (the crossing round still completes
     /// and is observed; the record sets `stopped_early`).
     pub time_budget: Option<f64>,
+    /// [`TransportMode::parse`] spec (`mem` | `channel` | `mux:<N>`); `""`
+    /// (or `"mem"`) keeps the shared-memory reference path. Lossless
+    /// channel transports leave trajectories bitwise-identical
+    /// (`rust/tests/transport.rs`); compressed cells require a
+    /// wire-complete codec (`topk:*`, `q*`) — validated before any run.
+    pub transport: String,
 }
 
 impl RunSpec {
@@ -267,6 +280,7 @@ impl RunSpec {
             link: String::new(),
             faults: String::new(),
             time_budget: None,
+            transport: String::new(),
         }
     }
 
@@ -303,6 +317,7 @@ impl RunSpec {
             net: self.build_net()?,
             faults: self.build_faults()?,
             time_budget: self.time_budget,
+            transport: self.build_transport()?,
             ..EngineConfig::default()
         })
     }
@@ -349,6 +364,20 @@ impl RunSpec {
             .ok_or_else(|| err(format!("{}: bad fault plan spec {:?}", self.name, self.faults)))
     }
 
+    /// Parse the `transport` field into a mode (`Mem` ⇒ the shared-memory
+    /// reference path, byte-for-byte the pre-transport engine). The
+    /// wire-completeness requirement for compressed channel cells is
+    /// checked by the [`Driver`]'s prevalidation, where the algorithm and
+    /// compressor are in hand.
+    pub fn build_transport(&self) -> Result<TransportMode> {
+        TransportMode::parse(&self.transport).ok_or_else(|| {
+            err(format!(
+                "{}: bad transport spec {:?} (mem | channel | mux:<N>)",
+                self.name, self.transport
+            ))
+        })
+    }
+
     /// Set one scalar field by its TOML key (axis application).
     pub fn apply_axis(&mut self, key: &str, v: &toml_mini::Value) -> Result<()> {
         let want_f64 =
@@ -372,6 +401,7 @@ impl RunSpec {
             "link" => self.link = want_str()?,
             "faults" => self.faults = want_str()?,
             "time_budget" => self.time_budget = Some(want_f64()?),
+            "transport" => self.transport = want_str()?,
             "mixing" => {
                 let s = want_str()?;
                 self.mixing = MixingRule::parse(&s)
@@ -399,6 +429,7 @@ impl RunSpec {
         kv_str(&mut o, "compressor", &self.compressor, true);
         kv_str(&mut o, "link", &self.link, true);
         kv_str(&mut o, "faults", &self.faults, true);
+        kv_str(&mut o, "transport", &self.transport, true);
         for (k, v) in [("eta", self.eta), ("gamma", self.gamma), ("alpha", self.alpha)] {
             o.push(',');
             json::write_str(&mut o, k);
@@ -627,9 +658,24 @@ impl Driver {
         for s in specs {
             s.build_mix()?;
             let algo = s.build_algo()?;
-            s.build_compressor()?;
+            let comp = s.build_compressor()?;
             s.build_net()?;
             s.build_faults()?;
+            // Codec gate (§Transport rule 5): a compressed cell on a
+            // channel transport must use a wire-complete codec — rejected
+            // here, before any problem build, instead of panicking inside
+            // the engine or silently diverging.
+            let mode = s.build_transport()?;
+            if !mode.is_mem() && algo.spec().compressed {
+                if let Some(c) = &comp {
+                    if c.wire_format().is_none() {
+                        return Err(err(format!(
+                            "{}: transport {:?} needs a wire-complete compressor (topk, q*); {:?} does not decode from its payload alone",
+                            s.name, s.transport, s.compressor
+                        )));
+                    }
+                }
+            }
             channels.push(algo.spec().channels);
         }
         // Resolve problems with structural dedupe, check agent counts,
@@ -792,6 +838,7 @@ fn same_cell_ignoring_seed(a: &RunSpec, b: &RunSpec) -> bool {
         && a.link == b.link
         && a.faults == b.faults
         && a.time_budget.map(f64::to_bits) == b.time_budget.map(f64::to_bits)
+        && a.transport == b.transport
 }
 
 /// Mean ± population std per recorded round over a cell's seed group,
@@ -1171,6 +1218,62 @@ seed = [1, 2, 3]
         bad.rounds = 5;
         bad.faults = "crash:2.0".into();
         assert!(Driver::new(1).run("t", &[bad]).is_err(), "bad fault plan must fail loudly");
+        let mut bad = RunSpec::paper_default();
+        bad.rounds = 5;
+        bad.transport = "udp".into();
+        assert!(Driver::new(1).run("t", &[bad]).is_err(), "bad transport spec must fail loudly");
+        let mut bad = RunSpec::paper_default();
+        bad.rounds = 5;
+        bad.transport = "mux:0".into();
+        assert!(Driver::new(1).run("t", &[bad]).is_err(), "mux needs >= 1 agent per slot");
+        // Codec gate: rand-k is not wire-complete (receiver-side RNG
+        // indices), so a compressed channel cell must be rejected before
+        // any problem is built.
+        let mut bad = RunSpec::paper_default();
+        bad.rounds = 5;
+        bad.compressor = "randk:10".into();
+        bad.transport = "channel".into();
+        assert!(
+            Driver::new(1).run("t", &[bad.clone()]).is_err(),
+            "rand-k over a channel transport must fail loudly"
+        );
+        // The same cell on the shared-memory reference stays valid.
+        bad.transport = "mem".into();
+        bad.rounds = 2;
+        bad.problem = ProblemSpec::Quad { dim: 16, seed: 1 };
+        assert!(Driver::new(1).run("t", &[bad]).is_ok());
+    }
+
+    #[test]
+    fn grid_toml_transport_axis_parses() {
+        let src = r#"
+[grid]
+name = "tp"
+rounds = 20
+compressor = "topk:10"
+
+[axes]
+transport = ["mem", "channel", "mux:8"]
+"#;
+        let g = Grid::from_toml(src).unwrap();
+        let specs = g.expand().unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(specs[0].build_transport().unwrap().is_mem());
+        assert_eq!(specs[1].build_transport().unwrap(), TransportMode::Channel);
+        assert_eq!(
+            specs[2].build_transport().unwrap(),
+            TransportMode::Mux { per_worker: 8 }
+        );
+        assert_eq!(specs[1].name, "tp_transportchannel");
+        // Engine config carries the mode through.
+        assert_eq!(specs[2].engine_config().unwrap().transport, TransportMode::Mux { per_worker: 8 });
+        // The transport axis splits seed-aggregation cells.
+        assert!(!same_cell_ignoring_seed(&specs[0], &specs[1]));
+        let mut reseed = specs[1].clone();
+        reseed.seed = 99;
+        assert!(same_cell_ignoring_seed(&specs[1], &reseed));
+        // Spec JSON records the axis value.
+        assert!(specs[1].spec_json().contains("\"transport\":\"channel\""));
     }
 
     /// The acceptance pin: the fig7 25-cell (α, γ) sweep through the

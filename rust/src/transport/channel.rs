@@ -1,0 +1,584 @@
+//! In-process channel transport: framed wire bytes over `std::sync::mpsc`.
+//!
+//! [`ChannelTransport`] is the engine-facing round exchange for every
+//! non-`Mem` [`TransportMode`]: a sequential **send phase** on the
+//! coordinator thread (one [`frame`] per delivered directed edge,
+//! enqueued through the [`Delivery`] backend) followed by a parallel
+//! **receive phase** (each slot drains its queue, decodes frames into
+//! per-(receiver, neighbor-position) buffers, and mixes in exactly the
+//! shared-memory accumulation order). The bitwise rules live in the
+//! module docs of [`super`] (§Transport contract); the differential
+//! harness is `rust/tests/transport.rs`.
+
+use super::frame;
+use super::multiplex::SlotMap;
+use super::{Delivery, TransportMode, TransportStats, TransportSummary};
+use crate::compress::wire::{index_bits, BitReader};
+use crate::compress::{quantize, CompressedMsg, WireFormat};
+use crate::faults::{FaultSchedule, LinkState};
+use crate::pool::{par_chunks, Exec, SendPtr};
+use crate::topology::MixingMatrix;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// [`Delivery`] over per-slot `std::sync::mpsc` queues. No threads are
+/// spawned here (audit R4); senders live on the coordinator thread and
+/// each receiver is drained by whichever pool worker processes its slot
+/// (the `Mutex` makes the `!Sync` `Receiver` shareable — uncontended,
+/// since distinct slots are drained by distinct workers).
+pub struct MpscDelivery {
+    senders: Vec<mpsc::Sender<Vec<u8>>>,
+    receivers: Vec<Mutex<mpsc::Receiver<Vec<u8>>>>,
+}
+
+impl MpscDelivery {
+    pub fn new(n_slots: usize) -> Self {
+        let mut senders = Vec::with_capacity(n_slots);
+        let mut receivers = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push(Mutex::new(rx));
+        }
+        MpscDelivery { senders, receivers }
+    }
+}
+
+impl Delivery for MpscDelivery {
+    fn send(&mut self, slot: usize, frame: Vec<u8>) {
+        // The paired Receiver lives in `self.receivers`, so the endpoint
+        // cannot have hung up.
+        self.senders[slot].send(frame).expect("slot receiver alive");
+    }
+
+    fn drain(&self, slot: usize, sink: &mut dyn FnMut(Vec<u8>)) {
+        let rx = self.receivers[slot].lock().expect("transport receiver mutex poisoned");
+        while let Ok(buf) = rx.try_recv() {
+            sink(buf);
+        }
+    }
+}
+
+/// One neighbor's decoded message for one receiver: reused across rounds
+/// so the receive phase allocates only the frame buffers in flight.
+#[derive(Default)]
+struct DecodedNeighbor {
+    /// Whether a frame arrived this round (false ⇒ the link was not
+    /// `Delivered`, and the mix must not read the buffers).
+    present: bool,
+    /// Channel-0 sparse view (top-k wire format): every wire entry,
+    /// ±0.0 values included — exactly the sender's `compress_into` list.
+    sparse: Vec<(u32, f64)>,
+    /// Channel-0 dense decode (quantize wire format).
+    dense: Vec<f64>,
+    /// Raw f64 channels, flattened (`raw_channels × d`).
+    raw: Vec<f64>,
+}
+
+/// Per-slot receive-phase scratch (the `par_chunks` work item).
+struct SlotLane {
+    /// `decoded[agent_within_slot][neighbor_position]`.
+    decoded: Vec<Vec<DecodedNeighbor>>,
+}
+
+/// Engine-facing round exchange over a [`Delivery`] backend (see module
+/// docs). Constructed once per run; internal buffers are reused across
+/// rounds.
+pub struct ChannelTransport {
+    mode: TransportMode,
+    slots: SlotMap,
+    delivery: Box<dyn Delivery>,
+    lanes: Vec<SlotLane>,
+    /// Channel-0 wire format; `Some` iff the run compresses channel 0.
+    wire: Option<WireFormat>,
+    use_comp: bool,
+    channels: usize,
+    d: usize,
+    /// Per-agent published bits implied by a frame's metadata:
+    /// `ch0_bits + (channels−1)·d·32` compressed, `channels·d·32` raw —
+    /// asserted equal to the produce-phase `round_bits` on every send
+    /// (§Transport rule 3).
+    extra_channel_bits: u64,
+    raw_bits_all: u64,
+    stats: TransportStats,
+    /// Reused frame-encode scratch (the queue takes an owned copy).
+    frame_buf: Vec<u8>,
+}
+
+impl ChannelTransport {
+    /// Stand up the transport for `mode`, or `None` for the shared-memory
+    /// reference mode. Panics if the run compresses channel 0 with a
+    /// codec that has no complete wire format (`Compressor::wire_format`
+    /// returned `None`) — the scenario driver rejects such cells up
+    /// front with a proper error; this is the engine-API backstop.
+    pub fn for_mode(
+        mode: TransportMode,
+        mix: &MixingMatrix,
+        d: usize,
+        channels: usize,
+        use_comp: bool,
+        wire: Option<WireFormat>,
+        codec_name: &str,
+    ) -> Option<ChannelTransport> {
+        let slots = SlotMap::for_mode(mode, mix.n)?;
+        assert!(
+            !use_comp || wire.is_some(),
+            "transport '{}' requires a wire-complete codec (topk, q*); '{codec_name}' does not decode from its payload alone",
+            mode.label()
+        );
+        let lanes = (0..slots.n_slots())
+            .map(|s| SlotLane {
+                decoded: (0..slots.agents_in(s))
+                    .map(|k| {
+                        let a = slots.first_agent(s) + k;
+                        (0..mix.neighbors[a].len()).map(|_| DecodedNeighbor::default()).collect()
+                    })
+                    .collect(),
+            })
+            .collect();
+        let delivery: Box<dyn Delivery> = Box::new(MpscDelivery::new(slots.n_slots()));
+        Some(ChannelTransport {
+            mode,
+            slots,
+            delivery,
+            lanes,
+            wire: if use_comp { wire } else { None },
+            use_comp,
+            channels,
+            d,
+            extra_channel_bits: (channels as u64 - 1) * (d as u64) * 32,
+            raw_bits_all: (channels as u64) * (d as u64) * 32,
+            stats: TransportStats::default(),
+            frame_buf: Vec::new(),
+        })
+    }
+
+    pub fn mode(&self) -> TransportMode {
+        self.mode
+    }
+
+    pub fn stats(&self) -> TransportStats {
+        self.stats
+    }
+
+    pub fn summary(&self) -> TransportSummary {
+        TransportSummary {
+            mode: self.mode.label(),
+            frames_sent: self.stats.frames_sent,
+            frames_dropped: self.stats.frames_dropped,
+            bytes_on_wire: self.stats.bytes_on_wire,
+        }
+    }
+
+    /// Send phase: enqueue one frame per deliverable directed edge, in
+    /// (receiver, neighbor-order) sequence on the coordinator thread.
+    /// Under a fault schedule a non-`Delivered` link (or a crashed
+    /// receiver) is the drop path: no frame leaves the sender
+    /// (`frames_dropped`). Call after the schedule's `resolve_round` so
+    /// link states are final.
+    ///
+    /// `round_bits` is the produce-phase accounting; every sent frame's
+    /// metadata must reproduce its sender's entry exactly (asserted).
+    pub fn send_round(
+        &mut self,
+        round: usize,
+        mix: &MixingMatrix,
+        faults: Option<&FaultSchedule>,
+        msgs: &[CompressedMsg],
+        payload: &[Vec<Vec<f64>>],
+        round_bits: &[u64],
+    ) {
+        let n = mix.n;
+        for i in 0..n {
+            for &j in &mix.neighbors[i] {
+                let deliverable = match faults {
+                    None => true,
+                    Some(fs) => !fs.is_down(i) && fs.link(i, j) == LinkState::Delivered,
+                };
+                if !deliverable {
+                    self.stats.frames_dropped += 1;
+                    continue;
+                }
+                let (ch0_bits, comp): (u64, &[u8]) = if self.use_comp {
+                    (msgs[j].wire_bits, &msgs[j].payload)
+                } else {
+                    (0, &[])
+                };
+                // Raw section: channels 1.. when channel 0 is compressed,
+                // every channel otherwise.
+                let raw_from = usize::from(self.use_comp);
+                let raw: Vec<&[f64]> =
+                    payload[j][raw_from..].iter().map(|c| c.as_slice()).collect();
+                let published = if self.use_comp {
+                    ch0_bits + self.extra_channel_bits
+                } else {
+                    self.raw_bits_all
+                };
+                assert_eq!(
+                    published, round_bits[j],
+                    "frame-derived bits for sender {j} drifted from produce accounting"
+                );
+                frame::encode(
+                    &mut self.frame_buf,
+                    round as u64,
+                    j as u32,
+                    i as u32,
+                    ch0_bits,
+                    comp,
+                    &raw,
+                );
+                self.stats.frames_sent += 1;
+                self.stats.bytes_on_wire += self.frame_buf.len() as u64;
+                self.delivery.send(self.slots.slot_of(i), self.frame_buf.clone());
+            }
+        }
+    }
+
+    /// Receive phase: each slot drains its queue, decodes every frame
+    /// into its per-(receiver, neighbor-position) buffer, then mixes its
+    /// agents' rows into `mixed_all` — in exactly the shared-memory
+    /// accumulation order (self first, then `mix.neighbors[i]` order;
+    /// see `crate::coordinator::engine::mix_msgs` / `mix_degraded`,
+    /// whose trajectories this reproduces bit-for-bit). Fans out over
+    /// slots on `exec`; no per-agent state is shared across slots.
+    #[allow(clippy::too_many_arguments)]
+    pub fn recv_and_mix(
+        &mut self,
+        exec: Exec<'_>,
+        round: usize,
+        mix: &MixingMatrix,
+        faults: Option<&FaultSchedule>,
+        msgs: &[CompressedMsg],
+        payload: &[Vec<Vec<f64>>],
+        mixed_all: &mut [Vec<Vec<f64>>],
+    ) {
+        assert_eq!(mixed_all.len(), mix.n);
+        let slots = &self.slots;
+        let delivery = &*self.delivery;
+        let wire = self.wire.as_ref();
+        let (use_comp, channels, d) = (self.use_comp, self.channels, self.d);
+        let mixed_p = SendPtr(mixed_all.as_mut_ptr());
+        par_chunks(exec, &mut self.lanes, |s, lane| {
+            let a0 = slots.first_agent(s);
+            for agent in lane.decoded.iter_mut() {
+                for dn in agent.iter_mut() {
+                    dn.present = false;
+                }
+            }
+            delivery.drain(s, &mut |buf: Vec<u8>| {
+                let fv = frame::decode(&buf).expect("in-process frame failed validation");
+                assert_eq!(fv.round, round as u64, "stale frame crossed a round barrier");
+                let dst = fv.dst as usize;
+                let local = dst.checked_sub(a0).filter(|&l| l < lane.decoded.len())
+                    .expect("frame routed to the wrong slot");
+                let pos = mix.neighbors[dst]
+                    .iter()
+                    .position(|&j| j == fv.sender as usize)
+                    .expect("frame from a non-neighbor");
+                decode_into(&mut lane.decoded[local][pos], &fv, wire, use_comp, channels, d);
+            });
+            for (local, dec) in lane.decoded.iter().enumerate() {
+                let a = a0 + local;
+                // SAFETY: slot lanes own disjoint contiguous agent ranges
+                // (SlotMap partition invariant) and par_chunks hands each
+                // lane to exactly one worker, so mixed_all[a] is written
+                // through this pointer by exactly one thread.
+                let out: &mut Vec<Vec<f64>> = unsafe { &mut *mixed_p.0.add(a) };
+                mix_decoded(mix, a, faults, use_comp, wire, msgs, payload, dec, d, out);
+            }
+        });
+    }
+}
+
+/// Decode one validated frame into a receiver's neighbor buffer.
+fn decode_into(
+    dn: &mut DecodedNeighbor,
+    fv: &frame::FrameView<'_>,
+    wire: Option<&WireFormat>,
+    use_comp: bool,
+    channels: usize,
+    d: usize,
+) {
+    if use_comp {
+        match wire.expect("wire format validated at construction") {
+            WireFormat::Quantize(q) => {
+                // Pinned bitwise to the sender's `values` by
+                // `quantize::decode_matches_values_exactly`.
+                quantize::decode(q, fv.comp, d, &mut dn.dense);
+                assert_eq!(dn.dense.len(), d, "quantize decode length");
+            }
+            WireFormat::TopK { .. } => {
+                // k entries of (index, f32 value), ascending index — the
+                // exact list `TopK::select_and_emit` published (±0.0
+                // entries included), so scatter-mixing it is bitwise-equal
+                // to the shared-memory sparse mix.
+                dn.sparse.clear();
+                if d > 0 {
+                    let ib = index_bits(d);
+                    let entry = (ib + 32) as u64;
+                    assert_eq!(fv.ch0_bits % entry, 0, "top-k payload not entry-aligned");
+                    let count = (fv.ch0_bits / entry) as usize;
+                    let mut r = BitReader::new(fv.comp);
+                    for _ in 0..count {
+                        let idx = r.read(ib);
+                        let v = r.read_f32() as f64;
+                        assert!((idx as usize) < d, "top-k index out of range");
+                        dn.sparse.push((idx as u32, v));
+                    }
+                }
+            }
+        }
+    }
+    let raw_channels = if use_comp { channels - 1 } else { channels };
+    dn.raw.resize(raw_channels * d, 0.0);
+    dn.raw.truncate(raw_channels * d);
+    fv.copy_raw_into(&mut dn.raw);
+    dn.present = true;
+}
+
+/// The receiving-side mix for agent `a` over its decoded frames —
+/// accumulation-order-identical to the engine's shared-memory
+/// `mix_msgs` (fault-free) / `mix_degraded` (under a schedule), with
+/// each neighbor term read from the frame decode instead of the
+/// coordinator's buffers. Self terms always come from the agent's own
+/// local message (it never crosses the transport).
+#[allow(clippy::too_many_arguments)]
+fn mix_decoded(
+    mix: &MixingMatrix,
+    a: usize,
+    faults: Option<&FaultSchedule>,
+    use_comp: bool,
+    wire: Option<&WireFormat>,
+    msgs: &[CompressedMsg],
+    payload: &[Vec<Vec<f64>>],
+    dec: &[DecodedNeighbor],
+    d: usize,
+    out: &mut [Vec<f64>],
+) {
+    if let Some(fs) = faults {
+        if fs.is_down(a) {
+            for mx in out.iter_mut() {
+                mx.fill(0.0);
+            }
+            return;
+        }
+    }
+    let w_self = match faults {
+        Some(fs) => {
+            crate::faults::folded_self_weight(mix, a, |j| fs.link(a, j) == LinkState::Lost)
+        }
+        None => mix.weight(a, a),
+    };
+    let neighbor_term = |p: usize, j: usize, c: usize, mx: &mut [f64]| {
+        let dn = &dec[p];
+        assert!(dn.present, "no frame from {j} on a delivered link to {a}");
+        if c == 0 && use_comp {
+            match wire.expect("wire format validated at construction") {
+                WireFormat::TopK { .. } => {
+                    crate::linalg::scatter_axpy(mix.weight(a, j), &dn.sparse, mx)
+                }
+                WireFormat::Quantize(_) => crate::linalg::axpy(mix.weight(a, j), &dn.dense, mx),
+            }
+        } else {
+            let rc = if use_comp { c - 1 } else { c };
+            crate::linalg::axpy(mix.weight(a, j), &dn.raw[rc * d..(rc + 1) * d], mx);
+        }
+    };
+    for (c, mx) in out.iter_mut().enumerate() {
+        mx.fill(0.0);
+        // Self term first — identical arms to mix_msgs / mix_degraded.
+        if c == 0 && use_comp {
+            match &msgs[a].sparse {
+                Some(entries) => crate::linalg::scatter_axpy(w_self, entries, mx),
+                None => {
+                    debug_assert!(!msgs[a].dense_stale, "dense mix over a stale message");
+                    crate::linalg::axpy(w_self, &msgs[a].values, mx)
+                }
+            }
+        } else {
+            crate::linalg::axpy(w_self, &payload[a][c], mx);
+        }
+        for (p, &j) in mix.neighbors[a].iter().enumerate() {
+            match faults {
+                None => neighbor_term(p, j, c, mx),
+                Some(fs) => match fs.link(a, j) {
+                    LinkState::Lost => {}
+                    LinkState::Delivered => neighbor_term(p, j, c, mx),
+                    LinkState::Stale => {
+                        crate::linalg::axpy(mix.weight(a, j), fs.stale_payload(a, j, c), mx)
+                    }
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::{PNorm, QuantizeP};
+    use crate::compress::topk::TopK;
+    use crate::compress::{CodecScratch, Compressor};
+    use crate::coordinator::engine::mix_msgs;
+    use crate::rng::Rng;
+    use crate::topology::{MixingRule, Topology};
+
+    fn random_round(
+        n: usize,
+        d: usize,
+        channels: usize,
+        comp: Option<&dyn Compressor>,
+        seed: u64,
+    ) -> (Vec<Vec<Vec<f64>>>, Vec<CompressedMsg>) {
+        let mut rng = Rng::new(seed);
+        let payload: Vec<Vec<Vec<f64>>> = (0..n)
+            .map(|_| {
+                (0..channels)
+                    .map(|_| {
+                        let mut v = vec![0.0f64; d];
+                        rng.fill_normal(&mut v, 1.5);
+                        v
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut msgs: Vec<CompressedMsg> =
+            (0..n).map(|_| CompressedMsg::with_dim(d)).collect();
+        if let Some(c) = comp {
+            let mut scratch = CodecScratch::default();
+            for i in 0..n {
+                c.compress_into(&payload[i][0], &mut rng, &mut msgs[i], &mut scratch);
+            }
+        }
+        (payload, msgs)
+    }
+
+    /// Shared-memory reference mix for all channels (the engine's
+    /// fault-free closure, verbatim semantics).
+    fn reference_mix(
+        mix: &MixingMatrix,
+        use_comp: bool,
+        msgs: &[CompressedMsg],
+        payload: &[Vec<Vec<f64>>],
+        channels: usize,
+        d: usize,
+    ) -> Vec<Vec<Vec<f64>>> {
+        let n = mix.n;
+        let mut want = vec![vec![vec![0.0f64; d]; channels]; n];
+        for (i, out) in want.iter_mut().enumerate() {
+            for (c, mx) in out.iter_mut().enumerate() {
+                if c == 0 && use_comp {
+                    mix_msgs(mix, i, msgs, mx);
+                } else {
+                    for j in std::iter::once(i).chain(mix.neighbors[i].iter().copied()) {
+                        crate::linalg::axpy(mix.weight(i, j), &payload[j][c], mx);
+                    }
+                }
+            }
+        }
+        want
+    }
+
+    /// One exchanged round over every layout must reproduce the
+    /// shared-memory mix bit-for-bit, for both wire-complete codec
+    /// families and for the raw (uncompressed) path.
+    #[test]
+    fn exchange_matches_shared_memory_mix_bitwise() {
+        let (n, d, channels) = (6, 41, 2);
+        let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+        let codecs: [Option<Box<dyn Compressor>>; 3] = [
+            Some(Box::new(TopK::new(7))),
+            Some(Box::new(QuantizeP::new(2, PNorm::Inf, 16))),
+            None,
+        ];
+        for (case, comp) in codecs.iter().enumerate() {
+            let use_comp = comp.is_some();
+            let (payload, msgs) =
+                random_round(n, d, channels, comp.as_deref(), 11 + case as u64);
+            let want = reference_mix(&mix, use_comp, &msgs, &payload, channels, d);
+            let round_bits: Vec<u64> = (0..n)
+                .map(|i| {
+                    if use_comp {
+                        msgs[i].wire_bits + (channels as u64 - 1) * (d as u64) * 32
+                    } else {
+                        (channels as u64) * (d as u64) * 32
+                    }
+                })
+                .collect();
+            for mode in [
+                TransportMode::Channel,
+                TransportMode::Mux { per_worker: 4 },
+                TransportMode::Mux { per_worker: 64 },
+            ] {
+                let mut tr = ChannelTransport::for_mode(
+                    mode,
+                    &mix,
+                    d,
+                    channels,
+                    use_comp,
+                    comp.as_deref().and_then(|c| c.wire_format()),
+                    "test",
+                )
+                .unwrap();
+                tr.send_round(1, &mix, None, &msgs, &payload, &round_bits);
+                let mut got = vec![vec![vec![0.0f64; d]; channels]; n];
+                tr.recv_and_mix(Exec::seq(), 1, &mix, None, &msgs, &payload, &mut got);
+                for i in 0..n {
+                    for c in 0..channels {
+                        for (u, v) in want[i][c].iter().zip(&got[i][c]) {
+                            assert_eq!(
+                                u.to_bits(),
+                                v.to_bits(),
+                                "case {case} mode {} agent {i} channel {c}",
+                                mode.label()
+                            );
+                        }
+                    }
+                }
+                let s = tr.summary();
+                let edges: u64 = (0..n).map(|i| mix.neighbors[i].len() as u64).sum();
+                assert_eq!(s.frames_sent, edges, "one frame per directed edge");
+                assert_eq!(s.frames_dropped, 0);
+                assert!(s.bytes_on_wire >= edges * frame::HEADER_LEN as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn mem_mode_has_no_transport() {
+        let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+        assert!(ChannelTransport::for_mode(TransportMode::Mem, &mix, 8, 1, false, None, "x")
+            .is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "wire-complete")]
+    fn non_wire_complete_codec_is_rejected() {
+        let mix = Topology::Ring.build(4, MixingRule::UniformNeighbors);
+        let _ = ChannelTransport::for_mode(
+            TransportMode::Channel,
+            &mix,
+            8,
+            1,
+            true, // compressed run...
+            None, // ...but the codec decodes only receiver-side (e.g. rand-k)
+            "rand-10",
+        );
+    }
+
+    #[test]
+    fn mpsc_delivery_preserves_send_order() {
+        let mut del = MpscDelivery::new(2);
+        del.send(0, vec![1]);
+        del.send(1, vec![9]);
+        del.send(0, vec![2]);
+        let mut got = Vec::new();
+        del.drain(0, &mut |b| got.push(b));
+        assert_eq!(got, vec![vec![1], vec![2]]);
+        got.clear();
+        del.drain(0, &mut |b| got.push(b));
+        assert!(got.is_empty(), "drain empties the queue");
+        del.drain(1, &mut |b| got.push(b));
+        assert_eq!(got, vec![vec![9]]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Transport-backed message delivery: how [`CompressedMsg`] wire payloads
+//! move between agents.
+//!
+//! The engine's historical execution model — and the **reference** this
+//! layer is differentially tested against — is shared memory
+//! ([`TransportMode::Mem`]): the mix phase reads every neighbor's
+//! `CompressedMsg` straight out of the coordinator's `msgs` buffer, no
+//! bytes move anywhere. This module adds the message-passing modes:
+//!
+//! * [`TransportMode::Channel`] — agents exchange the **existing
+//!   wire-codec bytes** over in-process `mpsc` channels. Every directed
+//!   edge's payload is packed into a framed envelope
+//!   ([`frame`]: `{round, sender, dst, ch0_bits, lengths}` + payload),
+//!   sent to the receiver's queue, and decoded back on the receiving
+//!   side before mixing. One queue (slot) per agent.
+//! * [`TransportMode::Mux`] — the same machinery with N contiguous
+//!   agents multiplexed per slot ([`multiplex::SlotMap`]), so one
+//!   machine hosts tens of thousands of agents on the existing
+//!   `WorkerPool` without any new thread spawns (audit rule R4 holds:
+//!   the receive/decode/mix fan-out rides the caller's `Exec`, and
+//!   `mpsc` endpoints spawn nothing).
+//!
+//! # §Transport contract — delivery, ordering, bitwise rules
+//!
+//! 1. **Lossless transport is bitwise-invisible.** With no fault plan,
+//!    a `Channel`/`Mux` run reproduces the `Mem` trajectory series
+//!    (dist/consensus/comp_err/bits) bit-for-bit. This holds because
+//!    (a) every in-tree *wire-complete* codec decodes its payload back
+//!    to exactly the values/sparse view the sender published
+//!    ([`WireFormat`]; quantize is pinned by
+//!    `decode_matches_values_exactly`, top-k entries are `(index,
+//!    f32-value)` pairs in ascending order), (b) raw channels are
+//!    framed as exact little-endian f64 bytes (lossless round-trip),
+//!    and (c) the receiving-side mix accumulates in exactly
+//!    [`mix_msgs`]-order: self first, then `mix.neighbors[i]` order —
+//!    frame *arrival* order is irrelevant because frames are demuxed
+//!    into per-(receiver, neighbor-position) buffers before mixing.
+//! 2. **Send is sequential, receive is parallel.** The coordinator
+//!    thread enqueues all frames for a round (deterministic send
+//!    order), then slots drain/decode/mix in parallel via `par_chunks`
+//!    — each slot owns a disjoint contiguous agent range, so no two
+//!    workers touch the same mix row.
+//! 3. **Accounting.** `round_bits` stays bitwise-equal to the `Mem`
+//!    path: each frame carries the channel-0 payload's exact bit count,
+//!    and the sender asserts `ch0_bits + (channels−1)·d·32` (raw
+//!    channels billed at 32 bits/element, matching the engine's
+//!    historical convention) equals the produce-phase accounting for
+//!    every frame it emits. The *actual* framed bytes — envelope
+//!    included — are tracked separately in [`TransportStats`] /
+//!    [`TransportSummary`] (`bytes_on_wire`), which is the honest
+//!    measured cost of the message-passing run.
+//! 4. **Faults route through the drop path.** Under a fault plan a
+//!    non-`Delivered` link is literally an unsent frame
+//!    (`frames_dropped`); `Stale` links replay the schedule's buffer
+//!    and `Lost` links fold into the self weight exactly as the `Mem`
+//!    degraded mix does — so `loss:P` plans are bitwise transport-
+//!    independent (`rust/tests/faults.rs`).
+//! 5. **Codec gate.** `Channel`/`Mux` with a compressed algorithm
+//!    require a codec that implements
+//!    [`Compressor::wire_format`](crate::compress::Compressor::wire_format)
+//!    (today: `topk:*`, `q*:*`). Rand-k reconstructs indices from a
+//!    receiver-side RNG the wire does not carry, and identity has no
+//!    packed payload — both are rejected up front by the scenario
+//!    validator rather than silently diverging.
+//! 6. **Allocation.** The zero-alloc steady-state contract is
+//!    `Mem`-only: channel modes allocate one `Vec<u8>` per frame per
+//!    round (the queue owns the bytes in flight). Decode scratch and
+//!    frame-encode buffers are still hoisted and reused.
+//!
+//! [`CompressedMsg`]: crate::compress::CompressedMsg
+//! [`WireFormat`]: crate::compress::WireFormat
+//! [`mix_msgs`]: crate::coordinator::engine::mix_msgs
+
+pub mod channel;
+pub mod frame;
+pub mod multiplex;
+
+pub use channel::ChannelTransport;
+
+/// Which transport backend moves messages between agents (see module
+/// docs). Grid axis value / `EngineConfig` field; `Mem` is the default
+/// and the bitwise reference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportMode {
+    /// Shared memory — the engine mixes straight from the coordinator's
+    /// message buffers. No frames, no queues (the reference backend).
+    #[default]
+    Mem,
+    /// Framed wire bytes over in-process `mpsc`, one slot per agent.
+    Channel,
+    /// Framed wire bytes over in-process `mpsc`, `per_worker` contiguous
+    /// agents multiplexed per slot.
+    Mux {
+        /// Agents hosted per receive slot (≥ 1).
+        per_worker: usize,
+    },
+}
+
+impl TransportMode {
+    /// Parse a spec string: `""`/`"mem"`, `"channel"`, `"mux:<N>"`.
+    pub fn parse(s: &str) -> Option<TransportMode> {
+        match s {
+            "" | "mem" => Some(TransportMode::Mem),
+            "channel" => Some(TransportMode::Channel),
+            _ => {
+                let n = s.strip_prefix("mux:")?.parse::<usize>().ok()?;
+                (n >= 1).then_some(TransportMode::Mux { per_worker: n })
+            }
+        }
+    }
+
+    /// Canonical spec label (round-trips through [`TransportMode::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            TransportMode::Mem => "mem".into(),
+            TransportMode::Channel => "channel".into(),
+            TransportMode::Mux { per_worker } => format!("mux:{per_worker}"),
+        }
+    }
+
+    pub fn is_mem(&self) -> bool {
+        matches!(self, TransportMode::Mem)
+    }
+}
+
+/// Running counters for one transport-backed run (actual framed traffic,
+/// envelope bytes included — distinct from the trajectory-facing
+/// `round_bits` accounting, which stays bitwise-equal to `Mem`; see
+/// §Transport rule 3).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Frames enqueued (one per delivered directed edge per round).
+    pub frames_sent: u64,
+    /// Frames withheld by the fault drop path (non-`Delivered` links).
+    pub frames_dropped: u64,
+    /// Total bytes of all sent frames, envelope included.
+    pub bytes_on_wire: u64,
+}
+
+/// End-of-run transport summary attached to
+/// [`RunRecord`](crate::coordinator::metrics::RunRecord) — `Some` iff the
+/// run used a non-`Mem` transport.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportSummary {
+    /// Mode label (`"channel"`, `"mux:8"`).
+    pub mode: String,
+    pub frames_sent: u64,
+    pub frames_dropped: u64,
+    pub bytes_on_wire: u64,
+}
+
+impl TransportSummary {
+    /// Compact JSON object (embedded in `RunRecord::to_json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        crate::serialize::json::write_str(&mut out, "mode");
+        out.push(':');
+        crate::serialize::json::write_str(&mut out, &self.mode);
+        out.push_str(&format!(
+            ",\"frames_sent\":{},\"frames_dropped\":{},\"bytes_on_wire\":{}}}",
+            self.frames_sent, self.frames_dropped, self.bytes_on_wire
+        ));
+        out
+    }
+}
+
+/// How encoded frames move from the coordinator's send phase to per-slot
+/// receive queues. The engine talks to exactly this surface, so swapping
+/// the in-process `mpsc` backend for a cross-process one (UDP sockets —
+/// the ROADMAP follow-on) is a new impl, not an engine change.
+///
+/// Contract: `send` is called only from the coordinator thread, between
+/// rounds' receive phases; `drain` yields the frames queued for `slot`
+/// **in send order** and may be called concurrently for *distinct* slots
+/// (hence `Sync`). All frames sent before a drain begins are visible to
+/// it (the in-process impl gets this from `mpsc`'s own synchronization;
+/// the engine additionally orders the phases with its dispatch barrier).
+pub trait Delivery: Send + Sync {
+    /// Enqueue one encoded frame for `slot`.
+    fn send(&mut self, slot: usize, frame: Vec<u8>);
+    /// Drain every frame currently queued for `slot`, in send order.
+    fn drain(&self, slot: usize, sink: &mut dyn FnMut(Vec<u8>));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_and_label_roundtrip() {
+        assert_eq!(TransportMode::parse(""), Some(TransportMode::Mem));
+        assert_eq!(TransportMode::parse("mem"), Some(TransportMode::Mem));
+        assert_eq!(TransportMode::parse("channel"), Some(TransportMode::Channel));
+        assert_eq!(
+            TransportMode::parse("mux:8"),
+            Some(TransportMode::Mux { per_worker: 8 })
+        );
+        assert_eq!(TransportMode::parse("mux:0"), None);
+        assert_eq!(TransportMode::parse("mux:"), None);
+        assert_eq!(TransportMode::parse("udp"), None);
+        for m in [
+            TransportMode::Mem,
+            TransportMode::Channel,
+            TransportMode::Mux { per_worker: 3 },
+        ] {
+            assert_eq!(TransportMode::parse(&m.label()), Some(m));
+        }
+        assert!(TransportMode::Mem.is_mem());
+        assert!(!TransportMode::Channel.is_mem());
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let s = TransportSummary {
+            mode: "mux:4".into(),
+            frames_sent: 10,
+            frames_dropped: 2,
+            bytes_on_wire: 1234,
+        };
+        let js = crate::serialize::json::parse(&s.to_json()).unwrap();
+        assert_eq!(js.get("mode").unwrap().as_str(), Some("mux:4"));
+        assert_eq!(js.get("frames_sent").unwrap().as_f64(), Some(10.0));
+        assert_eq!(js.get("bytes_on_wire").unwrap().as_f64(), Some(1234.0));
+    }
+}

@@ -1,0 +1,113 @@
+//! Agents ↔ receive-slots geometry for multiplexed transports.
+//!
+//! A *slot* is one receive queue plus the decode/mix scratch for the
+//! agents it hosts. [`TransportMode::Channel`] is the degenerate layout
+//! (one agent per slot); [`TransportMode::Mux`] packs `per_worker`
+//! contiguous agents per slot so a run with tens of thousands of agents
+//! stands up only `⌈n / per_worker⌉` queues and fans the receive phase
+//! out over at most that many pool tasks — no thread is ever spawned
+//! here (audit R4: parallelism rides the caller's `Exec`).
+//!
+//! Contiguity is the invariant the engine's receive phase relies on:
+//! slot `s` owns exactly agents `first_agent(s) .. first_agent(s) +
+//! agents_in(s)`, the ranges partition `0..n`, so per-slot workers write
+//! disjoint mix rows (the `SendPtr` SAFETY argument in
+//! [`super::channel`]).
+//!
+//! [`TransportMode::Channel`]: super::TransportMode::Channel
+//! [`TransportMode::Mux`]: super::TransportMode::Mux
+
+use super::TransportMode;
+
+/// Contiguous block layout of `n` agents over `⌈n / per_slot⌉` slots.
+#[derive(Clone, Debug)]
+pub struct SlotMap {
+    n: usize,
+    per_slot: usize,
+}
+
+impl SlotMap {
+    /// Layout for a transport mode; `None` for [`TransportMode::Mem`]
+    /// (no queues exist in shared memory).
+    pub fn for_mode(mode: TransportMode, n: usize) -> Option<SlotMap> {
+        let per_slot = match mode {
+            TransportMode::Mem => return None,
+            TransportMode::Channel => 1,
+            TransportMode::Mux { per_worker } => per_worker.max(1),
+        };
+        Some(SlotMap { n, per_slot })
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.n
+    }
+
+    /// Number of receive slots.
+    pub fn n_slots(&self) -> usize {
+        self.n.div_ceil(self.per_slot)
+    }
+
+    /// Slot hosting agent `i`.
+    pub fn slot_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        i / self.per_slot
+    }
+
+    /// First agent hosted by slot `s`.
+    pub fn first_agent(&self, s: usize) -> usize {
+        s * self.per_slot
+    }
+
+    /// Number of agents hosted by slot `s` (the last slot may be short).
+    pub fn agents_in(&self, s: usize) -> usize {
+        self.n.min((s + 1) * self.per_slot) - self.first_agent(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_is_one_agent_per_slot() {
+        let m = SlotMap::for_mode(TransportMode::Channel, 5).unwrap();
+        assert_eq!(m.n_slots(), 5);
+        for i in 0..5 {
+            assert_eq!(m.slot_of(i), i);
+            assert_eq!(m.first_agent(i), i);
+            assert_eq!(m.agents_in(i), 1);
+        }
+    }
+
+    #[test]
+    fn mem_has_no_slots() {
+        assert!(SlotMap::for_mode(TransportMode::Mem, 8).is_none());
+    }
+
+    #[test]
+    fn mux_partitions_contiguously() {
+        // 10 agents, 3 per slot: [0..3), [3..6), [6..9), [9..10).
+        let m = SlotMap::for_mode(TransportMode::Mux { per_worker: 3 }, 10).unwrap();
+        assert_eq!(m.n_slots(), 4);
+        let mut covered = vec![false; 10];
+        for s in 0..m.n_slots() {
+            let (a0, len) = (m.first_agent(s), m.agents_in(s));
+            assert!(len >= 1);
+            for a in a0..a0 + len {
+                assert_eq!(m.slot_of(a), s, "agent {a}");
+                assert!(!covered[a], "agent {a} double-covered");
+                covered[a] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "partition must cover all agents");
+        assert_eq!(m.agents_in(3), 1, "last slot is short");
+    }
+
+    #[test]
+    fn oversubscribed_mux_collapses_to_one_slot() {
+        let m = SlotMap::for_mode(TransportMode::Mux { per_worker: 64 }, 8).unwrap();
+        assert_eq!(m.n_slots(), 1);
+        assert_eq!(m.agents_in(0), 8);
+        assert!((0..8).all(|i| m.slot_of(i) == 0));
+    }
+}

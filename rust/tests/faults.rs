@@ -16,6 +16,10 @@
 //! 4. **Budget + cap surfacing**: `time_budget` stops runs early (the
 //!    crossing round still observed), and simnet retransmit-cap
 //!    force-deliveries are demoted to real losses under a plan.
+//! 5. **Transport routing**: the same plan over the `channel` / `mux`
+//!    transports takes the literal drop path — lost links are frames
+//!    that never leave the sender — and stays bitwise-identical to the
+//!    shared-memory degraded mix (`transport` §Transport rule 4).
 
 use lead::algorithms::{dgd::Dgd, lead::Lead};
 use lead::compress::quantize::{PNorm, QuantizeP};
@@ -28,6 +32,7 @@ use lead::problems::logreg::LogReg;
 use lead::problems::DataSplit;
 use lead::simnet::NetModel;
 use lead::topology::{MixingRule, Topology};
+use lead::transport::TransportMode;
 use std::sync::Arc;
 
 fn codec() -> Option<Box<dyn Compressor>> {
@@ -54,6 +59,21 @@ fn lead_run(
         time_budget,
         ..Default::default()
     };
+    let mut e = Engine::new(cfg, mix, Arc::new(p));
+    e.run(Box::new(Lead::paper_default()), codec(), rounds)
+}
+
+/// Same workload as [`lead_run`], but over an explicit transport mode.
+fn lead_run_over(
+    transport: TransportMode,
+    faults: Option<FaultPlan>,
+    threads: usize,
+    rounds: usize,
+) -> RunRecord {
+    let n = 8;
+    let p = LinReg::synthetic(n, 40, 0.1, 3);
+    let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+    let cfg = EngineConfig { threads, record_every: 7, faults, transport, ..Default::default() };
     let mut e = Engine::new(cfg, mix, Arc::new(p));
     e.run(Box::new(Lead::paper_default()), codec(), rounds)
 }
@@ -226,6 +246,53 @@ fn time_budget_stops_early_and_observes_the_crossing_round() {
     let faulted = lead_run(Some(plan), None, Some(total / 2.0), 1, 50);
     assert!(faulted.stopped_early);
     assert!(faulted.faults.is_some());
+}
+
+/// Satellite: a `loss:P` plan routed through the transport drop path —
+/// frames withheld at the sender instead of links zeroed in the mix —
+/// is bitwise-identical to the same plan over shared memory, and the
+/// frame counters reconcile exactly with the fault bookkeeping.
+#[test]
+fn loss_plan_over_channel_matches_shared_memory_bitwise() {
+    let rounds = 50;
+    // Ring over 8 agents: 16 directed edges per round.
+    let edges_per_round = 16u64;
+
+    let plan = FaultPlan::parse("loss:0.1").unwrap();
+    let mem = lead_run_over(TransportMode::Mem, Some(plan), 1, rounds);
+    assert!(mem.transport.is_none());
+    let mem_lost = mem.faults.as_ref().expect("live plan ⇒ summary").lost;
+    assert!(mem_lost > 0, "10% loss over 50 rounds never fired");
+    for mode in [TransportMode::Channel, TransportMode::Mux { per_worker: 4 }] {
+        for threads in [1usize, 3] {
+            let tag = format!("{}/threads={threads}", mode.label());
+            let rec = lead_run_over(mode, Some(plan), threads, rounds);
+            assert_bitwise_equal(&mem, &rec, &tag);
+            assert_eq!(mem_lost, rec.faults.as_ref().unwrap().lost, "{tag}");
+            let s = rec.transport.as_ref().expect("transported run ⇒ summary");
+            // Pure loss plan, no crashes or staleness: every directed
+            // edge each round either carries a frame or is the drop path.
+            assert_eq!(s.frames_dropped, mem_lost, "{tag}: lost links are unsent frames");
+            assert_eq!(
+                s.frames_sent + s.frames_dropped,
+                edges_per_round * rounds as u64,
+                "{tag}"
+            );
+        }
+    }
+
+    // Staleness and crashes compose: stale links also withhold frames
+    // (the receiver replays its cached payload), crashed receivers take
+    // frames down with them — still bitwise-equal to the degraded mix.
+    let churn = FaultPlan::parse("loss:0.05+churn:0.02:down=3:stale=2").unwrap();
+    let cmem = lead_run_over(TransportMode::Mem, Some(churn), 1, rounds);
+    let cchan = lead_run_over(TransportMode::Channel, Some(churn), 3, rounds);
+    assert_bitwise_equal(&cmem, &cchan, "churn over channel");
+    let cs = cchan.transport.as_ref().unwrap();
+    assert!(cs.frames_dropped > 0);
+    // Every directed edge is exactly one of {sent, dropped} each round,
+    // whatever the mixture of loss, staleness, and crashes.
+    assert_eq!(cs.frames_sent + cs.frames_dropped, edges_per_round * rounds as u64);
 }
 
 /// Satellite: transfers force-delivered at the simnet retransmit cap are

@@ -1,0 +1,175 @@
+//! Differential harness for the message-passing transport layer
+//! (`lead::transport`).
+//!
+//! Pins the contract from `transport` §Transport contract and
+//! `coordinator::engine` §Transport:
+//!
+//! 1. **Lossless ⇒ bitwise-invisible**: a fault-free run over the
+//!    `channel` and `mux:<N>` backends reproduces the shared-memory
+//!    reference trajectory bit for bit — dist/consensus/comp_err series
+//!    and the per-round bits accounting — across algorithms (compressed
+//!    and not), wire-complete codec families, topologies, engine thread
+//!    counts, and multiplex widths.
+//! 2. **Determinism**: transported runs are bitwise-identical across
+//!    reruns and across thread counts, frame counters included.
+//! 3. **Accounting**: `frames_sent` is exactly rounds × directed edges,
+//!    nothing is dropped without faults, and `bytes_on_wire` counts the
+//!    real framed envelopes (≥ header size per frame).
+//! 4. **Multiplexing**: N-agents-per-worker slots host more agents than
+//!    pool workers without changing a single bit.
+
+use lead::algorithms::{choco::ChocoSgd, dgd::Dgd, lead::Lead, Algorithm};
+use lead::compress::quantize::{PNorm, QuantizeP};
+use lead::compress::topk::TopK;
+use lead::compress::Compressor;
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::coordinator::metrics::RunRecord;
+use lead::problems::linreg::LinReg;
+use lead::problems::Problem;
+use lead::topology::{MixingRule, Topology};
+use lead::transport::{frame, TransportMode};
+use std::sync::Arc;
+
+fn algo(name: &str) -> Box<dyn Algorithm> {
+    match name {
+        "lead" => Box::new(Lead::paper_default()),
+        "choco" => Box::new(ChocoSgd::new(0.8)),
+        "dgd" => Box::new(Dgd::new()),
+        other => panic!("unknown test algo {other:?}"),
+    }
+}
+
+fn codec(name: &str) -> Option<Box<dyn Compressor>> {
+    match name {
+        "topk" => Some(Box::new(TopK::new(10))),
+        "qinf" => Some(Box::new(QuantizeP::new(2, PNorm::Inf, 64))),
+        other => panic!("unknown test codec {other:?}"),
+    }
+}
+
+fn topo(name: &str) -> Topology {
+    match name {
+        "ring" => Topology::Ring,
+        "er" => Topology::ErdosRenyi { p: 0.5, seed: 17 },
+        other => panic!("unknown test topology {other:?}"),
+    }
+}
+
+/// One short run on the Fig. 1-shaped synthetic linreg workload over the
+/// given transport mode.
+fn run(
+    algo_name: &str,
+    codec_name: &str,
+    topo_name: &str,
+    transport: TransportMode,
+    threads: usize,
+    rounds: usize,
+) -> RunRecord {
+    let n = 8;
+    let p = LinReg::synthetic(n, 30, 0.1, 3);
+    let mix = topo(topo_name).build(n, MixingRule::UniformNeighbors);
+    let cfg = EngineConfig { threads, record_every: 3, transport, ..Default::default() };
+    let mut e = Engine::new(cfg, mix, Arc::new(p));
+    e.run(algo(algo_name), codec(codec_name), rounds)
+}
+
+/// Directed edge count of a test topology (per-round frame count).
+fn directed_edges(topo_name: &str) -> u64 {
+    let mix = topo(topo_name).build(8, MixingRule::UniformNeighbors);
+    (0..mix.n).map(|i| mix.neighbors[i].len() as u64).sum()
+}
+
+fn assert_series_bitwise(a: &RunRecord, b: &RunRecord, tag: &str) {
+    assert_eq!(a.series.len(), b.series.len(), "{tag}: series length");
+    for (ma, mb) in a.series.iter().zip(&b.series) {
+        assert_eq!(ma.round, mb.round, "{tag}");
+        assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.consensus.to_bits(), mb.consensus.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.comp_err.to_bits(), mb.comp_err.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.bits_per_agent, mb.bits_per_agent, "{tag} round {}", ma.round);
+    }
+}
+
+/// Acceptance pin, rule 1: the full {algo} × {codec} × {topology} ×
+/// {threads} × {layout} sweep is bitwise-invisible relative to the
+/// shared-memory reference, with exact frame accounting on every cell.
+/// (dgd ignores the codec — `AlgoSpec::compressed` is false — so its
+/// cells exercise the raw-frame path.)
+#[test]
+fn lossless_transport_is_bitwise_invisible() {
+    let rounds = 24;
+    for algo_name in ["lead", "choco", "dgd"] {
+        for codec_name in ["topk", "qinf"] {
+            for topo_name in ["ring", "er"] {
+                let mem = run(algo_name, codec_name, topo_name, TransportMode::Mem, 1, rounds);
+                assert!(mem.transport.is_none(), "mem mode must not report a summary");
+                let edges = directed_edges(topo_name);
+                for threads in [1usize, 3] {
+                    for mode in
+                        [TransportMode::Channel, TransportMode::Mux { per_worker: 8 }]
+                    {
+                        let tag = format!(
+                            "{algo_name}/{codec_name}/{topo_name}/threads={threads}/{}",
+                            mode.label()
+                        );
+                        let rec = run(algo_name, codec_name, topo_name, mode, threads, rounds);
+                        assert_series_bitwise(&mem, &rec, &tag);
+                        let s = rec.transport.as_ref().unwrap_or_else(|| panic!("{tag}: summary"));
+                        assert_eq!(s.mode, mode.label(), "{tag}");
+                        assert_eq!(s.frames_sent, edges * rounds as u64, "{tag}");
+                        assert_eq!(s.frames_dropped, 0, "{tag}");
+                        assert!(
+                            s.bytes_on_wire >= s.frames_sent * frame::HEADER_LEN as u64,
+                            "{tag}: envelopes must at least carry their headers"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance pin, rule 2: rerunning an identical transported spec — and
+/// varying only the engine thread count — reproduces every series bit
+/// for bit, frame counters included.
+#[test]
+fn transported_runs_deterministic_across_reruns_and_threads() {
+    let reference = run("lead", "topk", "ring", TransportMode::Channel, 1, 30);
+    let s0 = reference.transport.as_ref().expect("summary").clone();
+    for (threads, label) in [(1usize, "rerun"), (3, "threads=3"), (8, "threads=8")] {
+        let again = run("lead", "topk", "ring", TransportMode::Channel, threads, 30);
+        assert_series_bitwise(&reference, &again, label);
+        let s = again.transport.as_ref().unwrap();
+        assert_eq!(s.frames_sent, s0.frames_sent, "{label}");
+        assert_eq!(s.frames_dropped, s0.frames_dropped, "{label}");
+        assert_eq!(s.bytes_on_wire, s0.bytes_on_wire, "{label}");
+    }
+    // The quantize family pins the same way (dense wire decode path).
+    let qref = run("choco", "qinf", "er", TransportMode::Mux { per_worker: 8 }, 1, 30);
+    let qagain = run("choco", "qinf", "er", TransportMode::Mux { per_worker: 8 }, 3, 30);
+    assert_series_bitwise(&qref, &qagain, "qinf mux rerun");
+}
+
+/// Acceptance pin, rule 4: a multiplexed layout hosts far more agents
+/// than pool workers — 64 agents over `mux:16` on 2 threads is 4 slots
+/// total — and stays bitwise-equal to shared memory.
+#[test]
+fn multiplexed_slots_host_many_agents_per_worker() {
+    let n = 64;
+    let rounds = 10;
+    let p: Arc<dyn Problem> = Arc::new(LinReg::synthetic(n, 20, 0.1, 7));
+    let go = |transport: TransportMode| -> RunRecord {
+        let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+        let cfg = EngineConfig { threads: 2, record_every: 2, transport, ..Default::default() };
+        let mut e = Engine::new(cfg, mix, Arc::clone(&p));
+        e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(5))), rounds)
+    };
+    let mem = go(TransportMode::Mem);
+    let mux = go(TransportMode::Mux { per_worker: 16 });
+    assert_series_bitwise(&mem, &mux, "mux:16 over 64 agents");
+    let s = mux.transport.as_ref().unwrap();
+    assert_eq!(s.mode, "mux:16");
+    // Ring: 2 directed edges per agent.
+    assert_eq!(s.frames_sent, (2 * n * rounds) as u64);
+    assert_eq!(s.frames_dropped, 0);
+}
