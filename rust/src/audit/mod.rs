@@ -27,7 +27,7 @@
 //!   `thread_rng`/`rand::random` (unseeded entropy). Indexed `Vec`s and
 //!   `BTreeMap` are the sanctioned alternatives; wall-clock metrics go
 //!   through one pragma-certified choke point
-//!   (`coordinator::engine::wall_clock`).
+//!   ([`crate::trace::clock`]).
 //! * **`rng_stream`** (R3) — `Rng` construction must name its purpose
 //!   stream on the same statement: `Rng::new(seed).derive(streams::…)`.
 //!   Purpose-separated streams ([`crate::rng::streams`]) are why enabling
@@ -47,8 +47,15 @@
 //!   machines; confining them to the one module whose §Determinism
 //!   contract pins every accumulation shape keeps that review surface
 //!   minimal.
+//! * **`wall_clock_choke_point`** (R7) — no `Instant::now`/`SystemTime`
+//!   outside `trace/clock.rs`. R2 already bans wall clocks from
+//!   trajectory code; R7 is the stronger structural rule that even
+//!   metrics-only readings funnel through the one reviewed source
+//!   ([`crate::trace::clock`], the §Observability contract's dual
+//!   timeline), so "is wall time ever read back?" stays a one-module
+//!   review.
 //!
-//! Rules R2–R5 skip `#[cfg(test)]` regions (tests do not affect
+//! Rules R2–R5 and R7 skip `#[cfg(test)]` regions (tests do not affect
 //! trajectories); R1 and R6 apply everywhere. String literals and comments
 //! can never trigger a rule — sources are lexed first
 //! ([`lexer`]), which is also what makes the auditor self-clean: its own
@@ -178,6 +185,7 @@ mod tests {
                 "thread_spawn",
                 "atomic_ordering",
                 "arch_intrinsics",
+                "wall_clock_choke_point",
                 "pragma"
             ]
         );

@@ -1,5 +1,5 @@
 //! The auditor's rule engine: pragma parsing, `#[cfg(test)]`-region
-//! tracking, justification-comment lookup, and the six rules R1–R6
+//! tracking, justification-comment lookup, and the seven rules R1–R7
 //! (see `super` for the invariant each one protects).
 //!
 //! Every rule works on the lexed line model from [`super::lexer`], so
@@ -39,6 +39,7 @@ pub const R_RNG: &str = "rng_stream";
 pub const R_THREAD: &str = "thread_spawn";
 pub const R_ATOMIC: &str = "atomic_ordering";
 pub const R_ARCH: &str = "arch_intrinsics";
+pub const R_WALL: &str = "wall_clock_choke_point";
 pub const R_PRAGMA: &str = "pragma";
 
 pub fn rules() -> &'static [RuleInfo] {
@@ -74,6 +75,12 @@ pub fn rules() -> &'static [RuleInfo] {
             summary: "no `core::arch`/`std::arch` (CPU intrinsics) outside linalg/simd.rs — \
                       unsafe SIMD stays confined to the one reviewed kernel module \
                       (applies to test code too)",
+        },
+        RuleInfo {
+            id: R_WALL,
+            summary: "no wall-clock reads (`Instant::now`/`SystemTime`) outside \
+                      trace/clock.rs — all wall time funnels through the one \
+                      pragma-certified choke point (`crate::trace::clock`)",
         },
         RuleInfo {
             id: R_PRAGMA,
@@ -273,6 +280,9 @@ pub fn check_file(file: &str, src: &str) -> Vec<Diagnostic> {
     // R6 exemption is matched on the path suffix, not the bare file name,
     // so an unrelated `simd.rs` elsewhere cannot claim it.
     let in_simd_module = file.replace('\\', "/").ends_with("linalg/simd.rs");
+    // R7 exemption, same suffix convention: only the clock choke-point
+    // module may read the wall clock.
+    let in_clock_module = file.replace('\\', "/").ends_with("trace/clock.rs");
     let mut out = Vec::new();
     let mut diag = |line: usize, rule: &'static str, msg: String| {
         out.push(Diagnostic { file: file.to_string(), line: line + 1, rule, msg });
@@ -329,6 +339,24 @@ pub fn check_file(file: &str, src: &str) -> Vec<Diagnostic> {
                     diag(i, R_NONDET, format!("`{pat}` in trajectory-affecting code — {why}; use ordered containers / the engine's seeded streams, or justify with a pragma"));
                     break;
                 }
+            }
+        }
+
+        // R7 — wall-clock choke point. Narrower than R2's blanket
+        // nondeterminism screen: even a *metrics-only* wall-clock read
+        // must route through `trace::clock` so the determinism story
+        // stays auditable from one reviewed source (`crate::trace`
+        // §Observability contract).
+        if !in_clock_module && !ctx.is_allowed(i, R_WALL) {
+            let hit = if code.contains("Instant::now") {
+                Some("Instant::now")
+            } else if contains_word(code, "SystemTime") {
+                Some("SystemTime")
+            } else {
+                None
+            };
+            if let Some(pat) = hit {
+                diag(i, R_WALL, format!("`{pat}` outside trace/clock.rs — take stamps from the `crate::trace::clock` choke point (audit R7), or justify with a pragma"));
             }
         }
 
@@ -435,8 +463,10 @@ unsafe impl Send for X {}
     fn r2_quiet_in_test_code_and_via_pragma() {
         let test = "#[cfg(test)]\nmod tests {\n    fn t() { let x = Instant::now(); }\n}\n";
         assert!(audit(test).is_empty());
+        // An R2 pragma silences R2 only — the same read still owes R7
+        // its choke-point justification (separate pragma).
         let pragma = "let t = Instant::now(); // audit:allow(nondeterminism): metrics only\n";
-        assert!(audit(pragma).is_empty());
+        assert!(lines_for(&audit(pragma), R_NONDET).is_empty());
     }
 
     #[test]
@@ -541,6 +571,38 @@ unsafe impl Send for X {}
         // Identifier containing the needle as a substring must not fire.
         assert!(audit("let mystd::arch_like = 1;\n").is_empty());
         assert!(audit("fn plain() -> u32 { 7 }\n").is_empty());
+    }
+
+    // ---- R7: wall_clock_choke_point ----
+
+    #[test]
+    fn r7_fires_outside_clock_module() {
+        let src = "fn f() {\n    let t = std::time::Instant::now();\n}\n";
+        assert_eq!(lines_for(&audit(src), R_WALL), vec![2]);
+        let sys = "let epoch = SystemTime::now();\n";
+        assert_eq!(lines_for(&audit(sys), R_WALL), vec![1]);
+    }
+
+    #[test]
+    fn r7_quiet_in_trace_clock_and_via_pragma() {
+        let src = "let t = Instant::now();\n";
+        assert!(lines_for(&check_file("rust/src/trace/clock.rs", src), R_WALL).is_empty());
+        // Windows-style separators normalize before the suffix match.
+        assert!(lines_for(&check_file("rust\\src\\trace\\clock.rs", src), R_WALL).is_empty());
+        // A stray clock.rs elsewhere does NOT inherit the exemption.
+        assert_eq!(lines_for(&check_file("rust/src/other/clock.rs", src), R_WALL), vec![1]);
+        let pragma =
+            "let t = Instant::now(); // audit:allow(wall_clock_choke_point): bench harness, off the run path\n";
+        assert!(lines_for(&audit(pragma), R_WALL).is_empty());
+    }
+
+    #[test]
+    fn r7_quiet_in_tests_and_on_instant_type_uses() {
+        // Test code is exempt, like R2–R5.
+        let test = "#[cfg(test)]\nmod tests {\n    fn t() { let x = Instant::now(); }\n}\n";
+        assert!(lines_for(&audit(test), R_WALL).is_empty());
+        // Passing `Instant` stamps around (no clock read) is fine.
+        assert!(audit("pub fn secs(t0: Instant) -> f64 { t0.stamp() }\n").is_empty());
     }
 
     // ---- pragma meta-rule ----

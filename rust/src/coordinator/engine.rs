@@ -136,6 +136,23 @@
 //! contract by exactly one `Vec<u8>` per frame in flight (`Mem` runs are
 //! unaffected).
 //!
+//! # §Observability — tracing is trajectory-invisible
+//!
+//! With `cfg.trace` on, [`Engine::run_on`] stands up a per-run
+//! [`Recorder`] (pre-allocated per-lane event rings — the §Perf
+//! zero-alloc contract holds with tracing enabled) and attaches it to
+//! the run's [`Exec`], so phase spans, pool dispatch/wake latencies,
+//! transport frame events, fault transitions, and simnet arrivals all
+//! land in one dual-timeline capture (wall µs + simnet virtual time).
+//! The recorder only ever *observes* — no engine decision branches on
+//! trace state, and every wall-clock stamp in this file goes through
+//! the [`crate::trace::clock`] choke point (audit rule R7) — so traced
+//! runs are bitwise-identical to untraced runs (`rust/tests/trace.rs`).
+//! The constant-size rollup lands in `RunRecord.trace`; the full event
+//! capture is fetched separately via [`Engine::take_trace`] (the one
+//! rounds-proportional allocation, deliberately outside the round
+//! loop). See the §Observability contract in [`crate::trace`].
+//!
 //! # §Scheduling — outer vs. inner parallelism
 //!
 //! A single engine run parallelizes *inside* the round (per-agent tasks)
@@ -175,22 +192,9 @@ use crate::pool::{par_chunks, Exec, SendPtr, WorkerPool};
 use crate::problems::Problem;
 use crate::rng::{streams, Rng};
 use crate::topology::MixingMatrix;
+use crate::trace::{clock, EventKind, Recorder, TraceCapture};
 use crate::transport::{ChannelTransport, TransportMode};
 use std::sync::Arc;
-use std::time::Instant;
-
-/// Wall-clock stamp for the run/phase timing metrics
-/// ([`crate::coordinator::metrics::RunRecord`]`::wall_secs`,
-/// [`PhaseTimes`]). Durations measured from these stamps are *recorded*
-/// into metrics but never read back by round logic, so wall-clock
-/// nondeterminism cannot reach trajectories; keeping the crate's only
-/// `Instant::now` call behind this pragma-certified choke point is what
-/// lets the auditor ban it everywhere else (`lead audit`, rule
-/// `nondeterminism`).
-fn wall_clock() -> Instant {
-    // audit:allow(nondeterminism): metrics-only wall-clock source; durations are recorded, never fed back into trajectories
-    Instant::now()
-}
 
 /// Stepsize schedule (Theorem 1 uses constant; Theorem 2 diminishing).
 #[derive(Clone, Copy, Debug)]
@@ -254,6 +258,12 @@ pub struct EngineConfig {
     pub transport: TransportMode,
     /// Execution backend (default: persistent pool).
     pub scheduler: Scheduler,
+    /// Record a structured trace of the run (§Observability):
+    /// per-phase spans, pool wake latencies, transport frame events,
+    /// fault transitions, and simnet arrivals. Trajectory-invisible by
+    /// contract (`rust/tests/trace.rs`); summary in `RunRecord.trace`,
+    /// full capture via [`Engine::take_trace`].
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -271,6 +281,7 @@ impl Default for EngineConfig {
             time_budget: None,
             transport: TransportMode::default(),
             scheduler: Scheduler::default(),
+            trace: false,
         }
     }
 }
@@ -394,12 +405,26 @@ pub struct Engine {
     pub cfg: EngineConfig,
     pub mix: MixingMatrix,
     pub problem: Arc<dyn Problem>,
+    /// The last traced run's recorder, parked here so the
+    /// rounds-proportional capture happens outside the round loop
+    /// ([`Engine::take_trace`]). Always `None` when `cfg.trace` is off.
+    last_trace: Option<Recorder>,
 }
 
 impl Engine {
     pub fn new(cfg: EngineConfig, mix: MixingMatrix, problem: Arc<dyn Problem>) -> Self {
         assert_eq!(mix.n, problem.n_agents(), "topology/problem agent mismatch");
-        Engine { cfg, mix, problem }
+        Engine { cfg, mix, problem, last_trace: None }
+    }
+
+    /// Detach the last traced run's event capture (§Observability).
+    /// This is the tracing layer's one rounds-proportional allocation,
+    /// deliberately outside [`Engine::run_on`] so the steady-state
+    /// zero-alloc contract holds with tracing on. `None` when the last
+    /// run had `cfg.trace` off (or nothing ran yet); a second call
+    /// returns `None` until another traced run completes.
+    pub fn take_trace(&mut self) -> Option<TraceCapture> {
+        self.last_trace.take().map(|r| r.capture())
     }
 
     fn eta_at(&self, round: usize) -> f64 {
@@ -466,12 +491,26 @@ impl Engine {
         compressor: Option<Box<dyn Compressor>>,
         rounds: usize,
     ) -> RunRecord {
-        let wall_start = wall_clock();
+        let wall_start = clock::now();
         let n = self.mix.n;
         let d = self.problem.dim();
         let spec = algo.spec();
         let use_comp = spec.compressed && compressor.is_some();
         let legacy = self.cfg.scheduler == Scheduler::SpawnPerPhase;
+        // §Observability: the optional per-run recorder. Created up front
+        // so its epoch precedes every stamp and its rings are allocated
+        // before the round loop (zero-alloc steady state with tracing
+        // on); attached to `exec` so pool dispatch/wake and transport
+        // frame events land in per-thread lanes. Trace state is written,
+        // never read, by everything below — tracing cannot perturb a
+        // trajectory (rust/tests/trace.rs).
+        let recorder = self.cfg.trace.then(|| Recorder::new(exec.threads()));
+        let exec = match recorder.as_ref() {
+            Some(r) => exec.with_trace(r),
+            None => exec,
+        };
+        #[cfg(debug_assertions)]
+        let dense_decodes_at_start = crate::compress::CompressedMsg::dense_decode_count();
         // audit:allow(rng_stream): the root of the per-run stream tree — every consumer below derives a named per-(agent, purpose) streams::* child
         let root = Rng::new(self.cfg.seed);
         let mut dither_rngs: Vec<Rng> =
@@ -551,8 +590,24 @@ impl Engine {
         let raw_bits_all = (spec.channels as u64) * (d as u64) * 32;
         let extra_channel_bits = (spec.channels as u64 - 1) * (d as u64) * 32;
 
-        // Record the initial state as round 0.
-        series.push(self.observe(&*algo, 0, 0.0, &traffic, 0.0, FaultTotals::default()));
+        // §Observability: previous round's crash mask, diffed after each
+        // fault-schedule draw to emit fault_down/fault_up transition
+        // instants. Allocated once; only read when both tracing and
+        // faults are active.
+        let mut prev_down = vec![false; n];
+
+        // Record the initial state as round 0 — stamped into the observe
+        // bucket like every other snapshot, so `phases.observe_n` always
+        // equals `series.len()` (regression: phase_counts_* tests).
+        {
+            let t = clock::now();
+            series.push(self.observe(&*algo, 0, 0.0, &traffic, 0.0, FaultTotals::default()));
+            phases.observe += clock::secs_since(t);
+            phases.observe_n += 1;
+            if let Some(r) = &recorder {
+                r.span(EventKind::PhaseObserve, t, 0);
+            }
+        }
 
         for round in 1..=rounds {
             let eta = self.eta_at(round);
@@ -563,10 +618,14 @@ impl Engine {
             // Legacy-only: the pre-PR loop paid a compression-error pass
             // every round; observed values are identical either way.
             let mut comp_err_legacy = 0.0f64;
+            if let Some(r) = &recorder {
+                r.set_round(round);
+            }
+            let t_produce = clock::now();
 
             if legacy {
                 // (1) gradients (parallel across spawned workers)
-                let t = wall_clock();
+                let t = clock::now();
                 {
                     let problem = &*self.problem;
                     let bi = &batch_idx;
@@ -579,18 +638,18 @@ impl Engine {
                         }
                     });
                 }
-                phases.gradient += t.elapsed().as_secs_f64();
+                phases.gradient += clock::secs_since(t);
 
                 // (2) local sends (sequential)
-                let t = wall_clock();
+                let t = clock::now();
                 for i in 0..n {
                     algo.send(&ctx, i, &g[i], &mut payload[i]);
                 }
-                phases.send += t.elapsed().as_secs_f64();
+                phases.send += clock::secs_since(t);
 
                 // (3) compression of channel 0 (parallel; per-agent
                 // dither RNG; eager dense decode)
-                let t = wall_clock();
+                let t = clock::now();
                 if use_comp {
                     let comp = compressor.as_deref().unwrap();
                     {
@@ -612,11 +671,10 @@ impl Engine {
                         round_bits[i] = raw_bits_all;
                     }
                 }
-                phases.compress += t.elapsed().as_secs_f64();
+                phases.compress += clock::secs_since(t);
             } else {
                 // (1) fused produce: gradient → send → compress, one task
                 // per agent, one barrier.
-                let t = wall_clock();
                 let problem = &*self.problem;
                 let bi = &batch_idx;
                 let grad = |i: usize, x: &[f64], out: &mut [f64]| {
@@ -655,7 +713,14 @@ impl Engine {
                     }
                 };
                 algo.produce_all(&ctx, &grad, &mut g, &mut payload, &sink, exec);
-                phases.produce += t.elapsed().as_secs_f64();
+                phases.produce += clock::secs_since(t_produce);
+            }
+            // Both schedulers funnel into one structural counter — the
+            // legacy gradient/send/compress buckets above are one produce
+            // phase's worth of work.
+            phases.produce_n += 1;
+            if let Some(r) = &recorder {
+                r.span(EventKind::PhaseProduce, t_produce, n as u64);
             }
             // §Fault injection: draw this round's fault events. Crashed
             // agents produced as usual (stream alignment) but transmit
@@ -667,8 +732,22 @@ impl Engine {
                         round_bits[i] = 0;
                     }
                 }
+                // §Observability: crash-mask edges become fault_down /
+                // fault_up instants (coordinator lane, arg = agent).
+                if let Some(r) = &recorder {
+                    for (a, pd) in prev_down.iter_mut().enumerate() {
+                        let down = fs.is_down(a);
+                        if down != *pd {
+                            let kind =
+                                if down { EventKind::FaultDown } else { EventKind::FaultUp };
+                            r.instant(kind, a as u64);
+                            *pd = down;
+                        }
+                    }
+                }
             }
             traffic.record_bits(&self.mix, &round_bits);
+            let sim_before = traffic.sim_time;
             traffic.sim_time += match &mut timer {
                 Some(t) => match &faults {
                     // A preliminarily-lost transfer is charged on the
@@ -683,6 +762,25 @@ impl Engine {
                 None => TrafficStats::uniform_round_time(&self.cfg.link, &round_bits),
             };
             traffic.rounds += 1;
+            // §Observability: advance the virtual timeline and emit the
+            // simnet round marker plus per-agent arrival instants (each
+            // stamped with its own virtual time — the dual timeline).
+            if let Some(r) = &recorder {
+                r.set_vt(traffic.sim_time);
+                r.instant(
+                    EventKind::NetRound,
+                    ((traffic.sim_time - sim_before) * 1e6) as u64,
+                );
+                if let Some(tm) = &timer {
+                    for (a, &arr) in tm.arrivals().iter().enumerate() {
+                        r.instant_vt(
+                            EventKind::NetArrival,
+                            ((sim_before + arr) * 1e6) as u64,
+                            a as u64,
+                        );
+                    }
+                }
+            }
             if let Some(fs) = &mut faults {
                 // Under a fault plan a transfer that hit the simnet
                 // retransmit cap is a real loss, not a fiction of
@@ -699,7 +797,7 @@ impl Engine {
             // (2) mix (parallel over agents; sparse-aware on channel 0).
             let mix_apply_exec =
                 exec.with_threads(phase_threads(exec.threads(), n, spec.channels * d));
-            let t = wall_clock();
+            let t = clock::now();
             {
                 let mix = &self.mix;
                 let payload_ref = &payload;
@@ -712,7 +810,15 @@ impl Engine {
                     // drain/decode/mix in parallel. Bitwise-equal to the
                     // shared-memory arm below (rust/tests/transport.rs).
                     Some(tr) => {
-                        tr.send_round(round, mix, fs_ref, msgs_ref, payload_ref, &round_bits);
+                        tr.send_round(
+                            round,
+                            mix,
+                            fs_ref,
+                            msgs_ref,
+                            payload_ref,
+                            &round_bits,
+                            recorder.as_ref(),
+                        );
                         tr.recv_and_mix(
                             mix_apply_exec,
                             round,
@@ -767,13 +873,17 @@ impl Engine {
                     }
                 });
             }
-            phases.mix += t.elapsed().as_secs_f64();
+            phases.mix += clock::secs_since(t);
+            phases.mix_n += 1;
+            if let Some(r) = &recorder {
+                r.span(EventKind::PhaseMix, t, n as u64);
+            }
 
             // (3) apply (parallel inside recv_all; per-agent state rows
             // are disjoint). The inbox is a zero-copy view over the round
             // buffers; own decoded channel-0 payloads are borrowed — no
             // copies on the hot path (§Perf).
-            let t = wall_clock();
+            let t = clock::now();
             let inbox = if use_comp {
                 Inbox::with_decoded0(&payload, &mixed_all, &msgs)
             } else {
@@ -788,10 +898,14 @@ impl Engine {
             };
             algo.recv_all(&ctx, &g, &inbox, mix_apply_exec);
             drop(inbox);
-            phases.apply += t.elapsed().as_secs_f64();
+            phases.apply += clock::secs_since(t);
+            phases.apply_n += 1;
+            if let Some(r) = &recorder {
+                r.span(EventKind::PhaseApply, t, n as u64);
+            }
 
             if round % self.cfg.record_every == 0 || round == rounds || stop_now {
-                let t = wall_clock();
+                let t = clock::now();
                 // The recorded compression error is the error of the
                 // *observed* round — never a stale accumulation across
                 // unobserved rounds (regression:
@@ -813,7 +927,11 @@ impl Engine {
                 let idle_max = timer.as_ref().map_or(0.0, |tm| tm.stats.max_idle());
                 let ft = faults.as_ref().map_or(FaultTotals::default(), |f| f.totals());
                 series.push(self.observe(&*algo, round, comp_err, &traffic, idle_max, ft));
-                phases.observe += t.elapsed().as_secs_f64();
+                phases.observe += clock::secs_since(t);
+                phases.observe_n += 1;
+                if let Some(r) = &recorder {
+                    r.span(EventKind::PhaseObserve, t, round as u64);
+                }
             }
             if stop_now {
                 stopped_early = round < rounds;
@@ -824,6 +942,36 @@ impl Engine {
         let net = timer.as_ref().map(|t| {
             NetSummary::from_stats(&self.cfg.net.expect("timer implies model"), &t.stats, t.n_links())
         });
+        let fault_sum = faults.as_ref().map(|f| f.summary());
+        let transport_sum = transport.as_ref().map(|t| t.summary());
+        // §Observability: dense-decode rebuilds over this run. The
+        // counter is crate-global (debug builds only; 0 in release), so
+        // concurrent runs in one process inflate each other's delta —
+        // fine for the observability rollup, which is not a trajectory
+        // artifact.
+        #[cfg(debug_assertions)]
+        let dense_decodes = crate::compress::CompressedMsg::dense_decode_count()
+            .saturating_sub(dense_decodes_at_start);
+        #[cfg(not(debug_assertions))]
+        let dense_decodes = 0u64;
+        let trace = recorder.as_ref().map(|r| {
+            let ts = transport_sum.as_ref();
+            let fs = fault_sum.as_ref();
+            let ns = net.as_ref();
+            r.summary(&[
+                ("frames_sent", ts.map_or(0, |t| t.frames_sent)),
+                ("frames_dropped", ts.map_or(0, |t| t.frames_dropped)),
+                ("bytes_on_wire", ts.map_or(0, |t| t.bytes_on_wire)),
+                ("crashed_agent_rounds", fs.map_or(0, |f| f.crashed_agent_rounds)),
+                ("lost_messages", fs.map_or(0, |f| f.lost)),
+                ("stale_deliveries", fs.map_or(0, |f| f.stale)),
+                ("capped_losses", fs.map_or(0, |f| f.capped_losses)),
+                ("retransmits", ns.map_or(0, |s| s.retransmits)),
+                ("capped_transfers", ns.map_or(0, |s| s.capped)),
+                ("dense_decodes", dense_decodes),
+            ])
+        });
+        self.last_trace = recorder;
         RunRecord {
             algo: algo.name(),
             problem: self.problem.name(),
@@ -832,11 +980,12 @@ impl Engine {
                 _ => "none".into(),
             },
             series,
-            wall_secs: wall_start.elapsed().as_secs_f64(),
+            wall_secs: clock::secs_since(wall_start),
             phases,
             net,
-            faults: faults.as_ref().map(|f| f.summary()),
-            transport: transport.as_ref().map(|t| t.summary()),
+            faults: fault_sum,
+            transport: transport_sum,
+            trace,
             stopped_early,
         }
     }
@@ -1254,5 +1403,110 @@ mod tests {
         let first = rec.series.first().unwrap().dist_opt;
         let last = rec.last().dist_opt;
         assert!(last < 0.2 * first, "no progress: {first} -> {last}");
+    }
+
+    /// §Observability regression: the deterministic phase counters. A
+    /// full run executes produce/mix/apply exactly `rounds` times and
+    /// observes exactly `series.len()` times (round 0 included — the
+    /// pre-loop baseline observation is stamped too).
+    #[test]
+    fn phase_counts_full_run() {
+        let mut e = ring_engine(1);
+        let rec = e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(10))), 40);
+        assert!(!rec.stopped_early);
+        assert_eq!(rec.phases.produce_n, 40);
+        assert_eq!(rec.phases.mix_n, 40);
+        assert_eq!(rec.phases.apply_n, 40);
+        // record_every = 5: baseline round 0 plus rounds 5..=40.
+        assert_eq!(rec.series.len(), 9);
+        assert_eq!(rec.phases.observe_n, rec.series.len() as u64);
+    }
+
+    /// §Observability regression: a `time_budget` run counts the
+    /// budget-crossing round's phases exactly once — the crossing round
+    /// still mixes, applies, and is observed before the loop breaks, so
+    /// every counter equals the executed round count (not `rounds`, not
+    /// one more).
+    #[test]
+    fn phase_counts_time_budget_run() {
+        let run = |time_budget: Option<f64>| {
+            let p = LinReg::synthetic(8, 30, 0.1, 3);
+            let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+            let mut e = Engine::new(
+                EngineConfig { record_every: 7, time_budget, ..Default::default() },
+                mix,
+                std::sync::Arc::new(p),
+            );
+            e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(10))), 40)
+        };
+        // The legacy uniform link formula makes sim_time a deterministic
+        // staircase of equal steps; a budget of 19.5 steps stops the run
+        // on round 20, the first whose cumulative time crosses it (half a
+        // step of slack absorbs accumulation ulps).
+        let full = run(None);
+        let tb = full
+            .series
+            .iter()
+            .find(|m| m.round == 21)
+            .map(|m| m.sim_time * (19.5 / 21.0))
+            .expect("round 21 observed");
+        let budget = run(Some(tb));
+        assert!(budget.stopped_early);
+        let crossing = budget.series.last().unwrap().round as u64;
+        assert_eq!(crossing, 20, "budget must bite on round 20");
+        assert_eq!(budget.phases.produce_n, crossing);
+        assert_eq!(budget.phases.mix_n, crossing);
+        assert_eq!(budget.phases.apply_n, crossing);
+        assert_eq!(budget.phases.observe_n, budget.series.len() as u64);
+        // The crossing round is observed exactly once, even off the
+        // record_every lattice (20 % 7 != 0): baseline 0, rounds 7, 14,
+        // then the crossing round 20.
+        assert_eq!(
+            budget.series.iter().map(|m| m.round).collect::<Vec<_>>(),
+            vec![0, 7, 14, 20]
+        );
+    }
+
+    /// §Observability smoke: a traced run carries a summary with live
+    /// counters, the capture is claimable exactly once, and tracing does
+    /// not perturb the trajectory (the full matrix differential lives in
+    /// `rust/tests/trace.rs`).
+    #[test]
+    fn traced_run_summary_and_capture() {
+        let run = |trace: bool| {
+            let p = LinReg::synthetic(8, 30, 0.1, 3);
+            let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+            let mut e = Engine::new(
+                EngineConfig { record_every: 5, trace, ..Default::default() },
+                mix,
+                std::sync::Arc::new(p),
+            );
+            let rec = e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(10))), 30);
+            (rec, e.take_trace())
+        };
+        let (plain, no_cap) = run(false);
+        assert!(plain.trace.is_none());
+        assert!(no_cap.is_none(), "untraced run yields no capture");
+        let p = LinReg::synthetic(8, 30, 0.1, 3);
+        let mix = Topology::Ring.build(8, MixingRule::UniformNeighbors);
+        let mut e = Engine::new(
+            EngineConfig { record_every: 5, trace: true, ..Default::default() },
+            mix,
+            std::sync::Arc::new(p),
+        );
+        let traced = e.run(Box::new(Lead::paper_default()), Some(Box::new(TopK::new(10))), 30);
+        let sum = traced.trace.as_ref().expect("traced run carries a summary");
+        assert!(sum.counter("events") > 0);
+        assert_eq!(sum.counter("pool_dispatches"), 0, "inline run never dispatches");
+        for (a, b) in plain.series.iter().zip(&traced.series) {
+            assert_eq!(a.dist_opt.to_bits(), b.dist_opt.to_bits(), "round {}", a.round);
+            assert_eq!(a.comp_err.to_bits(), b.comp_err.to_bits());
+        }
+        let cap = e.take_trace().expect("capture claimable after a traced run");
+        assert!(cap.total_events() > 0);
+        assert!(e.take_trace().is_none(), "capture is take-once");
+        // And the capture round-trips through the Chrome exporter.
+        let js = crate::trace::chrome_json(&cap, "smoke");
+        crate::trace::validate_chrome_json(&js).unwrap();
     }
 }

@@ -5,6 +5,7 @@
 use crate::faults::FaultSummary;
 use crate::serialize::json;
 use crate::simnet::NetSummary;
+use crate::trace::TraceSummary;
 use crate::transport::TransportSummary;
 
 /// Metrics snapshot at one recorded round.
@@ -65,6 +66,17 @@ pub struct PhaseTimes {
     pub apply: f64,
     /// Metric observation (loss/consensus passes on recorded rounds).
     pub observe: f64,
+    /// How many stamp accumulations each bucket received. Unlike the
+    /// wall durations above these are *deterministic* structure
+    /// counters: a full run has `produce_n == mix_n == apply_n ==
+    /// rounds`, a `time_budget`-stopped run counts the budget-crossing
+    /// round exactly once (its stamps land before the stop check), and
+    /// `observe_n == series.len()` — the round-0 snapshot included.
+    /// Pinned by `engine::tests::phase_counts_*`.
+    pub produce_n: u64,
+    pub mix_n: u64,
+    pub apply_n: u64,
+    pub observe_n: u64,
 }
 
 impl PhaseTimes {
@@ -73,14 +85,18 @@ impl PhaseTimes {
     /// [`RunRecord::to_json`] so the emitted file always parses.
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"produce\":{},\"gradient\":{},\"send\":{},\"compress\":{},\"mix\":{},\"apply\":{},\"observe\":{}}}",
+            "{{\"produce\":{},\"gradient\":{},\"send\":{},\"compress\":{},\"mix\":{},\"apply\":{},\"observe\":{},\"produce_n\":{},\"mix_n\":{},\"apply_n\":{},\"observe_n\":{}}}",
             fin(self.produce),
             fin(self.gradient),
             fin(self.send),
             fin(self.compress),
             fin(self.mix),
             fin(self.apply),
-            fin(self.observe)
+            fin(self.observe),
+            self.produce_n,
+            self.mix_n,
+            self.apply_n,
+            self.observe_n
         )
     }
 }
@@ -104,6 +120,12 @@ pub struct RunRecord {
     /// envelope included) — `Some` iff the run used a non-`Mem`
     /// [`TransportMode`](crate::transport::TransportMode).
     pub transport: Option<TransportSummary>,
+    /// Trace summary (fleet counters + pool wake-latency histogram,
+    /// `crate::trace` §Observability contract) — `Some` iff the run had
+    /// `EngineConfig.trace` on. The raw event capture is *not* stored
+    /// here (it is rounds-proportional); fetch it once via
+    /// [`Engine::take_trace`](crate::coordinator::engine::Engine::take_trace).
+    pub trace: Option<TraceSummary>,
     /// True iff the run stopped at `EngineConfig.time_budget` before
     /// completing its scheduled rounds.
     pub stopped_early: bool,
@@ -229,6 +251,17 @@ impl RunRecord {
             None => out.push_str("null"),
         }
         out.push(',');
+        json::write_str(&mut out, "phases");
+        out.push(':');
+        out.push_str(&self.phases.to_json());
+        out.push(',');
+        json::write_str(&mut out, "trace");
+        out.push(':');
+        match &self.trace {
+            Some(t) => out.push_str(&t.to_json()),
+            None => out.push_str("null"),
+        }
+        out.push(',');
         json::write_str(&mut out, "stopped_early");
         out.push(':');
         out.push_str(if self.stopped_early { "true" } else { "false" });
@@ -288,6 +321,7 @@ mod tests {
             net: None,
             faults: None,
             transport: None,
+            trace: None,
             stopped_early: false,
             series: dists
                 .iter()
@@ -346,6 +380,10 @@ mod tests {
         assert!(js.get("net").is_some(), "legacy runs serialize net as null");
         assert!(js.get("faults").is_some(), "fault-free runs serialize faults as null");
         assert!(js.get("transport").is_some(), "mem runs serialize transport as null");
+        assert!(js.get("trace").is_some(), "untraced runs serialize trace as null");
+        let ph = js.get("phases").expect("phases object always present");
+        assert_eq!(ph.get("produce_n").unwrap().as_f64(), Some(0.0));
+        assert!(ph.get("observe").is_some());
 
         // With a simnet summary attached the JSON embeds it.
         r.net = Some(NetSummary {
@@ -389,5 +427,15 @@ mod tests {
         let t = js.get("transport").unwrap();
         assert_eq!(t.get("mode").unwrap().as_str(), Some("mux:8"));
         assert_eq!(t.get("frames_dropped").unwrap().as_f64(), Some(3.0));
+
+        // And a trace summary round-trips with ordered counters.
+        r.trace = Some(TraceSummary {
+            counters: vec![("events", 12), ("frames_sent", 640)],
+            wake_hist_ns: vec![0, 2, 5],
+        });
+        let js = crate::serialize::json::parse(&r.to_json()).unwrap();
+        let tr = js.get("trace").unwrap();
+        assert_eq!(tr.get("counters").unwrap().get("frames_sent").unwrap().as_f64(), Some(640.0));
+        assert_eq!(tr.get("wake_hist_ns").unwrap().as_arr().unwrap().len(), 3);
     }
 }

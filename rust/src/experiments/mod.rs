@@ -55,6 +55,16 @@
 //! # transport = ["mem", "channel", "mux:8"]
 //! ```
 //!
+//! Any grid TOML also drives `lead trace <spec.toml> [--out DIR]
+//! [--rounds N]`: the same cells re-run with the deterministic trace
+//! recorder on (`crate::trace` §Observability contract — tracing never
+//! changes a trajectory bit) and each cell exports a Chrome trace-event
+//! JSON (`<name>.trace.json`, openable in `chrome://tracing` /
+//! Perfetto) showing per-phase spans, pool dispatch/wake latencies,
+//! transport frames, and simnet/fault timeline marks. `lead net-report`
+//! additionally appends a per-phase wall-time and frame-counter
+//! breakdown table per cell.
+//!
 //! Determinism: grids are bitwise-identical at any thread count (every
 //! run derives its randomness from its own seed), so these drivers
 //! reproduce the exact trajectories of the historical serial loops.

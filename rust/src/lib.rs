@@ -15,8 +15,9 @@
 //!   graceful-degradation engine path ([`faults`]), pluggable
 //!   message-passing transports that move framed wire bytes over
 //!   in-process channels bitwise-identically to shared memory
-//!   ([`transport`]), an in-tree
-//!   determinism & unsafe-soundness auditor
+//!   ([`transport`]), a deterministic trajectory-invisible tracing and
+//!   metrics layer with Chrome-trace export ([`trace`], `lead trace`),
+//!   an in-tree determinism & unsafe-soundness auditor
 //!   ([`audit`], `lead audit`), experiment drivers for every figure in
 //!   the paper, metrics, and a CLI.
 //! - **L2 (python/compile)**: JAX compute graphs (linear/logistic
@@ -73,6 +74,7 @@ pub mod scenarios;
 pub mod serialize;
 pub mod simnet;
 pub mod topology;
+pub mod trace;
 pub mod transport;
 
 /// Convenience re-exports for examples and benches.
@@ -101,5 +103,6 @@ pub mod prelude {
     pub use crate::simnet::{NetModel, NetSummary, RoundTimer};
     pub use crate::rng::Rng;
     pub use crate::topology::{MixingMatrix, MixingRule, Topology};
+    pub use crate::trace::{Recorder, TraceCapture, TraceSummary};
     pub use crate::transport::{TransportMode, TransportSummary};
 }

@@ -4,6 +4,7 @@
 //! lead exp <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tables|all> [--out DIR] [--rounds N]
 //! lead grid <spec.toml> [--out DIR] [--threads N] [--tol X]  # declarative scenario grid
 //! lead net-report <spec.toml> [--out DIR] [--threads N] [--tol X]  # network/time view of a grid
+//! lead trace <spec.toml> [--out DIR] [--threads N] [--rounds N]  # Chrome trace export per cell
 //! lead run <config.toml> [--out DIR]                # custom single run
 //! lead bench-diff <new.json> <baseline.json> [--tol X]  # perf gate
 //! lead audit [--list-rules] [path]                  # determinism/unsafe auditor
@@ -185,6 +186,61 @@ fn main() -> lead::error::Result<()> {
             if records.iter().any(|r| r.stopped_early) {
                 println!("(* = stopped early at the time budget)");
             }
+            // §Observability breakdown: per-phase wall times plus the
+            // transport fleet counters, one row per cell (counters show
+            // "-" for subsystems the cell never ran).
+            println!();
+            println!(
+                "{:<44} {:>9} {:>9} {:>9} {:>9} {:>8} {:>8} {:>12}",
+                "cell", "produce", "mix", "apply", "observe", "frames", "dropped", "bytes"
+            );
+            for (s, rec) in specs.iter().zip(&records) {
+                let p = &rec.phases;
+                let (frames, dropped, bytes) = match &rec.transport {
+                    Some(t) => (
+                        t.frames_sent.to_string(),
+                        t.frames_dropped.to_string(),
+                        t.bytes_on_wire.to_string(),
+                    ),
+                    None => ("-".into(), "-".into(), "-".into()),
+                };
+                println!(
+                    "{:<44} {:>9.2e} {:>9.2e} {:>9.2e} {:>9.2e} {:>8} {:>8} {:>12}",
+                    s.name, p.produce, p.mix, p.apply, p.observe, frames, dropped, bytes
+                );
+            }
+        }
+        Some("trace") => {
+            // Execute the grid with the deterministic trace recorder on
+            // and export one Chrome trace-event JSON file per cell
+            // (lead::trace §Observability). `--rounds` shortens every
+            // cell — traces are about phase structure, not convergence.
+            let (grid, mut specs, threads, _tol) = load_grid_args(
+                &args,
+                "usage: lead trace <spec.toml> [--out DIR] [--threads N] [--rounds N]",
+            )?;
+            if let Some(r) = rounds {
+                for s in &mut specs {
+                    s.rounds = r;
+                }
+            }
+            let dir =
+                out.clone().unwrap_or_else(|| PathBuf::from(format!("{}_traces", grid.name)));
+            eprintln!(
+                "trace {:?}: {} cells, {} threads, artifacts -> {}",
+                grid.name,
+                specs.len(),
+                threads,
+                dir.display()
+            );
+            let paths = lead::scenarios::trace_runs(&specs, threads, &dir)?;
+            for p in &paths {
+                println!("{}", p.display());
+            }
+            eprintln!(
+                "trace: {} file(s) written (open in chrome://tracing or ui.perfetto.dev)",
+                paths.len()
+            );
         }
         Some("run") => {
             let path = args.get(1).ok_or_else(|| err("usage: lead run <config.toml>"))?;
@@ -278,7 +334,9 @@ fn main() -> lead::error::Result<()> {
             }
         }
         _ => {
-            eprintln!("usage: lead <exp|grid|net-report|run|bench-diff|audit|info> ... (see README)");
+            eprintln!(
+                "usage: lead <exp|grid|net-report|trace|run|bench-diff|audit|info> ... (see README)"
+            );
         }
     }
     Ok(())

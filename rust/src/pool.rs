@@ -77,6 +77,19 @@
 //!   pre-pool behavior, kept as the A/B baseline for `benches/hotpath.rs`
 //!   and [`crate::coordinator::engine::Scheduler::SpawnPerPhase`]);
 //! * `Exec::pool(&pool)` — the persistent pool.
+//!
+//! # Observability
+//!
+//! An [`Exec`] can carry a trace [`Recorder`](crate::trace::Recorder)
+//! ([`Exec::with_trace`], `crate::trace` §Observability contract): each
+//! multi-worker dispatch is then timed as a `pool_dispatch` span on the
+//! coordinator lane, and every woken worker records its wake-to-start
+//! latency (a `pool_wake` span in its own lane plus a log₂-ns histogram
+//! bucket). The wrapper is a stack closure over `Copy` captures and the
+//! recorder's rings are pre-allocated, so tracing preserves both the
+//! zero-alloc dispatch path and — being observation-only — every
+//! trajectory bit (`rust/tests/trace.rs`,
+//! `rust/tests/alloc_steady_state.rs`).
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -420,28 +433,33 @@ enum Backend<'a> {
 
 /// Copyable execution handle passed down to every parallel phase: which
 /// backend to dispatch on and how many units of parallelism to use.
-/// Trajectories never depend on it (see module docs).
+/// Trajectories never depend on it (see module docs). A trace
+/// [`Recorder`](crate::trace::Recorder) may ride along
+/// ([`Exec::with_trace`]); it observes dispatches but never schedules
+/// them, so it cannot affect trajectories either (pinned by
+/// `rust/tests/trace.rs`).
 #[derive(Clone, Copy)]
 pub struct Exec<'a> {
     backend: Backend<'a>,
     threads: usize,
+    trace: Option<&'a crate::trace::Recorder>,
 }
 
 impl<'a> Exec<'a> {
     /// Inline execution (no parallelism).
     pub fn seq() -> Exec<'static> {
-        Exec { backend: Backend::Seq, threads: 1 }
+        Exec { backend: Backend::Seq, threads: 1, trace: None }
     }
 
     /// Scoped-spawn backend: every dispatch spawns `threads` OS threads
     /// (the pre-pool behavior; kept for A/B benchmarking).
     pub fn spawn(threads: usize) -> Exec<'static> {
-        Exec { backend: Backend::Spawn, threads: threads.max(1) }
+        Exec { backend: Backend::Spawn, threads: threads.max(1), trace: None }
     }
 
     /// Persistent-pool backend.
     pub fn pool(pool: &'a WorkerPool) -> Exec<'a> {
-        Exec { backend: Backend::Pool(pool), threads: pool.threads() }
+        Exec { backend: Backend::Pool(pool), threads: pool.threads(), trace: None }
     }
 
     /// Units of parallelism this handle will use.
@@ -457,13 +475,56 @@ impl<'a> Exec<'a> {
             Backend::Spawn => self.threads,
             Backend::Pool(p) => p.threads(),
         };
-        Exec { backend: self.backend, threads: threads.clamp(1, cap.max(1)) }
+        Exec {
+            backend: self.backend,
+            threads: threads.clamp(1, cap.max(1)),
+            trace: self.trace,
+        }
+    }
+
+    /// Same backend and budget, with trace recording attached: every
+    /// multi-worker dispatch records a `pool_dispatch` span and per-worker
+    /// wake-to-start latencies, and downstream consumers (the transport
+    /// receive phase) read the recorder back via [`Exec::trace`].
+    pub fn with_trace<'b>(self, rec: &'b crate::trace::Recorder) -> Exec<'b>
+    where
+        'a: 'b,
+    {
+        Exec { backend: self.backend, threads: self.threads, trace: Some(rec) }
+    }
+
+    /// The attached trace recorder, if any.
+    pub fn trace(&self) -> Option<&'a crate::trace::Recorder> {
+        self.trace
     }
 
     /// Dispatch primitive: run `job(w)` for `w in 0..workers` across the
-    /// backend and return when all are done.
+    /// backend and return when all are done. With a recorder attached
+    /// ([`Exec::with_trace`]), multi-worker dispatches are wrapped in a
+    /// stack-allocated closure that tags each worker's trace lane and
+    /// records its wake latency — no heap allocation, so the zero-alloc
+    /// dispatch contract holds with tracing on
+    /// (`rust/tests/alloc_steady_state.rs`).
     pub fn run_workers(&self, workers: usize, job: &(dyn Fn(usize) + Sync)) {
         let workers = workers.clamp(1, self.threads);
+        match self.trace {
+            Some(rec) if workers > 1 => {
+                let t0 = crate::trace::clock::now();
+                let wrapped = move |w: usize| {
+                    if w != 0 {
+                        crate::trace::set_lane(w);
+                        rec.wake(t0, w);
+                    }
+                    job(w)
+                };
+                self.dispatch(workers, &wrapped);
+                rec.dispatch_span(t0, workers as u64);
+            }
+            _ => self.dispatch(workers, job),
+        }
+    }
+
+    fn dispatch(&self, workers: usize, job: &(dyn Fn(usize) + Sync)) {
         match self.backend {
             _ if workers == 1 => job(0),
             Backend::Seq => job(0),

@@ -772,6 +772,61 @@ impl Driver {
     }
 }
 
+/// Run every spec with tracing enabled and export one Chrome trace-event
+/// JSON file per run into `dir` (`<name>.trace.json`), returning the
+/// written paths in spec order. This is the `lead trace` backend
+/// (§Observability, `crate::trace`): runs execute one at a time on the
+/// shared pool (captures are per-engine, and trace wall times are not a
+/// benchmark), every artifact is re-validated through
+/// [`crate::trace::validate_chrome_json`] before it is written — an
+/// exporter regression fails the command instead of shipping a file
+/// `chrome://tracing` rejects — and the trajectory stays bitwise-equal
+/// to an untraced run (`rust/tests/trace.rs`).
+pub fn trace_runs(specs: &[RunSpec], threads: usize, dir: &Path) -> Result<Vec<PathBuf>> {
+    // Same prevalidation order as [`Driver::run`]: reject typo'd cells
+    // (and the §Transport codec gate) before building any problem.
+    for s in specs {
+        s.build_mix()?;
+        let algo = s.build_algo()?;
+        let comp = s.build_compressor()?;
+        let mode = s.build_transport()?;
+        if !mode.is_mem() && algo.spec().compressed {
+            if let Some(c) = &comp {
+                if c.wire_format().is_none() {
+                    return Err(err(format!(
+                        "{}: transport {:?} needs a wire-complete compressor (topk, q*); {:?} does not decode from its payload alone",
+                        s.name, s.transport, s.compressor
+                    )));
+                }
+            }
+        }
+    }
+    std::fs::create_dir_all(dir)?;
+    let pool = (threads > 1).then(|| WorkerPool::new(threads));
+    let exec = match &pool {
+        Some(p) => Exec::pool(p),
+        None => Exec::seq(),
+    };
+    let mut written = Vec::with_capacity(specs.len());
+    for s in specs {
+        let mix = s.build_mix().expect("prevalidated");
+        let algo = s.build_algo().expect("prevalidated");
+        let comp = s.build_compressor().expect("prevalidated");
+        let mut cfg = s.engine_config()?;
+        cfg.trace = true;
+        let mut engine = Engine::new(cfg, mix, s.problem.build(s.agents));
+        engine.run_on(exec, algo, comp, s.rounds);
+        let cap = engine.take_trace().expect("trace enabled for this run");
+        let js = crate::trace::chrome_json(&cap, &s.name);
+        crate::trace::validate_chrome_json(&js)
+            .map_err(|e| err(format!("{}: exporter produced invalid Chrome JSON: {e}", s.name)))?;
+        let path = dir.join(format!("{}.trace.json", s.name));
+        std::fs::write(&path, js)?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
 /// The unified per-grid JSON artifact: spec + full record per run, plus
 /// optional per-run `time_to_tol` (when a tolerance is configured) and
 /// seed-axis aggregates (module docs §Seed-axis aggregation).
@@ -901,6 +956,20 @@ fn aggregates_json(tol: Option<f64>, specs: &[RunSpec], records: &[RunRecord]) -
             }
             out.push_str("]}");
         };
+    // Run-level scalar band: one mean ± std per cell (not per round) for
+    // whole-run quantities — phase wall times and fleet counters.
+    let write_scalar_band =
+        |out: &mut String, key: &str, g: &[usize], metric: &dyn Fn(&RunRecord) -> f64| {
+            let vals: Vec<f64> = g.iter().map(|&i| metric(&records[i])).collect();
+            let (m, s) = mean_std(&vals);
+            out.push(',');
+            json::write_str(out, key);
+            out.push_str(":{\"mean\":");
+            json::write_num(out, m);
+            out.push_str(",\"std\":");
+            json::write_num(out, s);
+            out.push('}');
+        };
 
     let mut out = String::from("[");
     for (gi, g) in groups.iter().enumerate() {
@@ -944,6 +1013,41 @@ fn aggregates_json(tol: Option<f64>, specs: &[RunSpec], records: &[RunRecord]) -
         write_band(&mut out, "comp_err", g, &|m| m.comp_err);
         write_band(&mut out, "sim_time", g, &|m| m.sim_time);
         write_band(&mut out, "idle_max", g, &|m| m.idle_max);
+        // Scalar bands (§Observability): per-phase wall times always;
+        // transport/fault/net counters only when the cell actually ran
+        // that subsystem — an absent subsystem omits its keys rather
+        // than emitting a fake zero band.
+        write_scalar_band(&mut out, "phase_produce", g, &|r| r.phases.produce);
+        write_scalar_band(&mut out, "phase_mix", g, &|r| r.phases.mix);
+        write_scalar_band(&mut out, "phase_apply", g, &|r| r.phases.apply);
+        write_scalar_band(&mut out, "phase_observe", g, &|r| r.phases.observe);
+        if g.iter().any(|&i| records[i].transport.is_some()) {
+            write_scalar_band(&mut out, "frames_sent", g, &|r| {
+                r.transport.as_ref().map_or(0.0, |t| t.frames_sent as f64)
+            });
+            write_scalar_band(&mut out, "frames_dropped", g, &|r| {
+                r.transport.as_ref().map_or(0.0, |t| t.frames_dropped as f64)
+            });
+            write_scalar_band(&mut out, "bytes_on_wire", g, &|r| {
+                r.transport.as_ref().map_or(0.0, |t| t.bytes_on_wire as f64)
+            });
+        }
+        if g.iter().any(|&i| records[i].faults.is_some()) {
+            write_scalar_band(&mut out, "lost_messages", g, &|r| {
+                r.faults.as_ref().map_or(0.0, |f| f.lost as f64)
+            });
+            write_scalar_band(&mut out, "stale_deliveries", g, &|r| {
+                r.faults.as_ref().map_or(0.0, |f| f.stale as f64)
+            });
+            write_scalar_band(&mut out, "crashed_agent_rounds", g, &|r| {
+                r.faults.as_ref().map_or(0.0, |f| f.crashed_agent_rounds as f64)
+            });
+        }
+        if g.iter().any(|&i| records[i].net.is_some()) {
+            write_scalar_band(&mut out, "retransmits", g, &|r| {
+                r.net.as_ref().map_or(0.0, |s| s.retransmits as f64)
+            });
+        }
         if let Some(t) = tol {
             let reached: Vec<f64> =
                 g.iter().filter_map(|&i| records[i].time_to_tol(t)).collect();
@@ -1170,6 +1274,16 @@ seed = [1, 2, 3]
             assert_eq!(ttt.get("of").unwrap().as_f64(), Some(3.0));
             let cell = a.get("cell").unwrap().as_str().unwrap();
             assert!(!cell.contains("seed"), "cell label must drop the seed segment: {cell}");
+            // Scalar bands: phase wall times are always present; the
+            // subsystems this grid never ran emit no counter bands.
+            for key in ["phase_produce", "phase_mix", "phase_apply", "phase_observe"] {
+                let band = a.get(key).unwrap_or_else(|| panic!("missing scalar band {key}"));
+                assert!(band.get("mean").unwrap().as_f64().is_some(), "{key} mean");
+                assert!(band.get("std").unwrap().as_f64().is_some(), "{key} std");
+            }
+            assert!(a.get("frames_sent").is_none(), "mem transport => no frame bands");
+            assert!(a.get("lost_messages").is_none(), "no fault plan => no fault bands");
+            assert!(a.get("retransmits").is_none(), "no simnet => no retransmit band");
         }
         // Different seeds actually differ (std > 0 somewhere): the bands
         // carry real variance, not copies of one run.
@@ -1179,6 +1293,37 @@ seed = [1, 2, 3]
             "zero variance across seeds"
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// §Observability: a seed group that ran a channel transport emits
+    /// frames_sent/frames_dropped/bytes_on_wire scalar bands — and the
+    /// frame count is a deterministic topology quantity, so its std
+    /// across seeds is exactly zero.
+    #[test]
+    fn aggregates_include_transport_counter_bands() {
+        let mut a = RunSpec::paper_default();
+        a.name = "t_seed1".into();
+        a.problem = ProblemSpec::Quad { dim: 16, seed: 1 };
+        a.rounds = 6;
+        a.record_every = 3;
+        a.transport = "channel".into();
+        a.seed = 1;
+        let mut b = a.clone();
+        b.name = "t_seed2".into();
+        b.seed = 2;
+        let specs = vec![a, b];
+        let recs = Driver::new(1).run("t", &specs).unwrap();
+        let agg = aggregates_json(None, &specs, &recs).unwrap();
+        let js = json::parse(&agg).unwrap();
+        let cells = js.as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert!(c.get("phase_mix").unwrap().get("mean").is_some());
+        let fs = c.get("frames_sent").unwrap();
+        assert!(fs.get("mean").unwrap().as_f64().unwrap() > 0.0, "frames flowed");
+        assert_eq!(fs.get("std").unwrap().as_f64(), Some(0.0), "frame count is seed-invariant");
+        assert!(c.get("bytes_on_wire").unwrap().get("mean").unwrap().as_f64().unwrap() > 0.0);
+        assert!(c.get("retransmits").is_none(), "no simnet => no retransmit band");
     }
 
     /// Grids without a seed axis emit no aggregates array.

@@ -237,6 +237,15 @@ impl RoundTimer {
     pub fn capped_this_round(&self) -> &[(u32, u32)] {
         &self.round_capped
     }
+
+    /// Per-agent latest-arrival offsets (seconds from the most recent
+    /// round's start) — each agent's barrier-entry time within the
+    /// round. Read by the engine's tracing layer to stamp `net_arrival`
+    /// instants on the virtual timeline (`crate::trace`); observation
+    /// only, reset on the next `round`/`round_faulted` call.
+    pub fn arrivals(&self) -> &[f64] {
+        &self.arrival
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,67 @@
+//! §Clock choke point: the tree's ONE sanctioned wall-clock read.
+//!
+//! Every wall-clock consumer — `PhaseTimes` stamps, `RunRecord.wall_secs`,
+//! trace spans, pool wake-latency histograms — takes opaque [`Instant`]
+//! stamps from [`now`] and turns them into durations with the helpers
+//! below. Nothing else in `src/` may call `Instant::now()` or touch
+//! `SystemTime`: audit rule R7 (`wall_clock_choke_point`) flags any such
+//! read outside this file, and rule R2 (`nondeterminism`) additionally
+//! requires the single read here to carry its pragma. Concentrating the
+//! read keeps the determinism story auditable — wall time is *recorded*
+//! (metrics, spans) but can never feed back into a trajectory, because
+//! every caller is funnelled through one reviewed, metrics-only source.
+//!
+//! Readings are monotonic (`Instant` semantics) but **not** deterministic:
+//! two runs of the same seed produce different stamps. Consumers must
+//! treat them as observability payload only — the tracing-on-vs-off
+//! differential (`rust/tests/trace.rs`) pins that no trajectory bit
+//! depends on anything derived from this module.
+
+use std::time::Instant;
+
+/// An opaque wall-clock stamp. Pass it back to [`secs_since`] /
+/// [`micros_since`] / [`nanos_since`] (or [`micros_between`]) to obtain a
+/// duration; the stamp itself carries no absolute meaning.
+pub fn now() -> Instant {
+    // audit:allow(nondeterminism): the tree's single wall-clock source (audit R7 choke point); readings feed metrics and trace spans only, never trajectories
+    Instant::now()
+}
+
+/// Seconds elapsed since stamp `t0` (saturating at 0).
+pub fn secs_since(t0: Instant) -> f64 {
+    now().saturating_duration_since(t0).as_secs_f64()
+}
+
+/// Whole microseconds elapsed since stamp `t0` (saturating at 0).
+pub fn micros_since(t0: Instant) -> u64 {
+    now().saturating_duration_since(t0).as_micros() as u64
+}
+
+/// Whole nanoseconds elapsed since stamp `t0` (saturating at 0).
+pub fn nanos_since(t0: Instant) -> u64 {
+    now().saturating_duration_since(t0).as_nanos() as u64
+}
+
+/// Whole microseconds from stamp `a` to the later stamp `b` (saturating
+/// at 0 when `b` precedes `a`).
+pub fn micros_between(a: Instant, b: Instant) -> u64 {
+    b.saturating_duration_since(a).as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations_are_nonnegative_and_consistent() {
+        let a = now();
+        let b = now();
+        assert!(secs_since(a) >= 0.0);
+        assert_eq!(micros_between(b, a), 0, "reversed stamps saturate at 0");
+        assert!(micros_between(a, b) <= micros_since(a));
+        // Measure the µs bound against the *earlier* stamp `b`, then the
+        // ns reading afterwards — elapsed time only grows the left side.
+        let us = micros_between(a, b);
+        assert!(nanos_since(a) >= 1000 * us);
+    }
+}

@@ -1,0 +1,657 @@
+//! Deterministic, trajectory-invisible structured tracing and metrics.
+//!
+//! # §Observability contract
+//!
+//! The engine's determinism story rests on bitwise-differential tests, so
+//! an observability layer is only admissible if it can *never* perturb a
+//! trajectory. This module holds that line with three rules:
+//!
+//! 1. **Trajectory-invisible.** The [`Recorder`] only *reads* run state
+//!    (stamps, byte counts, fault transitions) and writes into its own
+//!    buffers; no engine/pool/transport decision ever branches on trace
+//!    state. `rust/tests/trace.rs` pins tracing-on vs tracing-off
+//!    bitwise-identical (dist/consensus/comp_err/bits series) across
+//!    algorithms × codecs × thread counts × transports.
+//! 2. **Ring-buffer ownership, zero steady-state allocation.** Each
+//!    execution lane (lane 0 = the coordinator thread, lane `w` = pool
+//!    worker `w`) owns one pre-allocated fixed-capacity [`Event`] ring;
+//!    once full it overwrites oldest-first and counts the loss instead of
+//!    growing. Recording is push-within-capacity behind an uncontended
+//!    per-lane mutex, so the engine's zero-alloc steady-state contract
+//!    (`rust/tests/alloc_steady_state.rs`) holds with the recorder
+//!    **enabled** — the rounds-proportional [`TraceCapture`] is only
+//!    materialized on demand by `Engine::take_trace`, never inside the
+//!    round loop. [`TraceSummary`] (counters + fixed-bucket histogram) is
+//!    constant-size and built once per run.
+//! 3. **Clock choke point.** All wall-clock stamps come from
+//!    [`clock::now`] — the single pragma-certified `Instant::now` in the
+//!    tree, enforced by audit rule R7 (`wall_clock_choke_point`, see
+//!    `crate::audit`). Spans carry a **dual timeline**: wall microseconds
+//!    since the recorder's epoch, plus the simnet virtual time
+//!    ([`Event::vt_us`]) when a `NetModel` is active — so Chrome traces
+//!    line up real compute cost against simulated network time.
+//!
+//! # Exporters
+//!
+//! [`chrome_json`] renders a [`TraceCapture`] as Chrome trace-event JSON
+//! (the `chrome://tracing` / Perfetto format: one `"X"` complete event
+//! per span, `"i"` instants, `"M"` metadata naming the lanes);
+//! [`validate_chrome_json`] re-parses an emitted artifact and checks the
+//! per-lane `ts` monotonicity CI relies on. `lead trace <grid.toml>`
+//! drives both; `lead net-report` appends the per-phase/per-counter
+//! breakdown from [`TraceSummary`].
+
+pub mod clock;
+
+use crate::error::{err, Result};
+use crate::serialize::json;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Per-lane ring capacity, in events. A 500-round 8-agent traced run
+/// emits ~7 coordinator events per round plus per-frame transport
+/// instants; overflow overwrites oldest-first (counted, never grows).
+pub const EVENT_CAP: usize = 4096;
+
+/// Log₂-nanosecond buckets for the pool wake-to-start latency histogram:
+/// bucket `k` counts latencies in `[2^(k−1), 2^k)` ns (bucket 0: < 1 ns),
+/// covering 1 ns up to ~2 s. Fixed buckets keep the artifact shape
+/// deterministic even though the latencies themselves are wall-clock.
+pub const WAKE_BUCKETS: usize = 32;
+
+/// Typed trace event kinds, spanning every timing-sensitive layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Fused gradient→send→compress phase span (engine round loop).
+    PhaseProduce,
+    /// Mix phase span (shared-memory or transport receive+mix).
+    PhaseMix,
+    /// Apply phase span.
+    PhaseApply,
+    /// Metric observation span (round 0 and every recorded round).
+    PhaseObserve,
+    /// One pool fan-out: dispatch to barrier-return (`arg` = workers).
+    PoolDispatch,
+    /// One worker's wake-to-start latency span (`arg` = worker index).
+    PoolWake,
+    /// Transport frame enqueued (`arg` = frame bytes).
+    FrameSend,
+    /// Transport frame drained + decoded (`arg` = frame bytes).
+    FrameRecv,
+    /// Fault schedule took an agent down (`arg` = agent id).
+    FaultDown,
+    /// Fault schedule brought an agent back (`arg` = agent id).
+    FaultUp,
+    /// Simnet finished a round's event-queue replay (`arg` = round).
+    NetRound,
+    /// One agent's last simnet arrival this round (`arg` = agent id;
+    /// `vt_us` is the arrival's virtual time).
+    NetArrival,
+}
+
+impl EventKind {
+    /// Chrome event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::PhaseProduce => "produce",
+            EventKind::PhaseMix => "mix",
+            EventKind::PhaseApply => "apply",
+            EventKind::PhaseObserve => "observe",
+            EventKind::PoolDispatch => "pool_dispatch",
+            EventKind::PoolWake => "pool_wake",
+            EventKind::FrameSend => "frame_send",
+            EventKind::FrameRecv => "frame_recv",
+            EventKind::FaultDown => "fault_down",
+            EventKind::FaultUp => "fault_up",
+            EventKind::NetRound => "net_round",
+            EventKind::NetArrival => "net_arrival",
+        }
+    }
+
+    /// Chrome category lane.
+    pub fn cat(self) -> &'static str {
+        match self {
+            EventKind::PhaseProduce
+            | EventKind::PhaseMix
+            | EventKind::PhaseApply
+            | EventKind::PhaseObserve => "phase",
+            EventKind::PoolDispatch | EventKind::PoolWake => "pool",
+            EventKind::FrameSend | EventKind::FrameRecv => "transport",
+            EventKind::FaultDown | EventKind::FaultUp => "fault",
+            EventKind::NetRound | EventKind::NetArrival => "net",
+        }
+    }
+
+    /// Spans render as `"X"` complete events (with `dur`); the rest as
+    /// `"i"` instants.
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            EventKind::PhaseProduce
+                | EventKind::PhaseMix
+                | EventKind::PhaseApply
+                | EventKind::PhaseObserve
+                | EventKind::PoolDispatch
+                | EventKind::PoolWake
+        )
+    }
+}
+
+/// Sentinel for "no simnet virtual time attached".
+pub const NO_VT: u64 = u64::MAX;
+
+/// One recorded event: plain `Copy` data so ring pushes never allocate.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Engine round the event belongs to (0 before the loop starts).
+    pub round: u32,
+    /// Wall-clock µs since the recorder's epoch.
+    pub t_us: u64,
+    /// Span duration in µs (0 for instants).
+    pub dur_us: u64,
+    /// Simnet virtual time in µs; [`NO_VT`] when no `NetModel` is active.
+    pub vt_us: u64,
+    /// Kind-specific payload (see [`EventKind`] variants).
+    pub arg: u64,
+}
+
+/// Fixed-capacity oldest-first-overwrite event ring. Pre-allocated at
+/// construction; `push` never allocates.
+struct Ring {
+    buf: Vec<Event>,
+    /// Oldest retained event once the buffer is full (wraparound cursor).
+    head: usize,
+    overwritten: u64,
+}
+
+impl Ring {
+    fn with_capacity(cap: usize) -> Ring {
+        Ring { buf: Vec::with_capacity(cap.max(1)), head: 0, overwritten: 0 }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.buf.len();
+            self.overwritten += 1;
+        }
+    }
+
+    /// Retained events, oldest first (drains nothing).
+    fn snapshot(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+thread_local! {
+    /// This thread's trace lane. Lane 0 is the coordinator; pool worker
+    /// `w` records into lane `w` (set by the traced dispatch wrapper in
+    /// `crate::pool`). Out-of-range lanes clamp to the last ring, so a
+    /// stale lane id from an earlier, wider dispatch can never index out
+    /// of bounds.
+    static LANE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Tag the calling thread with a trace lane (see [`LANE`]).
+pub fn set_lane(lane: usize) {
+    LANE.with(|c| c.set(lane));
+}
+
+/// The calling thread's trace lane.
+pub fn lane() -> usize {
+    LANE.with(|c| c.get())
+}
+
+/// Pre-allocated per-lane event rings plus fleet counters — the engine's
+/// per-run trace sink (§Observability contract). `Sync`: lanes are
+/// independent mutexes, counters are atomics, so pool workers record
+/// concurrently without contending.
+pub struct Recorder {
+    epoch: Instant,
+    lanes: Vec<Mutex<Ring>>,
+    /// Current simnet virtual time in µs ([`NO_VT`] ⇒ no `NetModel`).
+    vt_us: AtomicU64,
+    round: AtomicU32,
+    dispatches: AtomicU64,
+    wake_hist: Vec<AtomicU64>,
+}
+
+impl Recorder {
+    /// A recorder with `lanes` rings (clamped to ≥ 1): one per execution
+    /// lane of the run's widest dispatch. All rings are allocated here,
+    /// up front — recording is allocation-free.
+    pub fn new(lanes: usize) -> Recorder {
+        Recorder {
+            epoch: clock::now(),
+            lanes: (0..lanes.max(1)).map(|_| Mutex::new(Ring::with_capacity(EVENT_CAP))).collect(),
+            vt_us: AtomicU64::new(NO_VT),
+            round: AtomicU32::new(0),
+            dispatches: AtomicU64::new(0),
+            wake_hist: (0..WAKE_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The recorder's epoch stamp (all `t_us` fields are relative to it).
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Tag subsequent events with the engine round.
+    pub fn set_round(&self, round: usize) {
+        // ORDERING: Relaxed — observability stamp written by the
+        // coordinator between dispatches; worker reads are ordered by the
+        // dispatch barrier, and no data synchronizes through it.
+        self.round.store(round as u32, Ordering::Relaxed);
+    }
+
+    /// Tag subsequent events with the simnet virtual time (seconds).
+    pub fn set_vt(&self, sim_secs: f64) {
+        let us =
+            if sim_secs.is_finite() && sim_secs >= 0.0 { (sim_secs * 1e6) as u64 } else { NO_VT };
+        // ORDERING: Relaxed — observability stamp, same rationale as
+        // `set_round`.
+        self.vt_us.store(us, Ordering::Relaxed);
+    }
+
+    fn stamp(&self) -> (u32, u64) {
+        // ORDERING: Relaxed (both) — observability reads of the stamps
+        // above; any interleaving yields a valid round/vt tag.
+        (self.round.load(Ordering::Relaxed), self.vt_us.load(Ordering::Relaxed))
+    }
+
+    fn push(&self, ev: Event) {
+        let lane = lane().min(self.lanes.len() - 1);
+        self.lanes[lane].lock().expect("trace ring poisoned").push(ev);
+    }
+
+    /// Record a completed span that began at stamp `t0` into the calling
+    /// thread's lane.
+    pub fn span(&self, kind: EventKind, t0: Instant, arg: u64) {
+        let (round, vt_us) = self.stamp();
+        self.push(Event {
+            kind,
+            round,
+            t_us: clock::micros_between(self.epoch, t0),
+            dur_us: clock::micros_since(t0),
+            vt_us,
+            arg,
+        });
+    }
+
+    /// Record an instant event, stamped now, into the calling thread's
+    /// lane.
+    pub fn instant(&self, kind: EventKind, arg: u64) {
+        let (round, vt_us) = self.stamp();
+        self.push(Event {
+            kind,
+            round,
+            t_us: clock::micros_since(self.epoch),
+            dur_us: 0,
+            vt_us,
+            arg,
+        });
+    }
+
+    /// Record an instant event carrying an explicit virtual timestamp
+    /// (simnet arrivals, whose `vt` is per-agent rather than the round's).
+    pub fn instant_vt(&self, kind: EventKind, vt_us: u64, arg: u64) {
+        let (round, _) = self.stamp();
+        self.push(Event {
+            kind,
+            round,
+            t_us: clock::micros_since(self.epoch),
+            dur_us: 0,
+            vt_us,
+            arg,
+        });
+    }
+
+    /// Worker-side wake record: the latency from the dispatch stamp `t0`
+    /// to "this worker started running" lands in the log₂-ns histogram
+    /// and as a [`EventKind::PoolWake`] span in the worker's lane.
+    pub fn wake(&self, t0: Instant, worker: usize) {
+        let ns = clock::nanos_since(t0);
+        let bucket = (64 - ns.leading_zeros() as usize).min(WAKE_BUCKETS - 1);
+        // ORDERING: Relaxed — independent monotonic counter; totals are
+        // read after the dispatch barrier.
+        self.wake_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        let (round, vt_us) = self.stamp();
+        self.push(Event {
+            kind: EventKind::PoolWake,
+            round,
+            t_us: clock::micros_between(self.epoch, t0),
+            dur_us: (ns / 1000).max(1),
+            vt_us,
+            arg: worker as u64,
+        });
+    }
+
+    /// Coordinator-side record of one completed pool fan-out.
+    pub fn dispatch_span(&self, t0: Instant, workers: u64) {
+        // ORDERING: Relaxed — independent monotonic counter.
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.span(EventKind::PoolDispatch, t0, workers);
+    }
+
+    /// Events recorded over the run (retained + overwritten).
+    pub fn events_recorded(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|m| {
+                let r = m.lock().expect("trace ring poisoned");
+                r.buf.len() as u64 + r.overwritten
+            })
+            .sum()
+    }
+
+    /// Constant-size end-of-run rollup: the recorder's own counters
+    /// followed by `extra` (the engine appends transport/fault/simnet
+    /// totals), plus the wake histogram. Built once per run — allocation
+    /// here is per-run constant, outside the steady-state contract.
+    pub fn summary(&self, extra: &[(&'static str, u64)]) -> TraceSummary {
+        let overwritten: u64 =
+            self.lanes.iter().map(|m| m.lock().expect("trace ring poisoned").overwritten).sum();
+        let mut counters = Vec::with_capacity(3 + extra.len());
+        counters.push(("events", self.events_recorded()));
+        counters.push(("events_overwritten", overwritten));
+        // ORDERING: Relaxed — end-of-run read; all increments happened
+        // before the final dispatch barrier.
+        counters.push(("pool_dispatches", self.dispatches.load(Ordering::Relaxed)));
+        counters.extend_from_slice(extra);
+        // ORDERING: Relaxed — end-of-run histogram read, same rationale.
+        let mut hist: Vec<u64> = self.wake_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        while hist.last() == Some(&0) {
+            hist.pop();
+        }
+        TraceSummary { counters, wake_hist_ns: hist }
+    }
+
+    /// Drain the rings into a per-lane, chronologically sorted capture.
+    /// Rounds-proportional allocation — call only *after* the run (the
+    /// engine exposes this as `take_trace`, never inside the round loop).
+    pub fn capture(&self) -> TraceCapture {
+        let mut lanes = Vec::with_capacity(self.lanes.len());
+        let mut overwritten = 0;
+        for m in &self.lanes {
+            let ring = m.lock().expect("trace ring poisoned");
+            let mut evs = ring.snapshot();
+            overwritten += ring.overwritten;
+            // Stable sort: threads sharing a lane (the Spawn backend) may
+            // interleave stamps; Chrome requires per-lane monotone `ts`.
+            evs.sort_by_key(|e| e.t_us);
+            lanes.push(evs);
+        }
+        TraceCapture { lanes, overwritten }
+    }
+}
+
+/// Constant-size per-run trace rollup, surfaced as `RunRecord.trace` and
+/// aggregated into `<grid>.json` seed bands. `counters` is ordered
+/// (insertion order is the artifact order) so JSON output is
+/// deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    /// Monotonic fleet counters: recorder totals (`events`,
+    /// `events_overwritten`, `pool_dispatches`) then the engine's
+    /// transport / fault / simnet totals.
+    pub counters: Vec<(&'static str, u64)>,
+    /// Pool wake-to-start latency histogram, log₂-ns buckets (trailing
+    /// zero buckets trimmed; see [`WAKE_BUCKETS`]).
+    pub wake_hist_ns: Vec<u64>,
+}
+
+impl TraceSummary {
+    /// Counter by name (0 when absent — counters are totals, so absence
+    /// means "none observed").
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(k, _)| *k == name).map_or(0, |(_, v)| *v)
+    }
+
+    /// Compact JSON object (hand-rolled, matching the other summaries).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::write_str(&mut out, k);
+            out.push_str(&format!(":{v}"));
+        }
+        out.push_str("},\"wake_hist_ns\":[");
+        for (i, v) in self.wake_hist_ns.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&v.to_string());
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// A drained trace: per-lane events, oldest first within each lane.
+pub struct TraceCapture {
+    /// `lanes[0]` is the coordinator; `lanes[w]` is pool worker `w`.
+    pub lanes: Vec<Vec<Event>>,
+    /// Events lost to ring wraparound across all lanes.
+    pub overwritten: u64,
+}
+
+impl TraceCapture {
+    pub fn total_events(&self) -> usize {
+        self.lanes.iter().map(Vec::len).sum()
+    }
+}
+
+/// Render a capture as Chrome trace-event JSON (`chrome://tracing` /
+/// Perfetto). One process (`pid` 0) with one thread lane per ring;
+/// `"M"` metadata names them, spans become `"X"` complete events,
+/// instants `"i"`. Events are emitted lane-by-lane in chronological
+/// order, so `ts` is monotone per `(pid, tid)` — the property
+/// [`validate_chrome_json`] checks.
+pub fn chrome_json(cap: &TraceCapture, label: &str) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    out.push_str("{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\"args\":{\"name\":");
+    json::write_str(&mut out, label);
+    out.push_str("}}");
+    for lane in 0..cap.lanes.len() {
+        let name = if lane == 0 { "coordinator".to_string() } else { format!("lead-pool-{lane}") };
+        out.push_str(&format!(
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{lane},\"args\":{{\"name\":"
+        ));
+        json::write_str(&mut out, &name);
+        out.push_str("}}");
+    }
+    for (lane, evs) in cap.lanes.iter().enumerate() {
+        for ev in evs {
+            out.push_str(",{\"name\":\"");
+            out.push_str(ev.kind.name());
+            out.push_str("\",\"cat\":\"");
+            out.push_str(ev.kind.cat());
+            if ev.kind.is_span() {
+                out.push_str(&format!(
+                    "\",\"ph\":\"X\",\"pid\":0,\"tid\":{lane},\"ts\":{},\"dur\":{}",
+                    ev.t_us, ev.dur_us
+                ));
+            } else {
+                out.push_str(&format!(
+                    "\",\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{lane},\"ts\":{}",
+                    ev.t_us
+                ));
+            }
+            out.push_str(&format!(",\"args\":{{\"round\":{},\"arg\":{}", ev.round, ev.arg));
+            if ev.vt_us != NO_VT {
+                out.push_str(&format!(",\"vt_us\":{}", ev.vt_us));
+            }
+            out.push_str("}}");
+        }
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Validate an emitted Chrome-trace artifact: parses as JSON, has a
+/// `traceEvents` array, every event carries `name`/`ph`, and `ts` is
+/// monotone non-decreasing per `(pid, tid)` lane in array order (the
+/// invariant `chrome_json` guarantees and the CI smoke step enforces).
+pub fn validate_chrome_json(src: &str) -> Result<()> {
+    let doc = json::parse(src).map_err(|e| err(format!("trace artifact: {e}")))?;
+    let evs = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| err("trace artifact: missing traceEvents array"))?;
+    let mut last: std::collections::BTreeMap<(i64, i64), f64> = std::collections::BTreeMap::new();
+    for (i, e) in evs.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err(format!("trace event {i}: missing ph")))?;
+        if e.get("name").and_then(|v| v.as_str()).is_none() {
+            return Err(err(format!("trace event {i}: missing name")));
+        }
+        if ph == "M" {
+            continue;
+        }
+        let num = |k: &str| -> Result<f64> {
+            e.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| err(format!("trace event {i}: missing {k}")))
+        };
+        let (pid, tid, ts) = (num("pid")? as i64, num("tid")? as i64, num("ts")?);
+        if let Some(&prev) = last.get(&(pid, tid)) {
+            if ts < prev {
+                return Err(err(format!(
+                    "trace event {i}: ts {ts} < {prev} — not monotone in lane (pid {pid}, tid {tid})"
+                )));
+            }
+        }
+        last.insert((pid, tid), ts);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, t_us: u64) -> Event {
+        Event { kind, round: 1, t_us, dur_us: 0, vt_us: NO_VT, arg: 0 }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_first_and_counts() {
+        let mut r = Ring::with_capacity(4);
+        for t in 0..6 {
+            r.push(ev(EventKind::FrameSend, t));
+        }
+        assert_eq!(r.overwritten, 2);
+        let snap = r.snapshot();
+        let ts: Vec<u64> = snap.iter().map(|e| e.t_us).collect();
+        assert_eq!(ts, vec![2, 3, 4, 5], "oldest events were overwritten");
+        assert_eq!(r.buf.capacity(), 4, "ring never grows");
+    }
+
+    #[test]
+    fn recorder_stamps_round_vt_and_clamps_lanes() {
+        let r = Recorder::new(2);
+        r.set_round(7);
+        r.set_vt(0.25);
+        r.instant(EventKind::FrameSend, 99);
+        set_lane(50); // stale wide-dispatch lane: must clamp, not panic
+        r.instant(EventKind::FrameRecv, 1);
+        set_lane(0);
+        let cap = r.capture();
+        assert_eq!(cap.lanes.len(), 2);
+        assert_eq!(cap.lanes[0].len(), 1);
+        assert_eq!(cap.lanes[1].len(), 1, "out-of-range lane clamps to the last ring");
+        let e = &cap.lanes[0][0];
+        assert_eq!(e.round, 7);
+        assert_eq!(e.vt_us, 250_000);
+        assert_eq!(e.arg, 99);
+        assert_eq!(r.events_recorded(), 2);
+    }
+
+    #[test]
+    fn wake_histogram_buckets_log2_ns() {
+        let r = Recorder::new(2);
+        let t0 = clock::now();
+        set_lane(1);
+        r.wake(t0, 1);
+        set_lane(0);
+        let s = r.summary(&[]);
+        assert_eq!(s.wake_hist_ns.iter().sum::<u64>(), 1);
+        assert_eq!(s.counter("events"), 1);
+        assert_eq!(s.counter("nonexistent"), 0);
+    }
+
+    #[test]
+    fn summary_appends_extras_in_order_and_serializes() {
+        let r = Recorder::new(1);
+        r.instant(EventKind::NetRound, 3);
+        let s = r.summary(&[("frames_sent", 16), ("bytes_on_wire", 1024)]);
+        assert_eq!(s.counter("frames_sent"), 16);
+        let js = s.to_json();
+        let doc = json::parse(&js).unwrap();
+        assert_eq!(
+            doc.get("counters").unwrap().get("bytes_on_wire").unwrap().as_f64(),
+            Some(1024.0)
+        );
+        assert!(doc.get("wake_hist_ns").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_lane_monotone() {
+        let r = Recorder::new(2);
+        r.set_round(1);
+        let t0 = clock::now();
+        r.instant(EventKind::FrameSend, 64);
+        r.span(EventKind::PhaseProduce, t0, 0);
+        r.set_vt(1.5);
+        r.instant_vt(EventKind::NetArrival, 1_400_000, 3);
+        let cap = r.capture();
+        let js = chrome_json(&cap, "unit");
+        validate_chrome_json(&js).unwrap();
+        let doc = json::parse(&js).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 2 thread_name metadata + 3 events.
+        assert_eq!(evs.len(), 6);
+        let arrival = evs.iter().find(|e| {
+            e.get("name").unwrap().as_str() == Some("net_arrival")
+        });
+        let a = arrival.expect("net_arrival emitted");
+        assert_eq!(a.get("args").unwrap().get("vt_us").unwrap().as_f64(), Some(1_400_000.0));
+        let send = evs.iter().find(|e| e.get("name").unwrap().as_str() == Some("frame_send")).unwrap();
+        assert!(
+            send.get("args").unwrap().get("vt_us").is_none(),
+            "NO_VT events omit the virtual timestamp"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_garbage_and_non_monotone() {
+        assert!(validate_chrome_json("not json").is_err());
+        assert!(validate_chrome_json("{\"other\":1}").is_err());
+        let bad = r#"{"traceEvents":[
+            {"name":"a","ph":"i","s":"t","pid":0,"tid":0,"ts":10},
+            {"name":"b","ph":"i","s":"t","pid":0,"tid":0,"ts":5}
+        ]}"#;
+        assert!(validate_chrome_json(bad).is_err(), "ts must be monotone per lane");
+        let ok = r#"{"traceEvents":[
+            {"name":"a","ph":"i","s":"t","pid":0,"tid":0,"ts":10},
+            {"name":"b","ph":"i","s":"t","pid":0,"tid":1,"ts":5}
+        ]}"#;
+        validate_chrome_json(ok).unwrap();
+    }
+}

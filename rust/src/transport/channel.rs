@@ -18,6 +18,7 @@ use crate::compress::{quantize, CompressedMsg, WireFormat};
 use crate::faults::{FaultSchedule, LinkState};
 use crate::pool::{par_chunks, Exec, SendPtr};
 use crate::topology::MixingMatrix;
+use crate::trace::{EventKind, Recorder};
 use std::sync::mpsc;
 use std::sync::Mutex;
 
@@ -179,6 +180,12 @@ impl ChannelTransport {
     ///
     /// `round_bits` is the produce-phase accounting; every sent frame's
     /// metadata must reproduce its sender's entry exactly (asserted).
+    ///
+    /// With a trace [`Recorder`] attached each enqueued frame records a
+    /// `frame_send` instant (coordinator lane, arg = frame bytes) —
+    /// observation only, never a behavior change (`crate::trace`
+    /// §Observability contract).
+    #[allow(clippy::too_many_arguments)]
     pub fn send_round(
         &mut self,
         round: usize,
@@ -187,6 +194,7 @@ impl ChannelTransport {
         msgs: &[CompressedMsg],
         payload: &[Vec<Vec<f64>>],
         round_bits: &[u64],
+        trace: Option<&Recorder>,
     ) {
         let n = mix.n;
         for i in 0..n {
@@ -229,6 +237,9 @@ impl ChannelTransport {
                 );
                 self.stats.frames_sent += 1;
                 self.stats.bytes_on_wire += self.frame_buf.len() as u64;
+                if let Some(r) = trace {
+                    r.instant(EventKind::FrameSend, self.frame_buf.len() as u64);
+                }
                 self.delivery.send(self.slots.slot_of(i), self.frame_buf.clone());
             }
         }
@@ -257,6 +268,9 @@ impl ChannelTransport {
         let delivery = &*self.delivery;
         let wire = self.wire.as_ref();
         let (use_comp, channels, d) = (self.use_comp, self.channels, self.d);
+        // §Observability: each drained frame records a `frame_recv`
+        // instant in the draining worker's lane (arg = frame bytes).
+        let trace = exec.trace();
         let mixed_p = SendPtr(mixed_all.as_mut_ptr());
         par_chunks(exec, &mut self.lanes, |s, lane| {
             let a0 = slots.first_agent(s);
@@ -266,6 +280,9 @@ impl ChannelTransport {
                 }
             }
             delivery.drain(s, &mut |buf: Vec<u8>| {
+                if let Some(r) = trace {
+                    r.instant(EventKind::FrameRecv, buf.len() as u64);
+                }
                 let fv = frame::decode(&buf).expect("in-process frame failed validation");
                 assert_eq!(fv.round, round as u64, "stale frame crossed a round barrier");
                 let dst = fv.dst as usize;
@@ -520,7 +537,7 @@ mod tests {
                     "test",
                 )
                 .unwrap();
-                tr.send_round(1, &mix, None, &msgs, &payload, &round_bits);
+                tr.send_round(1, &mix, None, &msgs, &payload, &round_bits, None);
                 let mut got = vec![vec![vec![0.0f64; d]; channels]; n];
                 tr.recv_and_mix(Exec::seq(), 1, &mix, None, &msgs, &payload, &mut got);
                 for i in 0..n {

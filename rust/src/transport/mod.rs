@@ -66,6 +66,14 @@
 //!    `Mem`-only: channel modes allocate one `Vec<u8>` per frame per
 //!    round (the queue owns the bytes in flight). Decode scratch and
 //!    frame-encode buffers are still hoisted and reused.
+//! 7. **Observability.** When tracing is on (`crate::trace`
+//!    §Observability contract) the send path records a `frame_send`
+//!    instant per enqueued frame and each receive slot records a
+//!    `frame_recv` instant per drained frame (arg = framed byte length);
+//!    the fleet totals (`frames_sent`/`frames_dropped`/`bytes_on_wire`)
+//!    surface in the run's `TraceSummary` and must equal this module's
+//!    own [`TransportSummary`] (`rust/tests/trace.rs`). The recorder is
+//!    trajectory-invisible — rules 1–6 are unchanged with tracing on.
 //!
 //! [`CompressedMsg`]: crate::compress::CompressedMsg
 //! [`WireFormat`]: crate::compress::WireFormat

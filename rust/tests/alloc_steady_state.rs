@@ -59,14 +59,17 @@ static GLOBAL: Counting = Counting;
 const N_AGENTS: usize = 8;
 
 /// Allocation count and (debug builds) dense-decode-rebuild count for one
-/// engine run of `rounds` rounds.
-fn counts_for(rounds: usize, threads: usize, comp: Box<dyn Compressor>) -> (usize, u64) {
+/// engine run of `rounds` rounds. `trace` turns the §Observability
+/// recorder on — its rings are pre-allocated at setup, so the zero-alloc
+/// differential must hold either way.
+fn counts_for(rounds: usize, threads: usize, comp: Box<dyn Compressor>, trace: bool) -> (usize, u64) {
     let d = 96;
     let mix = Topology::Ring.build(N_AGENTS, MixingRule::UniformNeighbors);
     let mut e = Engine::new(
         EngineConfig {
             eta: 0.05,
             threads,
+            trace,
             // No observation falls inside the differential window.
             record_every: usize::MAX / 2,
             ..Default::default()
@@ -92,9 +95,9 @@ fn assert_zero_steady_state(name: &str, make: fn() -> Box<dyn Compressor>) {
     for threads in [1usize, 2] {
         // Throwaway run first so whole-process lazy init (thread-local
         // setup, allocator internals) cannot skew the differential.
-        let _ = counts_for(3, threads, make());
-        let (short, _) = counts_for(5, threads, make());
-        let (long, _) = counts_for(45, threads, make());
+        let _ = counts_for(3, threads, make(), false);
+        let (short, _) = counts_for(5, threads, make(), false);
+        let (long, _) = counts_for(45, threads, make(), false);
         assert_eq!(
             short, long,
             "{name} path allocates in steady state (threads={threads}): \
@@ -151,8 +154,8 @@ fn sparse_own_steady_state_never_decodes_dense() {
     ];
     for (name, make) in sparsifiers {
         for threads in [1usize, 2] {
-            let (_, short) = counts_for(5, threads, make());
-            let (_, long) = counts_for(45, threads, make());
+            let (_, short) = counts_for(5, threads, make(), false);
+            let (_, long) = counts_for(45, threads, make(), false);
             assert_eq!(
                 short, long,
                 "{name} (threads={threads}): per-round dense own-decode detected"
@@ -164,6 +167,36 @@ fn sparse_own_steady_state_never_decodes_dense() {
             );
         }
     }
-    let (_, dense_decodes) = counts_for(5, 1, Box::new(QuantizeP::new(2, PNorm::Inf, 512)));
+    let (_, dense_decodes) = counts_for(5, 1, Box::new(QuantizeP::new(2, PNorm::Inf, 512)), false);
     assert_eq!(dense_decodes, 0, "dense codec messages are never stale");
+}
+
+/// §Observability contract: tracing preserves the zero-alloc steady
+/// state. The recorder's per-lane rings and histogram are pre-allocated
+/// in `Recorder::new` (setup, outside the differential window); a
+/// steady-state round only overwrites ring slots and bumps atomics, so
+/// the traced differential must be exactly as flat as the untraced one —
+/// on both the dense and sparse message paths, with the pool dispatching
+/// (threads = 2, traced wake/dispatch events live).
+#[test]
+fn traced_runs_preserve_zero_alloc_steady_state() {
+    let _serial = SERIAL.lock().unwrap();
+    let codecs: [(&str, fn() -> Box<dyn Compressor>); 2] = [
+        ("dense/quantize", || Box::new(QuantizeP::new(2, PNorm::Inf, 512))),
+        ("sparse/top-k", || Box::new(TopK::new(9))),
+    ];
+    for (name, make) in codecs {
+        for threads in [1usize, 2] {
+            let _ = counts_for(3, threads, make(), true);
+            let (short, _) = counts_for(5, threads, make(), true);
+            let (long, _) = counts_for(45, threads, make(), true);
+            assert_eq!(
+                short, long,
+                "{name} path allocates in steady state with tracing on \
+                 (threads={threads}): {short} allocs for 5 rounds vs {long} for 45 — \
+                 {} per extra round",
+                (long as f64 - short as f64) / 40.0
+            );
+        }
+    }
 }

@@ -1,0 +1,154 @@
+//! Tracing-on vs tracing-off bitwise differential (`lead::trace`
+//! §Observability contract).
+//!
+//! The recorder's core promise is that it is a pure *observer*: flipping
+//! `EngineConfig.trace` must not move a single trajectory bit. This
+//! harness pins that promise across the acceptance matrix —
+//! {lead, choco} × {topk, qinf 2-bit} × threads {1, 3} × {mem, channel}
+//! — and then checks the observer actually observed something useful:
+//!
+//! 1. **Invisibility**: every recorded series (dist/consensus/comp_err
+//!    and the bits accounting) is bitwise-identical with tracing on.
+//! 2. **Presence**: traced runs carry a `TraceSummary` with live event
+//!    counters; untraced runs carry `None` and yield no capture.
+//! 3. **Consistency**: the summary's transport counters equal the
+//!    engine's own `TransportSummary`, and multi-thread runs record pool
+//!    dispatches with one event lane per worker.
+//! 4. **Export**: every capture round-trips through the Chrome
+//!    trace-event exporter and its validator (`validate_chrome_json`).
+
+use lead::algorithms::{choco::ChocoSgd, lead::Lead, Algorithm};
+use lead::compress::quantize::{PNorm, QuantizeP};
+use lead::compress::topk::TopK;
+use lead::compress::Compressor;
+use lead::coordinator::engine::{Engine, EngineConfig};
+use lead::coordinator::metrics::RunRecord;
+use lead::problems::linreg::LinReg;
+use lead::topology::{MixingRule, Topology};
+use lead::trace::{chrome_json, validate_chrome_json, TraceCapture};
+use lead::transport::TransportMode;
+use std::sync::Arc;
+
+fn algo(name: &str) -> Box<dyn Algorithm> {
+    match name {
+        "lead" => Box::new(Lead::paper_default()),
+        "choco" => Box::new(ChocoSgd::new(0.8)),
+        other => panic!("unknown test algo {other:?}"),
+    }
+}
+
+fn codec(name: &str) -> Option<Box<dyn Compressor>> {
+    match name {
+        "topk" => Some(Box::new(TopK::new(10))),
+        "qinf" => Some(Box::new(QuantizeP::new(2, PNorm::Inf, 512))),
+        other => panic!("unknown test codec {other:?}"),
+    }
+}
+
+/// One short run on the Fig. 1-shaped synthetic linreg workload,
+/// returning the record and (for traced runs) the claimed capture.
+fn run(
+    algo_name: &str,
+    codec_name: &str,
+    threads: usize,
+    transport: TransportMode,
+    trace: bool,
+) -> (RunRecord, Option<TraceCapture>) {
+    let n = 8;
+    let p = LinReg::synthetic(n, 30, 0.1, 3);
+    let mix = Topology::Ring.build(n, MixingRule::UniformNeighbors);
+    let cfg = EngineConfig { threads, record_every: 4, transport, trace, ..Default::default() };
+    let mut e = Engine::new(cfg, mix, Arc::new(p));
+    let rec = e.run(algo(algo_name), codec(codec_name), 24);
+    (rec, e.take_trace())
+}
+
+fn assert_series_bitwise(a: &RunRecord, b: &RunRecord, tag: &str) {
+    assert_eq!(a.series.len(), b.series.len(), "{tag}: series length");
+    for (ma, mb) in a.series.iter().zip(&b.series) {
+        assert_eq!(ma.round, mb.round, "{tag}");
+        assert_eq!(ma.dist_opt.to_bits(), mb.dist_opt.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.consensus.to_bits(), mb.consensus.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.comp_err.to_bits(), mb.comp_err.to_bits(), "{tag} round {}", ma.round);
+        assert_eq!(ma.bits_per_agent, mb.bits_per_agent, "{tag} round {}", ma.round);
+    }
+}
+
+/// Acceptance pin: the full matrix is trajectory-invisible, and every
+/// traced cell carries a summary, a capture, and a valid Chrome export.
+#[test]
+fn tracing_is_bitwise_invisible_across_matrix() {
+    for algo_name in ["lead", "choco"] {
+        for codec_name in ["topk", "qinf"] {
+            for threads in [1usize, 3] {
+                for mode in [TransportMode::Mem, TransportMode::Channel] {
+                    let tag = format!(
+                        "{algo_name}/{codec_name}/threads={threads}/{}",
+                        mode.label()
+                    );
+                    let (off, off_cap) = run(algo_name, codec_name, threads, mode, false);
+                    assert!(off.trace.is_none(), "{tag}: untraced run carries no summary");
+                    assert!(off_cap.is_none(), "{tag}: untraced run yields no capture");
+                    let (on, on_cap) = run(algo_name, codec_name, threads, mode, true);
+                    assert_series_bitwise(&off, &on, &tag);
+
+                    let sum = on.trace.as_ref().unwrap_or_else(|| panic!("{tag}: summary"));
+                    assert!(sum.counter("events") > 0, "{tag}: recorder saw events");
+                    let cap = on_cap.unwrap_or_else(|| panic!("{tag}: capture"));
+                    assert_eq!(cap.lanes.len(), threads, "{tag}: one lane per worker");
+                    assert!(cap.total_events() > 0, "{tag}");
+                    assert!(
+                        sum.counter("events") >= cap.total_events() as u64,
+                        "{tag}: recorded >= retained"
+                    );
+                    let js = chrome_json(&cap, &tag);
+                    validate_chrome_json(&js)
+                        .unwrap_or_else(|e| panic!("{tag}: invalid Chrome JSON: {e}"));
+                }
+            }
+        }
+    }
+}
+
+/// The summary's fleet counters agree with the engine's own transport
+/// accounting: frames and wire bytes come from the same round loop, so
+/// they must match exactly, and a mem run reports them as zero.
+#[test]
+fn trace_counters_match_transport_summary() {
+    let (chan, _) = run("lead", "topk", 1, TransportMode::Channel, true);
+    let ts = chan.transport.as_ref().expect("channel summary");
+    let sum = chan.trace.as_ref().expect("trace summary");
+    assert_eq!(sum.counter("frames_sent"), ts.frames_sent);
+    assert_eq!(sum.counter("frames_dropped"), ts.frames_dropped);
+    assert_eq!(sum.counter("bytes_on_wire"), ts.bytes_on_wire);
+    assert!(ts.frames_sent > 0, "frames actually flowed");
+
+    let (mem, _) = run("lead", "topk", 1, TransportMode::Mem, true);
+    let sum = mem.trace.as_ref().expect("trace summary");
+    assert_eq!(sum.counter("frames_sent"), 0, "mem transport sends no frames");
+    assert_eq!(sum.counter("bytes_on_wire"), 0);
+}
+
+/// Multi-thread traced runs record pool activity: the fused produce
+/// phase fans out at this problem shape, so dispatches are counted, the
+/// wake-latency histogram is populated, and worker lanes carry events.
+#[test]
+fn pool_lanes_record_dispatches_and_wakes() {
+    let (on, cap) = run("lead", "qinf", 3, TransportMode::Mem, true);
+    let sum = on.trace.as_ref().expect("trace summary");
+    assert!(sum.counter("pool_dispatches") > 0, "produce fan-out dispatches the pool");
+    assert!(
+        sum.wake_hist_ns.iter().sum::<u64>() > 0,
+        "wake latencies land in the histogram"
+    );
+    let cap = cap.expect("capture");
+    assert_eq!(cap.lanes.len(), 3);
+    assert!(
+        cap.lanes[1..].iter().any(|l| !l.is_empty()),
+        "worker lanes (not just the coordinator) carry events"
+    );
+    // The Chrome export names every lane's thread and stays valid.
+    let js = chrome_json(&cap, "pool");
+    validate_chrome_json(&js).unwrap();
+    assert!(js.contains("lead-pool-1"), "worker lane thread metadata present");
+}
